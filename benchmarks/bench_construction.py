@@ -1,0 +1,42 @@
+"""Paper Fig. 12/13: construction time vs dataset size and vs degree, plus
+the beyond-paper parallel (lockstep-chunked batched-Lawson) builder and its
+device-round count (the TPU-relevant latency metric)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from .common import dataset, row
+
+
+def run(sizes=(50_000, 100_000, 200_000), degs=(1, 2, 3, 4), delta=100.0):
+    from repro.core import build_index_1d
+
+    rows = []
+    for n in sizes:
+        keys, meas = dataset("tweet", n)
+        t0 = time.perf_counter()
+        idx = build_index_1d(keys, None, "count", deg=2, delta=delta / 2)
+        t1 = time.perf_counter()
+        rows.append(row(f"fig12.construction.greedy.n{n}", (t1 - t0) * 1e6,
+                        f"h={idx.h}"))
+        t0 = time.perf_counter()
+        idxp = build_index_1d(keys, None, "count", deg=2, delta=delta / 2,
+                              method="parallel")
+        t1 = time.perf_counter()
+        rows.append(row(f"fig12.construction.parallel.n{n}", (t1 - t0) * 1e6,
+                        f"h={idxp.h}"))
+    n = sizes[0]
+    keys, _ = dataset("tweet", n)
+    for deg in degs:
+        t0 = time.perf_counter()
+        idx = build_index_1d(keys, None, "count", deg=deg, delta=delta / 2)
+        t1 = time.perf_counter()
+        rows.append(row(f"fig13.construction.deg{deg}.n{n}", (t1 - t0) * 1e6,
+                        f"h={idx.h}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

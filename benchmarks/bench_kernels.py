@@ -1,0 +1,63 @@
+"""Kernel-level benchmark (beyond paper): Pallas (interpret) vs XLA ref,
+plus the analytic TPU roofline of the fused range_sum kernel.
+
+Arithmetic intensity of range_sum per query block against H segments:
+compare-all + one-hot matmul reads the (H, deg+3) table once per query
+block and performs ~2*BQ*H*(deg+5) FLOPs on it, so intensity grows with BQ
+— the kernel is compute-bound on the MXU for BQ >= ~64 at f32.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax.numpy as jnp
+
+from .common import dataset, row, time_fn
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+
+
+def run(n=200_000, nq=4096):
+    from repro.core import build_index_1d
+    from repro.data import make_queries_1d
+    from repro.kernels import from_index, range_max, range_sum
+
+    rows = []
+    keys, _ = dataset("tweet", n)
+    lq, uq = map(jnp.asarray, make_queries_1d(keys, nq))
+    pf = build_index_1d(keys, None, "count", deg=2, delta=50.0)
+    tbl = from_index(pf, dtype=jnp.float32)
+    for backend in ("ref", "pallas"):
+        f = functools.partial(range_sum, tbl, backend=backend)
+        t, _ = time_fn(f, lq, uq)
+        rows.append(row(f"kernels.range_sum.{backend}", t / nq * 1e6,
+                        f"Hpad={tbl.seg_lo.shape[0]}"))
+    tk, vals = dataset("hki", n)
+    pfm = build_index_1d(tk, vals, "max", deg=3, delta=100.0)
+    tblm = from_index(pfm, dtype=jnp.float32)
+    l2, u2 = map(jnp.asarray, make_queries_1d(tk, nq))
+    for backend in ("ref", "pallas"):
+        f = functools.partial(range_max, tblm, backend=backend)
+        t, _ = time_fn(f, l2, u2)
+        rows.append(row(f"kernels.range_max.{backend}", t / nq * 1e6,
+                        f"Hpad={tblm.seg_lo.shape[0]}"))
+
+    # analytic roofline of the fused range_sum kernel on TPU v5e (f32)
+    BQ, deg = 256, 2
+    H = int(tbl.seg_lo.shape[0])
+    flops = 2 * BQ * H * (deg + 3 + 2) + BQ * H * 2     # matmul + compares
+    bytes_moved = (H * (deg + 3 + 3) * 4                # table once / block
+                   + BQ * 4 * 3)
+    ai = flops / bytes_moved
+    t_compute = flops / PEAK_FLOPS
+    t_mem = bytes_moved / HBM_BW
+    rows.append(row("kernels.range_sum.roofline_model",
+                    max(t_compute, t_mem) / BQ * 1e6,
+                    f"AI={ai:.1f}flop/B;bound={'compute' if t_compute > t_mem else 'memory'}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,141 @@
+"""Paper Figs. 11, 14-19: degree tuning, eps_abs / eps_rel sensitivity,
+selectivity, scalability with n, and the delta size/time trade-off."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .common import dataset, row, time_fn
+
+
+def fig11_degree(n=200_000, nq=1000):
+    from repro.core import build_index_1d, query_max, query_sum
+    from repro.data import make_queries_1d
+
+    rows = []
+    keys, _ = dataset("tweet", n)
+    lq, uq = map(jnp.asarray, make_queries_1d(keys, nq))
+    for deg in (1, 2, 3, 4):
+        idx = build_index_1d(keys, None, "count", deg=deg, delta=50.0)
+        f = jax.jit(lambda l, u, i=idx: query_sum(i, l, u).answer)
+        t, _ = time_fn(f, lq, uq)
+        rows.append(row(f"fig11.count1.deg{deg}", t / nq * 1e6, f"h={idx.h}"))
+    tk, vals = dataset("hki", n)
+    l2, u2 = map(jnp.asarray, make_queries_1d(tk, nq))
+    for deg in (1, 2, 3):
+        idx = build_index_1d(tk, vals, "max", deg=deg, delta=100.0)
+        f = jax.jit(lambda l, u, i=idx: query_max(i, l, u).answer)
+        t, _ = time_fn(f, l2, u2)
+        rows.append(row(f"fig11.max1.deg{deg}", t / nq * 1e6, f"h={idx.h}"))
+    return rows
+
+
+def fig14_15_sensitivity(n=200_000, nq=1000):
+    from repro.core import (FitingTree, PGMIndex, build_index_1d, query_sum)
+    from repro.data import make_queries_1d
+
+    rows = []
+    keys, _ = dataset("tweet", n)
+    lq, uq = map(jnp.asarray, make_queries_1d(keys, nq))
+    for eps in (100.0, 200.0, 400.0, 1000.0, 2000.0):
+        pf = build_index_1d(keys, None, "count", deg=2, delta=eps / 2)
+        f = jax.jit(lambda l, u, i=pf: query_sum(i, l, u).answer)
+        t, _ = time_fn(f, lq, uq)
+        rows.append(row(f"fig14.count1.polyfit.eps{int(eps)}", t / nq * 1e6,
+                        f"h={pf.h}"))
+        ft = FitingTree.build(keys, np.ones_like(keys), eps / 2)
+        f = jax.jit(lambda l, u, i=ft: i.query(l, u).answer)
+        t, _ = time_fn(f, lq, uq)
+        rows.append(row(f"fig14.count1.fiting.eps{int(eps)}", t / nq * 1e6,
+                        f"h={ft.h}"))
+    for eps_rel in (0.005, 0.01, 0.05, 0.1, 0.2):
+        pf = build_index_1d(keys, None, "count", deg=2, delta=100.0)
+        f = jax.jit(lambda l, u, i=pf: query_sum(i, l, u, eps_rel=eps_rel).answer)
+        t, res = time_fn(f, lq, uq)
+        rows.append(row(f"fig15.count1.polyfit.rel{eps_rel}", t / nq * 1e6, ""))
+    return rows
+
+
+def fig16_max_sensitivity(n=200_000, nq=1000):
+    from repro.core import build_index_1d, query_max
+    from repro.data import make_queries_1d
+
+    rows = []
+    tk, vals = dataset("hki", n)
+    lq, uq = map(jnp.asarray, make_queries_1d(tk, nq))
+    for eps in (50.0, 100.0, 200.0, 500.0):
+        idx = build_index_1d(tk, vals, "max", deg=3, delta=eps)
+        f = jax.jit(lambda l, u, i=idx: query_max(i, l, u).answer)
+        t, _ = time_fn(f, lq, uq)
+        rows.append(row(f"fig16.max1.polyfit.eps{int(eps)}", t / nq * 1e6,
+                        f"h={idx.h}"))
+    return rows
+
+
+def fig17_selectivity(n=200_000, nq=1000):
+    from repro.core import build_index_1d, query_sum
+    from repro.data import make_queries_1d
+
+    rows = []
+    keys, _ = dataset("tweet", n)
+    pf = build_index_1d(keys, None, "count", deg=2, delta=50.0)
+    for sel in (0.001, 0.01, 0.1, 0.5):
+        lq, uq = map(jnp.asarray, make_queries_1d(keys, nq, selectivity=sel))
+        f = jax.jit(lambda l, u: query_sum(pf, l, u).answer)
+        t, _ = time_fn(f, lq, uq)
+        rows.append(row(f"fig17.count1.polyfit.sel{sel}", t / nq * 1e6, ""))
+    return rows
+
+
+def fig18_scalability(sizes=(100_000, 300_000), nq=1000):
+    from repro.core import build_index_1d, query_sum
+    from repro.data import make_queries_1d
+
+    rows = []
+    for n in sizes:
+        keys, _ = dataset("tweet", n)
+        pf = build_index_1d(keys, None, "count", deg=2, delta=50.0,
+                            method="parallel")
+        lq, uq = map(jnp.asarray, make_queries_1d(keys, nq))
+        f = jax.jit(lambda l, u, i=pf: query_sum(i, l, u).answer)
+        t, _ = time_fn(f, lq, uq)
+        rows.append(row(f"fig18.count1.polyfit.n{n}", t / nq * 1e6,
+                        f"h={pf.h};size={pf.size_bytes()}B"))
+    return rows
+
+
+def fig19_tradeoff(n=200_000, nq=1000, eps_rel=0.01):
+    from repro.core import FitingTree, build_index_1d, query_sum
+    from repro.data import make_queries_1d
+
+    rows = []
+    keys, _ = dataset("tweet", n)
+    lq, uq = map(jnp.asarray, make_queries_1d(keys, nq))
+    for delta in (25.0, 50.0, 100.0, 200.0, 500.0, 1000.0):
+        pf = build_index_1d(keys, None, "count", deg=2, delta=delta)
+        f = jax.jit(lambda l, u, i=pf: query_sum(i, l, u, eps_rel=eps_rel).answer)
+        t, res = time_fn(f, lq, uq)
+        rows.append(row(f"fig19.count1.polyfit.delta{int(delta)}",
+                        t / nq * 1e6, f"size={pf.size_bytes()}B;h={pf.h}"))
+        ft = FitingTree.build(keys, np.ones_like(keys), delta)
+        f2 = jax.jit(lambda l, u, i=ft: i.query(l, u, eps_rel=eps_rel).answer)
+        t2, _ = time_fn(f2, lq, uq)
+        rows.append(row(f"fig19.count1.fiting.delta{int(delta)}",
+                        t2 / nq * 1e6, f"size={ft.size_bytes()}B;h={ft.h}"))
+    return rows
+
+
+def run():
+    out = []
+    out += fig11_degree()
+    out += fig14_15_sensitivity()
+    out += fig16_max_sensitivity()
+    out += fig17_selectivity()
+    out += fig18_scalability()
+    out += fig19_tradeoff()
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,47 @@
+"""Shared benchmark utilities: datasets, query workloads, timing."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+
+# Build the paper's three workloads once per process (cached).
+_CACHE = {}
+
+
+def dataset(name: str, n: int):
+    from repro.data import hki_series, osm_points, tweet_latitudes
+    key = (name, n)
+    if key not in _CACHE:
+        if name == "hki":
+            t, v = hki_series(n)
+            _CACHE[key] = (t, v)
+        elif name == "tweet":
+            lat = tweet_latitudes(n)
+            _CACHE[key] = (lat, np.ones_like(lat))
+        elif name == "osm":
+            _CACHE[key] = osm_points(n)
+        else:
+            raise KeyError(name)
+    return _CACHE[key]
+
+
+def time_fn(fn, *args, warmup: int = 2, iters: int = 5):
+    """Median wall time of a jitted callable (block_until_ready)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)), out
+
+
+def row(name: str, us_per_call: float, derived: str = ""):
+    line = f"{name},{us_per_call:.3f},{derived}"
+    print(line)
+    return line

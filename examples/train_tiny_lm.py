@@ -1,0 +1,21 @@
+"""Train a reduced LM (any of the 10 assigned archs) on CPU with the full
+production stack: sharded params, AdamW, checkpointing, deterministic data.
+
+    PYTHONPATH=src python examples/train_tiny_lm.py --arch mamba2-130m --steps 50
+"""
+import argparse
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-130m")
+    ap.add_argument("--steps", type=int, default=50)
+    args = ap.parse_args()
+    train_main(["--arch", args.arch, "--smoke", "--steps", str(args.steps),
+                "--ckpt-dir", "/tmp/tiny_lm_ckpt", "--ckpt-every", "10"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,128 @@
+"""Fault-tolerant checkpointing: atomic, content-verified, optionally async.
+
+Layout:  <dir>/step_<n>/
+             manifest.json   (tree structure, shapes, dtypes, crc32 per leaf)
+             leaf_<i>.npy
+A checkpoint is written to a temp directory and atomically renamed, so a
+crash mid-save never corrupts the latest restorable state.  ``save_async``
+snapshots to host (jax.device_get) synchronously — cheap — and writes on a
+background thread so the train loop keeps stepping.  Restore verifies CRCs,
+rebuilds the pytree, and (given a mesh + specs) device_puts each leaf with
+its sharding — which is also the re-shard path after an elastic re-mesh.
+
+At real multi-pod scale each process would write only its addressable
+shards; the manifest format already records per-leaf shape/dtype so that
+extension is a local change (documented, single-process here).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import zlib
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["CheckpointManager"]
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._pool = ThreadPoolExecutor(max_workers=1)
+        self._pending: Optional[Future] = None
+        self._lock = threading.Lock()
+
+    # -- write ---------------------------------------------------------
+    def save(self, step: int, tree: Any) -> str:
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        return self._write(step, host_tree)
+
+    def save_async(self, step: int, tree: Any) -> Future:
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        self.wait()
+        self._pending = self._pool.submit(self._write, step, host_tree)
+        return self._pending
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.result()
+            self._pending = None
+
+    def _write(self, step: int, host_tree) -> str:
+        leaves, treedef = jax.tree.flatten(host_tree)
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        manifest = {"step": step, "treedef": str(treedef), "leaves": []}
+        for i, leaf in enumerate(leaves):
+            arr = np.asarray(leaf)
+            path = os.path.join(tmp, f"leaf_{i}.npy")
+            np.save(path, arr)
+            manifest["leaves"].append({
+                "shape": list(arr.shape), "dtype": str(arr.dtype),
+                "crc32": zlib.crc32(arr.tobytes()) & 0xFFFFFFFF,
+            })
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        with self._lock:
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)          # atomic publish
+            self._gc()
+        return final
+
+    def _gc(self):
+        steps = sorted(self.steps())
+        for s in steps[: max(0, len(steps) - self.keep)]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # -- read ----------------------------------------------------------
+    def steps(self):
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                if os.path.exists(os.path.join(self.dir, name, "manifest.json")):
+                    out.append(int(name[5:]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def restore(self, template: Any, step: Optional[int] = None,
+                mesh=None, specs=None) -> Any:
+        """Rebuild the pytree of ``template``'s structure.  With mesh+specs
+        each leaf is device_put with its NamedSharding (elastic re-shard)."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        leaves_t, treedef = jax.tree.flatten(template)
+        assert len(leaves_t) == len(manifest["leaves"]), "tree mismatch"
+        out = []
+        for i, meta in enumerate(manifest["leaves"]):
+            arr = np.load(os.path.join(d, f"leaf_{i}.npy"))
+            crc = zlib.crc32(arr.tobytes()) & 0xFFFFFFFF
+            if crc != meta["crc32"]:
+                raise IOError(f"checksum mismatch in leaf_{i} of step {step}")
+            out.append(arr)
+        tree = jax.tree.unflatten(treedef, out)
+        if mesh is not None and specs is not None:
+            from jax.sharding import NamedSharding
+            tree = jax.tree.map(
+                lambda x, s: jax.device_put(x, NamedSharding(mesh, s)),
+                tree, specs)
+        return tree

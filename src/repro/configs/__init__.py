@@ -1,0 +1,4 @@
+from .base import ArchConfig, SHAPES, ShapeSpec
+from .registry import ARCHS, get_arch
+
+__all__ = ["ArchConfig", "SHAPES", "ShapeSpec", "ARCHS", "get_arch"]

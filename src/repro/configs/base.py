@@ -1,0 +1,124 @@
+"""Architecture config schema for the assigned arch pool (+ smoke variants).
+
+Every assigned architecture is a frozen ``ArchConfig``; ``smoke()`` derives a
+reduced same-family config for CPU tests.  ``d_head`` defaults to
+d_model // n_heads (the assignment fixes shapes via d_model and head counts).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+__all__ = ["ArchConfig", "SHAPES", "ShapeSpec"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # 'train' | 'prefill' | 'decode'
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                  # dense | ssm | hybrid | moe | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: Optional[int] = None
+    # attention flavor
+    rope_theta: float = 10_000.0
+    qk_norm: bool = False
+    # sliding window: per-layer pattern; None = global.  ``swa_period``:
+    # every swa_period-th layer (1-indexed) is global, the rest local with
+    # ``window``.  swa_period=0 -> all layers global unless window set for all
+    window: Optional[int] = None
+    swa_period: int = 0
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    # SSM (mamba2)
+    ssm_state: int = 0
+    ssm_headdim: int = 64
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    ssm_chunk: int = 128
+    # hybrid (zamba2-style): one shared attention block applied every
+    # ``shared_attn_period`` mamba blocks
+    shared_attn_period: int = 0
+    # encoder-decoder (whisper)
+    n_dec_layers: int = 0
+    dec_seq: int = 448
+    # modality frontend stub
+    frontend: str = "none"       # none | audio_stub | vision_stub
+    frontend_dim: int = 0        # mel bins / CLIP patch dim
+    n_img_tokens: int = 0
+    # capabilities
+    sub_quadratic: bool = False  # long_500k eligibility
+    tie_embeddings: bool = True
+    norm_eps: float = 1e-6
+    source: str = ""
+
+    @property
+    def head_dim(self) -> int:
+        if self.d_head:
+            return self.d_head
+        return self.d_model // self.n_heads if self.n_heads else 0
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_headdim
+
+    def layer_windows(self, seq_len: int) -> Tuple[int, ...]:
+        """Effective attention window per layer (seq_len == global)."""
+        out = []
+        for i in range(self.n_layers):
+            if self.window is None:
+                out.append(seq_len)
+            elif self.swa_period and (i + 1) % self.swa_period == 0:
+                out.append(seq_len)      # periodic global layer
+            else:
+                out.append(min(self.window, seq_len))
+        return tuple(out)
+
+    def smoke(self) -> "ArchConfig":
+        """Reduced same-family config for CPU smoke tests."""
+        return dataclasses.replace(
+            self,
+            n_layers=min(self.n_layers, 4 if self.shared_attn_period == 0
+                         else 2 * self.shared_attn_period),
+            d_model=128,
+            n_heads=4,
+            n_kv_heads=min(self.n_kv_heads, 2) if self.n_kv_heads else 0,
+            d_head=32,
+            d_ff=256 if self.d_ff else 0,
+            vocab=512,
+            window=None if self.window is None else 16,
+            n_experts=min(self.n_experts, 4) if self.n_experts else 0,
+            top_k=min(self.top_k, 2) if self.top_k else 0,
+            ssm_state=min(self.ssm_state, 16) if self.ssm_state else 0,
+            ssm_headdim=16 if self.ssm_state else 64,
+            ssm_chunk=16,
+            n_dec_layers=min(self.n_dec_layers, 2),
+            dec_seq=16 if self.n_dec_layers else 448,
+            frontend_dim=min(self.frontend_dim, 24) if self.frontend_dim else 0,
+            n_img_tokens=min(self.n_img_tokens, 8) if self.n_img_tokens else 0,
+        )

@@ -1,0 +1,5 @@
+"""Config for --arch gemma3-4b (exact assigned spec; see registry.py)."""
+from .registry import ARCHS
+
+CONFIG = ARCHS["gemma3-4b"]
+SMOKE = CONFIG.smoke()

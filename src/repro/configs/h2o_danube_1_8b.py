@@ -1,0 +1,5 @@
+"""Config for --arch h2o-danube-1.8b (exact assigned spec; see registry.py)."""
+from .registry import ARCHS
+
+CONFIG = ARCHS["h2o-danube-1.8b"]
+SMOKE = CONFIG.smoke()

@@ -1,0 +1,5 @@
+"""Config for --arch mamba2-130m (exact assigned spec; see registry.py)."""
+from .registry import ARCHS
+
+CONFIG = ARCHS["mamba2-130m"]
+SMOKE = CONFIG.smoke()

@@ -1,0 +1,5 @@
+"""Config for --arch phi3.5-moe-42b-a6.6b (exact assigned spec; see registry.py)."""
+from .registry import ARCHS
+
+CONFIG = ARCHS["phi3.5-moe-42b-a6.6b"]
+SMOKE = CONFIG.smoke()

@@ -1,0 +1,5 @@
+"""Config for --arch phi3-medium-14b (exact assigned spec; see registry.py)."""
+from .registry import ARCHS
+
+CONFIG = ARCHS["phi3-medium-14b"]
+SMOKE = CONFIG.smoke()

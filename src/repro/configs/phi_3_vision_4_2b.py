@@ -1,0 +1,5 @@
+"""Config for --arch phi-3-vision-4.2b (exact assigned spec; see registry.py)."""
+from .registry import ARCHS
+
+CONFIG = ARCHS["phi-3-vision-4.2b"]
+SMOKE = CONFIG.smoke()

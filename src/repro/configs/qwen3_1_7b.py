@@ -1,0 +1,5 @@
+"""Config for --arch qwen3-1.7b (exact assigned spec; see registry.py)."""
+from .registry import ARCHS
+
+CONFIG = ARCHS["qwen3-1.7b"]
+SMOKE = CONFIG.smoke()

@@ -1,0 +1,5 @@
+"""Config for --arch qwen3-moe-30b-a3b (exact assigned spec; see registry.py)."""
+from .registry import ARCHS
+
+CONFIG = ARCHS["qwen3-moe-30b-a3b"]
+SMOKE = CONFIG.smoke()

@@ -1,0 +1,65 @@
+"""The 10 assigned architectures, exactly as specified in the assignment
+(``[source; verified-tier]`` recorded in ``source``)."""
+from __future__ import annotations
+
+from .base import ArchConfig
+
+__all__ = ["ARCHS", "get_arch"]
+
+
+ARCHS = {
+    "mamba2-130m": ArchConfig(
+        name="mamba2-130m", family="ssm", n_layers=24, d_model=768,
+        n_heads=0, n_kv_heads=0, d_ff=0, vocab=50280, ssm_state=128,
+        sub_quadratic=True, source="SSD [arXiv:2405.21060; unverified]"),
+    "h2o-danube-1.8b": ArchConfig(
+        name="h2o-danube-1.8b", family="dense", n_layers=24, d_model=2560,
+        n_heads=32, n_kv_heads=8, d_ff=6912, vocab=32000,
+        window=4096, swa_period=0, sub_quadratic=True,
+        source="llama+mistral mix, SWA [arXiv:2401.16818; hf]"),
+    "gemma3-4b": ArchConfig(
+        name="gemma3-4b", family="dense", n_layers=34, d_model=2560,
+        n_heads=8, n_kv_heads=4, d_ff=10240, vocab=262144,
+        window=1024, swa_period=6, rope_theta=1_000_000.0,
+        sub_quadratic=True,
+        source="5:1 local:global, 128k [hf:google/gemma-3-1b-pt; unverified]"),
+    "phi3-medium-14b": ArchConfig(
+        name="phi3-medium-14b", family="dense", n_layers=40, d_model=5120,
+        n_heads=40, n_kv_heads=10, d_ff=17920, vocab=100352,
+        source="RoPE SwiGLU GQA [arXiv:2404.14219; unverified]"),
+    "qwen3-1.7b": ArchConfig(
+        name="qwen3-1.7b", family="dense", n_layers=28, d_model=2048,
+        n_heads=16, n_kv_heads=8, d_ff=6144, vocab=151936, qk_norm=True,
+        source="qk_norm, GQA [hf:Qwen/Qwen3-8B; hf]"),
+    "zamba2-2.7b": ArchConfig(
+        name="zamba2-2.7b", family="hybrid", n_layers=54, d_model=2560,
+        n_heads=32, n_kv_heads=32, d_ff=10240, vocab=32000, ssm_state=64,
+        shared_attn_period=6, sub_quadratic=True,
+        source="Mamba2 + shared attn blocks [arXiv:2411.15242; hf]"),
+    "whisper-large-v3": ArchConfig(
+        name="whisper-large-v3", family="encdec", n_layers=32, d_model=1280,
+        n_heads=20, n_kv_heads=20, d_ff=5120, vocab=51866,
+        n_dec_layers=32, dec_seq=448, frontend="audio_stub", frontend_dim=128,
+        source="enc-dec, conv frontend (stub) [arXiv:2212.04356; unverified]"),
+    "qwen3-moe-30b-a3b": ArchConfig(
+        name="qwen3-moe-30b-a3b", family="moe", n_layers=48, d_model=2048,
+        n_heads=32, n_kv_heads=4, d_ff=768, vocab=151936,
+        n_experts=128, top_k=8, qk_norm=True,
+        source="128 experts top-8 [hf:Qwen/Qwen3-30B-A3B; hf]"),
+    "phi3.5-moe-42b-a6.6b": ArchConfig(
+        name="phi3.5-moe-42b-a6.6b", family="moe", n_layers=32, d_model=4096,
+        n_heads=32, n_kv_heads=8, d_ff=6400, vocab=32064,
+        n_experts=16, top_k=2,
+        source="16 experts top-2 [hf:microsoft/Phi-3.5-MoE-instruct; hf]"),
+    "phi-3-vision-4.2b": ArchConfig(
+        name="phi-3-vision-4.2b", family="vlm", n_layers=32, d_model=3072,
+        n_heads=32, n_kv_heads=32, d_ff=8192, vocab=32064,
+        frontend="vision_stub", frontend_dim=1024, n_img_tokens=576,
+        source="phi3-mini + CLIP [hf:microsoft/Phi-3-vision-128k-instruct; hf]"),
+}
+
+
+def get_arch(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(ARCHS)}")
+    return ARCHS[name]

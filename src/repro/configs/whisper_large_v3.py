@@ -1,0 +1,5 @@
+"""Config for --arch whisper-large-v3 (exact assigned spec; see registry.py)."""
+from .registry import ARCHS
+
+CONFIG = ARCHS["whisper-large-v3"]
+SMOKE = CONFIG.smoke()

@@ -1,0 +1,5 @@
+"""Config for --arch zamba2-2.7b (exact assigned spec; see registry.py)."""
+from .registry import ARCHS
+
+CONFIG = ARCHS["zamba2-2.7b"]
+SMOKE = CONFIG.smoke()

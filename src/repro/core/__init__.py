@@ -1,0 +1,35 @@
+"""PolyFit core — the paper's contribution as a composable JAX module.
+
+Index construction (fitting + segmentation) runs in float64 (the minimax
+certificates are meaningless at float32 for cumulative functions reaching
+1e8); we therefore enable jax x64 here.  Model/serving code elsewhere in the
+package uses explicitly-dtyped float32/bfloat16 arrays and is unaffected.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from .exact import ExactMax, ExactSum, build_sparse_table, sparse_table_range_max  # noqa: E402
+from .fitting import (  # noqa: E402
+    PolyModel, continuum_error, eval_poly, eval_poly_batch, fit_lstsq,
+    fit_minimax_lawson, fit_minimax_lp, lawson_batched, max_error, rescale,
+)
+from .segmentation import (FastAcceptFitter, dp_segmentation,  # noqa: E402
+                           greedy_segmentation, parallel_segmentation)
+from .index import PolyFitIndex1D, build_index_1d  # noqa: E402
+from .index2d import (MergeSortTree, PolyFitIndex2D, build_index_2d,  # noqa: E402
+                      count_dominated, dominance_rank, query_count_2d)
+from .queries import QueryResult, poly_max_on_interval, query_max, query_sum  # noqa: E402
+from .baselines import FitingTree, PGMIndex, RMIIndex, cone_segments  # noqa: E402
+
+__all__ = [
+    "PolyModel", "continuum_error", "eval_poly", "eval_poly_batch", "fit_lstsq",
+    "fit_minimax_lawson", "fit_minimax_lp", "lawson_batched", "max_error",
+    "rescale", "FastAcceptFitter", "dp_segmentation", "greedy_segmentation",
+    "parallel_segmentation", "PolyFitIndex1D", "build_index_1d",
+    "MergeSortTree", "PolyFitIndex2D", "build_index_2d", "count_dominated",
+    "dominance_rank", "query_count_2d",
+    "ExactMax", "ExactSum", "build_sparse_table", "sparse_table_range_max",
+    "QueryResult", "poly_max_on_interval", "query_max", "query_sum",
+    "FitingTree", "PGMIndex", "RMIIndex", "cone_segments",
+]

@@ -1,0 +1,111 @@
+"""Exact range-aggregate baselines (paper §3.2), TPU-adapted.
+
+* ``ExactSum``  — the key-cumulative array of §3.2.1: presorted keys +
+  CF_sum prefix array; a range SUM is two ``searchsorted`` lookups
+  (Eq. 5).  Unlike the classical prefix-sum array it supports floating-point
+  search keys, exactly as the paper notes.
+* ``ExactMax``  — the aggregate max-tree of §3.2.2, adapted to TPU as a
+  **sparse table** (binary lifting): ``st[j, i] = max(m[i : i+2^j])``.
+  A range max over any [i, j) is the max of two overlapping power-of-two
+  windows — O(1), branch-free, fully vectorized over query batches.  This
+  replaces the pointer-based O(log n) tree descent (DESIGN.md §3).
+
+Both are pure JAX on the query path (vectorized over batches of queries) and
+double as the refinement backend for the relative-error guarantee
+(Algorithms 2 & 3, line "perform refinement on D").
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["ExactSum", "ExactMax", "build_sparse_table", "sparse_table_range_max"]
+
+
+def build_sparse_table(m: np.ndarray) -> np.ndarray:
+    """st[j, i] = max(m[i : i + 2^j]) (clipped at the end).  (L, n)."""
+    m = np.asarray(m)
+    n = len(m)
+    levels = max(1, int(np.floor(np.log2(max(n, 1)))) + 1)
+    st = np.full((levels, n), -np.inf, dtype=np.float64)
+    st[0] = m
+    for j in range(1, levels):
+        half = 1 << (j - 1)
+        right = np.concatenate([st[j - 1, half:], np.full(half, -np.inf)])
+        st[j] = np.maximum(st[j - 1], right)
+    return st
+
+
+def sparse_table_range_max(st: jnp.ndarray, i: jnp.ndarray, j: jnp.ndarray):
+    """Vectorized max over [i, j) per query; empty ranges give -inf.
+
+    i, j: int arrays of equal shape.  O(1) per query: two gathers + max.
+    """
+    length = jnp.maximum(j - i, 0)
+    # floor(log2(length)); length==0 handled via -inf mask
+    lvl = jnp.where(length > 0,
+                    jnp.floor(jnp.log2(jnp.maximum(length, 1).astype(jnp.float64))).astype(jnp.int32),
+                    0)
+    pow2 = (1 << lvl).astype(i.dtype)
+    left = st[lvl, i]
+    right = st[lvl, jnp.maximum(j - pow2, 0)]
+    out = jnp.maximum(left, right)
+    return jnp.where(length > 0, out, -jnp.inf)
+
+
+@dataclasses.dataclass(frozen=True)
+class ExactSum:
+    """Sorted keys + cumulative measure array; exact SUM/COUNT in O(log n)."""
+
+    keys: jnp.ndarray      # (n,) sorted
+    cf: jnp.ndarray        # (n,) CF_sum at each key (inclusive prefix sum)
+
+    @staticmethod
+    def build(keys: np.ndarray, measures: np.ndarray) -> "ExactSum":
+        order = np.argsort(keys, kind="stable")
+        k = np.asarray(keys, np.float64)[order]
+        m = np.asarray(measures, np.float64)[order]
+        return ExactSum(jnp.asarray(k), jnp.asarray(np.cumsum(m)))
+
+    def cf_at(self, q: jnp.ndarray) -> jnp.ndarray:
+        """CF_sum(q) = sum of measures with key <= q (vectorized)."""
+        idx = jnp.searchsorted(self.keys, q, side="right")
+        padded = jnp.concatenate([jnp.zeros((1,), self.cf.dtype), self.cf])
+        return padded[idx]
+
+    def query(self, lq: jnp.ndarray, uq: jnp.ndarray) -> jnp.ndarray:
+        """Exact R_sum(D, [lq, uq]) for batches of ranges (Eq. 5).
+
+        Inclusive endpoints: sum over keys in [lq, uq].
+        """
+        hi = self.cf_at(uq)
+        lo_idx = jnp.searchsorted(self.keys, lq, side="left")
+        padded = jnp.concatenate([jnp.zeros((1,), self.cf.dtype), self.cf])
+        lo = padded[lo_idx]
+        return hi - lo
+
+
+@dataclasses.dataclass(frozen=True)
+class ExactMax:
+    """Sorted keys + sparse table over measures; exact MAX in O(1)/query."""
+
+    keys: jnp.ndarray      # (n,) sorted
+    measures: jnp.ndarray  # (n,)
+    st: jnp.ndarray        # (L, n) sparse table
+
+    @staticmethod
+    def build(keys: np.ndarray, measures: np.ndarray) -> "ExactMax":
+        order = np.argsort(keys, kind="stable")
+        k = np.asarray(keys, np.float64)[order]
+        m = np.asarray(measures, np.float64)[order]
+        return ExactMax(jnp.asarray(k), jnp.asarray(m), jnp.asarray(build_sparse_table(m)))
+
+    def query(self, lq: jnp.ndarray, uq: jnp.ndarray) -> jnp.ndarray:
+        """Exact R_max(D, [lq, uq]), inclusive; empty ranges -> -inf."""
+        i = jnp.searchsorted(self.keys, lq, side="left")
+        j = jnp.searchsorted(self.keys, uq, side="right")
+        return sparse_table_range_max(self.st, i, j)

@@ -1,0 +1,258 @@
+"""Minimax (Chebyshev / L-infinity) polynomial fitting — the heart of PolyFit.
+
+The paper (Def. 4.1 / Eq. 10) fits, inside a key interval I holding keys
+k_1..k_l with exact-function values F(k_i), the polynomial P minimizing
+
+    E(I) = min_{a} max_i |F(k_i) - P(k_i)|
+
+via a linear program solved with CPLEX.  We provide three fitters:
+
+* ``fit_minimax_lp``     — the paper-faithful LP (scipy/HiGHS, exact).
+* ``fit_minimax_lawson`` — Lawson's iteratively-reweighted-least-squares
+  algorithm in pure JAX.  It converges to the same minimax solution and, being
+  a fixed sequence of small weighted lstsq solves, is *vmappable*: thousands
+  of candidate intervals are fitted in one batched device call.  This is the
+  beyond-paper construction engine (see DESIGN.md §3).
+* ``fit_lstsq``          — plain least squares; used as a cheap lower-bound
+  screen (max-residual of the L2 fit upper-bounds E(I)).
+
+Numerical conditioning: the paper observes CPLEX condition numbers of 1E+10
+at degree 4 on raw keys.  We always rescale keys to u = (2k - lo - hi) /
+(hi - lo) ∈ [-1, 1] per interval before building the Vandermonde system; the
+stored model is (lo, hi, coeffs-in-u).  Evaluation is Horner in u.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "PolyModel",
+    "rescale",
+    "eval_poly",
+    "eval_poly_batch",
+    "fit_lstsq",
+    "fit_minimax_lp",
+    "fit_minimax_lawson",
+    "lawson_batched",
+    "max_error",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class PolyModel:
+    """One fitted segment: P(k) = Horner(coeffs, u(k)) on [lo, hi]."""
+
+    lo: float
+    hi: float
+    coeffs: np.ndarray  # (deg+1,), ascending powers of u
+    err: float          # E(I): certified max |F - P| over the fitted keys
+
+    @property
+    def deg(self) -> int:
+        return len(self.coeffs) - 1
+
+    def __call__(self, k):
+        u = rescale(k, self.lo, self.hi)
+        return eval_poly(self.coeffs, u)
+
+
+def rescale(k, lo, hi):
+    """Map keys in [lo, hi] to u in [-1, 1] (degenerate interval -> 0)."""
+    span = hi - lo
+    span = np.where(span <= 0, 1.0, span) if isinstance(span, np.ndarray) else (
+        span if span > 0 else 1.0)
+    return (2.0 * k - lo - hi) / span
+
+
+def eval_poly(coeffs, u):
+    """Horner evaluation, ascending-power coeffs. Works for np and jnp."""
+    xp = jnp if isinstance(u, jnp.ndarray) or isinstance(coeffs, jnp.ndarray) else np
+    acc = xp.zeros_like(u) + coeffs[-1]
+    for j in range(len(coeffs) - 2, -1, -1):
+        acc = acc * u + coeffs[j]
+    return acc
+
+
+def eval_poly_batch(coeffs, u):
+    """Horner over batched coeffs: coeffs (..., deg+1), u (...,) -> (...,)."""
+    acc = coeffs[..., -1]
+    for j in range(coeffs.shape[-1] - 2, -1, -1):
+        acc = acc * u + coeffs[..., j]
+    return acc
+
+
+def _vander(u, deg):
+    xp = jnp if isinstance(u, jnp.ndarray) else np
+    return xp.stack([u**j for j in range(deg + 1)], axis=-1)
+
+
+def max_error(model: PolyModel, keys: np.ndarray, values: np.ndarray) -> float:
+    return float(np.max(np.abs(values - model(keys)))) if len(keys) else 0.0
+
+
+def continuum_error(model: PolyModel, keys: np.ndarray, values: np.ndarray,
+                    strict: bool = False) -> float:
+    """Certificate extension for MAX soundness (DESIGN.md §3).
+
+    The paper's LP (Eq. 10) bounds |F - P| at the keys only, but the MAX
+    query (Eq. 17) maximizes P over a *continuous* region: a fit that
+    interpolates the keys but bulges between them silently breaks Lemma 5.3
+    (observed: 200x overestimates on white-noise measures).
+
+    For the paper's workload (query endpoints drawn from the key set), the
+    region-max candidates are piece endpoints (covered by the key
+    constraints) plus P's interior critical points.  We therefore certify
+    err = max(key errors, |P(c) - m_i| for each critical point c inside
+    piece i).  Critical points come from np.roots on P' (host-side, any
+    degree).  ``strict=True`` additionally certifies the right-limit of each
+    flat piece (|P(k_{i+1}) - m_i|), extending the bound to arbitrary real
+    query endpoints at the cost of far shorter segments on jumpy data.
+    """
+    keys = np.asarray(keys, np.float64)
+    values = np.asarray(values, np.float64)
+    ell = len(keys)
+    if ell == 0:
+        return 0.0
+    u = rescale(keys, model.lo, model.hi)
+    Pu = eval_poly(model.coeffs, u)
+    err = float(np.max(np.abs(values - Pu)))
+    deg = model.deg
+    if strict and ell >= 2:
+        err = max(err, float(np.max(np.abs(Pu[1:] - values[:-1]))))
+    if deg < 2 or ell < 2:
+        return err
+    dcoef = model.coeffs[1:] * np.arange(1, deg + 1)
+    r = np.roots(dcoef[::-1]) if len(dcoef) > 1 else np.array([])
+    crit = np.real(r[np.abs(np.imag(r)) < 1e-12]) if len(r) else np.array([])
+    crit = crit[(crit > -1.0) & (crit < 1.0)]
+    ua, ub = u[:-1], u[1:]
+    for c in crit:
+        inside = (ua < c) & (c < ub)
+        if inside.any():
+            pc = float(eval_poly(model.coeffs, np.float64(c)))
+            err = max(err, float(np.max(np.abs(pc - values[:-1][inside]))))
+    return err
+
+
+# ---------------------------------------------------------------------------
+# Least squares (screening / Lawson initialization)
+# ---------------------------------------------------------------------------
+
+def fit_lstsq(keys: np.ndarray, values: np.ndarray, deg: int) -> PolyModel:
+    keys = np.asarray(keys, np.float64)
+    values = np.asarray(values, np.float64)
+    lo, hi = float(keys[0]), float(keys[-1])
+    u = rescale(keys, lo, hi)
+    A = _vander(u, deg)
+    coef, *_ = np.linalg.lstsq(A, values, rcond=None)
+    err = float(np.max(np.abs(values - A @ coef))) if len(keys) else 0.0
+    return PolyModel(lo, hi, coef, err)
+
+
+# ---------------------------------------------------------------------------
+# Exact LP minimax (paper Eq. 10) — scipy/HiGHS
+# ---------------------------------------------------------------------------
+
+def fit_minimax_lp(keys: np.ndarray, values: np.ndarray, deg: int) -> PolyModel:
+    """Solve Eq. 10 exactly: minimize t s.t. |F(k_i) - P(k_i)| <= t."""
+    from scipy.optimize import linprog
+
+    keys = np.asarray(keys, np.float64)
+    values = np.asarray(values, np.float64)
+    n = len(keys)
+    lo, hi = float(keys[0]), float(keys[-1])
+    if n <= deg + 1:
+        # interpolation: error 0 (solve square/underdetermined system)
+        u = rescale(keys, lo, hi)
+        A = _vander(u, deg)
+        coef, *_ = np.linalg.lstsq(A, values, rcond=None)
+        return PolyModel(lo, hi, coef, max(0.0, float(np.max(np.abs(values - A @ coef))) if n else 0.0))
+    u = rescale(keys, lo, hi)
+    A = _vander(u, deg)
+    ones = np.ones((n, 1))
+    #  F - A a <= t   ->  -A a - t <= -F
+    #  A a - F <= t   ->   A a - t <=  F
+    A_ub = np.block([[-A, -ones], [A, -ones]])
+    b_ub = np.concatenate([-values, values])
+    c = np.zeros(deg + 2)
+    c[-1] = 1.0
+    res = linprog(c, A_ub=A_ub, b_ub=b_ub,
+                  bounds=[(None, None)] * (deg + 1) + [(0, None)],
+                  method="highs")
+    if not res.success:  # pragma: no cover - HiGHS is robust on these
+        m = fit_lstsq(keys, values, deg)
+        return m
+    coef = res.x[: deg + 1]
+    err = float(np.max(np.abs(values - A @ coef)))
+    return PolyModel(lo, hi, coef, err)
+
+
+# ---------------------------------------------------------------------------
+# Lawson IRLS minimax — pure JAX, vmappable
+# ---------------------------------------------------------------------------
+
+def _lawson_body(A, F, w, ridge):
+    """One Lawson step: weighted lstsq, then reweight by |residual|."""
+    Aw = A * w[:, None]
+    G = Aw.T @ A + ridge * jnp.eye(A.shape[1], dtype=A.dtype)
+    b = Aw.T @ F
+    coef = jnp.linalg.solve(G, b)
+    r = jnp.abs(F - A @ coef)
+    w_new = w * r
+    s = jnp.sum(w_new)
+    w_new = jnp.where(s > 0, w_new / s, w)
+    return coef, w_new, r
+
+
+@partial(jax.jit, static_argnames=("deg", "iters"))
+def _lawson_fixed(u, F, valid, deg: int, iters: int):
+    """Lawson on padded arrays. ``valid`` masks padding.
+
+    Returns (coeffs (deg+1,), max_abs_residual over valid points).
+    """
+    A = _vander(u, deg)
+    # zero out padded rows so they contribute nothing
+    A = A * valid[:, None]
+    Fv = F * valid
+    nval = jnp.maximum(jnp.sum(valid), 1.0)
+    w = valid / nval
+    ridge = jnp.asarray(1e-9, A.dtype)
+
+    def body(carry, _):
+        w, _ = carry
+        coef, w_new, r = _lawson_body(A, Fv, w, ridge)
+        return (w_new, coef), None
+
+    coef0 = jnp.zeros((deg + 1,), A.dtype)
+    (w, coef), _ = jax.lax.scan(body, (w, coef0), None, length=iters)
+    resid = jnp.abs(Fv - A @ coef) * valid
+    return coef, jnp.max(resid)
+
+
+def fit_minimax_lawson(keys, values, deg: int, iters: int = 60) -> PolyModel:
+    keys = np.asarray(keys, np.float64)
+    values = np.asarray(values, np.float64)
+    lo, hi = float(keys[0]), float(keys[-1])
+    u = jnp.asarray(rescale(keys, lo, hi))
+    F = jnp.asarray(values)
+    valid = jnp.ones_like(F)
+    coef, err = _lawson_fixed(u, F, valid, deg, iters)
+    return PolyModel(lo, hi, np.asarray(coef), float(err))
+
+
+@partial(jax.jit, static_argnames=("deg", "iters"))
+def lawson_batched(u, F, valid, deg: int, iters: int = 60):
+    """Batched Lawson: u/F/valid are (B, L) padded windows in the scaled
+    variable; returns coeffs (B, deg+1) and errs (B,).
+
+    This is the TPU-parallel construction engine: one call fits B candidate
+    intervals simultaneously (DESIGN.md §3, parallel GS).
+    """
+    fn = partial(_lawson_fixed, deg=deg, iters=iters)
+    return jax.vmap(fn)(u, F, valid)

@@ -1,0 +1,236 @@
+"""PolyFit 1-D index: a sequence of minimax polynomial segments + aggregates.
+
+Construction follows the paper (§4): build F(k) (CF_sum for SUM/COUNT,
+DF_max for MAX/MIN; Eq. 7), segment it with GS subject to E(I) <= delta, and
+index the segments.  The TPU-side layout replaces the STX B-tree / aggregate
+R-tree with flat device arrays + a sparse table (DESIGN.md §3):
+
+    seg_lo     (h,)        first key of each segment (sorted; search bounds)
+    seg_hi     (h,)        last key of each segment (the fit's own scale hi)
+    coeffs     (h, deg+1)  polynomial coefficients in the scaled variable u
+    seg_start  (h,)        index of the first dataset key in the segment
+    seg_agg    (h,)        exact MAX (or -MIN) of measures inside the segment
+    st         (L, h)      sparse table over seg_agg (MAX/MIN only)
+
+Query semantics: ranges are (lq, uq] for SUM/COUNT (the paper's Eq. 5 computes
+CF(uq) - CF(lq) with an inclusive CF, which selects keys in (lq, uq]) and
+[lq, uq] for MAX/MIN.  The deterministic guarantees (Lemmas 5.1-5.4) hold for
+query endpoints drawn from the key domain, matching the paper's workload
+("we randomly choose two keys in the datasets as the start and end points").
+
+``staircase=True`` additionally constrains each fit at both ends of every
+flat piece of the step function, extending the certified bound from the key
+set toward the continuum (DESIGN.md §3); the paper-faithful default is False.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .exact import ExactMax, ExactSum, build_sparse_table
+from .fitting import PolyModel, continuum_error, fit_minimax_lp
+from .segmentation import (FastAcceptFitter, Fitter, greedy_segmentation,
+                           parallel_segmentation)
+
+__all__ = ["PolyFitIndex1D", "build_index_1d"]
+
+_SUPPORTED = ("sum", "count", "max", "min")
+
+
+@dataclasses.dataclass(frozen=True)
+class PolyFitIndex1D:
+    agg: str                 # 'sum' | 'count' | 'max' | 'min'
+    deg: int
+    delta: float
+    # device arrays ----------------------------------------------------
+    seg_lo: jnp.ndarray      # (h,)
+    seg_hi: jnp.ndarray      # (h,)
+    coeffs: jnp.ndarray      # (h, deg+1)
+    seg_start: jnp.ndarray   # (h,) int32
+    seg_agg: Optional[jnp.ndarray]   # (h,)  (max/min only)
+    st: Optional[jnp.ndarray]        # (L, h) sparse table (max/min only)
+    # refinement backend (exact structures over the raw data) -----------
+    exact_sum: Optional[ExactSum]
+    exact_max: Optional[ExactMax]
+    n: int                   # dataset size
+
+    @property
+    def h(self) -> int:
+        return int(self.seg_lo.shape[0])
+
+    def size_bytes(self) -> int:
+        """Index size (paper's metric): segments + coefficients + aggregates.
+
+        Excludes the raw-data refinement backend, mirroring the paper, which
+        reports the learned structure's size (the dataset itself is needed by
+        every method's refinement phase alike).
+        """
+        total = self.seg_lo.nbytes + self.seg_hi.nbytes + self.coeffs.nbytes
+        total += self.seg_start.nbytes
+        if self.seg_agg is not None:
+            total += self.seg_agg.nbytes + self.st.nbytes
+        return int(total)
+
+    def locate(self, q: jnp.ndarray) -> jnp.ndarray:
+        """Segment id containing each query key (clamped to the domain)."""
+        idx = jnp.searchsorted(self.seg_lo, q, side="right") - 1
+        return jnp.clip(idx, 0, self.h - 1)
+
+    def eval_at(self, q: jnp.ndarray) -> jnp.ndarray:
+        """P_{I(q)}(q): evaluate the covering polynomial (vectorized).
+
+        u is clamped to [-1, 1]: the polynomial is certified on the segment's
+        key span, and F is constant on the gap between the segment's last key
+        and the next segment's first key, so clamping is exact for CF-type
+        functions and prevents extrapolation outside the certified region.
+        """
+        idx = self.locate(q)
+        lo = self.seg_lo[idx]
+        hi = self.seg_hi[idx]
+        span = jnp.where(hi > lo, hi - lo, 1.0)
+        u = jnp.clip((2.0 * q - lo - hi) / span, -1.0, 1.0)
+        c = self.coeffs[idx]              # (..., deg+1)
+        acc = c[..., -1]
+        for j in range(self.coeffs.shape[-1] - 2, -1, -1):
+            acc = acc * u + c[..., j]
+        return acc
+
+
+def _exact_function(keys: np.ndarray, measures: np.ndarray, agg: str):
+    """(sorted_keys, F(k_i) values at keys, sorted_measures)."""
+    order = np.argsort(keys, kind="stable")
+    k = np.asarray(keys, np.float64)[order]
+    m = np.asarray(measures, np.float64)[order]
+    if agg in ("sum", "count"):
+        F = np.cumsum(m)                      # CF_sum (inclusive)
+    elif agg == "max":
+        F = m                                 # DF_max at the keys
+    elif agg == "min":
+        F = -m                                # reuse MAX machinery
+        m = -m
+    else:
+        raise ValueError(f"agg must be one of {_SUPPORTED}, got {agg}")
+    return k, F, m
+
+
+def _continuum_post(m: PolyModel, keys, values) -> PolyModel:
+    """Certificate post-processor: err := max(key error, continuum sup-error
+    vs the step function F).
+
+    Required for sound MAX/MIN evaluation: Eq. 17 maximizes P over continuous
+    regions, and near-interpolating fits can bulge between keys (DESIGN.md §3,
+    beyond-paper soundness fix).
+    """
+    ce = continuum_error(m, keys, values)
+    if ce > m.err:
+        m = PolyModel(m.lo, m.hi, m.coeffs, ce)
+    return m
+
+
+def _enforce_continuum(segs, k, F, deg, delta, fitter):
+    """Re-segment (greedily) any parallel-built segment whose continuum
+    certificate exceeds delta."""
+    out: List[PolyModel] = []
+    for s in segs:
+        i = int(np.searchsorted(k, s.lo, side="left"))
+        j = int(np.searchsorted(k, s.hi, side="right"))
+        m = fitter(k[i:j], F[i:j], deg)
+        if m.err <= delta:
+            out.append(m)
+        else:
+            out.extend(greedy_segmentation(k[i:j], F[i:j], deg, delta, fitter=fitter))
+    return out
+
+
+def _staircase_points(k: np.ndarray, F: np.ndarray):
+    """Add (k_{i+1}, F(k_i)) constraint pairs: both ends of each flat piece."""
+    if len(k) < 2:
+        return k, F
+    ks = np.concatenate([k, k[1:]])
+    Fs = np.concatenate([F, F[:-1]])
+    order = np.argsort(ks, kind="stable")
+    return ks[order], Fs[order]
+
+
+def build_index_1d(
+    keys: np.ndarray,
+    measures: Optional[np.ndarray],
+    agg: str,
+    deg: int = 2,
+    delta: float = 100.0,
+    fitter: Fitter = fit_minimax_lp,
+    method: str = "greedy",          # 'greedy' | 'parallel'
+    staircase: bool = False,
+    continuum: Optional[bool] = None,
+    fast_accept: bool = True,
+    keep_exact: bool = True,
+) -> PolyFitIndex1D:
+    """Construct a PolyFit index (paper §4).
+
+    measures=None with agg='count' counts records (measure := 1).
+    ``method='parallel'`` uses the batched-Lawson TPU construction.
+    ``continuum`` (default: True for max/min, False for sum/count) makes the
+    per-segment certificate cover the whole key span, not just the keys —
+    required for sound MAX evaluation (see ``fitting.continuum_error``).
+    """
+    keys = np.asarray(keys, np.float64)
+    if measures is None:
+        if agg != "count":
+            raise ValueError("measures required unless agg='count'")
+        measures = np.ones_like(keys)
+    measures = np.asarray(measures, np.float64)
+    if agg == "count":
+        measures = np.ones_like(keys)
+    k, F, m_sorted = _exact_function(keys, measures, agg)
+
+    is_extremal = agg in ("max", "min")
+    if continuum is None:
+        continuum = is_extremal
+    eff_fitter = FastAcceptFitter(
+        exact=fitter, delta=delta,
+        post=_continuum_post if continuum else None, screen=fast_accept)
+
+    fit_k, fit_F = (_staircase_points(k, F) if staircase else (k, F))
+    if method == "parallel":
+        segs = parallel_segmentation(fit_k, fit_F, deg, delta, fitter=eff_fitter)
+        if continuum:
+            segs = _enforce_continuum(segs, fit_k, fit_F, deg, delta, eff_fitter)
+    else:
+        segs = greedy_segmentation(fit_k, fit_F, deg, delta, fitter=eff_fitter)
+
+    h = len(segs)
+    seg_lo = np.array([s.lo for s in segs])
+    seg_hi = np.array([s.hi for s in segs])   # the fit's own scale hi
+    coeffs = np.zeros((h, deg + 1))
+    for i, s in enumerate(segs):
+        coeffs[i, : len(s.coeffs)] = s.coeffs
+    seg_start = np.searchsorted(k, seg_lo, side="left").astype(np.int32)
+
+    seg_agg = st = None
+    exact_sum = exact_max = None
+    if is_extremal:
+        seg_end = np.concatenate([seg_start[1:], [len(k)]]).astype(np.int32)
+        seg_agg = np.array([
+            m_sorted[s:e].max() if e > s else -np.inf
+            for s, e in zip(seg_start, seg_end)
+        ])
+        st = build_sparse_table(seg_agg)
+    if keep_exact:
+        if is_extremal:
+            exact_max = ExactMax(jnp.asarray(k), jnp.asarray(m_sorted),
+                                 jnp.asarray(build_sparse_table(m_sorted)))
+        else:
+            exact_sum = ExactSum(jnp.asarray(k), jnp.asarray(np.cumsum(m_sorted)))
+
+    return PolyFitIndex1D(
+        agg=agg, deg=deg, delta=float(delta),
+        seg_lo=jnp.asarray(seg_lo), seg_hi=jnp.asarray(seg_hi),
+        coeffs=jnp.asarray(coeffs), seg_start=jnp.asarray(seg_start),
+        seg_agg=None if seg_agg is None else jnp.asarray(seg_agg),
+        st=None if st is None else jnp.asarray(st),
+        exact_sum=exact_sum, exact_max=exact_max, n=len(k),
+    )

@@ -1,0 +1,413 @@
+"""PolyFit with two keys (paper §6): quadtree-segmented bivariate surfaces.
+
+Pipeline (COUNT, the aggregate the paper evaluates):
+
+1. ``CF_count(u, v)`` = #points with x<=u and y<=v (Def. 6.2).  Exact values
+   are produced offline by a vectorized divide-and-conquer dominance counter
+   (numpy mergesort + searchsorted; O(n log^2 n), no Python-level per-point
+   loops).
+2. Quadtree segmentation (Fig. 10): a region whose best bivariate fit
+   P(u,v) = sum a_ij u^i v^j (i,j <= deg) violates E(I) <= delta is split
+   into 4 children at the midpoint.  Constraints are the data points inside
+   the region plus a fixed evaluation grid and the region corners (all with
+   exact CF values), which controls the fit away from data — query corners
+   mix x and y from *different* records, so data points alone do not cover
+   the evaluation locations (documented deviation, DESIGN.md §6).
+3. Query (Eq. 19): 4-corner inclusion-exclusion, each corner evaluated in
+   its own leaf region.  Leaves are found with a fixed-depth, branch-free
+   quadtree descent (vectorized over query batches).
+4. Guarantees: delta = eps_abs/4 (Lemma 6.3); the Q_rel test
+   A >= 4*delta*(1+1/eps_rel) (Lemma 6.4) routes failing queries to the
+   exact backend — a merge-sort tree (static BIT decomposition over x-rank
+   with per-level sorted y arrays), which answers exact rectangle counts in
+   O(log^2 n) fully vectorized gathers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "dominance_rank",
+    "count_dominated",
+    "MergeSortTree",
+    "PolyFitIndex2D",
+    "build_index_2d",
+    "query_count_2d",
+]
+
+
+# ---------------------------------------------------------------------------
+# offline exact CF_count evaluation
+# ---------------------------------------------------------------------------
+
+def count_dominated(px: np.ndarray, py: np.ndarray,
+                    qx: np.ndarray, qy: np.ndarray) -> np.ndarray:
+    """For each query point (qx_j, qy_j): #data points with x<=qx and y<=qy."""
+    tree = MergeSortTree.build(px, py)
+    return np.asarray(tree.cf(jnp.asarray(np.asarray(qx, np.float64)),
+                              jnp.asarray(np.asarray(qy, np.float64))))
+
+
+def dominance_rank(px: np.ndarray, py: np.ndarray) -> np.ndarray:
+    """CF_count at every data point (inclusive of the point itself)."""
+    return count_dominated(px, py, px, py)
+
+
+# ---------------------------------------------------------------------------
+# exact online backend: merge sort tree (refinement + exact baseline)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MergeSortTree:
+    """Static BIT-style decomposition for exact rectangle counts in JAX.
+
+    xs        (n,)   x-sorted keys
+    ys_levels (L, n) y values sorted within blocks of size 2^l at level l
+    """
+
+    xs: jnp.ndarray
+    ys_levels: jnp.ndarray
+
+    @staticmethod
+    def build(px: np.ndarray, py: np.ndarray) -> "MergeSortTree":
+        order = np.argsort(px, kind="stable")
+        xs = np.asarray(px, np.float64)[order]
+        ys = np.asarray(py, np.float64)[order]
+        n = len(xs)
+        levels = max(1, int(np.ceil(np.log2(max(n, 2)))) + 1)
+        npad = 1 << (levels - 1)
+        arrs = np.empty((levels, n), np.float64)
+        arrs[0] = ys  # level 0: blocks of size 1 (already "sorted")
+        padded = np.full(npad, np.inf)
+        padded[:n] = ys
+        for l in range(1, levels):
+            b = 1 << l
+            # vectorized per-block sort: reshape to (npad/b, b), sort rows
+            padded = np.sort(padded.reshape(-1, b), axis=1).reshape(-1)
+            arrs[l] = padded[:n]
+        return MergeSortTree(jnp.asarray(xs), jnp.asarray(arrs))
+
+    @property
+    def n(self) -> int:
+        return int(self.xs.shape[0])
+
+    def _count_prefix(self, i: jnp.ndarray, v: jnp.ndarray,
+                      strict: bool = False) -> jnp.ndarray:
+        """#points among x-rank [0, i) with y <= v (or y < v if strict)."""
+        n = self.n
+        levels = int(self.ys_levels.shape[0])
+        total = jnp.zeros_like(i)
+        pos = jnp.zeros_like(i)
+        for l in range(levels - 1, -1, -1):
+            b = 1 << l
+            take = pos + b <= i
+            # binary search for v in ys_levels[l][pos : pos+b] (sorted run)
+            lo = jnp.zeros_like(i)
+            hi = jnp.full_like(i, b)
+            for _ in range(l + 1):
+                active = lo < hi
+                mid = (lo + hi) // 2
+                idx = jnp.clip(pos + jnp.minimum(mid, b - 1), 0, n - 1)
+                y = self.ys_levels[l][idx]
+                go_right = active & ((y < v) if strict else (y <= v))
+                lo = jnp.where(go_right, mid + 1, lo)
+                hi = jnp.where(active & ~go_right, mid, hi)
+            total = total + jnp.where(take, lo, 0)
+            pos = jnp.where(take, pos + b, pos)
+        return total
+
+    def query(self, x0, x1, y0, y1) -> jnp.ndarray:
+        """Exact #points in [x0,x1] x [y0,y1] (inclusive), vectorized."""
+        i0 = jnp.searchsorted(self.xs, x0, side="left")
+        i1 = jnp.searchsorted(self.xs, x1, side="right")
+        hi = self._count_prefix(i1, y1) - self._count_prefix(i0, y1)
+        lom = (self._count_prefix(i1, y0, strict=True)
+               - self._count_prefix(i0, y0, strict=True))
+        return hi - lom
+
+    def cf(self, u, v) -> jnp.ndarray:
+        """CF_count(u, v), vectorized."""
+        i = jnp.searchsorted(self.xs, u, side="right")
+        return self._count_prefix(i, v)
+
+    def cf_np(self, u, v) -> np.ndarray:
+        """CF_count on the host (numpy) — used during construction where
+        region shapes vary per call and JAX would recompile every time."""
+        xs = np.asarray(self.xs)
+        ysl = np.asarray(self.ys_levels)
+        n = len(xs)
+        i = np.searchsorted(xs, np.asarray(u, np.float64), side="right")
+        v = np.asarray(v, np.float64)
+        total = np.zeros_like(i)
+        pos = np.zeros_like(i)
+        for l in range(ysl.shape[0] - 1, -1, -1):
+            b = 1 << l
+            take = pos + b <= i
+            lo = np.zeros_like(i)
+            hi = np.full_like(i, b)
+            for _ in range(l + 1):
+                active = lo < hi
+                mid = (lo + hi) // 2
+                idx = np.clip(pos + np.minimum(mid, b - 1), 0, n - 1)
+                go_right = active & (ysl[l][idx] <= v)
+                lo = np.where(go_right, mid + 1, lo)
+                hi = np.where(active & ~go_right, mid, hi)
+            total = total + np.where(take, lo, 0)
+            pos = np.where(take, pos + b, pos)
+        return total
+
+
+# ---------------------------------------------------------------------------
+# bivariate minimax fitting
+# ---------------------------------------------------------------------------
+
+def _vander2d(u, v, deg):
+    cols = []
+    for i in range(deg + 1):
+        for j in range(deg + 1):
+            cols.append((u**i) * (v**j))
+    return np.stack(cols, axis=-1)
+
+
+def _fit2d_lp(u, v, F, deg):
+    """Minimax bivariate fit (Eq. 10 with P(u_i, v_i)); returns (coef, err)."""
+    from scipy.optimize import linprog
+
+    A = _vander2d(u, v, deg)
+    n, k = A.shape
+    if n <= k:
+        coef, *_ = np.linalg.lstsq(A, F, rcond=None)
+        return coef, float(np.max(np.abs(F - A @ coef))) if n else 0.0
+    ones = np.ones((n, 1))
+    A_ub = np.block([[-A, -ones], [A, -ones]])
+    b_ub = np.concatenate([-F, F])
+    c = np.zeros(k + 1)
+    c[-1] = 1.0
+    res = linprog(c, A_ub=A_ub, b_ub=b_ub,
+                  bounds=[(None, None)] * k + [(0, None)], method="highs")
+    if not res.success:
+        coef, *_ = np.linalg.lstsq(A, F, rcond=None)
+        return coef, float(np.max(np.abs(F - A @ coef)))
+    coef = res.x[:k]
+    return coef, float(np.max(np.abs(F - A @ coef)))
+
+
+def _fit2d_lstsq(u, v, F, deg):
+    A = _vander2d(u, v, deg)
+    coef, *_ = np.linalg.lstsq(A, F, rcond=None)
+    err = float(np.max(np.abs(F - A @ coef))) if len(F) else 0.0
+    return coef, err
+
+
+# ---------------------------------------------------------------------------
+# quadtree index
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PolyFitIndex2D:
+    deg: int
+    delta: float
+    # tree topology: children[node, q] = child id or -1 (leaf); quadrant q =
+    # (v >= ymid)*2 + (u >= xmid)
+    children: jnp.ndarray       # (N, 4) int32
+    leaf_of: jnp.ndarray        # (N,) int32: leaf slot or -1 for internal
+    bounds: jnp.ndarray         # (N, 4): x0, x1, y0, y1
+    coeffs: jnp.ndarray         # (n_leaves, (deg+1)^2)
+    leaf_nodes: jnp.ndarray     # (n_leaves,) int32: leaf slot -> node id
+    max_depth: int
+    root_bounds: Tuple[float, float, float, float]
+    exact: Optional[MergeSortTree]
+    n: int
+
+    @property
+    def n_leaves(self) -> int:
+        return int(self.coeffs.shape[0])
+
+    def size_bytes(self) -> int:
+        return int(self.children.nbytes + self.bounds.nbytes + self.coeffs.nbytes)
+
+    def locate(self, u, v):
+        """Leaf slot for each (u, v); fixed-depth branch-free descent."""
+        node = jnp.zeros(jnp.shape(u), jnp.int32)
+        for _ in range(self.max_depth):
+            b = self.bounds[node]
+            xmid = 0.5 * (b[..., 0] + b[..., 1])
+            ymid = 0.5 * (b[..., 2] + b[..., 3])
+            q = (v >= ymid).astype(jnp.int32) * 2 + (u >= xmid).astype(jnp.int32)
+            child = self.children[node, q]
+            node = jnp.where(child >= 0, child, node)
+        return self.leaf_of[node]
+
+    def eval_cf(self, u, v):
+        """P_{leaf(u,v)}(u, v): approximate CF_count (vectorized)."""
+        leaf = self.locate(u, v)
+        # leaf coeffs are stored for *scaled* coordinates of the leaf region
+        node_ids = self.leaf_nodes[leaf]
+        b = self.bounds[node_ids]
+        us = _scale01(u, b[..., 0], b[..., 1])
+        vs = _scale01(v, b[..., 2], b[..., 3])
+        c = self.coeffs[leaf].reshape(leaf.shape + (self.deg + 1, self.deg + 1))
+        # Horner in v inside Horner in u
+        acc = jnp.zeros_like(us)
+        for i in range(self.deg, -1, -1):
+            inner = jnp.zeros_like(vs)
+            for j in range(self.deg, -1, -1):
+                inner = inner * vs + c[..., i, j]
+            acc = acc * us + inner
+        return acc
+
+
+def _scale01(x, lo, hi):
+    span = jnp.where(hi > lo, hi - lo, 1.0)
+    return jnp.clip((2.0 * x - lo - hi) / span, -1.0, 1.0)
+
+
+def build_index_2d(
+    px: np.ndarray,
+    py: np.ndarray,
+    deg: int = 3,
+    delta: float = 100.0,
+    grid: int = 8,
+    max_depth: int = 12,
+    max_fit_points: int = 2048,
+    fast_accept: bool = True,
+    keep_exact: bool = True,
+) -> PolyFitIndex2D:
+    """Quadtree segmentation of CF_count (paper §6, Fig. 10)."""
+    px = np.asarray(px, np.float64)
+    py = np.asarray(py, np.float64)
+    n = len(px)
+    tree = MergeSortTree.build(px, py)
+
+    # order data by x for fast in-region slicing
+    xo = np.argsort(px, kind="stable")
+    sx, sy = px[xo], py[xo]
+
+    def cf_exact(us, vs):
+        return tree.cf_np(us, vs)
+
+    x0r, x1r = float(px.min()), float(px.max())
+    y0r, y1r = float(py.min()), float(py.max())
+
+    children: List[List[int]] = []
+    bounds: List[Tuple[float, float, float, float]] = []
+    leaf_of: List[int] = []
+    leaf_nodes: List[int] = []
+    leaf_coeffs: List[np.ndarray] = []
+
+    gg = np.linspace(0.0, 1.0, grid)
+    gu, gv = np.meshgrid(gg, gg)
+    gu, gv = gu.ravel(), gv.ravel()
+
+    def region_points(x0, x1, y0, y1):
+        i0 = np.searchsorted(sx, x0, side="left")
+        i1 = np.searchsorted(sx, x1, side="right")
+        xs = sx[i0:i1]
+        ys = sy[i0:i1]
+        m = (ys >= y0) & (ys <= y1)
+        return xs[m], ys[m]
+
+    fit_rng = np.random.default_rng(0xF17)
+
+    def fit_region(x0, x1, y0, y1, depth):
+        rx, ry = region_points(x0, x1, y0, y1)
+        # constraint set: data points in region + grid + corners
+        cu = np.concatenate([rx, x0 + (x1 - x0) * gu])
+        cv = np.concatenate([ry, y0 + (y1 - y0) * gv])
+        F = cf_exact(cu, cv).astype(np.float64)
+        usc = np.clip((2 * cu - x0 - x1) / max(x1 - x0, 1e-300), -1, 1)
+        vsc = np.clip((2 * cv - y0 - y1) / max(y1 - y0, 1e-300), -1, 1)
+
+        def full_err(coef):
+            return float(np.max(np.abs(F - _vander2d(usc, vsc, deg) @ coef)))
+
+        if fast_accept:
+            coef, err = _fit2d_lstsq(usc, vsc, F, deg)
+            if err <= delta:
+                return coef, err
+        # LP on a bounded constraint subsample, validated (and repaired with
+        # the worst violators, Remez-style) against the full set
+        m = len(F)
+        if m <= max_fit_points:
+            return _fit2d_lp(usc, vsc, F, deg)
+        sub = fit_rng.choice(m, max_fit_points, replace=False)
+        for _ in range(3):
+            coef, _ = _fit2d_lp(usc[sub], vsc[sub], F[sub], deg)
+            resid = np.abs(F - _vander2d(usc, vsc, deg) @ coef)
+            err = float(resid.max())
+            if err <= delta:
+                return coef, err
+            worst = np.argsort(resid)[-256:]
+            sub = np.unique(np.concatenate([sub, worst]))
+        return coef, err
+
+    def build(x0, x1, y0, y1, depth) -> int:
+        node = len(children)
+        children.append([-1, -1, -1, -1])
+        bounds.append((x0, x1, y0, y1))
+        leaf_of.append(-1)
+        coef, err = fit_region(x0, x1, y0, y1, depth)
+        if err <= delta or depth >= max_depth:
+            leaf_of[node] = len(leaf_coeffs)
+            leaf_nodes.append(node)
+            leaf_coeffs.append(coef)
+            return node
+        xm, ym = 0.5 * (x0 + x1), 0.5 * (y0 + y1)
+        children[node][0] = build(x0, xm, y0, ym, depth + 1)
+        children[node][1] = build(xm, x1, y0, ym, depth + 1)
+        children[node][2] = build(x0, xm, ym, y1, depth + 1)
+        children[node][3] = build(xm, x1, ym, y1, depth + 1)
+        return node
+
+    import sys
+    old_limit = sys.getrecursionlimit()
+    sys.setrecursionlimit(max(old_limit, 10000))
+    try:
+        build(x0r, x1r, y0r, y1r, 0)
+    finally:
+        sys.setrecursionlimit(old_limit)
+
+    return PolyFitIndex2D(
+        deg=deg, delta=float(delta),
+        children=jnp.asarray(np.asarray(children, np.int32)),
+        leaf_of=jnp.asarray(np.asarray(leaf_of, np.int32)),
+        bounds=jnp.asarray(np.asarray(bounds, np.float64)),
+        coeffs=jnp.asarray(np.stack(leaf_coeffs)),
+        leaf_nodes=jnp.asarray(np.asarray(leaf_nodes, np.int32)),
+        max_depth=max_depth,
+        root_bounds=(x0r, x1r, y0r, y1r),
+        exact=tree if keep_exact else None,
+        n=n,
+    )
+
+
+def query_count_2d(index: PolyFitIndex2D, lx, ux, ly, uy,
+                   eps_rel: float | None = None):
+    """Approximate 2-key range COUNT (Eq. 19) with optional Q_rel refinement.
+
+    Semantics follow Eq. 19 literally: A = CF(ux,uy) - CF(lx,uy) - CF(ux,ly)
+    + CF(lx,ly), i.e. the half-open rectangle (lx, ux] x (ly, uy].
+    """
+    from .queries import QueryResult
+
+    lx = jnp.asarray(lx, jnp.float64)
+    ux = jnp.asarray(ux, jnp.float64)
+    ly = jnp.asarray(ly, jnp.float64)
+    uy = jnp.asarray(uy, jnp.float64)
+    approx = (index.eval_cf(ux, uy) - index.eval_cf(lx, uy)
+              - index.eval_cf(ux, ly) + index.eval_cf(lx, ly))
+    if eps_rel is None:
+        return QueryResult(approx, approx, jnp.zeros_like(approx, bool))
+    four_d = 4.0 * index.delta
+    ok = approx >= four_d * (1.0 + 1.0 / eps_rel)   # Lemma 6.4
+    if index.exact is None:
+        raise ValueError("Q_rel refinement requires keep_exact=True")
+    truth = (index.exact.cf(ux, uy) - index.exact.cf(lx, uy)
+             - index.exact.cf(ux, ly) + index.exact.cf(lx, ly)).astype(approx.dtype)
+    ans = jnp.where(ok, approx, truth)
+    return QueryResult(ans, approx, ~ok)

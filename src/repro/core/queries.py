@@ -1,0 +1,253 @@
+"""Approximate range-aggregate query evaluation (paper §5), batched in JAX.
+
+SUM/COUNT (Alg. 2):   A = P_Iu(uq) - P_Il(lq)                       (Eq. 14)
+MAX/MIN   (Alg. 3):   A = max(boundary polynomial extrema,
+                              interior per-segment exact aggregates)  (Eq. 17)
+
+Guarantees:
+* Q_abs — build with delta = eps_abs/2 (SUM, Lemma 5.1) or delta = eps_abs
+  (MAX, Lemma 5.3); the raw approximate answer already satisfies the bound.
+* Q_rel — test Lemma 5.2 (SUM: 2*delta/(A-2*delta) <= eps_rel) or Lemma 5.4
+  (MAX: A >= delta*(1+1/eps_rel)); failing queries are *vectorially* refined
+  against the exact structures and merged with ``jnp.where`` — no host round
+  trip (DESIGN.md §3).
+
+Boundary extrema use closed-form zero-derivative points (Table 2 of the
+paper): P' is degree deg-1; we solve linear/quadratic/cubic derivatives in
+closed form (deg <= 4).  For deg >= 5 a Chebyshev-grid + Newton refinement
+fallback is used (the paper likewise recommends deg <= 3 for MAX).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .exact import sparse_table_range_max
+from .index import PolyFitIndex1D
+
+__all__ = [
+    "query_sum", "query_max", "QueryResult",
+    "poly_max_on_interval", "solve_derivative_roots",
+]
+
+_NAN = jnp.nan
+
+
+class QueryResult(NamedTuple):
+    answer: jnp.ndarray      # final (possibly refined) answers
+    approx: jnp.ndarray      # raw index-only answers
+    refined: jnp.ndarray     # bool: True where refinement was triggered
+
+
+# ---------------------------------------------------------------------------
+# closed-form real roots of low-degree polynomials (branch-free, nan-padded)
+# ---------------------------------------------------------------------------
+
+def _roots_linear(b, a):
+    """a*u + b = 0 -> 1 root (nan if degenerate)."""
+    return jnp.where(jnp.abs(a) > 0, -b / jnp.where(a == 0, 1.0, a), _NAN)
+
+
+def _roots_quadratic(c, b, a):
+    """a u^2 + b u + c = 0 -> 2 roots (nan-padded)."""
+    lin = _roots_linear(c, b)
+    disc = b * b - 4 * a * c
+    sq = jnp.sqrt(jnp.maximum(disc, 0.0))
+    denom = jnp.where(a == 0, 1.0, 2 * a)
+    r1 = (-b - sq) / denom
+    r2 = (-b + sq) / denom
+    quad_ok = (jnp.abs(a) > 0) & (disc >= 0)
+    r1 = jnp.where(quad_ok, r1, jnp.where(jnp.abs(a) > 0, _NAN, lin))
+    r2 = jnp.where(quad_ok, r2, _NAN)
+    return r1, r2
+
+
+def _roots_cubic(d, c, b, a):
+    """a u^3 + b u^2 + c u + d = 0 -> 3 real roots (nan-padded).
+
+    Trigonometric/Cardano method, branch-free.  Falls back to the quadratic
+    solver when a == 0.
+    """
+    q1, q2 = _roots_quadratic(d, c, b)
+    safe_a = jnp.where(jnp.abs(a) > 0, a, 1.0)
+    # depressed cubic t^3 + p t + q, u = t - b/(3a)
+    shift = b / (3 * safe_a)
+    p = (3 * safe_a * c - b * b) / (3 * safe_a * safe_a)
+    q = (2 * b**3 - 9 * safe_a * b * c + 27 * safe_a * safe_a * d) / (27 * safe_a**3)
+    disc = (q * q) / 4 + (p**3) / 27
+    # three-real-root branch (disc <= 0): trigonometric
+    pm = jnp.minimum(p, -1e-300)
+    m = 2 * jnp.sqrt(-pm / 3)
+    arg = jnp.clip(3 * q / (pm * m), -1.0, 1.0)
+    theta = jnp.arccos(arg) / 3
+    t0 = m * jnp.cos(theta)
+    t1 = m * jnp.cos(theta - 2 * jnp.pi / 3)
+    t2 = m * jnp.cos(theta - 4 * jnp.pi / 3)
+    # one-real-root branch (disc > 0): Cardano
+    sq = jnp.sqrt(jnp.maximum(disc, 0.0))
+    cbrt = lambda x: jnp.sign(x) * jnp.abs(x) ** (1.0 / 3.0)
+    t_single = cbrt(-q / 2 + sq) + cbrt(-q / 2 - sq)
+    three = disc <= 0
+    r0 = jnp.where(three, t0, t_single) - shift
+    r1_ = jnp.where(three, t1, _NAN) - shift
+    r2_ = jnp.where(three, t2, _NAN) - shift
+    is_cubic = jnp.abs(a) > 0
+    return (jnp.where(is_cubic, r0, q1),
+            jnp.where(is_cubic, r1_, q2),
+            jnp.where(is_cubic, r2_, _NAN))
+
+
+def solve_derivative_roots(coeffs: jnp.ndarray):
+    """Real roots of P'(u) for batched coeffs (..., deg+1) -> (..., R).
+
+    deg<=4 is closed-form (paper Table 2); deg>=5 raises (use the grid path).
+    """
+    deg = coeffs.shape[-1] - 1
+    c = [coeffs[..., j] for j in range(deg + 1)]
+    if deg <= 1:
+        return jnp.full(coeffs.shape[:-1] + (1,), _NAN, coeffs.dtype)
+    if deg == 2:
+        r = _roots_linear(c[1], 2 * c[2])
+        return r[..., None]
+    if deg == 3:
+        r1, r2 = _roots_quadratic(c[1], 2 * c[2], 3 * c[3])
+        return jnp.stack([r1, r2], axis=-1)
+    if deg == 4:
+        r0, r1, r2 = _roots_cubic(c[1], 2 * c[2], 3 * c[3], 4 * c[4])
+        return jnp.stack([r0, r1, r2], axis=-1)
+    raise NotImplementedError("closed-form extrema only for deg<=4; "
+                              "use grid_extrema for higher degrees")
+
+
+def _horner(c, u):
+    acc = c[..., -1]
+    for j in range(c.shape[-1] - 2, -1, -1):
+        acc = acc * u + c[..., j]
+    return acc
+
+
+def poly_max_on_interval(coeffs, ua, ub, grid_pts: int = 0):
+    """max_{u in [ua, ub]} P(u), batched; empty intervals (ua>ub) -> -inf.
+
+    Candidates: both endpoints + real zero-derivative points inside the
+    interval (closed form for deg<=4) [+ optional Chebyshev grid for deg>=5].
+    """
+    deg = coeffs.shape[-1] - 1
+    cands = [ua, ub]
+    if deg >= 2:
+        if deg <= 4:
+            roots = solve_derivative_roots(coeffs)
+        else:
+            # Chebyshev grid + one Newton step toward P'=0
+            t = jnp.cos(jnp.pi * (jnp.arange(grid_pts or 32) + 0.5) / (grid_pts or 32))
+            grid = ua[..., None] + (ub - ua)[..., None] * (t + 1) / 2
+            dcoef = coeffs[..., 1:] * jnp.arange(1, deg + 1)
+            d2coef = dcoef[..., 1:] * jnp.arange(1, deg)
+            d1 = _horner(dcoef, grid)
+            d2 = _horner(d2coef, grid)
+            roots = grid - d1 / jnp.where(jnp.abs(d2) > 1e-12, d2, 1.0)
+        roots = jnp.clip(roots, ua[..., None], ub[..., None])
+        roots = jnp.where(jnp.isnan(roots), ua[..., None], roots)
+        cands.append(roots)
+    vals = [_horner(coeffs, ua), _horner(coeffs, ub)]
+    if deg >= 2:
+        vals.append(_horner(coeffs[..., None, :], cands[2]).max(axis=-1))
+    out = jnp.stack(vals[:2] + ([vals[2]] if deg >= 2 else []), axis=-1).max(axis=-1)
+    return jnp.where(ua <= ub, out, -jnp.inf)
+
+
+# ---------------------------------------------------------------------------
+# SUM / COUNT (Alg. 2)
+# ---------------------------------------------------------------------------
+
+def query_sum(index: PolyFitIndex1D, lq, uq,
+              eps_rel: float | None = None) -> QueryResult:
+    """Approximate R_sum(D, (lq, uq]) (Eq. 14) with optional Q_rel refinement.
+
+    With eps_rel=None this is the Q_abs path: the answer satisfies
+    |A - R| <= 2*delta (= eps_abs when the index was built with
+    delta = eps_abs/2, Lemma 5.1).
+    """
+    assert index.agg in ("sum", "count"), index.agg
+    lq = jnp.asarray(lq, jnp.float64)
+    uq = jnp.asarray(uq, jnp.float64)
+    approx = index.eval_at(uq) - index.eval_at(lq)
+    if eps_rel is None:
+        return QueryResult(approx, approx, jnp.zeros_like(approx, bool))
+    # Lemma 5.2 test: 2d / (A - 2d) <= eps_rel  (requires A > 2d)
+    two_d = 2.0 * index.delta
+    ok = (approx - two_d > 0) & (two_d / jnp.maximum(approx - two_d, 1e-300) <= eps_rel)
+    exact = index.exact_sum
+    if exact is None:
+        raise ValueError("Q_rel refinement requires keep_exact=True")
+    # vectorized refinement (Alg. 2 line 6) for the failing subset
+    hi = exact.cf_at(uq)
+    lo = exact.cf_at(lq)
+    truth = hi - lo
+    ans = jnp.where(ok, approx, truth)
+    return QueryResult(ans, approx, ~ok)
+
+
+# ---------------------------------------------------------------------------
+# MAX / MIN (Alg. 3)
+# ---------------------------------------------------------------------------
+
+def _max_eval(index: PolyFitIndex1D, lq, uq):
+    il = index.locate(lq)
+    iu = index.locate(uq)
+    lo_l, hi_l = index.seg_lo[il], index.seg_hi[il]
+    lo_u, hi_u = index.seg_lo[iu], index.seg_hi[iu]
+
+    def scaled(q, lo, hi):
+        span = jnp.where(hi > lo, hi - lo, 1.0)
+        # clamp into the certified region (data keys live in [lo, hi])
+        return jnp.clip((2 * q - lo - hi) / span, -1.0, 1.0)
+
+    same = il == iu
+    # left boundary segment: [lq, min(hi_l, uq)]
+    ua_l = scaled(lq, lo_l, hi_l)
+    ub_l = scaled(jnp.minimum(hi_l, uq), lo_l, hi_l)
+    m_left = poly_max_on_interval(index.coeffs[il], ua_l, ub_l)
+    # lq may fall in the key-free gap past the segment's last key: no data of
+    # segment il is inside the query range then — suppress its contribution
+    m_left = jnp.where(lq <= hi_l, m_left, -jnp.inf)
+    # right boundary segment: [max(lo_u, lq), uq] — suppressed when same seg
+    ua_u = scaled(jnp.maximum(lo_u, lq), lo_u, hi_u)
+    ub_u = scaled(uq, lo_u, hi_u)
+    m_right = jnp.where(same, -jnp.inf,
+                        poly_max_on_interval(index.coeffs[iu], ua_u, ub_u))
+    # interior fully-covered segments: exact per-segment aggregates via the
+    # sparse table (replaces the aR-tree internal-node traversal)
+    m_mid = sparse_table_range_max(index.st, il + 1, iu)
+    return jnp.maximum(jnp.maximum(m_left, m_right), m_mid)
+
+
+def query_max(index: PolyFitIndex1D, lq, uq,
+              eps_rel: float | None = None) -> QueryResult:
+    """Approximate R_max(D, [lq, uq]) (Eq. 17) with optional Q_rel refinement.
+
+    Q_abs: build with delta = eps_abs (Lemma 5.3).  MIN queries reuse the MAX
+    machinery on negated measures; answers are negated back here.
+    """
+    assert index.agg in ("max", "min"), index.agg
+    neg = index.agg == "min"
+    lq = jnp.asarray(lq, jnp.float64)
+    uq = jnp.asarray(uq, jnp.float64)
+    approx = _max_eval(index, lq, uq)
+    if eps_rel is None:
+        out = -approx if neg else approx
+        return QueryResult(out, out, jnp.zeros_like(out, bool))
+    # Lemma 5.4 test: A >= delta * (1 + 1/eps_rel)
+    ok = approx >= index.delta * (1.0 + 1.0 / eps_rel)
+    exact = index.exact_max
+    if exact is None:
+        raise ValueError("Q_rel refinement requires keep_exact=True")
+    truth = exact.query(lq, uq)
+    ans = jnp.where(ok, approx, truth)
+    if neg:
+        ans = -ans
+    return QueryResult(ans, -approx if neg else approx, ~ok)

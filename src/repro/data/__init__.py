@@ -1,0 +1,4 @@
+from .synthetic import hki_series, osm_points, tweet_latitudes, make_queries_1d, make_queries_2d
+
+__all__ = ["hki_series", "osm_points", "tweet_latitudes",
+           "make_queries_1d", "make_queries_2d"]

@@ -1,0 +1,65 @@
+"""Deterministic synthetic LM data pipeline.
+
+Step-indexed PRNG: batch(step) is a pure function of (seed, step, shape), so
+a restart from checkpoint step N reproduces exactly the batches the failed
+run would have seen — the data-side half of fault tolerance.  Batches are
+produced host-side as numpy and device_put with the cell's input sharding.
+
+PolyFit integration (DESIGN.md §5): the pipeline keeps a PolyFit COUNT index
+over the corpus' sequence-length distribution; bucketing/mixing decisions
+query it instead of scanning histograms (``length_stats``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["SyntheticTokens", "length_stats"]
+
+
+@dataclasses.dataclass
+class SyntheticTokens:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    frontend: str = "none"
+    frontend_dim: int = 0
+    n_img_tokens: int = 0
+    enc_len: int = 0
+
+    def batch(self, step: int) -> Dict[str, np.ndarray]:
+        rng = np.random.default_rng((self.seed << 32) ^ step)
+        out = {"tokens": rng.integers(
+            0, self.vocab, (self.global_batch, self.seq_len), dtype=np.int32)}
+        if self.frontend == "audio_stub":
+            out["frames"] = rng.normal(
+                0, 1, (self.global_batch, self.enc_len or self.seq_len,
+                       self.frontend_dim)).astype(np.float32)
+        elif self.frontend == "vision_stub":
+            out["images"] = rng.normal(
+                0, 1, (self.global_batch, self.n_img_tokens,
+                       self.frontend_dim)).astype(np.float32)
+        return out
+
+    def sharded_batch(self, step: int, shardings) -> Dict:
+        host = self.batch(step)
+        return {k: jax.device_put(v, shardings[k]) if k in shardings
+                else jax.device_put(v) for k, v in host.items()}
+
+
+def length_stats(doc_lengths: np.ndarray, buckets, delta: float = 64.0):
+    """Approximate per-bucket document counts via a PolyFit COUNT index over
+    the length distribution (the paper's technique inside the pipeline)."""
+    from ..core import build_index_1d, query_sum
+    import jax.numpy as jnp
+
+    idx = build_index_1d(np.asarray(doc_lengths, np.float64), None, "count",
+                         deg=2, delta=delta)
+    lqs = np.asarray([b[0] for b in buckets], np.float64)
+    uqs = np.asarray([b[1] for b in buckets], np.float64)
+    res = query_sum(idx, jnp.asarray(lqs), jnp.asarray(uqs))
+    return np.asarray(res.answer), idx

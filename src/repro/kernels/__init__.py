@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the PolyFit query hot path.
+
+Each kernel ships as <name>.py (pl.pallas_call + BlockSpec), with ops.py as
+the jit'd public wrapper and ref.py as the pure-jnp oracle the tests sweep
+against (DESIGN.md §3 for the TPU adaptation rationale).
+"""
+from .ops import SegTable, from_index, poly_eval, range_max, range_sum
+
+__all__ = ["SegTable", "from_index", "poly_eval", "range_max", "range_sum"]

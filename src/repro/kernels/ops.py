@@ -1,0 +1,129 @@
+"""Jit'd public wrappers around the Pallas query kernels.
+
+Handles the kernel ABI: query clamping to the index domain, padding queries
+to block multiples (with domain-minimum sentinels, sliced off afterwards) and
+padding the segment table to tile multiples (+inf seg_lo so padded segments
+match nothing).  ``from_index`` adapts a core.PolyFitIndex1D.
+
+``backend`` selects: 'pallas' (interpret-mode on CPU — the TPU-shaped code
+path) or 'ref' (plain XLA, faster on CPU hosts; identical semantics, see
+ref.py).  Benchmarks run both.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref as _ref
+from .poly_eval import DEFAULT_BH, DEFAULT_BQ, poly_eval_pallas
+from .range_sum import range_sum_pallas
+from .range_max import range_max_pallas
+
+__all__ = ["SegTable", "from_index", "poly_eval", "range_sum", "range_max"]
+
+
+class SegTable(NamedTuple):
+    """Flat, tile-padded segment table (device arrays, query dtype)."""
+
+    seg_lo: jnp.ndarray     # (Hp,) +inf padded
+    seg_next: jnp.ndarray   # (Hp,) next segment's lo; +inf for last/padding
+    seg_hi: jnp.ndarray     # (Hp,)
+    coeffs: jnp.ndarray     # (Hp, deg+1) zero padded
+    seg_agg: jnp.ndarray    # (Hp,) -inf padded (max/min only; zeros for sum)
+    h: int                  # true segment count
+
+
+def _pad_to(x, mult, fill):
+    n = x.shape[0]
+    p = (-n) % mult
+    if p == 0:
+        return x
+    pad_shape = (p,) + x.shape[1:]
+    return jnp.concatenate([x, jnp.full(pad_shape, fill, x.dtype)])
+
+
+def _big(dtype):
+    """Huge-but-finite sentinel: +-inf would produce 0*inf = NaN inside the
+    one-hot matmuls, so padding and the open last boundary use finfo.max/4."""
+    return float(np.finfo(np.dtype(dtype)).max) / 4
+
+
+def from_index(index, dtype=jnp.float32, bh: int = DEFAULT_BH) -> SegTable:
+    """Build a SegTable from a core.index.PolyFitIndex1D."""
+    big = _big(dtype)
+    seg_lo = jnp.asarray(index.seg_lo, dtype)
+    seg_hi = jnp.asarray(index.seg_hi, dtype)
+    nxt = jnp.concatenate([seg_lo[1:], jnp.full((1,), big, dtype)])
+    coeffs = jnp.asarray(index.coeffs, dtype)
+    agg = (jnp.asarray(index.seg_agg, dtype) if index.seg_agg is not None
+           else jnp.zeros_like(seg_lo))
+    h = int(seg_lo.shape[0])
+    return SegTable(
+        _pad_to(seg_lo, bh, big), _pad_to(nxt, bh, big),
+        _pad_to(seg_hi, bh, big), _pad_to(coeffs, bh, 0.0),
+        _pad_to(agg, bh, -jnp.inf), h)
+
+
+def _pad_queries(q, bq, fill):
+    n = q.shape[0]
+    p = (-n) % bq
+    if p:
+        q = jnp.concatenate([q, jnp.full((p,), fill, q.dtype)])
+    return q, n
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "bq", "bh", "interpret"))
+def poly_eval(table: SegTable, q, backend: str = "pallas",
+              bq: int = DEFAULT_BQ, bh: int = DEFAULT_BH,
+              interpret: bool = True):
+    q = jnp.asarray(q, table.coeffs.dtype)
+    dom_lo = table.seg_lo[0]
+    q = jnp.maximum(q, dom_lo)
+    if backend == "ref":
+        # padded segments (+inf lo) are never matched by locate/one-hot, so
+        # ref can consume the padded table directly (keeps h un-traced)
+        return _ref.poly_eval_ref(q, table.seg_lo, table.seg_next,
+                                  table.seg_hi, table.coeffs)
+    qp, n = _pad_queries(q, bq, dom_lo)
+    out = poly_eval_pallas(qp, table.seg_lo, table.seg_next, table.seg_hi,
+                           table.coeffs, bq=bq, bh=bh, interpret=interpret)
+    return out[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "bq", "bh", "interpret"))
+def range_sum(table: SegTable, lq, uq, backend: str = "pallas",
+              bq: int = DEFAULT_BQ, bh: int = DEFAULT_BH,
+              interpret: bool = True):
+    dt = table.coeffs.dtype
+    lq = jnp.maximum(jnp.asarray(lq, dt), table.seg_lo[0])
+    uq = jnp.maximum(jnp.asarray(uq, dt), table.seg_lo[0])
+    if backend == "ref":
+        return _ref.range_sum_ref(lq, uq, table.seg_lo, table.seg_next,
+                                  table.seg_hi, table.coeffs)
+    lp, n = _pad_queries(lq, bq, table.seg_lo[0])
+    up, _ = _pad_queries(uq, bq, table.seg_lo[0])
+    out = range_sum_pallas(lp, up, table.seg_lo, table.seg_next, table.seg_hi,
+                           table.coeffs, bq=bq, bh=bh, interpret=interpret)
+    return out[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "bq", "bh", "interpret"))
+def range_max(table: SegTable, lq, uq, backend: str = "pallas",
+              bq: int = DEFAULT_BQ, bh: int = DEFAULT_BH,
+              interpret: bool = True):
+    dt = table.coeffs.dtype
+    lq = jnp.maximum(jnp.asarray(lq, dt), table.seg_lo[0])
+    uq = jnp.maximum(jnp.asarray(uq, dt), table.seg_lo[0])
+    if backend == "ref":
+        return _ref.range_max_ref(lq, uq, table.seg_lo, table.seg_next,
+                                  table.seg_hi, table.coeffs, table.seg_agg)
+    lp, n = _pad_queries(lq, bq, table.seg_lo[0])
+    up, _ = _pad_queries(uq, bq, table.seg_lo[0])
+    out = range_max_pallas(lp, up, table.seg_lo, table.seg_next, table.seg_hi,
+                           table.coeffs, table.seg_agg,
+                           bq=bq, bh=bh, interpret=interpret)
+    return out[:n]

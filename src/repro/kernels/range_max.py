@@ -1,0 +1,147 @@
+"""Pallas TPU kernel: fused range-MAX query evaluation (Eq. 17).
+
+Per (query-block x segment-tile) step, three contributions accumulate:
+
+* left/right boundary segments — resolved with the same one-hot matmul as
+  range_sum (coefficients + scale bounds gathered on the MXU);
+* interior segments — the aR-tree traversal is replaced by a dense masked
+  reduction: a segment j is strictly interior iff seg_lo[j] > lq and
+  seg_next[j] <= uq, both locally decidable, so the tile contributes
+  rowmax(where(mask, seg_agg, -inf)) — branch-free VPU work (DESIGN.md §3).
+
+Finalization computes each boundary polynomial's max over its clipped
+interval via closed-form zero-derivative points (P' quadratic for deg <= 3,
+the paper's recommended MAX degree; higher degrees use the XLA path in
+core.queries).  MIN is served by the same kernel on negated aggregates.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .poly_eval import DEFAULT_BH, DEFAULT_BQ
+
+__all__ = ["range_max_pallas"]
+
+_NEG = -jnp.inf
+
+
+def _horner_cols(c, u, deg):
+    v = c[:, deg]
+    for j in range(deg - 1, -1, -1):
+        v = v * u + c[:, j]
+    return v
+
+
+def _clipped_poly_max(c, slo, shi, a, b, deg):
+    """max_{k in [a, b]} P(u(k)) per row; empty (a > b) -> -inf."""
+    span = jnp.where(shi > slo, shi - slo, 1.0)
+    ua = jnp.clip((2.0 * a - slo - shi) / span, -1.0, 1.0)
+    ub = jnp.clip((2.0 * b - slo - shi) / span, -1.0, 1.0)
+    best = jnp.maximum(_horner_cols(c, ua, deg), _horner_cols(c, ub, deg))
+    if deg >= 2:
+        # P'(u) = c1 + 2 c2 u (+ 3 c3 u^2): closed-form roots
+        c1 = c[:, 1]
+        c2 = 2.0 * c[:, 2]
+        if deg == 2:
+            r = jnp.where(jnp.abs(c2) > 0, -c1 / jnp.where(c2 == 0, 1.0, c2), ua)
+            roots = [r]
+        else:  # deg == 3
+            c3 = 3.0 * c[:, 3]
+            disc = c2 * c2 - 4.0 * c3 * c1
+            sq = jnp.sqrt(jnp.maximum(disc, 0.0))
+            den = jnp.where(jnp.abs(c3) > 0, 2.0 * c3, 1.0)
+            quad_ok = (jnp.abs(c3) > 0) & (disc >= 0)
+            lin = jnp.where(jnp.abs(c2) > 0, -c1 / jnp.where(c2 == 0, 1.0, c2), ua)
+            r1 = jnp.where(quad_ok, (-c2 - sq) / den, lin)
+            r2 = jnp.where(quad_ok, (-c2 + sq) / den, lin)
+            roots = [r1, r2]
+        for r in roots:
+            rc = jnp.clip(r, ua, ub)
+            best = jnp.maximum(best, _horner_cols(c, rc, deg))
+    return jnp.where(a <= b, best, _NEG)
+
+
+def _range_max_kernel(lq_ref, uq_ref, lo_ref, nxt_ref, hi_ref, coef_ref,
+                      agg_ref, out_ref, acc, acc_int, *, n_tiles: int, deg: int):
+    """acc: (BQ, 2*(deg+3)) boundary gather; acc_int: (BQ,) interior max."""
+    h = pl.program_id(1)
+    ncol = deg + 3
+
+    @pl.when(h == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        acc_int[...] = jnp.full_like(acc_int, _NEG)
+
+    lq = lq_ref[...]
+    uq = uq_ref[...]
+    lo = lo_ref[...]
+    nxt = nxt_ref[...]
+    hi = hi_ref[...]
+    coef = coef_ref[...]
+    agg = agg_ref[...]
+    table = jnp.concatenate([coef, lo[:, None], hi[:, None]], axis=1)
+
+    for slot, q in ((0, lq), (1, uq)):
+        one_hot = ((lo[None, :] <= q[:, None]) &
+                   (q[:, None] < nxt[None, :])).astype(coef.dtype)
+        acc[:, slot * ncol:(slot + 1) * ncol] += jnp.dot(
+            one_hot, table, preferred_element_type=coef.dtype)
+
+    # interior: strictly between the two boundary segments
+    interior = ((lo[None, :] > lq[:, None]) &
+                (nxt[None, :] <= uq[:, None]))                    # (BQ, BH)
+    tile_max = jnp.max(jnp.where(interior, agg[None, :], _NEG), axis=1)
+    acc_int[...] = jnp.maximum(acc_int[...], tile_max)
+
+    @pl.when(h == n_tiles - 1)
+    def _finalize():
+        cl = acc[:, 0:deg + 1]
+        slo_l = acc[:, deg + 1]
+        shi_l = acc[:, deg + 2]
+        cu = acc[:, ncol:ncol + deg + 1]
+        slo_u = acc[:, ncol + deg + 1]
+        shi_u = acc[:, ncol + deg + 2]
+        same = (slo_l == slo_u) & (shi_l == shi_u)
+        # left boundary: [lq, min(hi_l, uq)], suppressed when lq past hi_l
+        m_left = _clipped_poly_max(cl, slo_l, shi_l, lq, jnp.minimum(shi_l, uq), deg)
+        m_left = jnp.where(lq <= shi_l, m_left, _NEG)
+        # right boundary: [max(lo_u, lq), uq], suppressed when same segment
+        m_right = _clipped_poly_max(cu, slo_u, shi_u, jnp.maximum(slo_u, lq), uq, deg)
+        m_right = jnp.where(same, _NEG, m_right)
+        out_ref[...] = jnp.maximum(jnp.maximum(m_left, m_right), acc_int[...])
+
+
+def range_max_pallas(lq, uq, seg_lo, seg_next, seg_hi, coeffs, seg_agg,
+                     bq: int = DEFAULT_BQ, bh: int = DEFAULT_BH,
+                     interpret: bool = True):
+    Q, H = lq.shape[0], seg_lo.shape[0]
+    assert Q % bq == 0 and H % bh == 0, (Q, H, bq, bh)
+    deg = coeffs.shape[1] - 1
+    assert deg <= 3, "in-kernel closed forms cover deg<=3 (paper's MAX range)"
+    n_tiles = H // bh
+    kernel = functools.partial(_range_max_kernel, n_tiles=n_tiles, deg=deg)
+    return pl.pallas_call(
+        kernel,
+        grid=(Q // bq, n_tiles),
+        in_specs=[
+            pl.BlockSpec((bq,), lambda i, j: (i,)),
+            pl.BlockSpec((bq,), lambda i, j: (i,)),
+            pl.BlockSpec((bh,), lambda i, j: (j,)),
+            pl.BlockSpec((bh,), lambda i, j: (j,)),
+            pl.BlockSpec((bh,), lambda i, j: (j,)),
+            pl.BlockSpec((bh, deg + 1), lambda i, j: (j, 0)),
+            pl.BlockSpec((bh,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bq,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((Q,), coeffs.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 2 * (deg + 3)), coeffs.dtype),
+            pltpu.VMEM((bq,), coeffs.dtype),
+        ],
+        interpret=interpret,
+    )(lq, uq, seg_lo, seg_next, seg_hi, coeffs, seg_agg)

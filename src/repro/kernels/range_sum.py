@@ -1,0 +1,88 @@
+"""Pallas TPU kernel: fused range-SUM/COUNT query evaluation (Eq. 14).
+
+One pass over the segment table answers A = P_{I(u)}(u) - P_{I(l)}(l) for a
+whole batch of (l, u) ranges: both endpoints' one-hot membership rows are
+resolved against the *same* segment tile while it is resident in VMEM,
+doubling arithmetic intensity versus two poly_eval passes (the segment
+table is read once instead of twice — this kernel is memory-bound on the
+table when H is large, see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .poly_eval import DEFAULT_BH, DEFAULT_BQ
+
+__all__ = ["range_sum_pallas"]
+
+
+def _range_sum_kernel(lq_ref, uq_ref, lo_ref, nxt_ref, hi_ref, coef_ref,
+                      out_ref, acc, *, n_tiles: int, deg: int):
+    """acc layout: (BQ, 2*(deg+3)): per endpoint [coef x (deg+1), lo, hi]."""
+    h = pl.program_id(1)
+    ncol = deg + 3
+
+    @pl.when(h == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    lo = lo_ref[...]
+    nxt = nxt_ref[...]
+    hi = hi_ref[...]
+    coef = coef_ref[...]
+    # (BH, deg+3): coeffs | scale-lo | scale-hi — one matmul gathers all
+    table = jnp.concatenate([coef, lo[:, None], hi[:, None]], axis=1)
+
+    for slot, q_ref in ((0, lq_ref), (1, uq_ref)):
+        q = q_ref[...]
+        one_hot = ((lo[None, :] <= q[:, None]) &
+                   (q[:, None] < nxt[None, :])).astype(coef.dtype)
+        acc[:, slot * ncol:(slot + 1) * ncol] += jnp.dot(
+            one_hot, table, preferred_element_type=coef.dtype)
+
+    @pl.when(h == n_tiles - 1)
+    def _finalize():
+        vals = []
+        for slot, q_ref in ((0, lq_ref), (1, uq_ref)):
+            q = q_ref[...]
+            c = acc[:, slot * ncol:slot * ncol + deg + 1]
+            slo = acc[:, slot * ncol + deg + 1]
+            shi = acc[:, slot * ncol + deg + 2]
+            span = jnp.where(shi > slo, shi - slo, 1.0)
+            u = jnp.clip((2.0 * q - slo - shi) / span, -1.0, 1.0)
+            v = c[:, deg]
+            for j in range(deg - 1, -1, -1):
+                v = v * u + c[:, j]
+            vals.append(v)
+        out_ref[...] = vals[1] - vals[0]
+
+
+def range_sum_pallas(lq, uq, seg_lo, seg_next, seg_hi, coeffs,
+                     bq: int = DEFAULT_BQ, bh: int = DEFAULT_BH,
+                     interpret: bool = True):
+    Q, H = lq.shape[0], seg_lo.shape[0]
+    assert Q % bq == 0 and H % bh == 0, (Q, H, bq, bh)
+    deg = coeffs.shape[1] - 1
+    n_tiles = H // bh
+    kernel = functools.partial(_range_sum_kernel, n_tiles=n_tiles, deg=deg)
+    return pl.pallas_call(
+        kernel,
+        grid=(Q // bq, n_tiles),
+        in_specs=[
+            pl.BlockSpec((bq,), lambda i, j: (i,)),
+            pl.BlockSpec((bq,), lambda i, j: (i,)),
+            pl.BlockSpec((bh,), lambda i, j: (j,)),
+            pl.BlockSpec((bh,), lambda i, j: (j,)),
+            pl.BlockSpec((bh,), lambda i, j: (j,)),
+            pl.BlockSpec((bh, deg + 1), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((Q,), coeffs.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, 2 * (deg + 3)), coeffs.dtype)],
+        interpret=interpret,
+    )(lq, uq, seg_lo, seg_next, seg_hi, coeffs)

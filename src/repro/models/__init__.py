@@ -1,0 +1,5 @@
+from .transformer import (decode_step, forward_train, init_cache, init_model,
+                          loss_fn, prefill)
+
+__all__ = ["decode_step", "forward_train", "init_cache", "init_model",
+           "loss_fn", "prefill"]

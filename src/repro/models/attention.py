@@ -1,0 +1,219 @@
+"""GQA attention: training (full/windowed causal or bidirectional), prefill
+and single-token decode against a KV cache.  Supports qk-norm (qwen3) and
+per-layer window sizes (gemma3 5:1 local:global, h2o-danube SWA).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import (BATCH, causal_window_mask, init_linear, init_rms,
+                     linear, rms_norm, rope, shard_hint)
+
+__all__ = ["init_attn", "attn_train", "attn_decode", "attn_cross",
+           "init_kv_cache"]
+
+
+def init_attn(rng, d_model, n_heads, n_kv, d_head, qk_norm=False,
+              dtype=jnp.float32):
+    r = jax.random.split(rng, 4)
+    p = {
+        "wq": init_linear(r[0], d_model, n_heads * d_head, dtype),
+        "wk": init_linear(r[1], d_model, n_kv * d_head, dtype),
+        "wv": init_linear(r[2], d_model, n_kv * d_head, dtype),
+        "wo": init_linear(r[3], n_heads * d_head, d_model, dtype),
+    }
+    if qk_norm:
+        p["qn"] = init_rms(d_head, dtype)
+        p["kn"] = init_rms(d_head, dtype)
+    return p
+
+
+def _qkv(p, x, n_heads, n_kv, d_head, positions, theta, qk_norm,
+         compute_dtype, use_rope=True):
+    B, S = x.shape[:2]
+    q = linear(p["wq"], x, compute_dtype).reshape(B, S, n_heads, d_head)
+    k = linear(p["wk"], x, compute_dtype).reshape(B, S, n_kv, d_head)
+    v = linear(p["wv"], x, compute_dtype).reshape(B, S, n_kv, d_head)
+    if qk_norm:
+        q = rms_norm(p["qn"], q)
+        k = rms_norm(p["kn"], k)
+    if use_rope:
+        q = rope(q, positions, theta)
+        k = rope(k, positions, theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, n_kv):
+    """q: (B,S,Hq,D); k,v: (B,T,Hkv,D); mask: (B?,S,T) or (S,T) or None."""
+    B, S, Hq, D = q.shape
+    G = Hq // n_kv
+    qg = q.reshape(B, S, n_kv, G, D)
+    scores = jnp.einsum("bsngd,btnd->bnsgt", qg, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores * (1.0 / math.sqrt(D))
+    if mask is not None:
+        if mask.ndim == 3:        # (B, S, T)
+            m = mask[:, None, :, None, :]
+        else:                     # (S, T) or (1, T)
+            m = mask[None, None, :, None, :]
+        scores = jnp.where(m, scores, -1e30)
+    w = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    out = jnp.einsum("bnsgt,btnd->bsngd", w, v)
+    return out.reshape(B, S, Hq, D)
+
+
+CHUNKED_THRESHOLD = 2048   # materialized S^2 scores above this would OOM
+Q_CHUNK = 1024
+KV_CHUNK = 1024
+
+
+def _sdpa_chunked(q, k, v, n_kv, window, causal,
+                  q_chunk=Q_CHUNK, kv_chunk=KV_CHUNK):
+    """Online-softmax (flash-style) attention: scores materialize one
+    (q_chunk x kv_chunk) tile at a time inside nested lax.scans, so long
+    sequences (the 32k/500k cells) never allocate S^2.  Window/causal masks
+    are computed per tile from block offsets."""
+    B, Sq, Hq, D = q.shape
+    S = k.shape[1]
+    G = Hq // n_kv
+    q_chunk = min(q_chunk, Sq)
+    nq, nk = Sq // q_chunk, S // kv_chunk
+    # pin batch sharding: with head counts that don't divide the model axis
+    # GSPMD otherwise replicates these reshapes at global batch size
+    qb = shard_hint(q.reshape(B, nq, q_chunk, n_kv, G, D),
+                    BATCH, None, None, None, None, None)
+    kb = shard_hint(k.reshape(B, nk, kv_chunk, n_kv, D),
+                    BATCH, None, None, None, None)
+    vb = shard_hint(v.reshape(B, nk, kv_chunk, n_kv, D),
+                    BATCH, None, None, None, None)
+    scale = 1.0 / math.sqrt(D)
+
+    def q_step(_, qi):
+        qblk, qidx = qi                         # (B,qc,n,G,D), scalar
+        qpos = qidx * q_chunk + jnp.arange(q_chunk)
+
+        @jax.checkpoint
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kblk, vblk, kidx = ki
+            kpos = kidx * kv_chunk + jnp.arange(kv_chunk)
+            s = jnp.einsum("bqngd,bknd->bnqgk", qblk, kblk,
+                           preferred_element_type=jnp.float32) * scale
+            diff = qpos[:, None] - kpos[None, :]
+            ok = (diff < window)
+            if causal:
+                ok &= diff >= 0
+            s = jnp.where(ok[None, None, :, None, :], s, -1e30)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p_ = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p_.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bnqgk,bknd->bnqgd", p_.astype(vblk.dtype), vblk)
+            acc_new = shard_hint(acc_new, BATCH, None, None, None, None)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, n_kv, q_chunk, G), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, n_kv, q_chunk, G), jnp.float32)
+        a0 = jnp.zeros((B, n_kv, q_chunk, G, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0), jnp.arange(nk)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        # (B,n,qc,G,D) -> (B,qc,n,G,D)
+        return None, jnp.moveaxis(out, 2, 1)
+
+    _, blocks = jax.lax.scan(q_step, None,
+                             (jnp.moveaxis(qb, 1, 0), jnp.arange(nq)))
+    # blocks: (nq, B, qc, n, G, D)
+    out = jnp.moveaxis(blocks, 0, 1).reshape(B, Sq, Hq, D)
+    return out.astype(q.dtype)
+
+
+def _attend_full_seq(q, k, v, n_kv, window, causal):
+    """Pick materialized vs online-softmax attention by sequence length."""
+    S = q.shape[1]
+    if S > CHUNKED_THRESHOLD and S % Q_CHUNK == 0 and S % KV_CHUNK == 0:
+        return _sdpa_chunked(q, k, v, n_kv, window if causal else S, causal)
+    if causal:
+        mask = causal_window_mask(jnp.arange(S), jnp.arange(S), window)
+    else:
+        mask = None
+    return _sdpa(q, k, v, mask, n_kv)
+
+
+def attn_train(p, x, *, n_heads, n_kv, d_head, window, theta, qk_norm=False,
+               causal=True, compute_dtype=jnp.bfloat16):
+    """Full-sequence attention (training / prefill).  window==S -> global.
+    Sequences past CHUNKED_THRESHOLD take the online-softmax tiled path."""
+    out, _, _ = attn_train_kv(p, x, n_heads=n_heads, n_kv=n_kv, d_head=d_head,
+                              window=window, theta=theta, qk_norm=qk_norm,
+                              causal=causal, compute_dtype=compute_dtype)
+    return out
+
+
+def attn_train_kv(p, x, *, n_heads, n_kv, d_head, window, theta,
+                  qk_norm=False, causal=True, compute_dtype=jnp.bfloat16):
+    """attn_train that also returns (k, v) for serving-prefill cache capture."""
+    B, S, _ = x.shape
+    positions = jnp.arange(S)[None, :]
+    q, k, v = _qkv(p, x, n_heads, n_kv, d_head, positions, theta, qk_norm,
+                   compute_dtype)
+    out = _attend_full_seq(q, k, v, n_kv, window, causal)
+    y = linear(p["wo"], out.reshape(B, S, n_heads * d_head), compute_dtype)
+    return y, k, v
+
+
+def init_kv_cache(batch, max_seq, n_kv, d_head, n_layers, dtype=jnp.bfloat16):
+    shape = (n_layers, batch, max_seq, n_kv, d_head)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def attn_decode(p, x, cache_k, cache_v, pos, *, n_heads, n_kv, d_head,
+                window, theta, qk_norm=False, compute_dtype=jnp.bfloat16):
+    """One-token decode: x (B, 1, D), cache (B, T, n_kv, D), pos scalar.
+
+    Returns (out (B, 1, D), new_cache_k, new_cache_v).  The KV write is an
+    in-place dynamic update at ``pos``; attention sees keys [0, pos] clipped
+    to the layer's window.
+    """
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos)
+    q, k, v = _qkv(p, x, n_heads, n_kv, d_head, positions, theta, qk_norm,
+                   compute_dtype)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), pos, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), pos, axis=1)
+    T = cache_k.shape[1]
+    kpos = jnp.arange(T)
+    valid = (kpos <= pos) & (pos - kpos < window)
+    mask = valid[None, :]                    # (1, T) -> broadcast (S=1, T)
+    out = _sdpa(q, cache_k.astype(q.dtype), cache_v.astype(q.dtype),
+                mask, n_kv)
+    y = linear(p["wo"], out.reshape(B, 1, n_heads * d_head), compute_dtype)
+    return y, cache_k, cache_v
+
+
+def attn_cross(p, x, enc_k, enc_v, *, n_heads, n_kv, d_head,
+               compute_dtype=jnp.bfloat16):
+    """Cross attention (whisper decoder): query from x, fixed encoder K/V
+    (already projected, no RoPE — whisper uses learned positions).  Long
+    encoder contexts take the online-softmax tiled path."""
+    B, S, _ = x.shape
+    T = enc_k.shape[1]
+    q = linear(p["wq"], x, compute_dtype).reshape(B, S, n_heads, d_head)
+    if T > CHUNKED_THRESHOLD and T % KV_CHUNK == 0 and S % min(Q_CHUNK, S) == 0:
+        out = _sdpa_chunked(q, enc_k, enc_v, n_kv, window=T + S, causal=False)
+    else:
+        out = _sdpa(q, enc_k, enc_v, None, n_kv)
+    return linear(p["wo"], out.reshape(B, S, n_heads * d_head), compute_dtype)
+
+
+def project_cross_kv(p, enc_out, *, n_kv, d_head, compute_dtype=jnp.bfloat16):
+    B, T, _ = enc_out.shape
+    k = linear(p["wk"], enc_out, compute_dtype).reshape(B, T, n_kv, d_head)
+    v = linear(p["wv"], enc_out, compute_dtype).reshape(B, T, n_kv, d_head)
+    return k, v

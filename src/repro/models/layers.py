@@ -1,0 +1,124 @@
+"""Shared transformer layers: norms, RoPE, SwiGLU, embeddings.
+
+Pure-function style: params are nested dicts of jnp arrays; every apply
+function takes (params, x, ...).  Compute dtype is bf16 by default with f32
+master params (cast at use); all dtypes explicit so the core package's x64
+flag cannot leak in.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rms_norm", "rope", "swiglu", "init_linear", "linear",
+           "init_rms", "init_embed", "embed", "logits", "causal_window_mask",
+           "shard_hint", "BATCH"]
+
+Dtype = jnp.dtype
+
+# logical batch axes; shard_hint drops names absent from the active mesh
+BATCH = ("pod", "data")
+
+
+def shard_hint(x, *entries):
+    """with_sharding_constraint against the ambient mesh (no-op without one).
+
+    Entries are axis names / tuples / None; names missing from the mesh are
+    dropped, so model code can say shard_hint(h, BATCH, None, None) and run
+    unchanged on 1-device CPU, the 16x16 pod, or the 2x16x16 multi-pod mesh.
+    Pinning activations this way stops GSPMD from picking pathological
+    intermediate shardings ("involuntary full rematerialization") inside
+    scans (see EXPERIMENTS.md §Perf).
+    """
+    try:
+        from jax.sharding import PartitionSpec as P
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or not mesh.axis_names:
+            return x
+        names = set(mesh.axis_names)
+
+        def fix(e):
+            if e is None:
+                return None
+            t = tuple(a for a in ((e,) if isinstance(e, str) else e)
+                      if a in names)
+            return t if len(t) > 1 else (t[0] if t else None)
+
+        spec = P(*[fix(e) for e in entries])
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:   # pragma: no cover - conservative fallback
+        return x
+
+
+def init_rms(d, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rms_norm(p, x, eps=1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+def init_linear(rng, d_in, d_out, dtype=jnp.float32):
+    std = 1.0 / math.sqrt(d_in)
+    return {"w": jax.random.normal(rng, (d_in, d_out), dtype) * std}
+
+
+def linear(p, x, compute_dtype=jnp.bfloat16):
+    return jnp.einsum("...d,df->...f", x.astype(compute_dtype),
+                      p["w"].astype(compute_dtype))
+
+
+def init_embed(rng, vocab, d, dtype=jnp.float32):
+    return {"emb": jax.random.normal(rng, (vocab, d), dtype) * 0.02}
+
+
+def embed(p, tokens, compute_dtype=jnp.bfloat16):
+    return p["emb"].astype(compute_dtype)[tokens]
+
+
+def logits(p, x, compute_dtype=jnp.bfloat16):
+    """Tied output head: x @ emb^T (f32 accumulation for the softmax)."""
+    return jnp.einsum("...d,vd->...v", x.astype(compute_dtype),
+                      p["emb"].astype(compute_dtype),
+                      preferred_element_type=jnp.float32)
+
+
+def rope(x, positions, theta: float):
+    """Rotary embedding. x: (..., S, H, D); positions: broadcastable (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(-jnp.arange(0, half, dtype=jnp.float32) *
+                    (math.log(theta) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def init_swiglu(rng, d, f, dtype=jnp.float32):
+    r1, r2, r3 = jax.random.split(rng, 3)
+    return {"wi": init_linear(r1, d, f, dtype),
+            "wg": init_linear(r2, d, f, dtype),
+            "wo": init_linear(r3, f, d, dtype)}
+
+
+def swiglu(p, x, compute_dtype=jnp.bfloat16):
+    h = linear(p["wi"], x, compute_dtype)
+    g = linear(p["wg"], x, compute_dtype)
+    return linear(p["wo"], jax.nn.silu(g) * h, compute_dtype)
+
+
+def causal_window_mask(q_pos, k_pos, window):
+    """mask[i, j] = (k_pos_j <= q_pos_i) & (q_pos_i - k_pos_j < window)."""
+    diff = q_pos[..., :, None] - k_pos[..., None, :]
+    return (diff >= 0) & (diff < window)

@@ -1,0 +1,116 @@
+"""Top-k MoE layer (qwen3-moe 128e/top-8, phi3.5-moe 16e/top-2).
+
+Sort-based dispatch with static capacity (no (T, E, C) one-hot blowup):
+tokens' (token, k)-assignments are ranked within their expert via an argsort;
+assignments past the capacity C = T*top_k/E * capacity_factor are dropped
+(GShard-style).  The (E, C, d) dispatch buffer is the unit of expert
+parallelism — under pjit it carries a sharding constraint putting E on the
+'model' mesh axis, which is what makes the expert GEMM local to each
+expert-shard (EXPERIMENTS.md §Perf iterates on the collectives this choice
+induces).
+
+Router: softmax gates, top-k, renormalized combine weights; auxiliary
+load-balancing loss (Switch-style) returned alongside.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import init_linear, linear
+
+__all__ = ["init_moe", "moe_layer"]
+
+
+def init_moe(rng, d_model, d_ff, n_experts, dtype=jnp.float32):
+    r = jax.random.split(rng, 4)
+    std_in = 1.0 / math.sqrt(d_model)
+    std_out = 1.0 / math.sqrt(d_ff)
+    return {
+        "router": init_linear(r[0], d_model, n_experts, dtype),
+        "wi": jax.random.normal(r[1], (n_experts, d_model, d_ff), dtype) * std_in,
+        "wg": jax.random.normal(r[2], (n_experts, d_model, d_ff), dtype) * std_in,
+        "wo": jax.random.normal(r[3], (n_experts, d_ff, d_model), dtype) * std_out,
+    }
+
+
+MAX_TOKENS_PER_DISPATCH = 32_768
+
+
+def moe_layer(p, x, *, n_experts: int, top_k: int, capacity_factor: float,
+              compute_dtype=jnp.bfloat16, ep_axis: Optional[str] = None
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d).  Returns (y, aux_loss).
+
+    Token counts past MAX_TOKENS_PER_DISPATCH are processed in chunks via a
+    lax.scan so the (E, C, d) dispatch buffer stays bounded (~the 32k-token
+    capacity) regardless of sequence length — required for the prefill_32k
+    cells where a single dispatch would be tens of GB.
+    """
+    B, S, d = x.shape
+    T = B * S
+    if T > MAX_TOKENS_PER_DISPATCH and T % MAX_TOKENS_PER_DISPATCH == 0:
+        nc = T // MAX_TOKENS_PER_DISPATCH
+        xc = x.reshape(T, d).reshape(nc, MAX_TOKENS_PER_DISPATCH, d)
+
+        def step(aux, chunk):
+            y, a = _moe_tokens(p, chunk, n_experts=n_experts, top_k=top_k,
+                               capacity_factor=capacity_factor,
+                               compute_dtype=compute_dtype)
+            return aux + a, y
+
+        aux, ys = jax.lax.scan(step, jnp.zeros((), jnp.float32), xc)
+        return ys.reshape(B, S, d), aux / nc
+    y, aux = _moe_tokens(p, x.reshape(T, d), n_experts=n_experts,
+                         top_k=top_k, capacity_factor=capacity_factor,
+                         compute_dtype=compute_dtype)
+    return y.reshape(B, S, d), aux
+
+
+def _moe_tokens(p, xt, *, n_experts: int, top_k: int, capacity_factor: float,
+                compute_dtype=jnp.bfloat16):
+    """Dispatch/compute/combine for a flat (T, d) token chunk."""
+    T, d = xt.shape
+    E, K = n_experts, top_k
+    C = max(1, int(capacity_factor * T * K / E))
+
+    gate_logits = linear(p["router"], xt, compute_dtype).astype(jnp.float32)
+    gates = jax.nn.softmax(gate_logits, axis=-1)                  # (T, E)
+    top_w, top_e = jax.lax.top_k(gates, K)                        # (T, K)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # aux load-balance loss (Switch): E * sum_e f_e * p_e
+    me = jnp.mean(gates, axis=0)
+    ce = jnp.zeros((E,), jnp.float32).at[top_e.reshape(-1)].add(1.0) / (T * K)
+    aux = E * jnp.sum(me * ce)
+
+    # ---- dispatch: rank each (t, k) assignment within its expert ----------
+    flat_e = top_e.reshape(-1)                                    # (T*K,)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    # start offset of each expert in the sorted list
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(E), side="left")
+    pos_sorted = jnp.arange(T * K) - seg_start[sorted_e]
+    pos = jnp.zeros((T * K,), jnp.int32).at[order].set(pos_sorted.astype(jnp.int32))
+    keep = pos < C
+    tok_ids = jnp.repeat(jnp.arange(T), K)                        # (T*K,)
+
+    buf = jnp.zeros((E, C, d), compute_dtype)
+    buf = buf.at[flat_e, jnp.where(keep, pos, 0)].add(
+        jnp.where(keep[:, None], xt[tok_ids].astype(compute_dtype), 0))
+
+    # ---- expert GEMMs (E sharded over the model axis under pjit) ----------
+    h = jnp.einsum("ecd,edf->ecf", buf, p["wi"].astype(compute_dtype))
+    g = jnp.einsum("ecd,edf->ecf", buf, p["wg"].astype(compute_dtype))
+    o = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * h,
+                   p["wo"].astype(compute_dtype))                 # (E, C, d)
+
+    # ---- combine ----------------------------------------------------------
+    w_flat = top_w.reshape(-1).astype(compute_dtype)
+    gathered = o[flat_e, jnp.where(keep, pos, 0)]                 # (T*K, d)
+    contrib = jnp.where(keep[:, None], gathered * w_flat[:, None], 0)
+    y = jnp.zeros((T, d), compute_dtype).at[tok_ids].add(contrib)
+    return y, aux

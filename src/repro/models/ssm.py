@@ -1,0 +1,223 @@
+"""Mamba2 (state-space duality / SSD) block — mamba2-130m and the zamba2
+hybrid's backbone [arXiv:2405.21060].
+
+Training path: the chunked SSD algorithm — within-chunk quadratic
+("attention-like") term plus inter-chunk state recurrence carried by a
+lax.scan over chunks.  Decode path: O(1) recurrent state update.  Layout and
+parameterization follow the reference mamba2 block:
+
+    in_proj -> [z | x | B | C | dt];  causal depthwise conv over [x|B|C];
+    y = SSD(x, dt, A, B, C) + D * x;  out = out_proj(rms(y * silu(z)))
+
+Shapes: d_inner = expand * d_model, H = d_inner / headdim heads, state N,
+single B/C group (G=1) as in the released configs.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import BATCH, init_linear, init_rms, linear, rms_norm, shard_hint
+
+__all__ = ["init_mamba2", "mamba2_train", "mamba2_decode", "init_ssm_cache"]
+
+
+def init_mamba2(rng, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    di = cfg.d_inner
+    H = cfg.ssm_heads
+    N = cfg.ssm_state
+    conv_dim = di + 2 * N                      # x | B | C share the conv
+    r = jax.random.split(rng, 5)
+    d_in_proj = 2 * di + 2 * N + H             # z | x | B | C | dt
+    return {
+        "in_proj": init_linear(r[0], d, d_in_proj, dtype),
+        "conv_w": jax.random.normal(r[1], (cfg.ssm_conv, conv_dim), dtype) * 0.2,
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(dtype)),
+        "D": jnp.ones((H,), dtype),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((H,), 0.01, jnp.float32))).astype(dtype),
+        "norm": init_rms(di, dtype),
+        "out_proj": init_linear(r[4], di, d, dtype),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di:di + di + 2 * N]
+    dt = zxbcdt[..., di + di + 2 * N:]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, w, b):
+    """Depthwise causal conv along seq; xBC (B,S,C), w (K,C)."""
+    K = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    # unrolled taps: K is 4 — cheaper than conv_general for tiny K
+    out = jnp.zeros_like(xBC)
+    for k in range(K):
+        out = out + pad[:, k:k + xBC.shape[1], :] * w[k][None, None, :]
+    return out + b[None, None, :]
+
+
+def _segsum(x):
+    """segsum(x)[..., i, j] = sum x[..., j+1..i] (lower-triangular), -inf above."""
+    Q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    ii = jnp.arange(Q)
+    mask = ii[:, None] >= ii[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, return_state: bool = False):
+    """Chunked SSD scan.
+
+    x: (B,S,H,P) dt: (B,S,H) A: (H,) Bm/Cm: (B,S,N)  [single group]
+    Returns y: (B,S,H,P) [, final state (B,H,P,N)].  f32 state math.
+    """
+    # pin intermediates to batch sharding — without these GSPMD invents
+    # conflicting shardings for the einsum chain and replicates global-batch
+    # tensors ("involuntary full rematerialization", ~50GB/dev at train_4k)
+    x = shard_hint(x, BATCH, None, None, None)
+    dt = shard_hint(dt, BATCH, None, None)
+    Bm = shard_hint(Bm, BATCH, None, None)
+    Cm = shard_hint(Cm, BATCH, None, None)
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    S0 = S
+    pad = (-S) % chunk
+    if pad:
+        # dt=0 padding is exact: decay exp(0*A)=1 and zero input leave the
+        # carried state untouched; padded outputs are sliced off below
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    nc = S // chunk
+    xc = x.reshape(Bsz, nc, chunk, H, P).astype(jnp.float32)
+    dtc = dt.reshape(Bsz, nc, chunk, H).astype(jnp.float32)
+    Bc = Bm.reshape(Bsz, nc, chunk, N).astype(jnp.float32)
+    Cc = Cm.reshape(Bsz, nc, chunk, N).astype(jnp.float32)
+    # A_log parameterization gives A = -exp(A_log) < 0; dA = dt * A <= 0
+    dA = dtc * A.astype(jnp.float32)[None, None, None, :]   # (B,nc,Q,H)
+    # within-chunk decay L = exp(segsum(dA)) per head: (B,nc,H,Q,Q)
+    dAh = jnp.moveaxis(dA, -1, 2)                      # (B,nc,H,Q)
+    L = shard_hint(jnp.exp(_segsum(dAh)), BATCH, None, None, None, None)
+    xdt = shard_hint(xc * dtc[..., None], BATCH, None, None, None, None)
+    # diagonal (within-chunk) term
+    scores = shard_hint(jnp.einsum("bcin,bcjn->bcij", Cc, Bc),
+                        BATCH, None, None, None)       # (B,nc,Q,Q)
+    y_diag = shard_hint(
+        jnp.einsum("bcij,bchij,bcjhp->bcihp", scores, L, xdt),
+        BATCH, None, None, None, None)
+    # chunk-final states: decay from j to end of chunk
+    dA_cum = jnp.cumsum(dAh, axis=-1)                  # (B,nc,H,Q)
+    decay_to_end = jnp.exp(dA_cum[..., -1:] - dA_cum)  # (B,nc,H,Q)
+    states = shard_hint(
+        jnp.einsum("bcjn,bchj,bcjhp->bchpn", Bc, decay_to_end, xdt),
+        BATCH, None, None, None, None)
+    # inter-chunk recurrence: S_{c+1} = exp(sum dA_c) * S_c + states_c
+    chunk_decay = jnp.exp(dA_cum[..., -1])             # (B,nc,H)
+
+    def scan_fn(carry, inp):
+        s_prev = carry
+        st, dec = inp
+        s_new = s_prev * dec[..., None, None] + st
+        return s_new, s_prev
+
+    init = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    s_final, s_prev_all = jax.lax.scan(
+        scan_fn, init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    s_prev_all = shard_hint(jnp.moveaxis(s_prev_all, 0, 1),
+                            BATCH, None, None, None, None)  # (B,nc,H,P,N)
+    # off-diagonal term: contribution of carried state to each position
+    decay_in = jnp.exp(dA_cum)                         # (B,nc,H,Q)
+    y_off = shard_hint(
+        jnp.einsum("bcin,bchi,bchpn->bcihp", Cc, decay_in, s_prev_all),
+        BATCH, None, None, None, None)
+    y = (y_diag + y_off).reshape(Bsz, S, H, P)[:, :S0]
+    if return_state:
+        return y.astype(x.dtype), s_final
+    return y.astype(x.dtype)
+
+
+def mamba2_train(p, x, cfg, compute_dtype=jnp.bfloat16,
+                 return_cache: bool = False):
+    """Full-sequence mamba2 block. x: (B, S, d_model).
+
+    With return_cache=True also returns (final_state (B,H,P,N),
+    conv_tail (B, K-1, conv_dim)) for serving prefill.
+    """
+    B, S, _ = x.shape
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    zxbcdt = shard_hint(linear(p["in_proj"], x, compute_dtype),
+                        BATCH, None, None)
+    z, xBC_pre, dt = _split_proj(cfg, zxbcdt)
+    xBC = jax.nn.silu(_causal_conv(xBC_pre, p["conv_w"].astype(compute_dtype),
+                                   p["conv_b"].astype(compute_dtype)))
+    xs = xBC[..., :di].reshape(B, S, H, P)
+    Bm = xBC[..., di:di + N]
+    Cm = xBC[..., di + N:]
+    dt_s = jax.nn.softplus(dt.astype(jnp.float32)
+                           + p["dt_bias"].astype(jnp.float32))   # (B,S,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                 # (H,) negative
+    if return_cache:
+        y, s_final = ssd_chunked(xs, dt_s, A, Bm, Cm, cfg.ssm_chunk,
+                                 return_state=True)
+    else:
+        y = ssd_chunked(xs, dt_s, A, Bm, Cm, cfg.ssm_chunk)
+    y = y + xs * p["D"].astype(compute_dtype)[None, None, :, None]
+    y = y.reshape(B, S, di)
+    y = rms_norm(p["norm"], y * jax.nn.silu(z))
+    out = linear(p["out_proj"], y, compute_dtype)
+    if return_cache:
+        conv_tail = xBC_pre[:, -(cfg.ssm_conv - 1):, :].astype(jnp.float32)
+        return out, s_final, conv_tail
+    return out
+
+
+def init_ssm_cache(batch, cfg, n_layers, dtype=jnp.float32):
+    return {
+        "state": jnp.zeros((n_layers, batch, cfg.ssm_heads, cfg.ssm_headdim,
+                            cfg.ssm_state), dtype),
+        "conv": jnp.zeros((n_layers, batch, cfg.ssm_conv - 1,
+                           cfg.d_inner + 2 * cfg.ssm_state), dtype),
+    }
+
+
+def mamba2_decode(p, x, state, conv_cache, cfg, compute_dtype=jnp.bfloat16):
+    """One-token recurrent step.  x: (B, 1, d_model); state (B,H,P,N);
+    conv_cache (B, K-1, conv_dim).  Returns (y, state, conv_cache)."""
+    B = x.shape[0]
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    zxbcdt = linear(p["in_proj"], x, compute_dtype)[:, 0]        # (B, *)
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+    # conv over [cache | current]
+    win = jnp.concatenate([conv_cache, xBC[:, None, :]], axis=1)  # (B,K,C)
+    w = p["conv_w"].astype(compute_dtype)
+    conv_out = jnp.einsum("bkc,kc->bc", win.astype(compute_dtype), w) \
+        + p["conv_b"].astype(compute_dtype)
+    xBC_c = jax.nn.silu(conv_out)
+    new_conv = win[:, 1:, :]
+    xs = xBC_c[..., :di].reshape(B, H, P).astype(jnp.float32)
+    Bm = xBC_c[..., di:di + N].astype(jnp.float32)
+    Cm = xBC_c[..., di + N:].astype(jnp.float32)
+    dt_s = jax.nn.softplus(dt.astype(jnp.float32)
+                           + p["dt_bias"].astype(jnp.float32))   # (B,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt_s * A[None, :])                              # (B,H)
+    # state update: s = dA * s + dt * x ⊗ B
+    upd = jnp.einsum("bhp,bn->bhpn", xs * dt_s[..., None], Bm)
+    state = state * dA[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", state, Cm)
+    y = y + xs * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(B, 1, di).astype(compute_dtype)
+    y = rms_norm(p["norm"], y * jax.nn.silu(z[:, None, :]))
+    return linear(p["out_proj"], y, compute_dtype), state, new_conv

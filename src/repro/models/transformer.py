@@ -1,0 +1,574 @@
+"""Model assembly for the assigned pool: dense / MoE / SSM / hybrid /
+encoder-decoder / VLM, as pure functions over scan-stacked parameters.
+
+Layer stacks use ``jax.lax.scan`` over parameters stacked on a leading L axis
+(compile time stays flat in depth — essential for 40 dry-run cells), with
+per-layer attention windows carried as a scanned array so heterogeneous
+patterns (gemma3 5:1 local:global) need no control flow.  Each block is
+wrapped in ``jax.checkpoint`` (remat) during training.
+
+Entry points:
+    init_model(rng, cfg)                   -> params
+    forward_train(params, cfg, batch)      -> logits (f32)
+    init_cache(cfg, batch, max_seq)        -> decode cache
+    prefill(params, cfg, batch)            -> (cache, last_logits)
+    decode_step(params, cfg, cache, token, pos) -> (logits, cache)
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .layers import (BATCH, causal_window_mask, embed, init_embed,
+                     init_linear, init_rms, linear, logits, rms_norm,
+                     shard_hint)
+from .layers import init_swiglu, swiglu
+
+__all__ = ["init_model", "forward_train", "init_cache", "prefill",
+           "decode_step", "loss_fn"]
+
+CD = jnp.bfloat16  # compute dtype
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_dense_block(rng, cfg, dtype=jnp.float32):
+    r1, r2 = jax.random.split(rng)
+    return {
+        "ln1": init_rms(cfg.d_model, dtype),
+        "attn": attn.init_attn(r1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.head_dim, cfg.qk_norm, dtype),
+        "ln2": init_rms(cfg.d_model, dtype),
+        "mlp": init_swiglu(r2, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _init_moe_block(rng, cfg, dtype=jnp.float32):
+    r1, r2 = jax.random.split(rng)
+    return {
+        "ln1": init_rms(cfg.d_model, dtype),
+        "attn": attn.init_attn(r1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.head_dim, cfg.qk_norm, dtype),
+        "ln2": init_rms(cfg.d_model, dtype),
+        "moe": moe_mod.init_moe(r2, cfg.d_model, cfg.d_ff, cfg.n_experts, dtype),
+    }
+
+
+def _init_mamba_block(rng, cfg, dtype=jnp.float32):
+    return {
+        "ln": init_rms(cfg.d_model, dtype),
+        "mixer": ssm_mod.init_mamba2(rng, cfg, dtype),
+    }
+
+
+def _init_encdec_block(rng, cfg, dtype=jnp.float32, *, cross: bool = False):
+    r1, r2, r3 = jax.random.split(rng, 3)
+    p = {
+        "ln1": init_rms(cfg.d_model, dtype),
+        "attn": attn.init_attn(r1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.head_dim, False, dtype),
+        "ln2": init_rms(cfg.d_model, dtype),
+        "mlp": init_swiglu(r2, cfg.d_model, cfg.d_ff, dtype),
+    }
+    if cross:
+        p["lnx"] = init_rms(cfg.d_model, dtype)
+        p["xattn"] = attn.init_attn(r3, cfg.d_model, cfg.n_heads,
+                                    cfg.n_kv_heads, cfg.head_dim, False, dtype)
+    return p
+
+
+def _stack(init_fn, rng, n, *args):
+    rngs = jax.random.split(rng, n)
+    return jax.vmap(lambda r: init_fn(r, *args))(rngs)
+
+
+def init_model(rng, cfg, dtype=jnp.float32) -> Dict[str, Any]:
+    r = jax.random.split(rng, 8)
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        p = {"embed": init_embed(r[0], cfg.vocab, cfg.d_model, dtype),
+             "blocks": _stack(_init_dense_block, r[1], cfg.n_layers, cfg, dtype),
+             "final_norm": init_rms(cfg.d_model, dtype)}
+        if fam == "vlm":
+            p["img_proj"] = init_linear(r[2], cfg.frontend_dim, cfg.d_model, dtype)
+        return p
+    if fam == "moe":
+        return {"embed": init_embed(r[0], cfg.vocab, cfg.d_model, dtype),
+                "blocks": _stack(_init_moe_block, r[1], cfg.n_layers, cfg, dtype),
+                "final_norm": init_rms(cfg.d_model, dtype)}
+    if fam == "ssm":
+        return {"embed": init_embed(r[0], cfg.vocab, cfg.d_model, dtype),
+                "blocks": _stack(_init_mamba_block, r[1], cfg.n_layers, cfg, dtype),
+                "final_norm": init_rms(cfg.d_model, dtype)}
+    if fam == "hybrid":
+        shared = {
+            "ln1": init_rms(cfg.d_model, dtype),
+            "attn": attn.init_attn(r[2], cfg.d_model, cfg.n_heads,
+                                   cfg.n_kv_heads, cfg.head_dim, False, dtype),
+            "ln2": init_rms(cfg.d_model, dtype),
+            "mlp": init_swiglu(r[3], cfg.d_model, cfg.d_ff, dtype),
+        }
+        return {"embed": init_embed(r[0], cfg.vocab, cfg.d_model, dtype),
+                "blocks": _stack(_init_mamba_block, r[1], cfg.n_layers, cfg, dtype),
+                "shared": shared,
+                "final_norm": init_rms(cfg.d_model, dtype)}
+    if fam == "encdec":
+        return {"enc_proj": init_linear(r[0], cfg.frontend_dim, cfg.d_model, dtype),
+                "enc_blocks": _stack(partial(_init_encdec_block, cross=False),
+                                     r[1], cfg.n_layers, cfg, dtype),
+                "enc_norm": init_rms(cfg.d_model, dtype),
+                "embed": init_embed(r[2], cfg.vocab, cfg.d_model, dtype),
+                "dec_blocks": _stack(partial(_init_encdec_block, cross=True),
+                                     r[3], cfg.n_dec_layers, cfg, dtype),
+                "final_norm": init_rms(cfg.d_model, dtype)}
+    raise ValueError(fam)
+
+
+# ---------------------------------------------------------------------------
+# training-time forwards
+# ---------------------------------------------------------------------------
+
+def _dense_stack(blocks, x, cfg, windows, remat=True, causal=True):
+    akw = dict(n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, d_head=cfg.head_dim,
+               theta=cfg.rope_theta, qk_norm=cfg.qk_norm, causal=causal,
+               compute_dtype=CD)
+
+    def body(h, xs):
+        blk, w = xs
+        h = h + attn.attn_train(blk["attn"], rms_norm(blk["ln1"], h),
+                                window=w, **akw)
+        h = h + swiglu(blk["mlp"], rms_norm(blk["ln2"], h), CD)
+        return h, None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(body_fn, x, (blocks, windows))
+    return x
+
+
+def _moe_stack(blocks, x, cfg, windows, remat=True):
+    akw = dict(n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, d_head=cfg.head_dim,
+               theta=cfg.rope_theta, qk_norm=cfg.qk_norm, causal=True,
+               compute_dtype=CD)
+
+    def body(carry, xs):
+        h, aux = carry
+        blk, w = xs
+        h = h + attn.attn_train(blk["attn"], rms_norm(blk["ln1"], h),
+                                window=w, **akw)
+        y, a = moe_mod.moe_layer(blk["moe"], rms_norm(blk["ln2"], h),
+                                 n_experts=cfg.n_experts, top_k=cfg.top_k,
+                                 capacity_factor=cfg.capacity_factor,
+                                 compute_dtype=CD)
+        return (h + y, aux + a), None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.zeros((), jnp.float32)),
+                               (blocks, windows))
+    return x, aux
+
+
+def _mamba_stack(blocks, x, cfg, remat=True):
+    def body(h, blk):
+        h = h + ssm_mod.mamba2_train(blk["mixer"], rms_norm(blk["ln"], h),
+                                     cfg, CD)
+        return h, None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(body_fn, x, blocks)
+    return x
+
+
+def _hybrid_stack(params, x, cfg, seq_len, remat=True):
+    period = cfg.shared_attn_period
+    n_super = cfg.n_layers // period
+    blocks = jax.tree.map(
+        lambda a: a.reshape((n_super, period) + a.shape[1:]), params["blocks"])
+    shared = params["shared"]
+    akw = dict(n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, d_head=cfg.head_dim,
+               theta=cfg.rope_theta, qk_norm=False, causal=True,
+               compute_dtype=CD)
+
+    def inner(hh, blk):
+        hh = hh + ssm_mod.mamba2_train(blk["mixer"],
+                                       rms_norm(blk["ln"], hh), cfg, CD)
+        return hh, None
+
+    def shared_block(h):
+        h = h + attn.attn_train(shared["attn"], rms_norm(shared["ln1"], h),
+                                window=seq_len, **akw)
+        return h + swiglu(shared["mlp"], rms_norm(shared["ln2"], h), CD)
+
+    # checkpoint at the *individual layer* granularity: super-block remat
+    # would keep 6 mamba layers' SSD residuals (the (B,nc,H,Q,Q) decay
+    # tensors) live at once during the recomputed backward
+    inner_fn = jax.checkpoint(inner) if remat else inner
+    shared_fn = jax.checkpoint(shared_block) if remat else shared_block
+
+    def super_body(h, sb):
+        h, _ = jax.lax.scan(inner_fn, h, sb)
+        return shared_fn(h), None
+
+    x, _ = jax.lax.scan(super_body, x, blocks)
+    return x
+
+
+def _encdec_encode(params, frames, cfg, remat=True):
+    x = linear(params["enc_proj"], frames.astype(CD), CD)
+    S = x.shape[1]
+    x = shard_hint(x + _sinusoid(S, cfg.d_model, CD)[None], BATCH, None, None)
+    akw = dict(n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, d_head=cfg.head_dim,
+               theta=cfg.rope_theta, qk_norm=False, causal=False,
+               compute_dtype=CD)
+
+    def body(h, blk):
+        h = h + attn.attn_train(blk["attn"], rms_norm(blk["ln1"], h),
+                                window=S, **akw)
+        h = h + swiglu(blk["mlp"], rms_norm(blk["ln2"], h), CD)
+        return h, None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["enc_blocks"])
+    return rms_norm(params["enc_norm"], x)
+
+
+def _sinusoid(S, d, dtype):
+    pos = jnp.arange(S)[:, None].astype(jnp.float32)
+    i = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    ang = pos / jnp.power(10000.0, 2 * i / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+def _encdec_decode_train(params, enc_out, tokens, cfg, remat=True):
+    x = embed(params["embed"], tokens, CD)
+    S = x.shape[1]
+    x = shard_hint(x + _sinusoid(S, cfg.d_model, CD)[None], BATCH, None, None)
+    enc_out = shard_hint(enc_out, BATCH, None, None)
+    akw = dict(n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, d_head=cfg.head_dim,
+               theta=cfg.rope_theta, qk_norm=False, causal=True,
+               compute_dtype=CD)
+    xkw = dict(n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, d_head=cfg.head_dim,
+               compute_dtype=CD)
+
+    def body(h, blk):
+        h = h + attn.attn_train(blk["attn"], rms_norm(blk["ln1"], h),
+                                window=S, **akw)
+        ek, ev = attn.project_cross_kv(blk["xattn"], enc_out,
+                                       n_kv=cfg.n_kv_heads,
+                                       d_head=cfg.head_dim, compute_dtype=CD)
+        h = h + attn.attn_cross(blk["xattn"], rms_norm(blk["lnx"], h), ek, ev,
+                                **xkw)
+        h = h + swiglu(blk["mlp"], rms_norm(blk["ln2"], h), CD)
+        return h, None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["dec_blocks"])
+    return x
+
+
+def forward_train(params, cfg, batch, remat: bool = True):
+    """batch: dict with 'tokens' (B,S) [+ 'frames' | 'images'].  Returns
+    (logits_f32 (B,S,V), aux_loss)."""
+    fam = cfg.family
+    aux = jnp.zeros((), jnp.float32)
+    if fam == "encdec":
+        enc = _encdec_encode(params, batch["frames"], cfg, remat)
+        x = _encdec_decode_train(params, enc, batch["tokens"], cfg, remat)
+        x = rms_norm(params["final_norm"], x)
+        return logits(params["embed"], x, CD), aux
+
+    tokens = batch["tokens"]
+    x = embed(params["embed"], tokens, CD)
+    if fam == "vlm":
+        img = linear(params["img_proj"], batch["images"].astype(CD), CD)
+        x = jnp.concatenate([img, x], axis=1)
+    x = shard_hint(x, BATCH, None, None)
+    S = x.shape[1]
+    windows = jnp.asarray(cfg.layer_windows(S)) if fam in ("dense", "vlm", "moe") else None
+    if fam in ("dense", "vlm"):
+        x = _dense_stack(params["blocks"], x, cfg, windows, remat)
+    elif fam == "moe":
+        x, aux = _moe_stack(params["blocks"], x, cfg, windows, remat)
+    elif fam == "ssm":
+        x = _mamba_stack(params["blocks"], x, cfg, remat)
+    elif fam == "hybrid":
+        x = _hybrid_stack(params, x, cfg, S, remat)
+    else:
+        raise ValueError(fam)
+    if fam == "vlm":
+        x = x[:, batch["images"].shape[1]:]   # text positions only
+    x = rms_norm(params["final_norm"], x)
+    return logits(params["embed"], x, CD), aux
+
+
+def loss_fn(params, cfg, batch, remat: bool = True):
+    """Next-token cross entropy (f32 log-softmax, vocab-shardable)."""
+    lg, aux = forward_train(params, cfg, batch, remat)
+    labels = batch["tokens"][:, 1:]
+    lg = lg[:, :-1]
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+    mask = batch.get("loss_mask")
+    mask = mask[:, 1:] if mask is not None else jnp.ones_like(gold)
+    nll = jnp.sum((lse - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return nll + 0.01 * aux, {"nll": nll, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + single-token decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_seq: int, cache_dtype=jnp.bfloat16):
+    fam = cfg.family
+    if fam in ("dense", "vlm", "moe"):
+        return attn.init_kv_cache(batch, max_seq, cfg.n_kv_heads, cfg.head_dim,
+                                  cfg.n_layers, cache_dtype)
+    if fam == "ssm":
+        return ssm_mod.init_ssm_cache(batch, cfg, cfg.n_layers)
+    if fam == "hybrid":
+        n_super = cfg.n_layers // cfg.shared_attn_period
+        return {"ssm": ssm_mod.init_ssm_cache(batch, cfg, cfg.n_layers),
+                "kv": attn.init_kv_cache(batch, max_seq, cfg.n_kv_heads,
+                                         cfg.head_dim, n_super, cache_dtype)}
+    if fam == "encdec":
+        return {"self": attn.init_kv_cache(batch, cfg.dec_seq, cfg.n_kv_heads,
+                                           cfg.head_dim, cfg.n_dec_layers,
+                                           cache_dtype),
+                "cross_k": jnp.zeros((cfg.n_dec_layers, batch, max_seq,
+                                      cfg.n_kv_heads, cfg.head_dim), cache_dtype),
+                "cross_v": jnp.zeros((cfg.n_dec_layers, batch, max_seq,
+                                      cfg.n_kv_heads, cfg.head_dim), cache_dtype)}
+    raise ValueError(fam)
+
+
+def decode_step(params, cfg, cache, token, pos):
+    """One decode step.  token: (B,) int32; pos: scalar int32.
+    Returns (logits (B, V) f32, new cache)."""
+    fam = cfg.family
+    B = token.shape[0]
+    x = embed(params["embed"], token[:, None], CD)          # (B,1,D)
+    akw = dict(n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, d_head=cfg.head_dim,
+               theta=cfg.rope_theta, qk_norm=cfg.qk_norm, compute_dtype=CD)
+
+    if fam in ("dense", "vlm", "moe"):
+        S = cache["k"].shape[2]
+        windows = jnp.asarray(cfg.layer_windows(S))
+
+        def body(h, xs):
+            blk, ck, cv, w = xs
+            y, ck, cv = attn.attn_decode(blk["attn"], rms_norm(blk["ln1"], h),
+                                         ck, cv, pos, window=w, **akw)
+            h = h + y
+            if fam == "moe":
+                y2, _ = moe_mod.moe_layer(blk["moe"], rms_norm(blk["ln2"], h),
+                                          n_experts=cfg.n_experts,
+                                          top_k=cfg.top_k,
+                                          capacity_factor=cfg.capacity_factor,
+                                          compute_dtype=CD)
+            else:
+                y2 = swiglu(blk["mlp"], rms_norm(blk["ln2"], h), CD)
+            return h + y2, (ck, cv)
+
+        x, (nk, nv) = jax.lax.scan(body, x,
+                                   (params["blocks"], cache["k"], cache["v"],
+                                    windows))
+        cache = {"k": nk, "v": nv}
+    elif fam == "ssm":
+        def body(h, xs):
+            blk, st, cv = xs
+            y, st, cv = ssm_mod.mamba2_decode(blk["mixer"],
+                                              rms_norm(blk["ln"], h), st, cv,
+                                              cfg, CD)
+            return h + y, (st, cv)
+        x, (ns, ncv) = jax.lax.scan(body, x, (params["blocks"],
+                                              cache["state"], cache["conv"]))
+        cache = {"state": ns, "conv": ncv}
+    elif fam == "hybrid":
+        period = cfg.shared_attn_period
+        n_super = cfg.n_layers // period
+        blocks = jax.tree.map(
+            lambda a: a.reshape((n_super, period) + a.shape[1:]),
+            params["blocks"])
+        ssm_c = jax.tree.map(
+            lambda a: a.reshape((n_super, period) + a.shape[1:]), cache["ssm"])
+        shared = params["shared"]
+        Skv = cache["kv"]["k"].shape[2]
+
+        def super_body(h, xs):
+            sb, st, cv, ck, cvv = xs
+
+            def inner(hh, ys):
+                blk, s1, c1 = ys
+                y, s1, c1 = ssm_mod.mamba2_decode(blk["mixer"],
+                                                  rms_norm(blk["ln"], hh),
+                                                  s1, c1, cfg, CD)
+                return hh + y, (s1, c1)
+            h, (st, cv) = jax.lax.scan(inner, h, (sb, st, cv))
+            y, ck, cvv = attn.attn_decode(shared["attn"],
+                                          rms_norm(shared["ln1"], h), ck, cvv,
+                                          pos, window=Skv,
+                                          **{**akw, "qk_norm": False})
+            h = h + y
+            h = h + swiglu(shared["mlp"], rms_norm(shared["ln2"], h), CD)
+            return h, (st, cv, ck, cvv)
+
+        x, (ns, ncv, nk, nv) = jax.lax.scan(
+            super_body, x,
+            (blocks, ssm_c["state"], ssm_c["conv"],
+             cache["kv"]["k"], cache["kv"]["v"]))
+        cache = {"ssm": {"state": jax.tree.map(lambda a: a.reshape((cfg.n_layers,) + a.shape[2:]), ns),
+                         "conv": jax.tree.map(lambda a: a.reshape((cfg.n_layers,) + a.shape[2:]), ncv)},
+                 "kv": {"k": nk, "v": nv}}
+    elif fam == "encdec":
+        x = x + _sinusoid_at(pos, cfg.d_model, CD)[None, None]
+
+        def body(h, xs):
+            blk, ck, cv, xk, xv = xs
+            y, ck, cv = attn.attn_decode(blk["attn"], rms_norm(blk["ln1"], h),
+                                         ck, cv, pos, window=cfg.dec_seq,
+                                         **{**akw, "qk_norm": False})
+            h = h + y
+            h = h + attn.attn_cross(blk["xattn"], rms_norm(blk["lnx"], h),
+                                    xk.astype(CD), xv.astype(CD),
+                                    n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                                    d_head=cfg.head_dim, compute_dtype=CD)
+            h = h + swiglu(blk["mlp"], rms_norm(blk["ln2"], h), CD)
+            return h, (ck, cv)
+
+        x, (nk, nv) = jax.lax.scan(body, x,
+                                   (params["dec_blocks"], cache["self"]["k"],
+                                    cache["self"]["v"], cache["cross_k"],
+                                    cache["cross_v"]))
+        cache = {"self": {"k": nk, "v": nv}, "cross_k": cache["cross_k"],
+                 "cross_v": cache["cross_v"]}
+    else:
+        raise ValueError(fam)
+
+    x = rms_norm(params["final_norm"], x)
+    return logits(params["embed"], x, CD)[:, 0], cache
+
+
+def _sinusoid_at(pos, d, dtype):
+    i = jnp.arange(d // 2).astype(jnp.float32)
+    ang = pos.astype(jnp.float32) / jnp.power(10000.0, 2 * i / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)]).astype(dtype)
+
+
+def prefill(params, cfg, batch, max_seq: Optional[int] = None,
+            cache_dtype=jnp.bfloat16):
+    """Process the full prompt in one pass; return (cache, last-token logits).
+
+    Attention families capture K/V per layer during the forward scan;
+    SSM/hybrid capture the final SSD state + conv tail (mamba2_train
+    return_cache); encdec precomputes the per-layer cross K/V.
+    """
+    fam = cfg.family
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    if fam == "encdec":
+        enc = _encdec_encode(params, batch["frames"], cfg, remat=False)
+        cache = init_cache(cfg, B, enc.shape[1], cache_dtype)
+
+        def proj(blk):
+            return attn.project_cross_kv(blk["xattn"], enc,
+                                         n_kv=cfg.n_kv_heads,
+                                         d_head=cfg.head_dim, compute_dtype=CD)
+        ck, cv = jax.vmap(proj)(params["dec_blocks"])
+        cache["cross_k"] = ck.astype(cache_dtype)
+        cache["cross_v"] = cv.astype(cache_dtype)
+        lg, _ = forward_train(params, cfg,
+                              {"tokens": tokens, "frames": batch["frames"]},
+                              remat=False)
+        return cache, lg[:, -1]
+
+    x = embed(params["embed"], tokens, CD)
+    if fam == "vlm":
+        img = linear(params["img_proj"], batch["images"].astype(CD), CD)
+        x = jnp.concatenate([img, x], axis=1)
+    Sx = x.shape[1]
+    max_seq = max_seq or Sx   # VLM caches cover image prefix + text
+    cache = init_cache(cfg, B, max_seq, cache_dtype)
+
+    if fam in ("dense", "vlm", "moe"):
+        windows = jnp.asarray(cfg.layer_windows(Sx))
+
+        def body(h, xs):
+            blk, w = xs
+            hn = rms_norm(blk["ln1"], h)
+            y, k, v = attn.attn_train_kv(blk["attn"], hn, n_heads=cfg.n_heads,
+                                         n_kv=cfg.n_kv_heads,
+                                         d_head=cfg.head_dim, window=w,
+                                         theta=cfg.rope_theta,
+                                         qk_norm=cfg.qk_norm, causal=True,
+                                         compute_dtype=CD)
+            h = h + y
+            if fam == "moe":
+                y2, _ = moe_mod.moe_layer(blk["moe"], rms_norm(blk["ln2"], h),
+                                          n_experts=cfg.n_experts,
+                                          top_k=cfg.top_k,
+                                          capacity_factor=cfg.capacity_factor,
+                                          compute_dtype=CD)
+            else:
+                y2 = swiglu(blk["mlp"], rms_norm(blk["ln2"], h), CD)
+            return h + y2, (k.astype(cache_dtype), v.astype(cache_dtype))
+
+        x, (ks, vs) = jax.lax.scan(body, x, (params["blocks"], windows))
+        cache["k"] = jax.lax.dynamic_update_slice_in_dim(cache["k"], ks, 0, axis=2)
+        cache["v"] = jax.lax.dynamic_update_slice_in_dim(cache["v"], vs, 0, axis=2)
+    elif fam == "ssm":
+        def body(h, blk):
+            y, st, tail = ssm_mod.mamba2_train(blk["mixer"],
+                                               rms_norm(blk["ln"], h), cfg,
+                                               CD, return_cache=True)
+            return h + y, (st, tail)
+        x, (sts, tails) = jax.lax.scan(body, x, params["blocks"])
+        cache = {"state": sts, "conv": tails}
+    elif fam == "hybrid":
+        period = cfg.shared_attn_period
+        n_super = cfg.n_layers // period
+        blocks = jax.tree.map(
+            lambda a: a.reshape((n_super, period) + a.shape[1:]),
+            params["blocks"])
+        shared = params["shared"]
+
+        def super_body(h, sb):
+            def inner(hh, blk):
+                y, st, tail = ssm_mod.mamba2_train(blk["mixer"],
+                                                   rms_norm(blk["ln"], hh),
+                                                   cfg, CD, return_cache=True)
+                return hh + y, (st, tail)
+            h, (sts, tails) = jax.lax.scan(inner, h, sb)
+            y, k, v = attn.attn_train_kv(shared["attn"],
+                                         rms_norm(shared["ln1"], h),
+                                         n_heads=cfg.n_heads,
+                                         n_kv=cfg.n_kv_heads,
+                                         d_head=cfg.head_dim, window=Sx,
+                                         theta=cfg.rope_theta, qk_norm=False,
+                                         causal=True, compute_dtype=CD)
+            h = h + y
+            h = h + swiglu(shared["mlp"], rms_norm(shared["ln2"], h), CD)
+            return h, (sts, tails, k.astype(cache_dtype), v.astype(cache_dtype))
+
+        x, (sts, tails, ks, vs) = jax.lax.scan(super_body, x, blocks)
+        flat = lambda a: a.reshape((cfg.n_layers,) + a.shape[2:])
+        cache = {"ssm": {"state": flat(sts), "conv": flat(tails)},
+                 "kv": {"k": jax.lax.dynamic_update_slice_in_dim(
+                            cache["kv"]["k"], ks, 0, axis=2),
+                        "v": jax.lax.dynamic_update_slice_in_dim(
+                            cache["kv"]["v"], vs, 0, axis=2)}}
+    else:
+        raise ValueError(fam)
+
+    if fam == "vlm":
+        x = x[:, batch["images"].shape[1]:]
+    x = rms_norm(params["final_norm"], x)
+    lg = logits(params["embed"], x[:, -1:], CD)[:, 0]
+    return cache, lg

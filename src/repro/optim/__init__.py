@@ -1,0 +1,5 @@
+from .adamw import (TrainState, adamw_init, adamw_update, clip_by_global_norm,
+                    cosine_schedule)
+
+__all__ = ["TrainState", "adamw_init", "adamw_update", "clip_by_global_norm",
+           "cosine_schedule"]

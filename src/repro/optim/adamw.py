@@ -1,0 +1,70 @@
+"""AdamW with global-norm clipping and cosine schedule (no external deps).
+
+Optimizer states mirror the parameter pytree (and its sharding specs —
+dist.sharding.state_specs), so FSDP shards m/v alongside the weights.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["TrainState", "adamw_init", "adamw_update", "clip_by_global_norm",
+           "cosine_schedule"]
+
+
+class TrainState(NamedTuple):
+    params: Any
+    m: Any
+    v: Any
+    count: jnp.ndarray
+
+
+def adamw_init(params) -> TrainState:
+    zeros = lambda p: jax.tree.map(jnp.zeros_like, p)
+    return TrainState(params, zeros(params), zeros(params),
+                      jnp.zeros((), jnp.int32))
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * base_lr * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gn
+
+
+def adamw_update(state: TrainState, grads, lr, *, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.1, max_norm=1.0):
+    grads, gnorm = clip_by_global_norm(grads, max_norm)
+    count = state.count + 1
+    cf = count.astype(jnp.float32)
+    bc1 = 1 - b1 ** cf
+    bc2 = 1 - b2 ** cf
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        pf = p.astype(jnp.float32)
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * g * g
+        mhat = m2 / bc1
+        vhat = v2 / bc2
+        step = lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * pf)
+        return (pf - step).astype(p.dtype), m2, v2
+
+    out = jax.tree.map(upd, state.params, grads, state.m, state.v)
+    new_p = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return TrainState(new_p, new_m, new_v, count), gnorm

@@ -1,0 +1,3 @@
+from .step import make_serve_step, make_prefill
+
+__all__ = ["make_serve_step", "make_prefill"]

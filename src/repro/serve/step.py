@@ -1,0 +1,25 @@
+"""serve_step: one-token decode with a resident KV/SSM cache (the function
+the decode_* / long_* dry-run cells lower), plus the prefill entry."""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..models import decode_step, prefill
+
+__all__ = ["make_serve_step", "make_prefill"]
+
+
+def make_serve_step(cfg) -> Callable:
+    def serve_step(params, cache, token, pos):
+        """token (B,) int32, pos scalar int32 -> (logits (B,V) f32, cache)."""
+        return decode_step(params, cfg, cache, token, pos)
+    return serve_step
+
+
+def make_prefill(cfg, max_seq=None) -> Callable:
+    def prefill_step(params, batch):
+        return prefill(params, cfg, batch, max_seq=max_seq)
+    return prefill_step

@@ -1,0 +1,56 @@
+"""train_step: loss + grad + AdamW, with microbatched gradient accumulation.
+
+Microbatching (``microbatches > 1``) reshapes the per-step batch to
+(M, B/M, S) and accumulates grads with a lax.scan — bounding activation
+memory (the big-vocab logits especially) by 1/M while XLA overlaps each
+microbatch's FSDP all-gathers with the previous one's compute.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models import loss_fn
+from ..optim import TrainState, adamw_update, cosine_schedule
+
+__all__ = ["make_train_step"]
+
+
+def make_train_step(cfg, *, base_lr=3e-4, warmup=100, total_steps=10_000,
+                    microbatches: int = 1, remat: bool = True) -> Callable:
+    lr_fn = cosine_schedule(base_lr, warmup, total_steps)
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, cfg, batch, remat)
+        return loss, metrics, grads
+
+    def train_step(state: TrainState, batch):
+        if microbatches == 1:
+            loss, metrics, grads = grads_of(state.params, batch)
+        else:
+            def split(x):
+                return x.reshape((microbatches, x.shape[0] // microbatches)
+                                 + x.shape[1:])
+            mb = jax.tree.map(split, batch)
+
+            def acc(carry, micro):
+                g_acc, l_acc = carry
+                loss, _, grads = grads_of(state.params, micro)
+                g_acc = jax.tree.map(jnp.add, g_acc, grads)
+                return (g_acc, l_acc + loss), None
+
+            g0 = jax.tree.map(jnp.zeros_like, state.params)
+            (grads, loss), _ = jax.lax.scan(acc, (g0, jnp.zeros(())), mb)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss / microbatches
+            metrics = {"nll": loss, "aux": jnp.zeros(())}
+        new_state, gnorm = adamw_update(state, grads, lr_fn(state.count))
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm,
+                       lr=lr_fn(state.count))
+        return new_state, metrics
+
+    return train_step

@@ -1,0 +1,11 @@
+import numpy as np
+import pytest
+
+# NOTE: do NOT set XLA_FLAGS / device counts here — smoke tests and benches
+# must see the single real CPU device (the 512-device override is scoped to
+# launch/dryrun.py only, per the multi-pod dry-run contract).
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

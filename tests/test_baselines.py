@@ -1,0 +1,64 @@
+"""Learned-index competitors (RMI / FITing-tree / PGM, Appendix A)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (ExactSum, FitingTree, PGMIndex, RMIIndex,
+                        build_index_1d, cone_segments, query_sum)
+
+
+def _data(n=20_000, seed=2):
+    rng = np.random.default_rng(seed)
+    keys = np.sort(rng.uniform(0, 100, n))
+    meas = rng.uniform(0, 5, n)
+    lq = keys[rng.integers(0, n, 300)]
+    uq = np.maximum(lq, keys[rng.integers(0, n, 300)])
+    ex = ExactSum.build(keys, meas)
+    truth = np.asarray(ex.cf_at(jnp.asarray(uq)) - ex.cf_at(jnp.asarray(lq)))
+    return keys, meas, lq, uq, truth
+
+
+def test_cone_segments_certificate():
+    keys, meas, *_ = _data()
+    cf = np.cumsum(meas)
+    delta = 20.0
+    s, sl, it = cone_segments(keys, cf, delta)
+    idx = np.clip(np.searchsorted(s, keys, side="right") - 1, 0, len(s) - 1)
+    pred = it[idx] + sl[idx] * (keys - s[idx])
+    assert np.max(np.abs(cf - pred)) <= delta + 1e-6
+
+
+@pytest.mark.parametrize("cls", [FitingTree, PGMIndex])
+def test_linear_baselines_guarantee(cls):
+    keys, meas, lq, uq, truth = _data()
+    delta = 20.0
+    idx = cls.build(keys, meas, delta)
+    res = idx.query(jnp.asarray(lq), jnp.asarray(uq))
+    assert np.max(np.abs(np.asarray(res.answer) - truth)) <= 2 * delta + 1e-6
+    res_rel = idx.query(jnp.asarray(lq), jnp.asarray(uq), eps_rel=0.01)
+    pos = truth > 0
+    rel = np.abs(np.asarray(res_rel.answer)[pos] - truth[pos]) / truth[pos]
+    assert rel.max() <= 0.01 + 1e-9
+
+
+def test_rmi_rel_guarantee():
+    keys, meas, lq, uq, truth = _data()
+    idx = RMIIndex.build(keys, meas, n_leaf=256)
+    res = idx.query(jnp.asarray(lq), jnp.asarray(uq), eps_rel=0.01)
+    pos = truth > 0
+    rel = np.abs(np.asarray(res.answer)[pos] - truth[pos]) / truth[pos]
+    assert rel.max() <= 0.01 + 1e-9
+
+
+def test_polyfit_fewer_segments_than_linear():
+    """The paper's Fig. 3 claim: polynomials need fewer segments than linear
+    fits at equal delta."""
+    rng = np.random.default_rng(8)
+    n = 30_000
+    keys = np.sort(rng.uniform(0, 100, n))
+    meas = rng.uniform(0, 5, n)  # smooth CF -> polynomials win
+    delta = 25.0
+    pf = build_index_1d(keys, meas, "sum", deg=2, delta=delta)
+    ft = FitingTree.build(keys, meas, delta)
+    assert pf.h < ft.h
+    assert pf.size_bytes() < ft.size_bytes()

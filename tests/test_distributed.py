@@ -1,0 +1,49 @@
+"""Distribution tests (8 forced host devices, run in subprocesses so the
+main pytest process keeps its single real device)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ENV = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+
+
+def test_distributed_selftest():
+    """shard_map PolyFit (psum/pmax guarantees), int8 ring all-reduce,
+    pipeline parallelism, checkpoint re-sharding — on an 8-device mesh."""
+    r = subprocess.run([sys.executable, "-m", "repro.dist._selftest"],
+                       env=ENV, cwd=ROOT, capture_output=True, text=True,
+                       timeout=900)
+    assert "ALL_DIST_OK" in r.stdout, r.stdout + r.stderr
+
+
+def test_train_failure_recovery(tmp_path):
+    """launch/train.py: injected pod failure -> checkpoint restore ->
+    elastic re-mesh -> deterministic replay to completion."""
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch", "qwen3-1.7b",
+         "--smoke", "--steps", "8", "--fail-at", "5",
+         "--ckpt-dir", str(tmp_path / "ck")],
+        env=ENV, cwd=ROOT, capture_output=True, text=True, timeout=900)
+    out = r.stdout
+    assert "[FAILURE]" in out, out + r.stderr
+    assert "done at step 8" in out, out + r.stderr
+    # deterministic data pipeline: replayed step 4 must match pre-failure
+    lines = [l for l in out.splitlines() if "step 4 " in l]
+    assert len(lines) == 2 and lines[0].split("loss=")[1] == lines[1].split("loss=")[1]
+
+
+def test_train_restart_from_checkpoint(tmp_path):
+    """A fresh process resumes from the latest checkpoint."""
+    args = [sys.executable, "-m", "repro.launch.train", "--arch",
+            "mamba2-130m", "--smoke", "--steps", "6", "--ckpt-every", "2",
+            "--ckpt-dir", str(tmp_path / "ck")]
+    r1 = subprocess.run(args, env=ENV, cwd=ROOT, capture_output=True,
+                        text=True, timeout=900)
+    assert "done at step 6" in r1.stdout, r1.stdout + r1.stderr
+    r2 = subprocess.run(args[:8] + ["--steps", "8"] + args[10:],
+                        env=ENV, cwd=ROOT, capture_output=True, text=True,
+                        timeout=900)
+    assert "restored checkpoint" in r2.stdout, r2.stdout + r2.stderr

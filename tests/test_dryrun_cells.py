@@ -1,0 +1,51 @@
+"""Dry-run integration: a representative subset of (arch x shape x mesh)
+cells must lower + compile in a 512-device subprocess (the full 80-cell
+sweep runs via `python -m repro.launch.dryrun --mesh both`; committed
+results in benchmarks/results/dryrun/)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ENV = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+RESULTS = os.path.join(ROOT, "benchmarks", "results", "dryrun")
+
+
+@pytest.mark.parametrize("arch,shape,mesh", [
+    ("qwen3-1.7b", "train_4k", "single"),
+    ("mamba2-130m", "long_500k", "single"),
+    ("qwen3-moe-30b-a3b", "decode_32k", "multi"),
+])
+def test_dryrun_cell_compiles(arch, shape, mesh):
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--mesh", mesh,
+         "--arch", arch, "--shape", shape],
+        env=ENV, cwd=ROOT, capture_output=True, text=True, timeout=1800)
+    assert ": OK" in r.stdout, r.stdout[-2000:] + r.stderr[-2000:]
+    rec = json.load(open(os.path.join(RESULTS, f"{mesh}_{arch}_{shape}.json")))
+    assert rec["status"] == "ok"
+    assert rec["cost"]["flops_per_device"] > 0
+    assert set(rec["roofline_terms_s"]) == {"compute_s", "memory_s",
+                                            "collective_s"}
+
+
+def test_committed_sweep_is_complete():
+    """Every (10 arch x 4 shape x 2 mesh) cell has a result file, and every
+    non-skipped cell compiled OK."""
+    from repro.configs import ARCHS, SHAPES
+    missing, bad = [], []
+    for mesh in ("single", "multi"):
+        for arch in ARCHS:
+            for shape in SHAPES:
+                p = os.path.join(RESULTS, f"{mesh}_{arch}_{shape}.json")
+                if not os.path.exists(p):
+                    missing.append((mesh, arch, shape))
+                    continue
+                rec = json.load(open(p))
+                if rec["status"] == "error":
+                    bad.append(rec["cell"])
+    assert not missing, f"missing cells: {missing[:5]} (+{len(missing)} total)"
+    assert not bad, f"failed cells: {bad}"

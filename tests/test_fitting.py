@@ -1,0 +1,85 @@
+"""Unit tests for minimax polynomial fitting (paper §4.1 / Eq. 9-10)."""
+import numpy as np
+import pytest
+
+from repro.core import (PolyModel, continuum_error, eval_poly, fit_lstsq,
+                        fit_minimax_lawson, fit_minimax_lp, lawson_batched,
+                        max_error)
+from repro.core.fitting import rescale
+import jax.numpy as jnp
+
+
+def test_lp_matches_chebyshev_closed_form():
+    """Best deg-2 minimax fit of x^3 on [-1,1] has error exactly 1/4
+    (Chebyshev equioscillation: x^3 - (3/4)x = T_3(x)/4)."""
+    xs = np.cos(np.pi * np.arange(2000) / 1999)  # dense grid incl endpoints
+    xs = np.sort(xs)
+    F = xs**3
+    m = fit_minimax_lp(xs, F, deg=2)
+    assert abs(m.err - 0.25) < 1e-6
+    # the optimal quadratic approximation of x^3 is the line (3/4)x
+    assert np.allclose(m.coeffs, [0, 0.75, 0], atol=1e-5)
+
+
+def test_lp_interpolates_small_sets():
+    xs = np.array([0.0, 1.0, 2.0])
+    F = np.array([5.0, -1.0, 3.0])
+    m = fit_minimax_lp(xs, F, deg=2)
+    assert m.err < 1e-9
+    assert np.allclose(m(xs), F, atol=1e-9)
+
+
+def test_lawson_converges_to_lp():
+    rng = np.random.default_rng(3)
+    xs = np.sort(rng.uniform(0, 10, 200))
+    F = np.sin(xs) * 50 + xs**2
+    for deg in (1, 2, 3):
+        m_lp = fit_minimax_lp(xs, F, deg)
+        m_la = fit_minimax_lawson(xs, F, deg, iters=200)
+        # Lawson upper-bounds the optimum and converges close to it
+        assert m_la.err >= m_lp.err - 1e-9
+        assert m_la.err <= m_lp.err * 1.05 + 1e-9
+
+
+def test_lstsq_upper_bounds_minimax():
+    rng = np.random.default_rng(4)
+    xs = np.sort(rng.uniform(0, 1, 100))
+    F = rng.normal(0, 1, 100)
+    for deg in (1, 2, 3):
+        assert fit_lstsq(xs, F, deg).err >= fit_minimax_lp(xs, F, deg).err - 1e-12
+
+
+def test_lawson_batched_matches_single():
+    rng = np.random.default_rng(5)
+    B, L, deg = 8, 64, 2
+    u = np.sort(rng.uniform(-1, 1, (B, L)), axis=1)
+    F = np.cumsum(rng.uniform(0, 1, (B, L)), axis=1)
+    valid = np.ones((B, L))
+    coeffs, errs = lawson_batched(jnp.asarray(u), jnp.asarray(F),
+                                  jnp.asarray(valid), deg, iters=80)
+    coeffs, errs = np.asarray(coeffs), np.asarray(errs)
+    for b in range(B):
+        resid = np.abs(F[b] - eval_poly(coeffs[b], u[b]))
+        assert abs(errs[b] - resid.max()) < 1e-8
+
+
+def test_continuum_error_catches_bulge():
+    """A parabola interpolating 3 points can exceed the key-error bound
+    between keys; continuum_error must see it."""
+    # keys clustered at the left, one far right: interpolation bulges
+    keys = np.array([0.0, 0.01, 1.0])
+    vals = np.array([0.0, 1.0, 0.0])
+    m = fit_minimax_lp(keys, vals, deg=2)
+    assert m.err < 1e-8  # interpolates exactly at the keys
+    ce = continuum_error(m, keys, vals)
+    assert ce > 5.0  # the bulge between keys is large
+
+
+def test_rescale_conditioning():
+    # fits on raw vs scaled keys: scaled must stay accurate at deg 4
+    rng = np.random.default_rng(6)
+    keys = np.sort(rng.uniform(1e9, 1e9 + 1000, 300))  # huge offset
+    F = np.cumsum(rng.uniform(0, 1, 300))
+    m = fit_minimax_lp(keys, F, deg=4)
+    assert max_error(m, keys, F) <= m.err + 1e-6
+    assert m.err < np.ptp(F)  # sane fit despite raw keys ~1e9

@@ -1,0 +1,74 @@
+"""Two-key extension (§6): dominance counting, merge-sort tree, quadtree."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (MergeSortTree, build_index_2d, count_dominated,
+                        dominance_rank, query_count_2d)
+from repro.data import make_queries_2d, osm_points
+
+
+def test_dominance_rank_brute(rng):
+    n = 800
+    px, py = rng.uniform(0, 10, n), rng.uniform(0, 10, n)
+    got = dominance_rank(px, py)
+    want = np.array([((px <= a) & (py <= b)).sum() for a, b in zip(px, py)])
+    assert (got == want).all()
+
+
+def test_merge_sort_tree_rect(rng):
+    n = 2000
+    px, py = rng.normal(0, 3, n), rng.normal(0, 3, n)
+    t = MergeSortTree.build(px, py)
+    x0 = rng.uniform(-5, 5, 100); x1 = x0 + rng.uniform(0, 4, 100)
+    y0 = rng.uniform(-5, 5, 100); y1 = y0 + rng.uniform(0, 4, 100)
+    got = np.asarray(t.query(jnp.asarray(x0), jnp.asarray(x1),
+                             jnp.asarray(y0), jnp.asarray(y1)))
+    want = np.array([((px >= a) & (px <= b) & (py >= c) & (py <= d)).sum()
+                     for a, b, c, d in zip(x0, x1, y0, y1)])
+    assert (got == want).all()
+
+
+@pytest.mark.parametrize("deg", [2, 3])
+def test_quadtree_count_guarantee(deg):
+    """Lemma 6.3: delta = eps_abs/4 ==> |A - R| <= eps_abs (empirically, at
+    rectangle corners drawn near data — the paper's workload)."""
+    px, py = osm_points(20_000, seed=5)
+    eps_abs = 200.0
+    idx = build_index_2d(px, py, deg=deg, delta=eps_abs / 4)
+    x0, x1, y0, y1 = make_queries_2d(px, py, 300, seed=9)
+    res = query_count_2d(idx, x0, x1, y0, y1)
+    t = idx.exact
+    truth = np.asarray(
+        t.cf(jnp.asarray(x1), jnp.asarray(y1)) - t.cf(jnp.asarray(x0), jnp.asarray(y1))
+        - t.cf(jnp.asarray(x1), jnp.asarray(y0)) + t.cf(jnp.asarray(x0), jnp.asarray(y0)))
+    err = np.abs(np.asarray(res.answer) - truth)
+    assert err.max() <= eps_abs + 1e-6
+
+
+def test_quadtree_rel_guarantee():
+    px, py = osm_points(20_000, seed=6)
+    idx = build_index_2d(px, py, deg=3, delta=25.0)
+    x0, x1, y0, y1 = make_queries_2d(px, py, 300, seed=11, frac=0.2)
+    eps_rel = 0.05
+    res = query_count_2d(idx, x0, x1, y0, y1, eps_rel=eps_rel)
+    t = idx.exact
+    truth = np.asarray(
+        t.cf(jnp.asarray(x1), jnp.asarray(y1)) - t.cf(jnp.asarray(x0), jnp.asarray(y1))
+        - t.cf(jnp.asarray(x1), jnp.asarray(y0)) + t.cf(jnp.asarray(x0), jnp.asarray(y0)))
+    pos = truth > 0
+    rel = np.abs(np.asarray(res.answer)[pos] - truth[pos]) / truth[pos]
+    assert rel.max() <= eps_rel + 1e-9
+
+
+def test_quadtree_lookup_total():
+    """Every point in the root bounding box lands in exactly one leaf."""
+    px, py = osm_points(5_000, seed=7)
+    idx = build_index_2d(px, py, deg=2, delta=100.0)
+    rng = np.random.default_rng(0)
+    qx = rng.uniform(px.min(), px.max(), 2000)
+    qy = rng.uniform(py.min(), py.max(), 2000)
+    leaf = np.asarray(idx.locate(jnp.asarray(qx), jnp.asarray(qy)))
+    assert (leaf >= 0).all() and (leaf < idx.n_leaves).all()
+    b = np.asarray(idx.bounds)[np.asarray(idx.leaf_nodes)[leaf]]
+    assert ((qx >= b[:, 0]) & (qx <= b[:, 1]) & (qy >= b[:, 2]) & (qy <= b[:, 3])).all()

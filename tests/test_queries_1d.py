@@ -1,0 +1,133 @@
+"""Guarantee invariants for 1-D queries (Lemmas 5.1-5.4) — the paper's core
+correctness claims, including hypothesis property tests."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ExactMax, ExactSum, build_index_1d, query_max,
+                        query_sum)
+
+
+def _queries(keys, n_q, seed):
+    rng = np.random.default_rng(seed)
+    a = keys[rng.integers(0, len(keys), n_q)]
+    b = keys[rng.integers(0, len(keys), n_q)]
+    return np.minimum(a, b), np.maximum(a, b)
+
+
+def _profiles(n, seed):
+    rng = np.random.default_rng(seed)
+    keys = np.sort(rng.uniform(0, 500, n))
+    return keys, {
+        "uniform": rng.uniform(0, 10, n),
+        "walk": np.abs(np.cumsum(rng.normal(0, 3, n))) + 1,
+        "heavy": rng.pareto(1.5, n) + 0.1,
+    }
+
+
+@pytest.mark.parametrize("profile", ["uniform", "walk", "heavy"])
+@pytest.mark.parametrize("deg", [1, 2, 3])
+def test_sum_abs_guarantee(profile, deg):
+    """Lemma 5.1: delta = eps_abs/2 ==> |A - R| <= eps_abs."""
+    keys, profs = _profiles(4000, 11)
+    meas = profs[profile]
+    eps = 40.0
+    idx = build_index_1d(keys, meas, "sum", deg=deg, delta=eps / 2)
+    lq, uq = _queries(keys, 400, 13)
+    res = query_sum(idx, lq, uq)
+    ex = ExactSum.build(keys, meas)
+    truth = np.asarray(ex.cf_at(jnp.asarray(uq)) - ex.cf_at(jnp.asarray(lq)))
+    assert np.max(np.abs(np.asarray(res.answer) - truth)) <= eps + 1e-6
+
+
+@pytest.mark.parametrize("deg", [2, 3])
+def test_sum_rel_guarantee(deg):
+    """Lemma 5.2 + refinement: final answers satisfy eps_rel."""
+    keys, profs = _profiles(4000, 17)
+    meas = profs["uniform"]
+    idx = build_index_1d(keys, meas, "sum", deg=deg, delta=25.0)
+    lq, uq = _queries(keys, 400, 19)
+    eps_rel = 0.01
+    res = query_sum(idx, lq, uq, eps_rel=eps_rel)
+    ex = ExactSum.build(keys, meas)
+    truth = np.asarray(ex.cf_at(jnp.asarray(uq)) - ex.cf_at(jnp.asarray(lq)))
+    pos = truth > 0
+    rel = np.abs(np.asarray(res.answer)[pos] - truth[pos]) / truth[pos]
+    assert rel.max() <= eps_rel + 1e-9
+    # refinement must not fire for every query (the index is useful)
+    assert np.asarray(res.refined).mean() < 1.0
+
+
+@pytest.mark.parametrize("agg", ["max", "min"])
+@pytest.mark.parametrize("profile", ["uniform", "walk"])
+@pytest.mark.parametrize("deg", [2, 3])
+def test_extremal_abs_guarantee(agg, profile, deg):
+    """Lemma 5.3: delta = eps_abs ==> |A - R| <= eps_abs (MAX & MIN)."""
+    keys, profs = _profiles(3000, 23)
+    meas = profs[profile] * 100
+    eps = 60.0
+    idx = build_index_1d(keys, meas, agg, deg=deg, delta=eps)
+    lq, uq = _queries(keys, 300, 29)
+    res = query_max(idx, lq, uq)
+    if agg == "max":
+        truth = np.asarray(ExactMax.build(keys, meas).query(jnp.asarray(lq), jnp.asarray(uq)))
+    else:
+        truth = -np.asarray(ExactMax.build(keys, -meas).query(jnp.asarray(lq), jnp.asarray(uq)))
+    assert np.max(np.abs(np.asarray(res.answer) - truth)) <= eps + 1e-6
+
+
+def test_max_rel_guarantee():
+    """Lemma 5.4 + refinement path."""
+    keys, profs = _profiles(3000, 31)
+    meas = profs["walk"] * 50
+    idx = build_index_1d(keys, meas, "max", deg=3, delta=30.0)
+    lq, uq = _queries(keys, 300, 37)
+    eps_rel = 0.05
+    res = query_max(idx, lq, uq, eps_rel=eps_rel)
+    truth = np.asarray(ExactMax.build(keys, meas).query(jnp.asarray(lq), jnp.asarray(uq)))
+    rel = np.abs(np.asarray(res.answer) - truth) / np.abs(truth)
+    assert rel.max() <= eps_rel + 1e-9
+
+
+def test_count_query():
+    keys, _ = _profiles(3000, 41)
+    idx = build_index_1d(keys, None, "count", deg=2, delta=20.0)
+    lq, uq = _queries(keys, 200, 43)
+    res = query_sum(idx, lq, uq)
+    truth = np.array([((keys > a) & (keys <= b)).sum() for a, b in zip(lq, uq)])
+    assert np.max(np.abs(np.asarray(res.answer) - truth)) <= 40.0 + 1e-6
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), deg=st.integers(1, 3),
+       delta=st.floats(5.0, 200.0))
+def test_property_sum_guarantee(seed, deg, delta):
+    """Property: for arbitrary datasets/deltas the Q_abs bound always holds."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(50, 600))
+    keys = np.sort(rng.uniform(0, 100, n))
+    keys = np.unique(keys)
+    meas = rng.uniform(0, 20, len(keys))
+    idx = build_index_1d(keys, meas, "sum", deg=deg, delta=delta,
+                         keep_exact=True)
+    lq, uq = _queries(keys, 64, seed + 1)
+    res = query_sum(idx, lq, uq)
+    ex = idx.exact_sum
+    truth = np.asarray(ex.cf_at(jnp.asarray(uq)) - ex.cf_at(jnp.asarray(lq)))
+    assert np.max(np.abs(np.asarray(res.answer) - truth)) <= 2 * delta + 1e-6
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), deg=st.integers(2, 3),
+       delta=st.floats(10.0, 300.0))
+def test_property_max_guarantee(seed, deg, delta):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(50, 400))
+    keys = np.unique(np.sort(rng.uniform(0, 100, n)))
+    meas = rng.uniform(0, 1000, len(keys))
+    idx = build_index_1d(keys, meas, "max", deg=deg, delta=delta)
+    lq, uq = _queries(keys, 64, seed + 2)
+    res = query_max(idx, lq, uq)
+    truth = np.asarray(ExactMax.build(keys, meas).query(jnp.asarray(lq), jnp.asarray(uq)))
+    assert np.max(np.abs(np.asarray(res.answer) - truth)) <= delta + 1e-6

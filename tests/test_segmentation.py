@@ -1,0 +1,66 @@
+"""Segmentation tests: GS optimality (Thm 4.3), Lemma 4.2, parallel build."""
+import numpy as np
+import pytest
+
+from repro.core import (dp_segmentation, fit_minimax_lp, greedy_segmentation,
+                        parallel_segmentation)
+
+
+def _mk(n, seed=0):
+    rng = np.random.default_rng(seed)
+    keys = np.sort(rng.uniform(0, 100, n))
+    F = np.cumsum(rng.uniform(0, 5, n))
+    return keys, F
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("deg", [1, 2])
+def test_gs_matches_dp_optimum(seed, deg):
+    """Theorem 4.3: GS produces the optimal number of segments."""
+    keys, F = _mk(120, seed)
+    delta = 3.0
+    gs = greedy_segmentation(keys, F, deg, delta)
+    dp = dp_segmentation(keys, F, deg, delta)
+    assert len(gs) == len(dp)
+    assert all(m.err <= delta + 1e-9 for m in gs)
+
+
+def test_gs_exponential_equals_literal():
+    keys, F = _mk(200, 3)
+    a = greedy_segmentation(keys, F, 2, 5.0, use_exponential_search=True)
+    b = greedy_segmentation(keys, F, 2, 5.0, use_exponential_search=False)
+    assert len(a) == len(b)
+    assert np.allclose([m.lo for m in a], [m.lo for m in b])
+
+
+def test_lemma_42_monotonicity():
+    """E(I_l) <= E(I_u) whenever the key set of I_l is contained in I_u."""
+    keys, F = _mk(80, 4)
+    for deg in (1, 2, 3):
+        errs = [fit_minimax_lp(keys[:j], F[:j], deg).err for j in range(deg + 2, 80, 7)]
+        assert all(errs[i] <= errs[i + 1] + 1e-9 for i in range(len(errs) - 1))
+
+
+def test_segments_tile_domain():
+    keys, F = _mk(300, 5)
+    segs = greedy_segmentation(keys, F, 2, 4.0)
+    assert segs[0].lo == keys[0]
+    assert segs[-1].hi == keys[-1]
+    for a, b in zip(segs, segs[1:]):
+        ia = np.searchsorted(keys, a.hi, side="right")
+        assert keys[ia] == b.lo  # next segment starts at the next key
+
+
+def test_parallel_covers_and_certifies():
+    keys, F = _mk(500, 6)
+    delta = 4.0
+    segs = parallel_segmentation(keys, F, 2, delta, chunks=8)
+    assert all(m.err <= delta + 1e-9 for m in segs)
+    # coverage: every key falls inside some segment
+    covered = np.zeros(len(keys), bool)
+    for m in segs:
+        covered |= (keys >= m.lo) & (keys <= m.hi)
+    assert covered.all()
+    # near-optimal: at most chunks-1 extra segments vs sequential GS
+    gs = greedy_segmentation(keys, F, 2, delta)
+    assert len(segs) <= len(gs) + 8
