@@ -1,16 +1,26 @@
-"""Kernel-level benchmark (beyond paper): Pallas (interpret) vs XLA ref,
-plus the analytic TPU roofline of the fused range_sum kernel.
+"""Kernel- and engine-level benchmark (beyond paper): Pallas (interpret) vs
+XLA ref at the raw-kernel layer, the engine backend sweep (xla vs
+pallas-interpret vs ref, fused Q_rel refinement included), and the analytic
+TPU roofline of the fused range_sum kernel.
 
 Arithmetic intensity of range_sum per query block against H segments:
 compare-all + one-hot matmul reads the (H, deg+3) table once per query
 block and performs ~2*BQ*H*(deg+5) FLOPs on it, so intensity grows with BQ
 — the kernel is compute-bound on the MXU for BQ >= ~64 at f32.
+
+The engine sweep appends its per-query timings to ``BENCH_engine.json`` at
+the repo root so the perf trajectory is recorded across PRs.
 """
 from __future__ import annotations
 
 import functools
+import json
+import pathlib
+import platform
+import time
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 from .common import dataset, row, time_fn
@@ -18,10 +28,26 @@ from .common import dataset, row, time_fn
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
 
+_BENCH_JSON = pathlib.Path(__file__).resolve().parents[1] / "BENCH_engine.json"
 
-def run(n=200_000, nq=4096):
-    from repro.core import build_index_1d
-    from repro.data import make_queries_1d
+
+def _emit_engine_json(results, meta):
+    """Append one timestamped record per run (the perf trajectory file)."""
+    history = []
+    if _BENCH_JSON.exists():
+        try:
+            history = json.loads(_BENCH_JSON.read_text())
+        except (json.JSONDecodeError, OSError):
+            history = []
+    history.append({"meta": meta, "results": results})
+    _BENCH_JSON.write_text(json.dumps(history, indent=2) + "\n")
+    print(f"[bench_kernels] wrote {_BENCH_JSON} ({len(history)} records)")
+
+
+def run(n=200_000, nq=4096, n2=40_000, nq2=1024, eps_rel=0.01):
+    from repro.core import build_index_1d, build_index_2d
+    from repro.data import make_queries_1d, make_queries_2d
+    from repro.engine import BACKENDS, Engine, build_plan, build_plan_2d
     from repro.kernels import from_index, range_max, range_sum
 
     rows = []
@@ -43,6 +69,41 @@ def run(n=200_000, nq=4096):
         t, _ = time_fn(f, l2, u2)
         rows.append(row(f"kernels.range_max.{backend}", t / nq * 1e6,
                         f"Hpad={tblm.seg_lo.shape[0]}"))
+
+    # ---------------- engine backend sweep (fused Q_rel included) --------
+    plan = build_plan(pf)
+    planm = build_plan(pfm)
+    px, py = dataset("osm", n2)
+    pf2 = build_index_2d(px, py, deg=3, delta=50.0)
+    plan2 = build_plan_2d(pf2)
+    q2 = tuple(map(jnp.asarray, make_queries_2d(px, py, nq2)))
+    engine_results = []
+
+    def record(name, t, per, derived=""):
+        rows.append(row(name, t / per * 1e6, derived))
+        engine_results.append({"name": name, "us_per_query": t / per * 1e6,
+                               "derived": derived})
+
+    for b in BACKENDS:
+        eng = Engine(backend=b)
+        t, _ = time_fn(lambda l, u: eng.sum(plan, l, u), lq, uq)
+        record(f"engine.sum.{b}.Qabs", t, nq, f"Hpad={plan.seg_lo.shape[0]}")
+        t, _ = time_fn(lambda l, u: eng.sum(plan, l, u, eps_rel=eps_rel),
+                       lq, uq)
+        record(f"engine.sum.{b}.Qrel", t, nq)
+        t, _ = time_fn(lambda l, u: eng.extremum(planm, l, u), l2, u2)
+        record(f"engine.max.{b}.Qabs", t, nq,
+               f"Hpad={planm.seg_lo.shape[0]}")
+        t, _ = time_fn(lambda a, c, d, e: eng.count2d(plan2, a, c, d, e), *q2)
+        record(f"engine.count2d.{b}.Qabs", t, nq2,
+               f"Lpad={plan2.leaf_mx0.shape[0]}")
+
+    _emit_engine_json(engine_results, {
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "n": n, "nq": nq, "n2": n2, "nq2": nq2,
+        "device": jax.devices()[0].platform,
+        "machine": platform.machine(),
+    })
 
     # analytic roofline of the fused range_sum kernel on TPU v5e (f32)
     BQ, deg = 256, 2

@@ -2,7 +2,10 @@
 guarantees, for COUNT (1 key), MAX (1 key), COUNT (2 keys), under Q_abs and
 Q_rel.
 
-Methods: PolyFit (XLA 'ref' backend + Pallas interpret backend), exact
+PolyFit rows all route through the unified engine (``repro.engine.Engine``)
+— one fused jitted executable per (aggregate, backend, batch-bucket), with
+the Q_rel refinement inside the executable — sweeping the three backends
+(XLA reference, Pallas interpret, jnp kernel-oracle).  Baselines: exact
 (prefix-CF / sparse-table = the aR-tree stand-ins), RMI, FITing-tree, PGM.
 Times are per-query (µs) over batches of 1000 — batched device evaluation is
 the TPU-native execution model (DESIGN.md §6), and this container measures
@@ -10,22 +13,24 @@ on CPU; relative ordering is the reproducible claim.
 """
 from __future__ import annotations
 
-import functools
-
 import numpy as np
 import jax
 import jax.numpy as jnp
 
 from .common import dataset, row, time_fn
 
+_ENGINE_BACKENDS = ("xla", "ref", "pallas")
+_BACKEND_TAG = {"xla": "polyfit", "ref": "polyfit_kernel_ref",
+                "pallas": "polyfit_pallas_interp"}
+
 
 def run(n1=200_000, n2=100_000, nq=1000, eps_abs=100.0, eps_rel=0.01):
-    from repro.core import (ExactMax, ExactSum, FitingTree, PGMIndex,
-                            RMIIndex, build_index_1d, build_index_2d,
-                            query_max, query_sum, query_count_2d)
+    from repro.core import (FitingTree, PGMIndex, RMIIndex, build_index_1d,
+                            build_index_2d)
     from repro.data import make_queries_1d, make_queries_2d
-    from repro.kernels import from_index, range_max, range_sum
+    from repro.engine import Engine, build_plan, build_plan_2d
 
+    engines = {b: Engine(backend=b) for b in _ENGINE_BACKENDS}
     rows = []
     # ---------------- COUNT, 1 key (TWEET) ------------------------------
     keys, meas = dataset("tweet", n1)
@@ -33,20 +38,16 @@ def run(n1=200_000, n2=100_000, nq=1000, eps_abs=100.0, eps_rel=0.01):
     lqj, uqj = jnp.asarray(lq), jnp.asarray(uq)
 
     pf = build_index_1d(keys, None, "count", deg=2, delta=eps_abs / 2)
-    tbl = from_index(pf, dtype=jnp.float64)
+    plan = build_plan(pf)
     ft = FitingTree.build(keys, np.ones_like(keys), eps_abs / 2)
     pgm = PGMIndex.build(keys, np.ones_like(keys), eps_abs / 2)
     rmi = RMIIndex.build(keys, np.ones_like(keys))
     ex = pf.exact_sum
 
-    qsum = jax.jit(lambda l, u: query_sum(pf, l, u).answer)
-    t, _ = time_fn(qsum, lqj, uqj)
-    rows.append(row("table5.count1.Qabs.polyfit", t / nq * 1e6,
-                    f"h={pf.h};size={pf.size_bytes()}B"))
-    t, _ = time_fn(functools.partial(range_sum, tbl, backend="ref"), lqj, uqj)
-    rows.append(row("table5.count1.Qabs.polyfit_kernel_ref", t / nq * 1e6, ""))
-    t, _ = time_fn(functools.partial(range_sum, tbl, backend="pallas"), lqj, uqj)
-    rows.append(row("table5.count1.Qabs.polyfit_pallas_interp", t / nq * 1e6, ""))
+    for b in _ENGINE_BACKENDS:
+        t, _ = time_fn(lambda l, u, e=engines[b]: e.sum(plan, l, u), lqj, uqj)
+        rows.append(row(f"table5.count1.Qabs.{_BACKEND_TAG[b]}", t / nq * 1e6,
+                        f"h={pf.h};size={plan.size_bytes()}B"))
     exact_fn = jax.jit(lambda l, u: ex.cf_at(u) - ex.cf_at(l))
     t, _ = time_fn(exact_fn, lqj, uqj)
     rows.append(row("table5.count1.Qabs.exact_prefix(aR)", t / nq * 1e6, ""))
@@ -59,9 +60,9 @@ def run(n1=200_000, n2=100_000, nq=1000, eps_abs=100.0, eps_rel=0.01):
     t, _ = time_fn(f, lqj, uqj)
     rows.append(row("table5.count1.Qabs.rmi", t / nq * 1e6,
                     f"size={rmi.size_bytes()}B"))
-    # Q_rel variants (refinement path included)
-    qsum_r = jax.jit(lambda l, u: query_sum(pf, l, u, eps_rel=eps_rel).answer)
-    t, _ = time_fn(qsum_r, lqj, uqj)
+    # Q_rel variants (fused refinement path included)
+    t, _ = time_fn(lambda l, u: engines["xla"].sum(plan, l, u,
+                                                   eps_rel=eps_rel), lqj, uqj)
     rows.append(row("table5.count1.Qrel.polyfit", t / nq * 1e6, ""))
     for nm, idx in (("fiting", ft), ("pgm", pgm), ("rmi", rmi)):
         f = jax.jit(lambda l, u, i=idx: i.query(l, u, eps_rel=eps_rel).answer)
@@ -73,21 +74,18 @@ def run(n1=200_000, n2=100_000, nq=1000, eps_abs=100.0, eps_rel=0.01):
     lq2, uq2 = make_queries_1d(tkeys, nq)
     l2, u2 = jnp.asarray(lq2), jnp.asarray(uq2)
     pfm = build_index_1d(tkeys, vals, "max", deg=3, delta=eps_abs)
-    tblm = from_index(pfm, dtype=jnp.float64)
+    planm = build_plan(pfm)
     exm = pfm.exact_max
-    qmax = jax.jit(lambda l, u: query_max(pfm, l, u).answer)
-    t, _ = time_fn(qmax, l2, u2)
-    rows.append(row("table5.max1.Qabs.polyfit", t / nq * 1e6,
-                    f"h={pfm.h};size={pfm.size_bytes()}B"))
-    t, _ = time_fn(functools.partial(range_max, tblm, backend="ref"), l2, u2)
-    rows.append(row("table5.max1.Qabs.polyfit_kernel_ref", t / nq * 1e6, ""))
-    t, _ = time_fn(functools.partial(range_max, tblm, backend="pallas"), l2, u2)
-    rows.append(row("table5.max1.Qabs.polyfit_pallas_interp", t / nq * 1e6, ""))
+    for b in _ENGINE_BACKENDS:
+        t, _ = time_fn(lambda l, u, e=engines[b]: e.extremum(planm, l, u),
+                       l2, u2)
+        rows.append(row(f"table5.max1.Qabs.{_BACKEND_TAG[b]}", t / nq * 1e6,
+                        f"h={pfm.h};size={planm.size_bytes()}B"))
     exf = jax.jit(exm.query)
     t, _ = time_fn(exf, l2, u2)
     rows.append(row("table5.max1.Qabs.exact_sparse_table(aR)", t / nq * 1e6, ""))
-    qmax_r = jax.jit(lambda l, u: query_max(pfm, l, u, eps_rel=eps_rel).answer)
-    t, _ = time_fn(qmax_r, l2, u2)
+    t, _ = time_fn(lambda l, u: engines["xla"].extremum(planm, l, u,
+                                                        eps_rel=eps_rel), l2, u2)
     rows.append(row("table5.max1.Qrel.polyfit", t / nq * 1e6, ""))
 
     # ---------------- COUNT, 2 keys (OSM) -------------------------------
@@ -95,18 +93,19 @@ def run(n1=200_000, n2=100_000, nq=1000, eps_abs=100.0, eps_rel=0.01):
     x0, x1, y0, y1 = make_queries_2d(px, py, nq)
     xs = tuple(map(jnp.asarray, (x0, x1, y0, y1)))
     pf2 = build_index_2d(px, py, deg=3, delta=200.0 / 4)
-    q2 = jax.jit(lambda a, b, c, d: query_count_2d(pf2, a, b, c, d).answer)
-    t, _ = time_fn(q2, *xs)
-    rows.append(row("table5.count2.Qabs.polyfit", t / nq * 1e6,
-                    f"leaves={pf2.n_leaves};size={pf2.size_bytes()}B"))
+    plan2 = build_plan_2d(pf2)
+    for b in _ENGINE_BACKENDS:
+        t, _ = time_fn(lambda a, c, d, e, g=engines[b]:
+                       g.count2d(plan2, a, c, d, e), *xs)
+        rows.append(row(f"table5.count2.Qabs.{_BACKEND_TAG[b]}", t / nq * 1e6,
+                        f"leaves={pf2.n_leaves};size={plan2.size_bytes()}B"))
     ex2 = pf2.exact
     exf2 = jax.jit(lambda a, b, c, d: (ex2.cf(b, d) - ex2.cf(a, d)
                                        - ex2.cf(b, c) + ex2.cf(a, c)))
     t, _ = time_fn(exf2, *xs)
     rows.append(row("table5.count2.Qabs.exact_mergesort_tree(aR)", t / nq * 1e6, ""))
-    q2r = jax.jit(lambda a, b, c, d: query_count_2d(pf2, a, b, c, d,
-                                                    eps_rel=eps_rel).answer)
-    t, _ = time_fn(q2r, *xs)
+    t, _ = time_fn(lambda a, b, c, d: engines["xla"].count2d(
+        plan2, a, b, c, d, eps_rel=eps_rel), *xs)
     rows.append(row("table5.count2.Qrel.polyfit", t / nq * 1e6, ""))
     return rows
 

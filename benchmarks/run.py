@@ -1,5 +1,5 @@
 """Benchmark entry point: one function per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV (see DESIGN.md §7 for the mapping).
+Prints ``name,us_per_call,derived`` CSV (see DESIGN.md §8 for the mapping).
 
     PYTHONPATH=src python -m benchmarks.run [--quick]
 """

@@ -1,84 +1,43 @@
 """End-to-end serving driver (the paper's deployment scenario): an analytics
 service answering batched approximate range-aggregate requests against
-PolyFit indexes, with per-request-type guarantee handling, refinement
-routing, and latency accounting.
+PolyFit indexes through the unified engine — per-request-type jitted
+executables, backend selection (XLA reference vs Pallas kernels), fused
+Q_rel refinement, and latency accounting.
 
     PYTHONPATH=src python examples/serve_aggregates.py --batches 200
+    PYTHONPATH=src python examples/serve_aggregates.py --backend pallas
 """
 import argparse
 import time
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 
-from repro.core import build_index_1d, build_index_2d, query_count_2d, \
-    query_max, query_sum
-from repro.data import hki_series, osm_points, tweet_latitudes
-
-
-class AggregateServer:
-    """Holds one index per (dataset, aggregate); serves batched requests."""
-
-    def __init__(self, eps_abs=100.0, eps_rel=0.01):
-        self.eps_rel = eps_rel
-        print("[server] building indexes ...")
-        t0 = time.time()
-        lat = tweet_latitudes(150_000)
-        self.count_idx = build_index_1d(lat, None, "count", deg=2,
-                                        delta=eps_abs / 2)
-        self.count_domain = (lat.min(), lat.max())
-        ts, vals = hki_series(150_000)
-        self.max_idx = build_index_1d(ts, vals, "max", deg=3, delta=eps_abs)
-        self.max_domain = (ts.min(), ts.max())
-        px, py = osm_points(60_000)
-        self.idx2d = build_index_2d(px, py, deg=3, delta=eps_abs / 4)
-        self.dom2d = (px.min(), px.max(), py.min(), py.max())
-        print(f"[server] ready in {time.time() - t0:.1f}s — sizes: "
-              f"count={self.count_idx.size_bytes()}B "
-              f"max={self.max_idx.size_bytes()}B "
-              f"2d={self.idx2d.size_bytes()}B")
-        # compile the three request kernels once
-        self._count = jax.jit(lambda l, u: query_sum(
-            self.count_idx, l, u, eps_rel=self.eps_rel))
-        self._max = jax.jit(lambda l, u: query_max(
-            self.max_idx, l, u, eps_rel=self.eps_rel))
-        self._count2d = jax.jit(lambda a, b, c, d: query_count_2d(
-            self.idx2d, a, b, c, d, eps_rel=self.eps_rel))
-
-    def serve(self, kind, *args):
-        fn = {"count": self._count, "max": self._max,
-              "count2d": self._count2d}[kind]
-        res = fn(*args)
-        jax.block_until_ready(res.answer)
-        return res
+from repro.serve import AggregateService
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--batches", type=int, default=100)
     ap.add_argument("--batch-size", type=int, default=1024)
+    ap.add_argument("--backend", choices=("xla", "pallas", "ref"),
+                    default="xla")
     args = ap.parse_args()
 
-    srv = AggregateServer()
+    srv = AggregateService(backend=args.backend)
     rng = np.random.default_rng(0)
-    lat = [], []
     stats = {k: [] for k in ("count", "max", "count2d")}
     refined = {k: 0 for k in stats}
     total = {k: 0 for k in stats}
     for b in range(args.batches):
         kind = ("count", "max", "count2d")[b % 3]
         n = args.batch_size
-        if kind == "count":
-            lo, hi = srv.count_domain
-            a = rng.uniform(lo, hi, n); c = rng.uniform(lo, hi, n)
-            req = (jnp.asarray(np.minimum(a, c)), jnp.asarray(np.maximum(a, c)))
-        elif kind == "max":
-            lo, hi = srv.max_domain
+        if kind in ("count", "max"):
+            lo, hi = srv.domains[kind]
             a = rng.uniform(lo, hi, n); c = rng.uniform(lo, hi, n)
             req = (jnp.asarray(np.minimum(a, c)), jnp.asarray(np.maximum(a, c)))
         else:
-            x0, x1, y0, y1 = srv.dom2d
+            x0, x1, y0, y1 = srv.domains[kind]
             ax = rng.uniform(x0, x1, n); bx = ax + rng.uniform(0.1, 5, n)
             ay = rng.uniform(y0, y1, n); by = ay + rng.uniform(0.1, 5, n)
             req = tuple(map(jnp.asarray, (ax, bx, ay, by)))
@@ -89,7 +48,8 @@ def main():
         refined[kind] += int(np.asarray(res.refined).sum())
         total[kind] += n
 
-    print(f"\n[server] served {args.batches} batches x {args.batch_size} requests")
+    print(f"\n[server] served {args.batches} batches x {args.batch_size} "
+          f"requests (backend={args.backend})")
     for k, ts in stats.items():
         if not ts:
             continue

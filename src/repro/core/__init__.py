@@ -14,12 +14,15 @@ from .fitting import (  # noqa: E402
     PolyModel, continuum_error, eval_poly, eval_poly_batch, fit_lstsq,
     fit_minimax_lawson, fit_minimax_lp, lawson_batched, max_error, rescale,
 )
+from .poly import (clipped_poly_max, eval_segments, horner, locate,  # noqa: E402
+                   scale_unit)
 from .segmentation import (FastAcceptFitter, dp_segmentation,  # noqa: E402
                            greedy_segmentation, parallel_segmentation)
 from .index import PolyFitIndex1D, build_index_1d  # noqa: E402
 from .index2d import (MergeSortTree, PolyFitIndex2D, build_index_2d,  # noqa: E402
                       count_dominated, dominance_rank, query_count_2d)
-from .queries import QueryResult, poly_max_on_interval, query_max, query_sum  # noqa: E402
+from .queries import (QueryResult, max_eval_segments,  # noqa: E402
+                      poly_max_on_interval, query_max, query_sum)
 from .baselines import FitingTree, PGMIndex, RMIIndex, cone_segments  # noqa: E402
 
 __all__ = [
@@ -30,6 +33,8 @@ __all__ = [
     "MergeSortTree", "PolyFitIndex2D", "build_index_2d", "count_dominated",
     "dominance_rank", "query_count_2d",
     "ExactMax", "ExactSum", "build_sparse_table", "sparse_table_range_max",
-    "QueryResult", "poly_max_on_interval", "query_max", "query_sum",
+    "QueryResult", "max_eval_segments", "poly_max_on_interval", "query_max",
+    "query_sum", "clipped_poly_max", "eval_segments", "horner", "locate",
+    "scale_unit",
     "FitingTree", "PGMIndex", "RMIIndex", "cone_segments",
 ]

@@ -33,6 +33,7 @@ import numpy as np
 
 from .exact import ExactMax, ExactSum, build_sparse_table
 from .fitting import PolyModel, continuum_error, fit_minimax_lp
+from .poly import eval_segments, locate as locate_segments
 from .segmentation import (FastAcceptFitter, Fitter, greedy_segmentation,
                            parallel_segmentation)
 
@@ -77,8 +78,7 @@ class PolyFitIndex1D:
 
     def locate(self, q: jnp.ndarray) -> jnp.ndarray:
         """Segment id containing each query key (clamped to the domain)."""
-        idx = jnp.searchsorted(self.seg_lo, q, side="right") - 1
-        return jnp.clip(idx, 0, self.h - 1)
+        return locate_segments(q, self.seg_lo)
 
     def eval_at(self, q: jnp.ndarray) -> jnp.ndarray:
         """P_{I(q)}(q): evaluate the covering polynomial (vectorized).
@@ -86,18 +86,10 @@ class PolyFitIndex1D:
         u is clamped to [-1, 1]: the polynomial is certified on the segment's
         key span, and F is constant on the gap between the segment's last key
         and the next segment's first key, so clamping is exact for CF-type
-        functions and prevents extrapolation outside the certified region.
+        functions and prevents extrapolation outside the certified region
+        (see core.poly for the shared primitives).
         """
-        idx = self.locate(q)
-        lo = self.seg_lo[idx]
-        hi = self.seg_hi[idx]
-        span = jnp.where(hi > lo, hi - lo, 1.0)
-        u = jnp.clip((2.0 * q - lo - hi) / span, -1.0, 1.0)
-        c = self.coeffs[idx]              # (..., deg+1)
-        acc = c[..., -1]
-        for j in range(self.coeffs.shape[-1] - 2, -1, -1):
-            acc = acc * u + c[..., j]
-        return acc
+        return eval_segments(q, self.seg_lo, self.seg_hi, self.coeffs)
 
 
 def _exact_function(keys: np.ndarray, measures: np.ndarray, agg: str):

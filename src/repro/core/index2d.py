@@ -38,6 +38,10 @@ __all__ = [
     "PolyFitIndex2D",
     "build_index_2d",
     "query_count_2d",
+    "mst_count_prefix",
+    "mst_cf",
+    "quadtree_locate",
+    "quadtree_eval_cf",
 ]
 
 
@@ -61,6 +65,43 @@ def dominance_rank(px: np.ndarray, py: np.ndarray) -> np.ndarray:
 # ---------------------------------------------------------------------------
 # exact online backend: merge sort tree (refinement + exact baseline)
 # ---------------------------------------------------------------------------
+
+def mst_count_prefix(xs: jnp.ndarray, ys_levels: jnp.ndarray, i: jnp.ndarray,
+                     v: jnp.ndarray, strict: bool = False) -> jnp.ndarray:
+    """#points among x-rank [0, i) with y <= v (or y < v if strict).
+
+    Array-level (no MergeSortTree object) so the engine can jit it over
+    ``IndexPlan2D`` refinement arrays; the static per-level binary searches
+    unroll at trace time.
+    """
+    n = int(xs.shape[0])
+    levels = int(ys_levels.shape[0])
+    total = jnp.zeros_like(i)
+    pos = jnp.zeros_like(i)
+    for l in range(levels - 1, -1, -1):
+        b = 1 << l
+        take = pos + b <= i
+        # binary search for v in ys_levels[l][pos : pos+b] (sorted run)
+        lo = jnp.zeros_like(i)
+        hi = jnp.full_like(i, b)
+        for _ in range(l + 1):
+            active = lo < hi
+            mid = (lo + hi) // 2
+            idx = jnp.clip(pos + jnp.minimum(mid, b - 1), 0, n - 1)
+            y = ys_levels[l][idx]
+            go_right = active & ((y < v) if strict else (y <= v))
+            lo = jnp.where(go_right, mid + 1, lo)
+            hi = jnp.where(active & ~go_right, mid, hi)
+        total = total + jnp.where(take, lo, 0)
+        pos = jnp.where(take, pos + b, pos)
+    return total
+
+
+def mst_cf(xs: jnp.ndarray, ys_levels: jnp.ndarray, u, v) -> jnp.ndarray:
+    """CF_count(u, v) = #points with x <= u and y <= v, vectorized."""
+    i = jnp.searchsorted(xs, u, side="right")
+    return mst_count_prefix(xs, ys_levels, i, v)
+
 
 @dataclasses.dataclass(frozen=True)
 class MergeSortTree:
@@ -99,27 +140,7 @@ class MergeSortTree:
     def _count_prefix(self, i: jnp.ndarray, v: jnp.ndarray,
                       strict: bool = False) -> jnp.ndarray:
         """#points among x-rank [0, i) with y <= v (or y < v if strict)."""
-        n = self.n
-        levels = int(self.ys_levels.shape[0])
-        total = jnp.zeros_like(i)
-        pos = jnp.zeros_like(i)
-        for l in range(levels - 1, -1, -1):
-            b = 1 << l
-            take = pos + b <= i
-            # binary search for v in ys_levels[l][pos : pos+b] (sorted run)
-            lo = jnp.zeros_like(i)
-            hi = jnp.full_like(i, b)
-            for _ in range(l + 1):
-                active = lo < hi
-                mid = (lo + hi) // 2
-                idx = jnp.clip(pos + jnp.minimum(mid, b - 1), 0, n - 1)
-                y = self.ys_levels[l][idx]
-                go_right = active & ((y < v) if strict else (y <= v))
-                lo = jnp.where(go_right, mid + 1, lo)
-                hi = jnp.where(active & ~go_right, mid, hi)
-            total = total + jnp.where(take, lo, 0)
-            pos = jnp.where(take, pos + b, pos)
-        return total
+        return mst_count_prefix(self.xs, self.ys_levels, i, v, strict)
 
     def query(self, x0, x1, y0, y1) -> jnp.ndarray:
         """Exact #points in [x0,x1] x [y0,y1] (inclusive), vectorized."""
@@ -132,8 +153,7 @@ class MergeSortTree:
 
     def cf(self, u, v) -> jnp.ndarray:
         """CF_count(u, v), vectorized."""
-        i = jnp.searchsorted(self.xs, u, side="right")
-        return self._count_prefix(i, v)
+        return mst_cf(self.xs, self.ys_levels, u, v)
 
     def cf_np(self, u, v) -> np.ndarray:
         """CF_count on the host (numpy) — used during construction where
@@ -233,33 +253,53 @@ class PolyFitIndex2D:
 
     def locate(self, u, v):
         """Leaf slot for each (u, v); fixed-depth branch-free descent."""
-        node = jnp.zeros(jnp.shape(u), jnp.int32)
-        for _ in range(self.max_depth):
-            b = self.bounds[node]
-            xmid = 0.5 * (b[..., 0] + b[..., 1])
-            ymid = 0.5 * (b[..., 2] + b[..., 3])
-            q = (v >= ymid).astype(jnp.int32) * 2 + (u >= xmid).astype(jnp.int32)
-            child = self.children[node, q]
-            node = jnp.where(child >= 0, child, node)
-        return self.leaf_of[node]
+        return quadtree_locate(self.children, self.leaf_of, self.bounds,
+                               self.max_depth, u, v)
 
     def eval_cf(self, u, v):
         """P_{leaf(u,v)}(u, v): approximate CF_count (vectorized)."""
-        leaf = self.locate(u, v)
-        # leaf coeffs are stored for *scaled* coordinates of the leaf region
-        node_ids = self.leaf_nodes[leaf]
-        b = self.bounds[node_ids]
-        us = _scale01(u, b[..., 0], b[..., 1])
-        vs = _scale01(v, b[..., 2], b[..., 3])
-        c = self.coeffs[leaf].reshape(leaf.shape + (self.deg + 1, self.deg + 1))
-        # Horner in v inside Horner in u
-        acc = jnp.zeros_like(us)
-        for i in range(self.deg, -1, -1):
-            inner = jnp.zeros_like(vs)
-            for j in range(self.deg, -1, -1):
-                inner = inner * vs + c[..., i, j]
-            acc = acc * us + inner
-        return acc
+        return quadtree_eval_cf(self.children, self.leaf_of, self.bounds,
+                                self.coeffs, self.leaf_nodes, self.max_depth,
+                                self.deg, u, v)
+
+
+def quadtree_locate(children, leaf_of, bounds, max_depth: int, u, v):
+    """Leaf slot for each (u, v); fixed-depth branch-free descent.
+
+    Array-level (shared with the engine's XLA backend over IndexPlan2D):
+    quadrant = (v >= ymid)*2 + (u >= xmid), so midpoint ties descend toward
+    the higher-coordinate child — the rule the flat-leaf one-hot membership
+    in kernels/leaf_eval2d.py reproduces exactly.
+    """
+    node = jnp.zeros(jnp.shape(u), jnp.int32)
+    for _ in range(max_depth):
+        b = bounds[node]
+        xmid = 0.5 * (b[..., 0] + b[..., 1])
+        ymid = 0.5 * (b[..., 2] + b[..., 3])
+        q = (v >= ymid).astype(jnp.int32) * 2 + (u >= xmid).astype(jnp.int32)
+        child = children[node, q]
+        node = jnp.where(child >= 0, child, node)
+    return leaf_of[node]
+
+
+def quadtree_eval_cf(children, leaf_of, bounds, coeffs, leaf_nodes,
+                     max_depth: int, deg: int, u, v):
+    """P_{leaf(u,v)}(u, v): approximate CF_count over flat quadtree arrays."""
+    leaf = quadtree_locate(children, leaf_of, bounds, max_depth, u, v)
+    # leaf coeffs are stored for *scaled* coordinates of the leaf region
+    node_ids = leaf_nodes[leaf]
+    b = bounds[node_ids]
+    us = _scale01(u, b[..., 0], b[..., 1])
+    vs = _scale01(v, b[..., 2], b[..., 3])
+    c = coeffs[leaf].reshape(leaf.shape + (deg + 1, deg + 1))
+    # Horner in v inside Horner in u
+    acc = jnp.zeros_like(us)
+    for i in range(deg, -1, -1):
+        inner = jnp.zeros_like(vs)
+        for j in range(deg, -1, -1):
+            inner = inner * vs + c[..., i, j]
+        acc = acc * us + inner
+    return acc
 
 
 def _scale01(x, lo, hi):

@@ -1,0 +1,93 @@
+"""Shared polynomial/segment primitives for every execution layer.
+
+Horner evaluation, segment location, Chebyshev scaling and the closed-form
+clipped polynomial maximum were historically re-implemented in three places
+(``core/index.py``, ``kernels/ref.py``, ``kernels/poly_eval.py``); they now
+live here once.  Everything in this module is plain ``jnp`` on values — no
+tracing tricks — so the same functions run
+
+* inside jitted XLA query paths (``core.queries``, ``engine``),
+* inside Pallas kernel bodies (the finalize steps of ``kernels/*.py``), and
+* in the pure-jnp oracles (``kernels/ref.py``).
+
+Conventions (DESIGN.md §3): coefficients are ascending-power along the last
+axis; keys are mapped to u in [-1, 1] over the segment's key span with a
+clamp (the fit is certified on the span; F is constant on inter-segment
+gaps, so clamping is exact for CF-type functions and prevents
+extrapolation).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = [
+    "horner", "locate", "scale_unit", "eval_segments", "clipped_poly_max",
+]
+
+
+def horner(c: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray:
+    """P(u) by Horner's rule; c (..., deg+1) ascending powers, u (...,)."""
+    acc = c[..., -1]
+    for j in range(c.shape[-1] - 2, -1, -1):
+        acc = acc * u + c[..., j]
+    return acc
+
+
+def locate(q: jnp.ndarray, seg_lo: jnp.ndarray) -> jnp.ndarray:
+    """Segment id containing each query key (clamped to the table).
+
+    ``seg_lo`` may be tile-padded with a huge sentinel: in-domain queries
+    never resolve to padding because the sentinel exceeds every key.
+    """
+    idx = jnp.searchsorted(seg_lo, q, side="right") - 1
+    return jnp.clip(idx, 0, seg_lo.shape[0] - 1)
+
+
+def scale_unit(q: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray) -> jnp.ndarray:
+    """Map keys to u in [-1, 1] over [lo, hi], clamped (degenerate span -> lo)."""
+    span = jnp.where(hi > lo, hi - lo, 1.0)
+    return jnp.clip((2.0 * q - lo - hi) / span, -1.0, 1.0)
+
+
+def eval_segments(q: jnp.ndarray, seg_lo: jnp.ndarray, seg_hi: jnp.ndarray,
+                  coeffs: jnp.ndarray) -> jnp.ndarray:
+    """P_{I(q)}(q): locate each key's segment and evaluate its polynomial."""
+    idx = locate(q, seg_lo)
+    u = scale_unit(q, seg_lo[idx], seg_hi[idx])
+    return horner(coeffs[idx], u)
+
+
+def clipped_poly_max(c: jnp.ndarray, slo: jnp.ndarray, shi: jnp.ndarray,
+                     a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """max_{k in [a, b]} P(u(k)) per row, closed form for deg <= 3.
+
+    Candidates are both (clamped) endpoints plus the real zero-derivative
+    points inside the interval (paper Table 2: P' is linear/quadratic for
+    deg 2/3, the recommended MAX degrees).  Empty intervals (a > b) give
+    -inf.  c is (..., deg+1); slo/shi the segment's scaling span.
+
+    deg >= 4 needs the cubic-root solver in ``core.queries`` — this helper
+    is shared by the Pallas range-MAX kernel, whose in-register closed forms
+    stop at deg 3.
+    """
+    deg = c.shape[-1] - 1
+    ua = scale_unit(a, slo, shi)
+    ub = scale_unit(b, slo, shi)
+    best = jnp.maximum(horner(c, ua), horner(c, ub))
+    if deg >= 2:
+        c1 = c[..., 1]
+        c2 = 2.0 * c[..., 2]
+        lin = jnp.where(jnp.abs(c2) > 0, -c1 / jnp.where(c2 == 0, 1.0, c2), ua)
+        if deg == 2:
+            roots = [lin]
+        else:  # deg == 3: P' = c1 + 2 c2 u + 3 c3 u^2
+            c3 = 3.0 * c[..., 3]
+            disc = c2 * c2 - 4.0 * c3 * c1
+            sq = jnp.sqrt(jnp.maximum(disc, 0.0))
+            den = jnp.where(jnp.abs(c3) > 0, 2.0 * c3, 1.0)
+            quad_ok = (jnp.abs(c3) > 0) & (disc >= 0)
+            roots = [jnp.where(quad_ok, (-c2 - sq) / den, lin),
+                     jnp.where(quad_ok, (-c2 + sq) / den, lin)]
+        for r in roots:
+            best = jnp.maximum(best, horner(c, jnp.clip(r, ua, ub)))
+    return jnp.where(a <= b, best, -jnp.inf)

@@ -28,10 +28,11 @@ import numpy as np
 
 from .exact import sparse_table_range_max
 from .index import PolyFitIndex1D
+from .poly import horner as _horner, locate, scale_unit
 
 __all__ = [
     "query_sum", "query_max", "QueryResult",
-    "poly_max_on_interval", "solve_derivative_roots",
+    "poly_max_on_interval", "solve_derivative_roots", "max_eval_segments",
 ]
 
 _NAN = jnp.nan
@@ -123,13 +124,6 @@ def solve_derivative_roots(coeffs: jnp.ndarray):
                               "use grid_extrema for higher degrees")
 
 
-def _horner(c, u):
-    acc = c[..., -1]
-    for j in range(c.shape[-1] - 2, -1, -1):
-        acc = acc * u + c[..., j]
-    return acc
-
-
 def poly_max_on_interval(coeffs, ua, ub, grid_pts: int = 0):
     """max_{u in [ua, ub]} P(u), batched; empty intervals (ua>ub) -> -inf.
 
@@ -196,34 +190,41 @@ def query_sum(index: PolyFitIndex1D, lq, uq,
 # MAX / MIN (Alg. 3)
 # ---------------------------------------------------------------------------
 
-def _max_eval(index: PolyFitIndex1D, lq, uq):
-    il = index.locate(lq)
-    iu = index.locate(uq)
-    lo_l, hi_l = index.seg_lo[il], index.seg_hi[il]
-    lo_u, hi_u = index.seg_lo[iu], index.seg_hi[iu]
+def max_eval_segments(seg_lo, seg_hi, coeffs, st, lq, uq):
+    """Raw approximate MAX (Eq. 17) over flat segment arrays.
 
-    def scaled(q, lo, hi):
-        span = jnp.where(hi > lo, hi - lo, 1.0)
-        # clamp into the certified region (data keys live in [lo, hi])
-        return jnp.clip((2 * q - lo - hi) / span, -1.0, 1.0)
+    Array-level so both ``query_max`` (index objects) and the engine's XLA
+    backend (tile-padded ``IndexPlan`` arrays) share one implementation:
+    padded segments carry a huge seg_lo sentinel, which in-domain queries
+    never locate, and ``st`` stays unpadded at the true segment count.
+    """
+    il = locate(lq, seg_lo)
+    iu = locate(uq, seg_lo)
+    lo_l, hi_l = seg_lo[il], seg_hi[il]
+    lo_u, hi_u = seg_lo[iu], seg_hi[iu]
 
     same = il == iu
     # left boundary segment: [lq, min(hi_l, uq)]
-    ua_l = scaled(lq, lo_l, hi_l)
-    ub_l = scaled(jnp.minimum(hi_l, uq), lo_l, hi_l)
-    m_left = poly_max_on_interval(index.coeffs[il], ua_l, ub_l)
+    ua_l = scale_unit(lq, lo_l, hi_l)
+    ub_l = scale_unit(jnp.minimum(hi_l, uq), lo_l, hi_l)
+    m_left = poly_max_on_interval(coeffs[il], ua_l, ub_l)
     # lq may fall in the key-free gap past the segment's last key: no data of
     # segment il is inside the query range then — suppress its contribution
     m_left = jnp.where(lq <= hi_l, m_left, -jnp.inf)
     # right boundary segment: [max(lo_u, lq), uq] — suppressed when same seg
-    ua_u = scaled(jnp.maximum(lo_u, lq), lo_u, hi_u)
-    ub_u = scaled(uq, lo_u, hi_u)
+    ua_u = scale_unit(jnp.maximum(lo_u, lq), lo_u, hi_u)
+    ub_u = scale_unit(uq, lo_u, hi_u)
     m_right = jnp.where(same, -jnp.inf,
-                        poly_max_on_interval(index.coeffs[iu], ua_u, ub_u))
+                        poly_max_on_interval(coeffs[iu], ua_u, ub_u))
     # interior fully-covered segments: exact per-segment aggregates via the
     # sparse table (replaces the aR-tree internal-node traversal)
-    m_mid = sparse_table_range_max(index.st, il + 1, iu)
+    m_mid = sparse_table_range_max(st, il + 1, iu)
     return jnp.maximum(jnp.maximum(m_left, m_right), m_mid)
+
+
+def _max_eval(index: PolyFitIndex1D, lq, uq):
+    return max_eval_segments(index.seg_lo, index.seg_hi, index.coeffs,
+                             index.st, lq, uq)
 
 
 def query_max(index: PolyFitIndex1D, lq, uq,

@@ -1,0 +1,8 @@
+"""Distributed-training substrate utilities (gradient compression, ...).
+
+Kept dependency-light: modules here are imported inside jitted train/serve
+paths and must not pull the heavy core/engine stacks.
+"""
+from .compression import dequantize_int8, quantize_int8
+
+__all__ = ["quantize_int8", "dequantize_int8"]

@@ -1,0 +1,22 @@
+"""repro.engine — unified backend-dispatched query execution (DESIGN.md §7).
+
+Lower a constructed index into a canonical device-resident ``IndexPlan``
+once, then execute every query type through an ``Engine`` with
+``backend='xla' | 'pallas' | 'ref'``:
+
+    from repro.core import build_index_1d
+    from repro.engine import Engine, build_plan
+
+    plan = build_plan(build_index_1d(keys, meas, "sum", delta=eps / 2))
+    eng = Engine(backend="pallas")
+    res = eng.query(plan, lq, uq, eps_rel=0.01)   # fused approx + refine
+
+Serving, examples and benchmarks all route through this module; the Pallas
+kernels and their jnp oracles are implementation details behind it.
+"""
+from .engine import BACKENDS, Engine
+from .plan import (IndexPlan, IndexPlan2D, big_sentinel, build_plan,
+                   build_plan_2d, pad_to_multiple)
+
+__all__ = ["Engine", "BACKENDS", "IndexPlan", "IndexPlan2D", "build_plan",
+           "build_plan_2d", "big_sentinel", "pad_to_multiple"]

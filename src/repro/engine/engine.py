@@ -1,0 +1,265 @@
+"""Backend-dispatched query engine: one fused execution path per
+(aggregate, backend, batch-bucket).
+
+``Engine`` executes SUM/COUNT/MAX/MIN (1 key) and COUNT (2 keys) against
+``IndexPlan``/``IndexPlan2D`` through a pluggable backend:
+
+* ``'xla'``    — searchsorted locate + gather + Horner, sparse-table interior
+                 MAX (the reference semantics of ``core.queries``);
+* ``'pallas'`` — the one-hot membership TPU kernels (interpret mode on CPU);
+* ``'ref'``    — pure-jnp oracles mirroring the kernel contracts exactly.
+
+Every path is a single jitted function that computes the raw approximation,
+applies the Lemma 5.2/5.4 (or 6.4) Q_rel acceptance test, and merges the
+vectorized exact refinement with ``jnp.where`` — the refinement arrays live
+inside the plan, so there is no host round trip and no per-query Python
+dispatch.  Batches are padded to power-of-two buckets before entering the
+jitted path: compilation count is bounded by the number of distinct
+(aggregate, backend, bucket) triples, and plans with identical layouts share
+compilations (plan metadata is static, arrays are traced).
+
+Q_abs guarantees need no test: build the index with delta = eps_abs/2 (SUM,
+Lemma 5.1), eps_abs (MAX, Lemma 5.3) or eps_abs/4 (2-D COUNT, Lemma 6.3)
+and the raw answer already satisfies the bound.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from ..core.exact import sparse_table_range_max
+from ..core.index2d import mst_cf, quadtree_eval_cf
+from ..core.poly import eval_segments
+from ..core.queries import QueryResult, max_eval_segments
+from ..kernels import ref as _ref
+from ..kernels.leaf_eval2d import corner_count2d_pallas
+from ..kernels.poly_eval import DEFAULT_BQ
+from ..kernels.range_max import range_max_pallas
+from ..kernels.range_sum import range_sum_pallas
+from .plan import IndexPlan, IndexPlan2D
+
+__all__ = ["Engine", "BACKENDS"]
+
+BACKENDS = ("xla", "pallas", "ref")
+
+
+def _bucket_size(n: int, min_bucket: int) -> int:
+    b = max(min_bucket, 1)
+    while b < n:
+        b <<= 1
+    return b
+
+
+def _pad_bucket(q: jnp.ndarray, size: int, fill) -> jnp.ndarray:
+    p = size - q.shape[0]
+    if p == 0:
+        return q
+    return jnp.concatenate([q, jnp.full((p,), fill, q.dtype)])
+
+
+def _cf_at(keys, cf, q):
+    """Inclusive prefix CF at q: sum of measures with key <= q."""
+    idx = jnp.searchsorted(keys, q, side="right")
+    padded = jnp.concatenate([jnp.zeros((1,), cf.dtype), cf])
+    return padded[idx]
+
+
+# ---------------------------------------------------------------------------
+# fused jitted executors (one compilation per static signature)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("backend", "eps_rel", "interpret", "bq"))
+def _exec_sum(plan: IndexPlan, lq, uq, *, backend: str,
+              eps_rel: Optional[float], interpret: bool, bq: int):
+    dt = plan.dtype
+    lqc = jnp.maximum(lq.astype(dt), plan.domain_lo)
+    uqc = jnp.maximum(uq.astype(dt), plan.domain_lo)
+    if backend == "pallas":
+        approx = range_sum_pallas(lqc, uqc, plan.seg_lo, plan.seg_next,
+                                  plan.seg_hi, plan.coeffs,
+                                  bq=bq, bh=plan.bh, interpret=interpret)
+    elif backend == "ref":
+        approx = _ref.range_sum_ref(lqc, uqc, plan.seg_lo, plan.seg_next,
+                                    plan.seg_hi, plan.coeffs)
+    else:
+        approx = (eval_segments(uqc, plan.seg_lo, plan.seg_hi, plan.coeffs)
+                  - eval_segments(lqc, plan.seg_lo, plan.seg_hi, plan.coeffs))
+    if eps_rel is None:
+        return approx, approx, jnp.zeros(approx.shape, bool)
+    # Lemma 5.2 test: 2d / (A - 2d) <= eps_rel  (requires A > 2d)
+    two_d = 2.0 * plan.delta
+    ok = ((approx - two_d > 0) &
+          (two_d / jnp.maximum(approx - two_d, 1e-300) <= eps_rel))
+    truth = _cf_at(plan.ref_keys, plan.ref_cf, uq) - _cf_at(
+        plan.ref_keys, plan.ref_cf, lq)
+    return jnp.where(ok, approx, truth), approx, ~ok
+
+
+@partial(jax.jit, static_argnames=("backend", "eps_rel", "interpret", "bq"))
+def _exec_extremum(plan: IndexPlan, lq, uq, *, backend: str,
+                   eps_rel: Optional[float], interpret: bool, bq: int):
+    dt = plan.dtype
+    lqc = jnp.maximum(lq.astype(dt), plan.domain_lo)
+    uqc = jnp.maximum(uq.astype(dt), plan.domain_lo)
+    if backend == "pallas":
+        approx = range_max_pallas(lqc, uqc, plan.seg_lo, plan.seg_next,
+                                  plan.seg_hi, plan.coeffs, plan.seg_agg,
+                                  bq=bq, bh=plan.bh, interpret=interpret)
+    elif backend == "ref":
+        approx = _ref.range_max_ref(lqc, uqc, plan.seg_lo, plan.seg_next,
+                                    plan.seg_hi, plan.coeffs, plan.seg_agg)
+    else:
+        approx = max_eval_segments(plan.seg_lo, plan.seg_hi, plan.coeffs,
+                                   plan.st, lqc, uqc)
+    neg = plan.agg == "min"
+    if eps_rel is None:
+        out = -approx if neg else approx
+        return out, out, jnp.zeros(out.shape, bool)
+    # Lemma 5.4 test: A >= delta * (1 + 1/eps_rel), in MAX space (MIN runs
+    # on negated measures end to end, exactly like core.queries.query_max)
+    ok = approx >= plan.delta * (1.0 + 1.0 / eps_rel)
+    i = jnp.searchsorted(plan.ref_keys, lq, side="left")
+    j = jnp.searchsorted(plan.ref_keys, uq, side="right")
+    truth = sparse_table_range_max(plan.ref_st, i, j)
+    ans = jnp.where(ok, approx, truth)
+    if neg:
+        ans, approx = -ans, -approx
+    return ans, approx, ~ok
+
+
+@partial(jax.jit, static_argnames=("backend", "eps_rel", "interpret", "bq"))
+def _exec_count2d(plan: IndexPlan2D, lx, ux, ly, uy, *, backend: str,
+                  eps_rel: Optional[float], interpret: bool, bq: int):
+    dt = plan.dtype
+    x0, x1, y0, y1 = plan.root
+    lxc, uxc = (jnp.clip(q.astype(dt), x0, x1) for q in (lx, ux))
+    lyc, uyc = (jnp.clip(q.astype(dt), y0, y1) for q in (ly, uy))
+    if backend == "pallas":
+        approx = corner_count2d_pallas(
+            lxc, uxc, lyc, uyc, plan.leaf_mx0, plan.leaf_mx1, plan.leaf_my0,
+            plan.leaf_my1, plan.leaf_bounds, plan.leaf_coeffs,
+            deg=plan.deg, bq=bq, bh=plan.bh, interpret=interpret)
+    elif backend == "ref":
+        approx = _ref.corner_count2d_ref(
+            lxc, uxc, lyc, uyc, plan.leaf_mx0, plan.leaf_mx1, plan.leaf_my0,
+            plan.leaf_my1, plan.leaf_bounds, plan.leaf_coeffs, plan.deg)
+    else:
+        ev = lambda u, v: quadtree_eval_cf(
+            plan.children, plan.leaf_of, plan.bounds, plan.qt_coeffs,
+            plan.leaf_nodes, plan.max_depth, plan.deg, u, v)
+        approx = ev(uxc, uyc) - ev(lxc, uyc) - ev(uxc, lyc) + ev(lxc, lyc)
+    if eps_rel is None:
+        return approx, approx, jnp.zeros(approx.shape, bool)
+    # Lemma 6.4 test: A >= 4*delta*(1 + 1/eps_rel)
+    ok = approx >= 4.0 * plan.delta * (1.0 + 1.0 / eps_rel)
+    cf = lambda u, v: mst_cf(plan.ref_xs, plan.ref_ys_levels, u, v)
+    truth = (cf(ux, uy) - cf(lx, uy) - cf(ux, ly) + cf(lx, ly)).astype(dt)
+    return jnp.where(ok, approx, truth), approx, ~ok
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+
+class Engine:
+    """Backend-dispatched range-aggregate query engine.
+
+    One instance serves any number of plans; jit compiles (and caches) one
+    executable per (aggregate, backend, batch-bucket, plan-layout).
+    ``interpret`` controls Pallas interpret mode (True for CPU hosts).
+    """
+
+    def __init__(self, backend: str = "xla", interpret: bool = True,
+                 bq: int = DEFAULT_BQ, min_bucket: int = 64):
+        if backend not in BACKENDS:
+            raise ValueError(f"backend must be one of {BACKENDS}, got {backend}")
+        for name, v in (("bq", bq), ("min_bucket", min_bucket)):
+            if v < 1 or v & (v - 1):
+                # bucket sizes are powers of two so bq always divides them
+                raise ValueError(f"{name} must be a power of two, got {v}")
+        self.backend = backend
+        self.interpret = interpret
+        self.bq = bq
+        self.min_bucket = min_bucket
+
+    # -- helpers --------------------------------------------------------
+
+    def _prepare(self, *qs: jnp.ndarray):
+        """Cast to a common device batch + bucket geometry."""
+        qs = [jnp.asarray(q) for q in qs]
+        n = qs[0].shape[0]
+        size = _bucket_size(n, self.min_bucket)
+        bq = min(self.bq, size)   # both powers of two -> bq divides size
+        return qs, n, size, bq
+
+    @staticmethod
+    def _require_exact(cond: bool):
+        if not cond:
+            raise ValueError("Q_rel refinement requires a plan built with "
+                             "with_exact=True")
+
+    # -- 1-D SUM / COUNT -------------------------------------------------
+
+    def sum(self, plan: IndexPlan, lq, uq,
+            eps_rel: Optional[float] = None) -> QueryResult:
+        assert plan.agg in ("sum", "count"), plan.agg
+        if eps_rel is not None:
+            self._require_exact(plan.ref_cf is not None)
+        (lq, uq), n, size, bq = self._prepare(lq, uq)
+        fill = plan.domain_lo.astype(lq.dtype)
+        ans, approx, refined = _exec_sum(
+            plan, _pad_bucket(lq, size, fill), _pad_bucket(uq, size, fill),
+            backend=self.backend, eps_rel=eps_rel,
+            interpret=self.interpret, bq=bq)
+        return QueryResult(ans[:n], approx[:n], refined[:n])
+
+    count = sum   # COUNT is SUM over unit measures
+
+    # -- 1-D MAX / MIN ---------------------------------------------------
+
+    def extremum(self, plan: IndexPlan, lq, uq,
+                 eps_rel: Optional[float] = None) -> QueryResult:
+        assert plan.agg in ("max", "min"), plan.agg
+        if eps_rel is not None:
+            self._require_exact(plan.ref_st is not None)
+        backend = self.backend
+        if backend in ("pallas", "ref") and plan.deg > 3:
+            # in-kernel closed-form extrema stop at deg 3 (the paper's
+            # recommended MAX range); higher degrees take the XLA path
+            backend = "xla"
+        (lq, uq), n, size, bq = self._prepare(lq, uq)
+        fill = plan.domain_lo.astype(lq.dtype)
+        ans, approx, refined = _exec_extremum(
+            plan, _pad_bucket(lq, size, fill), _pad_bucket(uq, size, fill),
+            backend=backend, eps_rel=eps_rel,
+            interpret=self.interpret, bq=bq)
+        return QueryResult(ans[:n], approx[:n], refined[:n])
+
+    # -- 2-D COUNT -------------------------------------------------------
+
+    def count2d(self, plan: IndexPlan2D, lx, ux, ly, uy,
+                eps_rel: Optional[float] = None) -> QueryResult:
+        if eps_rel is not None:
+            self._require_exact(plan.ref_xs is not None)
+        (lx, ux, ly, uy), n, size, bq = self._prepare(lx, ux, ly, uy)
+        x0, _, y0, _ = plan.root
+        args = (_pad_bucket(lx, size, x0), _pad_bucket(ux, size, x0),
+                _pad_bucket(ly, size, y0), _pad_bucket(uy, size, y0))
+        ans, approx, refined = _exec_count2d(
+            plan, *args, backend=self.backend, eps_rel=eps_rel,
+            interpret=self.interpret, bq=bq)
+        return QueryResult(ans[:n], approx[:n], refined[:n])
+
+    # -- uniform entry ---------------------------------------------------
+
+    def query(self, plan: Union[IndexPlan, IndexPlan2D], *ranges,
+              eps_rel: Optional[float] = None) -> QueryResult:
+        """Dispatch on the plan: (lq, uq) for 1-D, (lx, ux, ly, uy) for 2-D."""
+        if isinstance(plan, IndexPlan2D):
+            return self.count2d(plan, *ranges, eps_rel=eps_rel)
+        if plan.agg in ("sum", "count"):
+            return self.sum(plan, *ranges, eps_rel=eps_rel)
+        return self.extremum(plan, *ranges, eps_rel=eps_rel)

@@ -1,0 +1,232 @@
+"""Canonical device-resident query plans (DESIGN.md §7).
+
+An ``IndexPlan`` is the single layout every backend executes against — the
+promotion of the old ``kernels.ops.SegTable`` adapter into a first-class
+engine structure.  It bundles, per 1-D index:
+
+* the tile-padded flat segment table (``seg_lo``/``seg_next``/``seg_hi``/
+  ``coeffs``/``seg_agg``) the Pallas kernels and their jnp oracles consume
+  (padding uses a huge-but-finite sentinel: +-inf would produce 0*inf = NaN
+  inside the one-hot matmuls);
+* the unpadded sparse table ``st`` over per-segment aggregates the XLA
+  backend's O(1) interior-MAX reduction uses (MAX/MIN only);
+* the exact-refinement arrays (sorted keys + prefix CF, or keys + measure
+  sparse table) so the Lemma 5.2/5.4 Q_rel test and vectorized refinement
+  run *inside* the fused jitted query path — no host round trip.
+
+``IndexPlan2D`` is the 2-key analogue: quadtree descent arrays for the XLA
+backend, the flattened tile-padded leaf table for the one-hot Pallas/ref
+backends, and the merge-sort-tree arrays for exact refinement.
+
+Both are registered dataclass pytrees: array fields are jit-traced children,
+everything shape-like (``agg``, ``deg``, ``h``, ``bh``, ...) is static
+metadata, so one compilation serves every plan with the same layout.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.index import PolyFitIndex1D
+from ..core.index2d import PolyFitIndex2D
+from ..kernels.poly_eval import DEFAULT_BH, DEFAULT_BQ
+
+__all__ = ["IndexPlan", "IndexPlan2D", "build_plan", "build_plan_2d",
+           "big_sentinel", "pad_to_multiple"]
+
+
+def big_sentinel(dtype) -> float:
+    """Huge-but-finite padding value: +-inf would produce 0*inf = NaN inside
+    the one-hot matmuls, so padding and open upper boundaries use
+    finfo.max/4."""
+    return float(np.finfo(np.dtype(dtype)).max) / 4
+
+
+def pad_to_multiple(x: jnp.ndarray, mult: int, fill) -> jnp.ndarray:
+    n = x.shape[0]
+    p = (-n) % mult
+    if p == 0:
+        return x
+    pad_shape = (p,) + x.shape[1:]
+    return jnp.concatenate([x, jnp.full(pad_shape, fill, x.dtype)])
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexPlan:
+    """Device-resident 1-D query plan (all backends execute against this)."""
+
+    # -- static metadata ------------------------------------------------
+    agg: str                 # 'sum' | 'count' | 'max' | 'min'
+    deg: int
+    delta: float
+    h: int                   # true segment count (<= padded length)
+    n: int                   # dataset size
+    bh: int                  # segment tile size the padding respects
+    # -- tile-padded flat segment table (kernel ABI) --------------------
+    seg_lo: jnp.ndarray      # (Hp,) sentinel-padded
+    seg_next: jnp.ndarray    # (Hp,) next segment's lo; sentinel for last/pad
+    seg_hi: jnp.ndarray      # (Hp,)
+    coeffs: jnp.ndarray      # (Hp, deg+1) zero-padded
+    seg_agg: jnp.ndarray     # (Hp,) -inf padded (max/min; zeros for sum)
+    # -- XLA-backend extras ---------------------------------------------
+    st: Optional[jnp.ndarray]        # (L, h) sparse table (max/min only)
+    # -- exact refinement arrays (fused Q_rel path) ----------------------
+    ref_keys: Optional[jnp.ndarray]  # (n,) sorted keys
+    ref_cf: Optional[jnp.ndarray]    # (n,) inclusive prefix CF (sum/count)
+    ref_st: Optional[jnp.ndarray]    # (L2, n) measure sparse table (max/min)
+
+    @property
+    def dtype(self):
+        return self.coeffs.dtype
+
+    @property
+    def domain_lo(self) -> jnp.ndarray:
+        return self.seg_lo[0]
+
+    def size_bytes(self) -> int:
+        """Learned-structure size (paper's metric; excludes refinement).
+
+        Counts the ``h`` real segments only — tile padding is an execution
+        artifact, not index content.
+        """
+        it = self.seg_lo.dtype.itemsize
+        # seg_lo + seg_next + seg_hi + seg_agg + coefficient rows
+        total = self.h * (4 * it + (self.deg + 1) * self.coeffs.dtype.itemsize)
+        if self.st is not None:
+            total += self.st.nbytes
+        return int(total)
+
+
+jax.tree_util.register_dataclass(
+    IndexPlan,
+    data_fields=["seg_lo", "seg_next", "seg_hi", "coeffs", "seg_agg", "st",
+                 "ref_keys", "ref_cf", "ref_st"],
+    meta_fields=["agg", "deg", "delta", "h", "n", "bh"],
+)
+
+
+def build_plan(index: PolyFitIndex1D, dtype=jnp.float64,
+               bh: int = DEFAULT_BH, with_exact: bool = True) -> IndexPlan:
+    """Lower a constructed PolyFitIndex1D into the canonical device plan."""
+    big = big_sentinel(dtype)
+    seg_lo = jnp.asarray(index.seg_lo, dtype)
+    seg_hi = jnp.asarray(index.seg_hi, dtype)
+    nxt = jnp.concatenate([seg_lo[1:], jnp.full((1,), big, dtype)])
+    coeffs = jnp.asarray(index.coeffs, dtype)
+    agg = (jnp.asarray(index.seg_agg, dtype) if index.seg_agg is not None
+           else jnp.zeros_like(seg_lo))
+
+    st = None if index.st is None else jnp.asarray(index.st)
+    ref_keys = ref_cf = ref_st = None
+    if with_exact:
+        if index.exact_sum is not None:
+            ref_keys = index.exact_sum.keys
+            ref_cf = index.exact_sum.cf
+        elif index.exact_max is not None:
+            ref_keys = index.exact_max.keys
+            ref_st = index.exact_max.st
+
+    return IndexPlan(
+        agg=index.agg, deg=index.deg, delta=float(index.delta),
+        h=int(seg_lo.shape[0]), n=int(index.n), bh=int(bh),
+        seg_lo=pad_to_multiple(seg_lo, bh, big),
+        seg_next=pad_to_multiple(nxt, bh, big),
+        seg_hi=pad_to_multiple(seg_hi, bh, big),
+        coeffs=pad_to_multiple(coeffs, bh, 0.0),
+        seg_agg=pad_to_multiple(agg, bh, -jnp.inf),
+        st=st, ref_keys=ref_keys, ref_cf=ref_cf, ref_st=ref_st,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexPlan2D:
+    """Device-resident 2-key COUNT plan (quadtree + flat leaf table)."""
+
+    # -- static metadata ------------------------------------------------
+    deg: int
+    delta: float
+    n: int
+    n_leaves: int
+    max_depth: int
+    bh: int
+    root: Tuple[float, float, float, float]   # x0, x1, y0, y1
+    # -- quadtree descent arrays (XLA backend) ---------------------------
+    children: jnp.ndarray    # (N, 4) int32
+    leaf_of: jnp.ndarray     # (N,) int32
+    bounds: jnp.ndarray      # (N, 4)
+    leaf_nodes: jnp.ndarray  # (n_leaves,) int32
+    qt_coeffs: jnp.ndarray   # (n_leaves, (deg+1)^2) — descent-path coeffs
+    # -- flat tile-padded leaf table (Pallas/ref backends) ---------------
+    leaf_mx0: jnp.ndarray    # (Lp,) membership lower x (sentinel-padded)
+    leaf_mx1: jnp.ndarray    # (Lp,) membership upper x (sentinel on root edge)
+    leaf_my0: jnp.ndarray    # (Lp,)
+    leaf_my1: jnp.ndarray    # (Lp,)
+    leaf_bounds: jnp.ndarray  # (Lp, 4) actual x0,x1,y0,y1 (scaling spans)
+    leaf_coeffs: jnp.ndarray  # (Lp, (deg+1)^2)
+    # -- exact refinement (merge-sort tree) ------------------------------
+    ref_xs: Optional[jnp.ndarray]         # (n,)
+    ref_ys_levels: Optional[jnp.ndarray]  # (L, n)
+
+    @property
+    def dtype(self):
+        return self.leaf_coeffs.dtype
+
+    def size_bytes(self) -> int:
+        """Learned-structure size: topology + per-leaf fits (unpadded)."""
+        return int(self.children.nbytes + self.bounds.nbytes +
+                   self.qt_coeffs.nbytes)
+
+
+jax.tree_util.register_dataclass(
+    IndexPlan2D,
+    data_fields=["children", "leaf_of", "bounds", "leaf_nodes", "qt_coeffs",
+                 "leaf_mx0", "leaf_mx1", "leaf_my0", "leaf_my1",
+                 "leaf_bounds", "leaf_coeffs", "ref_xs", "ref_ys_levels"],
+    meta_fields=["deg", "delta", "n", "n_leaves", "max_depth", "bh", "root"],
+)
+
+
+def build_plan_2d(index: PolyFitIndex2D, dtype=jnp.float64,
+                  bh: int = DEFAULT_BH, with_exact: bool = True) -> IndexPlan2D:
+    """Lower a PolyFitIndex2D into the canonical device plan.
+
+    The flat leaf table reproduces the quadtree descent's tie rule with pure
+    interval membership: a coordinate exactly on an interior split line
+    belongs to the higher-coordinate leaf (the descent tests ``>= mid``), so
+    membership is [x0, x1) x [y0, y1) — except leaves touching the root's
+    right/top edge, whose upper membership bound widens to the sentinel so
+    the root's own boundary stays covered.
+    """
+    big = big_sentinel(dtype)
+    x0r, x1r, y0r, y1r = (float(b) for b in index.root_bounds)
+    lb = np.asarray(index.bounds)[np.asarray(index.leaf_nodes)]  # (L, 4) f64
+    mx0 = lb[:, 0]
+    mx1 = np.where(lb[:, 1] >= x1r, big, lb[:, 1])
+    my0 = lb[:, 2]
+    my1 = np.where(lb[:, 3] >= y1r, big, lb[:, 3])
+
+    ref_xs = ref_ys = None
+    if with_exact and index.exact is not None:
+        ref_xs = index.exact.xs
+        ref_ys = index.exact.ys_levels
+
+    to = lambda a: jnp.asarray(a, dtype)
+    return IndexPlan2D(
+        deg=index.deg, delta=float(index.delta), n=int(index.n),
+        n_leaves=index.n_leaves, max_depth=index.max_depth, bh=int(bh),
+        root=(x0r, x1r, y0r, y1r),
+        children=index.children, leaf_of=index.leaf_of,
+        bounds=to(index.bounds), leaf_nodes=index.leaf_nodes,
+        qt_coeffs=to(index.coeffs),
+        leaf_mx0=pad_to_multiple(to(mx0), bh, big),
+        leaf_mx1=pad_to_multiple(to(mx1), bh, big),
+        leaf_my0=pad_to_multiple(to(my0), bh, big),
+        leaf_my1=pad_to_multiple(to(my1), bh, big),
+        leaf_bounds=pad_to_multiple(to(lb), bh, 0.0),
+        leaf_coeffs=pad_to_multiple(to(index.coeffs), bh, 0.0),
+        ref_xs=ref_xs, ref_ys_levels=ref_ys,
+    )

@@ -4,6 +4,8 @@ Each kernel ships as <name>.py (pl.pallas_call + BlockSpec), with ops.py as
 the jit'd public wrapper and ref.py as the pure-jnp oracle the tests sweep
 against (DESIGN.md §3 for the TPU adaptation rationale).
 """
+from .leaf_eval2d import corner_count2d_pallas
 from .ops import SegTable, from_index, poly_eval, range_max, range_sum
 
-__all__ = ["SegTable", "from_index", "poly_eval", "range_max", "range_sum"]
+__all__ = ["SegTable", "from_index", "poly_eval", "range_max", "range_sum",
+           "corner_count2d_pallas"]

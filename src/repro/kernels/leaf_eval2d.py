@@ -1,0 +1,123 @@
+"""Pallas TPU kernel: fused 2-key range-COUNT query evaluation (Eq. 19).
+
+The quadtree descent of ``core.index2d`` is pointer chasing — unvectorizable
+on the VPU — so the engine flattens the quadtree's *leaves* into a tile-
+padded table and resolves each query corner with the same one-hot membership
+trick as the 1-D kernels (DESIGN.md §7): leaves partition the root rectangle,
+and membership
+
+    one_hot[q, j] = (mx0[j] <= qx < mx1[j]) & (my0[j] <= qy < my1[j])
+
+is locally decidable per tile.  ``mx1``/``my1`` are the leaf's upper bounds
+with right/top root-edge leaves widened to a huge sentinel, reproducing the
+descent's tie rule (coordinates exactly on an interior split line belong to
+the higher-coordinate leaf; the root's own upper edge stays inside).
+
+All four inclusion-exclusion corners of a COUNT query — (ux,uy), (lx,uy),
+(ux,ly), (lx,ly) — are resolved against the same resident leaf tile, so the
+leaf table is read once per query block instead of four times.  Finalization
+evaluates each corner's bivariate polynomial (Horner in v inside Horner in
+u, on the leaf's scaled coordinates) and combines with signs (+,-,-,+).
+
+Grid: (num_query_blocks, num_leaf_tiles), leaf tiles innermost; the
+(BQ, 4*(K+4)) gather accumulator lives in VMEM scratch across the inner
+loop (K = (deg+1)^2 coefficients + 4 scaling bounds per corner slot).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .poly_eval import DEFAULT_BH, DEFAULT_BQ
+
+__all__ = ["corner_count2d_pallas"]
+
+
+def _corner_count2d_kernel(lx_ref, ux_ref, ly_ref, uy_ref,
+                           mx0_ref, mx1_ref, my0_ref, my1_ref,
+                           bounds_ref, coef_ref, out_ref, acc,
+                           *, n_tiles: int, deg: int):
+    h = pl.program_id(1)
+    k = (deg + 1) * (deg + 1)
+    ncol = k + 4
+
+    @pl.when(h == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    mx0 = mx0_ref[...]
+    mx1 = mx1_ref[...]
+    my0 = my0_ref[...]
+    my1 = my1_ref[...]
+    coef = coef_ref[...]                                   # (BH, K)
+    table = jnp.concatenate([coef, bounds_ref[...]], axis=1)  # (BH, K+4)
+
+    corners = ((0, ux_ref[...], uy_ref[...]), (1, lx_ref[...], uy_ref[...]),
+               (2, ux_ref[...], ly_ref[...]), (3, lx_ref[...], ly_ref[...]))
+    for slot, qx, qy in corners:
+        one_hot = ((mx0[None, :] <= qx[:, None]) & (qx[:, None] < mx1[None, :]) &
+                   (my0[None, :] <= qy[:, None]) & (qy[:, None] < my1[None, :])
+                   ).astype(coef.dtype)                    # (BQ, BH)
+        acc[:, slot * ncol:(slot + 1) * ncol] += jnp.dot(
+            one_hot, table, preferred_element_type=coef.dtype)
+
+    @pl.when(h == n_tiles - 1)
+    def _finalize():
+        vals = []
+        for slot, qx, qy in corners:
+            c = acc[:, slot * ncol:slot * ncol + k]
+            b0 = acc[:, slot * ncol + k + 0]
+            b1 = acc[:, slot * ncol + k + 1]
+            b2 = acc[:, slot * ncol + k + 2]
+            b3 = acc[:, slot * ncol + k + 3]
+            span_x = jnp.where(b1 > b0, b1 - b0, 1.0)
+            span_y = jnp.where(b3 > b2, b3 - b2, 1.0)
+            us = jnp.clip((2.0 * qx - b0 - b1) / span_x, -1.0, 1.0)
+            vs = jnp.clip((2.0 * qy - b2 - b3) / span_y, -1.0, 1.0)
+            v = jnp.zeros_like(us)
+            for i in range(deg, -1, -1):
+                inner = jnp.zeros_like(vs)
+                for j in range(deg, -1, -1):
+                    inner = inner * vs + c[:, i * (deg + 1) + j]
+                v = v * us + inner
+            vals.append(v)
+        out_ref[...] = vals[0] - vals[1] - vals[2] + vals[3]
+
+
+def corner_count2d_pallas(lx, ux, ly, uy, mx0, mx1, my0, my1, bounds, coeffs,
+                          deg: int, bq: int = DEFAULT_BQ,
+                          bh: int = DEFAULT_BH, interpret: bool = True):
+    """4-corner COUNT over a flat leaf table; shapes pre-padded to block
+    multiples and corners pre-clamped into the root region by the caller
+    (the engine's count2d executor does both)."""
+    Q, L = lx.shape[0], mx0.shape[0]
+    assert Q % bq == 0 and L % bh == 0, (Q, L, bq, bh)
+    assert coeffs.shape[1] == (deg + 1) * (deg + 1), coeffs.shape
+    n_tiles = L // bh
+    k = (deg + 1) * (deg + 1)
+    kernel = functools.partial(_corner_count2d_kernel, n_tiles=n_tiles,
+                               deg=deg)
+    return pl.pallas_call(
+        kernel,
+        grid=(Q // bq, n_tiles),
+        in_specs=[
+            pl.BlockSpec((bq,), lambda i, j: (i,)),
+            pl.BlockSpec((bq,), lambda i, j: (i,)),
+            pl.BlockSpec((bq,), lambda i, j: (i,)),
+            pl.BlockSpec((bq,), lambda i, j: (i,)),
+            pl.BlockSpec((bh,), lambda i, j: (j,)),
+            pl.BlockSpec((bh,), lambda i, j: (j,)),
+            pl.BlockSpec((bh,), lambda i, j: (j,)),
+            pl.BlockSpec((bh,), lambda i, j: (j,)),
+            pl.BlockSpec((bh, 4), lambda i, j: (j, 0)),
+            pl.BlockSpec((bh, k), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((Q,), coeffs.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, 4 * (k + 4)), coeffs.dtype)],
+        interpret=interpret,
+    )(lx, ux, ly, uy, mx0, mx1, my0, my1, bounds, coeffs)

@@ -1,23 +1,25 @@
 """Jit'd public wrappers around the Pallas query kernels.
 
-Handles the kernel ABI: query clamping to the index domain, padding queries
-to block multiples (with domain-minimum sentinels, sliced off afterwards) and
-padding the segment table to tile multiples (+inf seg_lo so padded segments
-match nothing).  ``from_index`` adapts a core.PolyFitIndex1D.
+The segment-table layout these kernels consume is now the canonical
+``repro.engine.plan.IndexPlan`` (``SegTable`` remains as an alias, and
+``from_index`` as the adapter constructor, for callers that want the raw
+kernels without the engine's fused refinement path).  The wrappers handle
+the kernel ABI only: query clamping to the index domain and padding queries
+to block multiples (with domain-minimum sentinels, sliced off afterwards).
 
 ``backend`` selects: 'pallas' (interpret-mode on CPU — the TPU-shaped code
 path) or 'ref' (plain XLA, faster on CPU hosts; identical semantics, see
-ref.py).  Benchmarks run both.
+ref.py).  Benchmarks run both.  For the full engine — backend dispatch plus
+in-path Q_rel refinement — use ``repro.engine.Engine``.
 """
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
+from ..engine.plan import IndexPlan, build_plan
 from . import ref as _ref
 from .poly_eval import DEFAULT_BH, DEFAULT_BQ, poly_eval_pallas
 from .range_sum import range_sum_pallas
@@ -25,47 +27,18 @@ from .range_max import range_max_pallas
 
 __all__ = ["SegTable", "from_index", "poly_eval", "range_sum", "range_max"]
 
-
-class SegTable(NamedTuple):
-    """Flat, tile-padded segment table (device arrays, query dtype)."""
-
-    seg_lo: jnp.ndarray     # (Hp,) +inf padded
-    seg_next: jnp.ndarray   # (Hp,) next segment's lo; +inf for last/padding
-    seg_hi: jnp.ndarray     # (Hp,)
-    coeffs: jnp.ndarray     # (Hp, deg+1) zero padded
-    seg_agg: jnp.ndarray    # (Hp,) -inf padded (max/min only; zeros for sum)
-    h: int                  # true segment count
+# The flat tile-padded segment table was promoted into the engine's
+# canonical plan; the historical name stays importable.
+SegTable = IndexPlan
 
 
-def _pad_to(x, mult, fill):
-    n = x.shape[0]
-    p = (-n) % mult
-    if p == 0:
-        return x
-    pad_shape = (p,) + x.shape[1:]
-    return jnp.concatenate([x, jnp.full(pad_shape, fill, x.dtype)])
+def from_index(index, dtype=jnp.float32, bh: int = DEFAULT_BH) -> IndexPlan:
+    """Build a kernel-ready IndexPlan from a core.index.PolyFitIndex1D.
 
-
-def _big(dtype):
-    """Huge-but-finite sentinel: +-inf would produce 0*inf = NaN inside the
-    one-hot matmuls, so padding and the open last boundary use finfo.max/4."""
-    return float(np.finfo(np.dtype(dtype)).max) / 4
-
-
-def from_index(index, dtype=jnp.float32, bh: int = DEFAULT_BH) -> SegTable:
-    """Build a SegTable from a core.index.PolyFitIndex1D."""
-    big = _big(dtype)
-    seg_lo = jnp.asarray(index.seg_lo, dtype)
-    seg_hi = jnp.asarray(index.seg_hi, dtype)
-    nxt = jnp.concatenate([seg_lo[1:], jnp.full((1,), big, dtype)])
-    coeffs = jnp.asarray(index.coeffs, dtype)
-    agg = (jnp.asarray(index.seg_agg, dtype) if index.seg_agg is not None
-           else jnp.zeros_like(seg_lo))
-    h = int(seg_lo.shape[0])
-    return SegTable(
-        _pad_to(seg_lo, bh, big), _pad_to(nxt, bh, big),
-        _pad_to(seg_hi, bh, big), _pad_to(coeffs, bh, 0.0),
-        _pad_to(agg, bh, -jnp.inf), h)
+    Skips the exact-refinement arrays (raw-kernel callers measure the pure
+    approximation path); ``engine.build_plan`` includes them.
+    """
+    return build_plan(index, dtype=dtype, bh=bh, with_exact=False)
 
 
 def _pad_queries(q, bq, fill):
@@ -77,15 +50,15 @@ def _pad_queries(q, bq, fill):
 
 
 @functools.partial(jax.jit, static_argnames=("backend", "bq", "bh", "interpret"))
-def poly_eval(table: SegTable, q, backend: str = "pallas",
+def poly_eval(table: IndexPlan, q, backend: str = "pallas",
               bq: int = DEFAULT_BQ, bh: int = DEFAULT_BH,
               interpret: bool = True):
     q = jnp.asarray(q, table.coeffs.dtype)
     dom_lo = table.seg_lo[0]
     q = jnp.maximum(q, dom_lo)
     if backend == "ref":
-        # padded segments (+inf lo) are never matched by locate/one-hot, so
-        # ref can consume the padded table directly (keeps h un-traced)
+        # padded segments (sentinel lo) are never matched by locate/one-hot,
+        # so ref can consume the padded table directly
         return _ref.poly_eval_ref(q, table.seg_lo, table.seg_next,
                                   table.seg_hi, table.coeffs)
     qp, n = _pad_queries(q, bq, dom_lo)
@@ -95,7 +68,7 @@ def poly_eval(table: SegTable, q, backend: str = "pallas",
 
 
 @functools.partial(jax.jit, static_argnames=("backend", "bq", "bh", "interpret"))
-def range_sum(table: SegTable, lq, uq, backend: str = "pallas",
+def range_sum(table: IndexPlan, lq, uq, backend: str = "pallas",
               bq: int = DEFAULT_BQ, bh: int = DEFAULT_BH,
               interpret: bool = True):
     dt = table.coeffs.dtype
@@ -112,7 +85,7 @@ def range_sum(table: SegTable, lq, uq, backend: str = "pallas",
 
 
 @functools.partial(jax.jit, static_argnames=("backend", "bq", "bh", "interpret"))
-def range_max(table: SegTable, lq, uq, backend: str = "pallas",
+def range_max(table: IndexPlan, lq, uq, backend: str = "pallas",
               bq: int = DEFAULT_BQ, bh: int = DEFAULT_BH,
               interpret: bool = True):
     dt = table.coeffs.dtype

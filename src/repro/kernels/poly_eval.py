@@ -35,6 +35,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..core.poly import horner, scale_unit
+
 __all__ = ["poly_eval_pallas", "DEFAULT_BQ", "DEFAULT_BH"]
 
 DEFAULT_BQ = 256
@@ -66,15 +68,8 @@ def _poly_eval_kernel(q_ref, lo_ref, nxt_ref, hi_ref, coef_ref, out_ref,
 
     @pl.when(h == n_tiles - 1)
     def _finalize():
-        c = acc_coef[...]
-        slo = acc_lo[...]
-        shi = acc_hi[...]
-        span = jnp.where(shi > slo, shi - slo, 1.0)
-        u = jnp.clip((2.0 * q - slo - shi) / span, -1.0, 1.0)
-        acc = c[:, deg]
-        for j in range(deg - 1, -1, -1):
-            acc = acc * u + c[:, j]
-        out_ref[...] = acc
+        u = scale_unit(q, acc_lo[...], acc_hi[...])
+        out_ref[...] = horner(acc_coef[...], u)
 
 
 def poly_eval_pallas(q, seg_lo, seg_next, seg_hi, coeffs,

@@ -23,47 +23,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..core.poly import clipped_poly_max
 from .poly_eval import DEFAULT_BH, DEFAULT_BQ
 
 __all__ = ["range_max_pallas"]
 
 _NEG = -jnp.inf
-
-
-def _horner_cols(c, u, deg):
-    v = c[:, deg]
-    for j in range(deg - 1, -1, -1):
-        v = v * u + c[:, j]
-    return v
-
-
-def _clipped_poly_max(c, slo, shi, a, b, deg):
-    """max_{k in [a, b]} P(u(k)) per row; empty (a > b) -> -inf."""
-    span = jnp.where(shi > slo, shi - slo, 1.0)
-    ua = jnp.clip((2.0 * a - slo - shi) / span, -1.0, 1.0)
-    ub = jnp.clip((2.0 * b - slo - shi) / span, -1.0, 1.0)
-    best = jnp.maximum(_horner_cols(c, ua, deg), _horner_cols(c, ub, deg))
-    if deg >= 2:
-        # P'(u) = c1 + 2 c2 u (+ 3 c3 u^2): closed-form roots
-        c1 = c[:, 1]
-        c2 = 2.0 * c[:, 2]
-        if deg == 2:
-            r = jnp.where(jnp.abs(c2) > 0, -c1 / jnp.where(c2 == 0, 1.0, c2), ua)
-            roots = [r]
-        else:  # deg == 3
-            c3 = 3.0 * c[:, 3]
-            disc = c2 * c2 - 4.0 * c3 * c1
-            sq = jnp.sqrt(jnp.maximum(disc, 0.0))
-            den = jnp.where(jnp.abs(c3) > 0, 2.0 * c3, 1.0)
-            quad_ok = (jnp.abs(c3) > 0) & (disc >= 0)
-            lin = jnp.where(jnp.abs(c2) > 0, -c1 / jnp.where(c2 == 0, 1.0, c2), ua)
-            r1 = jnp.where(quad_ok, (-c2 - sq) / den, lin)
-            r2 = jnp.where(quad_ok, (-c2 + sq) / den, lin)
-            roots = [r1, r2]
-        for r in roots:
-            rc = jnp.clip(r, ua, ub)
-            best = jnp.maximum(best, _horner_cols(c, rc, deg))
-    return jnp.where(a <= b, best, _NEG)
 
 
 def _range_max_kernel(lq_ref, uq_ref, lo_ref, nxt_ref, hi_ref, coef_ref,
@@ -108,10 +73,10 @@ def _range_max_kernel(lq_ref, uq_ref, lo_ref, nxt_ref, hi_ref, coef_ref,
         shi_u = acc[:, ncol + deg + 2]
         same = (slo_l == slo_u) & (shi_l == shi_u)
         # left boundary: [lq, min(hi_l, uq)], suppressed when lq past hi_l
-        m_left = _clipped_poly_max(cl, slo_l, shi_l, lq, jnp.minimum(shi_l, uq), deg)
+        m_left = clipped_poly_max(cl, slo_l, shi_l, lq, jnp.minimum(shi_l, uq))
         m_left = jnp.where(lq <= shi_l, m_left, _NEG)
         # right boundary: [max(lo_u, lq), uq], suppressed when same segment
-        m_right = _clipped_poly_max(cu, slo_u, shi_u, jnp.maximum(slo_u, lq), uq, deg)
+        m_right = clipped_poly_max(cu, slo_u, shi_u, jnp.maximum(slo_u, lq), uq)
         m_right = jnp.where(same, _NEG, m_right)
         out_ref[...] = jnp.maximum(jnp.maximum(m_left, m_right), acc_int[...])
 

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..core.poly import horner, scale_unit
 from .poly_eval import DEFAULT_BH, DEFAULT_BQ
 
 __all__ = ["range_sum_pallas"]
@@ -53,12 +54,7 @@ def _range_sum_kernel(lq_ref, uq_ref, lo_ref, nxt_ref, hi_ref, coef_ref,
             c = acc[:, slot * ncol:slot * ncol + deg + 1]
             slo = acc[:, slot * ncol + deg + 1]
             shi = acc[:, slot * ncol + deg + 2]
-            span = jnp.where(shi > slo, shi - slo, 1.0)
-            u = jnp.clip((2.0 * q - slo - shi) / span, -1.0, 1.0)
-            v = c[:, deg]
-            for j in range(deg - 1, -1, -1):
-                v = v * u + c[:, j]
-            vals.append(v)
+            vals.append(horner(c, scale_unit(q, slo, shi)))
         out_ref[...] = vals[1] - vals[0]
 
 

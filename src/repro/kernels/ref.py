@@ -3,93 +3,87 @@
 These mirror the kernels' contracts exactly — including the query-clamp and
 the one-hot membership rule one_hot[q, j] = (seg_lo[j] <= q) & (q <
 seg_next[j]) — so tests can assert elementwise equality at matching dtypes.
-They are also the XLA fallback path used by ops.py when interpret-mode
-Pallas would be slower than plain XLA (CPU hosts).
+They are also the XLA fallback path used by ops.py / the engine when
+interpret-mode Pallas would be slower than plain XLA (CPU hosts).
+
+Shared Horner/locate/clamp logic lives in ``core.poly`` (DESIGN.md §3); this
+module only adds the kernel-contract glue (clamping rules, dense interior
+reductions, 2-D leaf membership).
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-__all__ = ["poly_eval_ref", "range_sum_ref", "range_max_ref"]
+from ..core.poly import clipped_poly_max, eval_segments, locate
 
-
-def _locate(q, seg_lo):
-    idx = jnp.searchsorted(seg_lo, q, side="right") - 1
-    return jnp.clip(idx, 0, seg_lo.shape[0] - 1)
-
-
-def _eval_at(q, seg_lo, seg_hi, coeffs):
-    idx = _locate(q, seg_lo)
-    lo = seg_lo[idx]
-    hi = seg_hi[idx]
-    span = jnp.where(hi > lo, hi - lo, 1.0)
-    u = jnp.clip((2.0 * q - lo - hi) / span, -1.0, 1.0)
-    c = coeffs[idx]
-    deg = coeffs.shape[1] - 1
-    acc = c[..., deg]
-    for j in range(deg - 1, -1, -1):
-        acc = acc * u + c[..., j]
-    return acc
+__all__ = ["poly_eval_ref", "range_sum_ref", "range_max_ref",
+           "corner_count2d_ref"]
 
 
 def poly_eval_ref(q, seg_lo, seg_next, seg_hi, coeffs):
     q = jnp.maximum(q, seg_lo[0])
-    return _eval_at(q, seg_lo, seg_hi, coeffs)
+    return eval_segments(q, seg_lo, seg_hi, coeffs)
 
 
 def range_sum_ref(lq, uq, seg_lo, seg_next, seg_hi, coeffs):
     lq = jnp.maximum(lq, seg_lo[0])
     uq = jnp.maximum(uq, seg_lo[0])
-    return (_eval_at(uq, seg_lo, seg_hi, coeffs)
-            - _eval_at(lq, seg_lo, seg_hi, coeffs))
-
-
-def _clipped_poly_max(c, slo, shi, a, b):
-    deg = c.shape[-1] - 1
-    span = jnp.where(shi > slo, shi - slo, 1.0)
-    ua = jnp.clip((2.0 * a - slo - shi) / span, -1.0, 1.0)
-    ub = jnp.clip((2.0 * b - slo - shi) / span, -1.0, 1.0)
-
-    def horner(u):
-        acc = c[..., deg]
-        for j in range(deg - 1, -1, -1):
-            acc = acc * u + c[..., j]
-        return acc
-
-    best = jnp.maximum(horner(ua), horner(ub))
-    if deg >= 2:
-        c1 = c[..., 1]
-        c2 = 2.0 * c[..., 2]
-        if deg == 2:
-            roots = [jnp.where(jnp.abs(c2) > 0,
-                               -c1 / jnp.where(c2 == 0, 1.0, c2), ua)]
-        else:
-            c3 = 3.0 * c[..., 3]
-            disc = c2 * c2 - 4.0 * c3 * c1
-            sq = jnp.sqrt(jnp.maximum(disc, 0.0))
-            den = jnp.where(jnp.abs(c3) > 0, 2.0 * c3, 1.0)
-            quad_ok = (jnp.abs(c3) > 0) & (disc >= 0)
-            lin = jnp.where(jnp.abs(c2) > 0, -c1 / jnp.where(c2 == 0, 1.0, c2), ua)
-            roots = [jnp.where(quad_ok, (-c2 - sq) / den, lin),
-                     jnp.where(quad_ok, (-c2 + sq) / den, lin)]
-        for r in roots:
-            best = jnp.maximum(best, horner(jnp.clip(r, ua, ub)))
-    return jnp.where(a <= b, best, -jnp.inf)
+    return (eval_segments(uq, seg_lo, seg_hi, coeffs)
+            - eval_segments(lq, seg_lo, seg_hi, coeffs))
 
 
 def range_max_ref(lq, uq, seg_lo, seg_next, seg_hi, coeffs, seg_agg):
     lq = jnp.maximum(lq, seg_lo[0])
     uq = jnp.maximum(uq, seg_lo[0])
-    il = _locate(lq, seg_lo)
-    iu = _locate(uq, seg_lo)
+    il = locate(lq, seg_lo)
+    iu = locate(uq, seg_lo)
     same = il == iu
-    m_left = _clipped_poly_max(coeffs[il], seg_lo[il], seg_hi[il],
-                               lq, jnp.minimum(seg_hi[il], uq))
+    m_left = clipped_poly_max(coeffs[il], seg_lo[il], seg_hi[il],
+                              lq, jnp.minimum(seg_hi[il], uq))
     m_left = jnp.where(lq <= seg_hi[il], m_left, -jnp.inf)
-    m_right = _clipped_poly_max(coeffs[iu], seg_lo[iu], seg_hi[iu],
-                                jnp.maximum(seg_lo[iu], lq), uq)
+    m_right = clipped_poly_max(coeffs[iu], seg_lo[iu], seg_hi[iu],
+                               jnp.maximum(seg_lo[iu], lq), uq)
     m_right = jnp.where(same, -jnp.inf, m_right)
     interior = ((seg_lo[None, :] > lq[:, None]) &
                 (seg_next[None, :] <= uq[:, None]))
     m_mid = jnp.max(jnp.where(interior, seg_agg[None, :], -jnp.inf), axis=1)
     return jnp.maximum(jnp.maximum(m_left, m_right), m_mid)
+
+
+def _leaf_cf_eval(qx, qy, mx0, mx1, my0, my1, bounds, coeffs, deg):
+    """CF at (qx, qy) via the flat-leaf one-hot membership rule.
+
+    one_hot[q, j] = (mx0[j] <= qx < mx1[j]) & (my0[j] <= qy < my1[j]) —
+    identical to the quadtree descent's quadrant rule (ties go to the
+    higher-coordinate leaf) provided queries are pre-clamped into the root
+    region; right/top root-edge leaves carry a huge mx1/my1 sentinel.
+    """
+    one_hot = ((mx0[None, :] <= qx[:, None]) & (qx[:, None] < mx1[None, :]) &
+               (my0[None, :] <= qy[:, None]) & (qy[:, None] < my1[None, :])
+               ).astype(coeffs.dtype)
+    gath = one_hot @ jnp.concatenate([coeffs, bounds], axis=1)
+    k = coeffs.shape[1]
+    c, b = gath[:, :k], gath[:, k:]
+    span_x = jnp.where(b[:, 1] > b[:, 0], b[:, 1] - b[:, 0], 1.0)
+    span_y = jnp.where(b[:, 3] > b[:, 2], b[:, 3] - b[:, 2], 1.0)
+    us = jnp.clip((2.0 * qx - b[:, 0] - b[:, 1]) / span_x, -1.0, 1.0)
+    vs = jnp.clip((2.0 * qy - b[:, 2] - b[:, 3]) / span_y, -1.0, 1.0)
+    acc = jnp.zeros_like(us)
+    for i in range(deg, -1, -1):
+        inner = jnp.zeros_like(vs)
+        for j in range(deg, -1, -1):
+            inner = inner * vs + c[:, i * (deg + 1) + j]
+        acc = acc * us + inner
+    return acc
+
+
+def corner_count2d_ref(lx, ux, ly, uy, mx0, mx1, my0, my1, bounds, coeffs,
+                       deg):
+    """4-corner inclusion-exclusion COUNT (Eq. 19) over the flat leaf table.
+
+    Caller must pre-clamp the corner coordinates into the root region (the
+    engine's count2d executor does this).
+    """
+    ev = lambda qx, qy: _leaf_cf_eval(qx, qy, mx0, mx1, my0, my1, bounds,
+                                      coeffs, deg)
+    return ev(ux, uy) - ev(lx, uy) - ev(ux, ly) + ev(lx, ly)

@@ -1,3 +1,5 @@
-from .step import make_serve_step, make_prefill
+from .aggregates import AggregateService
+from .step import make_aggregate_step, make_prefill, make_serve_step
 
-__all__ = ["make_serve_step", "make_prefill"]
+__all__ = ["make_serve_step", "make_prefill", "make_aggregate_step",
+           "AggregateService"]

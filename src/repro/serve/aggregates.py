@@ -1,0 +1,90 @@
+"""Aggregate-query serving on the unified engine (DESIGN.md §7).
+
+``AggregateService`` is the deployment-shaped wrapper around
+``repro.engine``: it builds one PolyFit index per (dataset, aggregate),
+lowers each to a canonical device-resident plan once, and serves batched
+requests through per-request-type callables created by
+``serve.step.make_aggregate_step``.  The backend ('xla' | 'pallas' | 'ref')
+is a constructor argument, so the same service code runs the XLA reference
+path on CPU hosts and the Pallas kernels on TPU.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import build_index_1d, build_index_2d
+from ..data import hki_series, osm_points, tweet_latitudes
+from ..engine import Engine, build_plan, build_plan_2d
+from .step import make_aggregate_step
+
+__all__ = ["AggregateService"]
+
+
+class AggregateService:
+    """Holds one plan per (dataset, aggregate); serves batched requests.
+
+    Request kinds: 'count' (1-D COUNT over TWEET latitudes), 'max' (1-D MAX
+    over the HKI series), 'count2d' (2-key COUNT over OSM points).
+    """
+
+    def __init__(self, backend: str = "xla", eps_abs: float = 100.0,
+                 eps_rel: Optional[float] = 0.01, n1: int = 150_000,
+                 n2: int = 60_000, interpret: bool = True,
+                 verbose: bool = True):
+        self.backend = backend
+        self.eps_rel = eps_rel
+        say = print if verbose else (lambda *a, **k: None)
+        say(f"[server] building indexes (backend={backend}) ...")
+        t0 = time.time()
+        lat = tweet_latitudes(n1)
+        count_idx = build_index_1d(lat, None, "count", deg=2,
+                                   delta=eps_abs / 2)
+        ts, vals = hki_series(n1)
+        max_idx = build_index_1d(ts, vals, "max", deg=3, delta=eps_abs)
+        px, py = osm_points(n2)
+        idx2d = build_index_2d(px, py, deg=3, delta=eps_abs / 4)
+
+        self.engine = Engine(backend=backend, interpret=interpret)
+        self.plans = {
+            "count": build_plan(count_idx),
+            "max": build_plan(max_idx),
+            "count2d": build_plan_2d(idx2d),
+        }
+        self.domains: Dict[str, Tuple[float, ...]] = {
+            "count": (float(lat.min()), float(lat.max())),
+            "max": (float(ts.min()), float(ts.max())),
+            "count2d": (float(px.min()), float(px.max()),
+                        float(py.min()), float(py.max())),
+        }
+        # one engine-bound callable per request type — the only dispatch a
+        # request pays is a dict lookup; everything below it is one jitted
+        # executable per (aggregate, backend, batch-bucket)
+        self._steps = {kind: make_aggregate_step(self.engine, plan, eps_rel)
+                       for kind, plan in self.plans.items()}
+        say(f"[server] ready in {time.time() - t0:.1f}s — sizes: " +
+            " ".join(f"{k}={p.size_bytes()}B" for k, p in self.plans.items()))
+
+    def serve(self, kind: str, *ranges):
+        """Answer one batched request; blocks until the device is done."""
+        res = self._steps[kind](*ranges)
+        jax.block_until_ready(res.answer)
+        return res
+
+    def warmup(self, batch_size: int = 1024) -> None:
+        """Pre-compile the per-request-type executables for one bucket."""
+        c0, c1 = self.domains["count"]
+        l = jnp.full((batch_size,), c0)
+        u = jnp.full((batch_size,), c1)
+        self.serve("count", l, u)
+        m0, m1 = self.domains["max"]
+        self.serve("max", jnp.full((batch_size,), m0),
+                   jnp.full((batch_size,), m1))
+        x0, x1, y0, y1 = self.domains["count2d"]
+        self.serve("count2d", jnp.full((batch_size,), x0),
+                   jnp.full((batch_size,), x1),
+                   jnp.full((batch_size,), y0),
+                   jnp.full((batch_size,), y1))

@@ -1,15 +1,29 @@
 """serve_step: one-token decode with a resident KV/SSM cache (the function
-the decode_* / long_* dry-run cells lower), plus the prefill entry."""
+the decode_* / long_* dry-run cells lower), plus the prefill entry and the
+aggregate-query request-step factory (the PolyFit serving hot path)."""
 from __future__ import annotations
 
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
 from ..models import decode_step, prefill
 
-__all__ = ["make_serve_step", "make_prefill"]
+__all__ = ["make_serve_step", "make_prefill", "make_aggregate_step"]
+
+
+def make_aggregate_step(engine, plan, eps_rel: Optional[float] = None) -> Callable:
+    """One serving callable per request type (DESIGN.md §7).
+
+    Binds (engine, plan, guarantee) once; each call pads the batch to its
+    bucket and enters the engine's fused jitted path — approximation, Q_rel
+    test and vectorized refinement in a single executable, with no per-query
+    Python dispatch.  1-D plans take (lq, uq); 2-D plans (lx, ux, ly, uy).
+    """
+    def aggregate_step(*ranges):
+        return engine.query(plan, *ranges, eps_rel=eps_rel)
+    return aggregate_step
 
 
 def make_serve_step(cfg) -> Callable:

@@ -1,0 +1,194 @@
+"""Engine integration: every backend must answer every query type within
+the paper's certified error bounds, and the backends must agree with each
+other (and with the core reference path) on identical query batches."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core import (ExactMax, ExactSum, build_index_1d,  # noqa: E402
+                        build_index_2d, query_count_2d, query_max, query_sum)
+from repro.engine import (BACKENDS, Engine, build_plan,  # noqa: E402
+                          build_plan_2d)
+
+N = 3000
+NQ = 400
+DELTA = 25.0
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(7)
+    keys = np.sort(rng.uniform(0, 800, N))
+    meas = rng.uniform(0, 10, N)
+    return keys, meas
+
+
+@pytest.fixture(scope="module")
+def queries(data):
+    keys, _ = data
+    rng = np.random.default_rng(11)
+    a = keys[rng.integers(0, N, NQ)]
+    b = keys[rng.integers(0, N, NQ)]
+    return np.minimum(a, b), np.maximum(a, b)
+
+
+@pytest.fixture(scope="module")
+def plans(data):
+    keys, meas = data
+    out = {}
+    for agg, m, deg in (("sum", meas, 2), ("count", None, 2),
+                        ("max", meas * 100, 3), ("min", meas * 100, 3)):
+        idx = build_index_1d(keys, m, agg, deg=deg, delta=DELTA)
+        out[agg] = (idx, build_plan(idx))
+    return out
+
+
+@pytest.fixture(scope="module")
+def plan2d():
+    rng = np.random.default_rng(13)
+    px = rng.uniform(0, 120, 5000)
+    py = rng.uniform(0, 120, 5000)
+    idx = build_index_2d(px, py, deg=2, delta=DELTA, max_depth=6)
+    qa = rng.uniform(0, 120, 256)
+    qb = qa + rng.uniform(0.5, 40, 256)
+    qc = rng.uniform(0, 120, 256)
+    qd = qc + rng.uniform(0.5, 40, 256)
+    return px, py, idx, build_plan_2d(idx), (qa, qb, qc, qd)
+
+
+def _truth_1d(agg, keys, meas, lq, uq):
+    if agg in ("sum", "count"):
+        m = np.ones_like(keys) if agg == "count" else meas
+        ex = ExactSum.build(keys, m)
+        return np.asarray(ex.cf_at(jnp.asarray(uq)) - ex.cf_at(jnp.asarray(lq)))
+    sgn = -1.0 if agg == "min" else 1.0
+    ex = ExactMax.build(keys, sgn * meas)
+    return sgn * np.asarray(ex.query(jnp.asarray(lq), jnp.asarray(uq)))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("agg", ["sum", "count", "max", "min"])
+def test_certified_bounds_1d(plans, data, queries, agg, backend):
+    """Lemma 5.1/5.3: every backend's raw answer obeys the Q_abs bound."""
+    keys, meas = data
+    lq, uq = queries
+    _, plan = plans[agg]
+    res = Engine(backend=backend).query(plan, lq, uq)
+    truth = _truth_1d(agg, keys, meas * 100 if agg in ("max", "min") else meas,
+                      lq, uq)
+    bound = 2 * DELTA if agg in ("sum", "count") else DELTA
+    assert np.max(np.abs(np.asarray(res.answer) - truth)) <= bound + 1e-6
+
+
+@pytest.mark.parametrize("agg", ["sum", "count", "max", "min"])
+def test_cross_backend_equivalence_1d(plans, queries, agg):
+    """All three backends produce identical f64 answers (and match core)."""
+    idx, plan = plans[agg]
+    lq, uq = queries
+    outs = {b: np.asarray(Engine(backend=b).query(plan, lq, uq).answer)
+            for b in BACKENDS}
+    for b in ("pallas", "ref"):
+        np.testing.assert_allclose(outs[b], outs["xla"], rtol=1e-9, atol=1e-9)
+    qfn = query_sum if agg in ("sum", "count") else query_max
+    core = np.asarray(qfn(idx, lq, uq).answer)
+    np.testing.assert_allclose(outs["xla"], core, rtol=1e-9, atol=1e-9)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("agg", ["sum", "max"])
+def test_fused_qrel_refinement(plans, data, queries, agg, backend):
+    """Lemma 5.2/5.4 + in-path refinement: final answers satisfy eps_rel."""
+    keys, meas = data
+    lq, uq = queries
+    _, plan = plans[agg]
+    eps_rel = 0.05
+    res = Engine(backend=backend).query(plan, lq, uq, eps_rel=eps_rel)
+    truth = _truth_1d(agg, keys, meas * 100 if agg == "max" else meas, lq, uq)
+    ans = np.asarray(res.answer)
+    pos = np.abs(truth) > 0
+    rel = np.abs(ans[pos] - truth[pos]) / np.abs(truth[pos])
+    assert rel.max() <= eps_rel + 1e-9
+    # the index must stay useful: refinement cannot fire on every query
+    assert np.asarray(res.refined).mean() < 1.0
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_certified_bounds_2d(plan2d, backend):
+    """Lemma 6.3: 2-key COUNT within 4*delta on every backend."""
+    px, py, idx, plan, (qa, qb, qc, qd) = plan2d
+    res = Engine(backend=backend).query(plan, qa, qb, qc, qd)
+    truth = np.asarray(idx.exact.cf(qb, qd) - idx.exact.cf(qa, qd)
+                       - idx.exact.cf(qb, qc) + idx.exact.cf(qa, qc))
+    assert np.max(np.abs(np.asarray(res.answer) - truth)) <= 4 * DELTA + 1e-6
+
+
+def test_cross_backend_equivalence_2d(plan2d):
+    px, py, idx, plan, (qa, qb, qc, qd) = plan2d
+    outs = {b: np.asarray(Engine(backend=b).count2d(plan, qa, qb, qc, qd).answer)
+            for b in BACKENDS}
+    for b in ("pallas", "ref"):
+        np.testing.assert_allclose(outs[b], outs["xla"], rtol=1e-9, atol=1e-9)
+    core = np.asarray(query_count_2d(idx, qa, qb, qc, qd).answer)
+    np.testing.assert_allclose(outs["xla"], core, rtol=1e-9, atol=1e-9)
+
+
+def test_qrel_2d_fused(plan2d):
+    px, py, idx, plan, (qa, qb, qc, qd) = plan2d
+    eps_rel = 0.05
+    res = Engine(backend="ref").count2d(plan, qa, qb, qc, qd, eps_rel=eps_rel)
+    truth = np.asarray(idx.exact.cf(qb, qd) - idx.exact.cf(qa, qd)
+                       - idx.exact.cf(qb, qc) + idx.exact.cf(qa, qc))
+    ans = np.asarray(res.answer)
+    pos = truth > 0
+    rel = np.abs(ans[pos] - truth[pos]) / truth[pos]
+    assert rel.max() <= eps_rel + 1e-9
+
+
+@pytest.mark.parametrize("nq", [3, 64, 130, 700])
+def test_batch_bucketing_consistency(plans, data, nq):
+    """Padding to power-of-two buckets must not change any answer."""
+    keys, meas = data
+    rng = np.random.default_rng(nq)
+    a = keys[rng.integers(0, N, nq)]
+    b = keys[rng.integers(0, N, nq)]
+    lq, uq = np.minimum(a, b), np.maximum(a, b)
+    _, plan = plans["sum"]
+    eng = Engine(backend="pallas")
+    got = np.asarray(eng.sum(plan, lq, uq).answer)
+    assert got.shape == (nq,)
+    ref = np.asarray(Engine(backend="xla").sum(plan, lq, uq).answer)
+    np.testing.assert_allclose(got, ref, rtol=1e-9, atol=1e-9)
+
+
+def test_pallas_deg4_max_falls_back(data, queries):
+    """deg-4 MAX has no in-kernel closed form; the engine must still answer
+    within the certified bound on the pallas backend (XLA fallback)."""
+    keys, meas = data
+    idx = build_index_1d(keys, meas * 100, "max", deg=4, delta=DELTA)
+    plan = build_plan(idx)
+    lq, uq = queries
+    res = Engine(backend="pallas").extremum(plan, lq, uq)
+    truth = _truth_1d("max", keys, meas * 100, lq, uq)
+    assert np.max(np.abs(np.asarray(res.answer) - truth)) <= DELTA + 1e-6
+
+
+def test_refinement_requires_exact_arrays(data):
+    keys, meas = data
+    idx = build_index_1d(keys, meas, "sum", deg=2, delta=DELTA,
+                         keep_exact=False)
+    plan = build_plan(idx)
+    with pytest.raises(ValueError, match="refinement"):
+        Engine().sum(plan, keys[:4], keys[-4:], eps_rel=0.01)
+
+
+def test_serve_step_routes_through_engine(plans, queries):
+    from repro.serve.step import make_aggregate_step
+    _, plan = plans["count"]
+    lq, uq = queries
+    step = make_aggregate_step(Engine(backend="ref"), plan, eps_rel=0.05)
+    res = step(lq, uq)
+    assert res.answer.shape == (NQ,)
+    assert np.asarray(res.refined).mean() < 1.0

@@ -1,9 +1,16 @@
 """Guarantee invariants for 1-D queries (Lemmas 5.1-5.4) — the paper's core
-correctness claims, including hypothesis property tests."""
+correctness claims.  The property cases run as vendored parametrized tests
+(fixed seed grids) so the tier-1 suite collects without hypothesis; when
+hypothesis is installed they additionally run as full property tests."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core import (ExactMax, ExactSum, build_index_1d, query_max,
                         query_sum)
@@ -99,11 +106,8 @@ def test_count_query():
     assert np.max(np.abs(np.asarray(res.answer) - truth)) <= 40.0 + 1e-6
 
 
-@settings(max_examples=25, deadline=None)
-@given(seed=st.integers(0, 10_000), deg=st.integers(1, 3),
-       delta=st.floats(5.0, 200.0))
-def test_property_sum_guarantee(seed, deg, delta):
-    """Property: for arbitrary datasets/deltas the Q_abs bound always holds."""
+def _check_sum_guarantee(seed, deg, delta):
+    """Property body: for arbitrary datasets/deltas the Q_abs bound holds."""
     rng = np.random.default_rng(seed)
     n = int(rng.integers(50, 600))
     keys = np.sort(rng.uniform(0, 100, n))
@@ -118,10 +122,7 @@ def test_property_sum_guarantee(seed, deg, delta):
     assert np.max(np.abs(np.asarray(res.answer) - truth)) <= 2 * delta + 1e-6
 
 
-@settings(max_examples=15, deadline=None)
-@given(seed=st.integers(0, 10_000), deg=st.integers(2, 3),
-       delta=st.floats(10.0, 300.0))
-def test_property_max_guarantee(seed, deg, delta):
+def _check_max_guarantee(seed, deg, delta):
     rng = np.random.default_rng(seed)
     n = int(rng.integers(50, 400))
     keys = np.unique(np.sort(rng.uniform(0, 100, n)))
@@ -131,3 +132,36 @@ def test_property_max_guarantee(seed, deg, delta):
     res = query_max(idx, lq, uq)
     truth = np.asarray(ExactMax.build(keys, meas).query(jnp.asarray(lq), jnp.asarray(uq)))
     assert np.max(np.abs(np.asarray(res.answer) - truth)) <= delta + 1e-6
+
+
+# vendored property grids: deterministic seed/shape sweeps that run without
+# hypothesis (the container may lack it; the tier-1 suite must still cover
+# the invariants)
+@pytest.mark.parametrize("seed,deg,delta", [
+    (0, 1, 5.0), (101, 1, 200.0), (2222, 2, 17.5), (303, 2, 60.0),
+    (4044, 3, 5.0), (505, 3, 120.0), (6666, 2, 200.0), (77, 1, 33.3),
+])
+def test_vendored_sum_guarantee(seed, deg, delta):
+    _check_sum_guarantee(seed, deg, delta)
+
+
+@pytest.mark.parametrize("seed,deg,delta", [
+    (1, 2, 10.0), (112, 2, 300.0), (223, 3, 45.0), (3334, 3, 150.0),
+    (44, 2, 80.0), (5055, 3, 10.0),
+])
+def test_vendored_max_guarantee(seed, deg, delta):
+    _check_max_guarantee(seed, deg, delta)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 10_000), deg=st.integers(1, 3),
+           delta=st.floats(5.0, 200.0))
+    def test_property_sum_guarantee(seed, deg, delta):
+        _check_sum_guarantee(seed, deg, delta)
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 10_000), deg=st.integers(2, 3),
+           delta=st.floats(10.0, 300.0))
+    def test_property_max_guarantee(seed, deg, delta):
+        _check_max_guarantee(seed, deg, delta)
