@@ -13,17 +13,16 @@ the repo root so the perf trajectory is recorded across PRs.
 """
 from __future__ import annotations
 
+import argparse
 import functools
-import json
 import pathlib
 import platform
 import time
 
-import numpy as np
 import jax
 import jax.numpy as jnp
 
-from .common import dataset, row, time_fn
+from .common import dataset, emit_history, row, time_fn
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
@@ -31,20 +30,18 @@ HBM_BW = 819e9
 _BENCH_JSON = pathlib.Path(__file__).resolve().parents[1] / "BENCH_engine.json"
 
 
-def _emit_engine_json(results, meta):
+def _emit_engine_json(results, meta, out_path=None):
     """Append one timestamped record per run (the perf trajectory file)."""
-    history = []
-    if _BENCH_JSON.exists():
-        try:
-            history = json.loads(_BENCH_JSON.read_text())
-        except (json.JSONDecodeError, OSError):
-            history = []
-    history.append({"meta": meta, "results": results})
-    _BENCH_JSON.write_text(json.dumps(history, indent=2) + "\n")
-    print(f"[bench_kernels] wrote {_BENCH_JSON} ({len(history)} records)")
+    emit_history(results, meta, out_path or _BENCH_JSON, "bench_kernels")
 
 
-def run(n=200_000, nq=4096, n2=40_000, nq2=1024, eps_rel=0.01):
+# CI smoke shape: must match a committed BENCH_engine.json record's meta so
+# check_regression.py can pair the fresh run with its baseline
+TINY = dict(n=30_000, nq=1024, n2=10_000, nq2=256)
+
+
+def run(n=200_000, nq=4096, n2=40_000, nq2=1024, eps_rel=0.01,
+        out_path=None):
     from repro.core import build_index_1d, build_index_2d
     from repro.data import make_queries_1d, make_queries_2d
     from repro.engine import BACKENDS, Engine, build_plan, build_plan_2d
@@ -103,7 +100,7 @@ def run(n=200_000, nq=4096, n2=40_000, nq2=1024, eps_rel=0.01):
         "n": n, "nq": nq, "n2": n2, "nq2": nq2,
         "device": jax.devices()[0].platform,
         "machine": platform.machine(),
-    })
+    }, out_path)
 
     # analytic roofline of the fused range_sum kernel on TPU v5e (f32)
     BQ, deg = 256, 2
@@ -120,5 +117,17 @@ def run(n=200_000, nq=4096, n2=40_000, nq2=1024, eps_rel=0.01):
     return rows
 
 
+def main():
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--tiny", action="store_true",
+                   help="small shapes for the CI benchmark-smoke job "
+                        "(meta matches the committed baseline record)")
+    p.add_argument("--out", default=None,
+                   help="write the JSON record here instead of appending "
+                        "to the committed BENCH_engine.json")
+    args = p.parse_args()
+    run(**TINY, out_path=args.out) if args.tiny else run(out_path=args.out)
+
+
 if __name__ == "__main__":
-    run()
+    main()

@@ -32,7 +32,7 @@ def fig11_degree(n=200_000, nq=1000):
 
 
 def fig14_15_sensitivity(n=200_000, nq=1000):
-    from repro.core import (FitingTree, PGMIndex, build_index_1d, query_sum)
+    from repro.core import FitingTree, build_index_1d, query_sum
     from repro.data import make_queries_1d
 
     rows = []

@@ -1,0 +1,121 @@
+"""Dynamic-engine benchmark: update throughput + post-update query latency.
+
+Measures, per backend, on the TWEET 1-D COUNT workload:
+
+* buffered insert/delete throughput (records/s into the delta buffer);
+* query latency with the delta buffer empty, half full and full (the
+  fused delta-scan correction's cost as the buffer fills);
+* merge latency (selective refit + plan install) and the query latency on
+  the freshly installed plan.
+
+Appends one timestamped record per run to ``BENCH_updates.json`` at the
+repo root (same history format as ``BENCH_engine.json``), so the update
+path's perf trajectory is tracked across PRs.
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import platform
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .common import dataset, emit_history, row, time_fn
+
+_BENCH_JSON = pathlib.Path(__file__).resolve().parents[1] / "BENCH_updates.json"
+
+
+def _emit_json(results, meta, out_path=None):
+    emit_history(results, meta, out_path or _BENCH_JSON, "bench_updates")
+
+
+def run(n=100_000, nq=2048, capacity=2048, backends=("xla", "pallas", "ref"),
+        out_path=None):
+    from repro.core import build_index_1d
+    from repro.data import make_queries_1d
+    from repro.engine import DynamicEngine
+
+    rows = []
+    results = []
+
+    def record(name, value, derived=""):
+        rows.append(row(name, value, derived))
+        results.append({"name": name, "us_per_query": value,
+                        "derived": derived})
+
+    keys, _ = dataset("tweet", n)
+    lq, uq = map(jnp.asarray, make_queries_1d(keys, nq))
+    idx = build_index_1d(keys, None, "count", deg=2, delta=50.0)
+    rng = np.random.default_rng(0xD15C)
+    batch = 256
+    lo, hi = float(keys.min()), float(keys.max())
+
+    for backend in backends:
+        dyn = DynamicEngine(idx, backend=backend, capacity=capacity,
+                            auto_refit=False)
+        # warm the append-op compile cache on a throwaway engine so the
+        # throughput numbers measure steady state, not the first jit
+        warm = DynamicEngine(idx, backend=backend, capacity=capacity,
+                             auto_refit=False)
+        warm.insert(rng.uniform(lo, hi, batch))
+        # -- buffered insert throughput (records/s) ----------------------
+        n_batches = capacity // batch
+        ins = [rng.uniform(lo, hi, batch) for _ in range(n_batches)]
+        half = n_batches // 2
+        t0 = time.perf_counter()
+        for b in ins[:half]:
+            dyn.insert(b)
+        jax.block_until_ready(dyn._state[1].ins_keys)
+        dt = time.perf_counter() - t0
+        record(f"updates.insert.{backend}", dt / (half * batch) * 1e6,
+               f"recs_per_s={half * batch / dt:.0f}")
+
+        # -- query latency at half / full fill ----------------------------
+        t, _ = time_fn(lambda l, u: dyn.sum(l, u), lq, uq)
+        record(f"updates.query_halffull.{backend}", t / nq * 1e6,
+               f"pending={dyn.n_pending}")
+        for b in ins[half:]:
+            dyn.insert(b)
+        t, _ = time_fn(lambda l, u: dyn.sum(l, u), lq, uq)
+        record(f"updates.query_full.{backend}", t / nq * 1e6,
+               f"pending={dyn.n_pending}")
+
+        # -- merge (selective refit + install) ----------------------------
+        t0 = time.perf_counter()
+        dyn.flush()
+        record(f"updates.merge.{backend}",
+               (time.perf_counter() - t0) * 1e6,
+               f"h={dyn.index.h}")
+
+        # -- post-merge query latency (buffer empty again) ----------------
+        t, _ = time_fn(lambda l, u: dyn.sum(l, u), lq, uq)
+        record(f"updates.query_postmerge.{backend}", t / nq * 1e6)
+
+    _emit_json(results, {
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "n": n, "nq": nq, "capacity": capacity,
+        "device": jax.devices()[0].platform,
+        "machine": platform.machine(),
+    }, out_path)
+    return rows
+
+
+def main():
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--tiny", action="store_true",
+                   help="small shapes for CI smoke runs")
+    p.add_argument("--out", default=None,
+                   help="write the JSON record here instead of the "
+                        "committed BENCH_updates.json")
+    args = p.parse_args()
+    if args.tiny:
+        run(n=30_000, nq=1024, capacity=1024, out_path=args.out)
+    else:
+        run(out_path=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""CI benchmark-regression gate: compare a fresh bench run to the
+committed baseline.
+
+Reads two BENCH-style JSON histories (lists of {"meta", "results"}
+records), pairs the candidate's latest record with the latest baseline
+record whose meta shape matches (same n/nq/n2/nq2/device), and fails with
+exit code 1 if any shared metric regressed by more than ``--threshold``
+(default 2x, absorbing CI-runner noise).  Exit code 2 means the inputs
+could not be paired — a config error, not a perf regression.
+
+Usage (the ci.yml benchmark-smoke job):
+
+    python -m benchmarks.bench_kernels --tiny --out bench_tiny.json
+    python -m benchmarks.check_regression \
+        --baseline BENCH_engine.json --candidate bench_tiny.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+MATCH_META = ("n", "nq", "n2", "nq2", "device")
+
+
+def _load_history(path: str):
+    try:
+        history = json.loads(pathlib.Path(path).read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"[check_regression] cannot read {path}: {e}")
+        sys.exit(2)
+    if not isinstance(history, list) or not history:
+        print(f"[check_regression] {path}: empty or malformed history")
+        sys.exit(2)
+    return history
+
+
+def _matching_baseline(history, cand_meta):
+    """Latest baseline record whose meta shape matches the candidate's."""
+    want = {k: cand_meta.get(k) for k in MATCH_META}
+    for rec in reversed(history):
+        meta = rec.get("meta", {})
+        if all(meta.get(k) == v for k, v in want.items()):
+            return rec
+    return None
+
+
+def compare(baseline_path: str, candidate_path: str,
+            threshold: float) -> int:
+    cand = _load_history(candidate_path)[-1]
+    base = _matching_baseline(_load_history(baseline_path),
+                              cand.get("meta", {}))
+    if base is None:
+        print("[check_regression] no baseline record matches candidate "
+              f"meta {cand.get('meta')}; re-run the full benchmark and "
+              "commit its record first")
+        return 2
+
+    base_by_name = {r["name"]: r["us_per_query"] for r in base["results"]}
+    failures = []
+    compared = 0
+    for r in cand["results"]:
+        name = r["name"]
+        if name not in base_by_name:
+            print(f"  NEW     {name}: {r['us_per_query']:.3f}us "
+                  "(no baseline yet)")
+            continue
+        compared += 1
+        ref = base_by_name[name]
+        got = r["us_per_query"]
+        ratio = got / ref if ref > 0 else float("inf")
+        status = "FAIL" if ratio > threshold else "ok"
+        print(f"  {status:7s} {name}: {got:.3f}us vs baseline "
+              f"{ref:.3f}us ({ratio:.2f}x)")
+        if ratio > threshold:
+            failures.append((name, ratio))
+    if compared == 0:
+        print("[check_regression] no shared metrics between candidate and "
+              "baseline")
+        return 2
+    if failures:
+        print(f"[check_regression] {len(failures)} metric(s) regressed "
+              f"beyond {threshold}x: "
+              + ", ".join(f"{n} ({r:.2f}x)" for n, r in failures))
+        return 1
+    print(f"[check_regression] OK — {compared} metrics within "
+          f"{threshold}x of baseline")
+    return 0
+
+
+def main():
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--baseline", required=True,
+                   help="committed BENCH history (e.g. BENCH_engine.json)")
+    p.add_argument("--candidate", required=True,
+                   help="fresh run's BENCH history (e.g. bench_tiny.json)")
+    p.add_argument("--threshold", type=float, default=2.0,
+                   help="fail when candidate/baseline exceeds this ratio")
+    args = p.parse_args()
+    sys.exit(compare(args.baseline, args.candidate, args.threshold))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,10 +1,37 @@
-"""Shared benchmark utilities: datasets, query workloads, timing."""
+"""Shared benchmark utilities: datasets, query workloads, timing,
+perf-trajectory JSON history."""
 from __future__ import annotations
 
+import json
+import pathlib
 import time
 
 import numpy as np
 import jax
+
+
+def emit_history(results, meta, path, label: str) -> None:
+    """Append one timestamped {"meta", "results"} record to a BENCH-style
+    JSON history file (BENCH_engine.json / BENCH_updates.json)."""
+    path = pathlib.Path(path)
+    history = []
+    if path.exists():
+        try:
+            history = json.loads(path.read_text())
+        except (json.JSONDecodeError, OSError) as e:
+            # never silently reset the cross-PR trajectory: keep the broken
+            # file next to the fresh one so the history can be recovered
+            backup = path.with_suffix(path.suffix + ".corrupt")
+            print(f"[{label}] WARNING: {path} unreadable ({e}); saving the "
+                  f"broken file to {backup} and starting a fresh history")
+            try:
+                backup.write_bytes(path.read_bytes())
+            except OSError:
+                pass
+            history = []
+    history.append({"meta": meta, "results": results})
+    path.write_text(json.dumps(history, indent=2) + "\n")
+    print(f"[{label}] wrote {path} ({len(history)} records)")
 
 # Build the paper's three workloads once per process (cached).
 _CACHE = {}

@@ -151,8 +151,8 @@ def main(argv=None):
           "parse) and UNDER-count scan trip counts; cmp/mem/coll(A) are the "
           "analytic model (benchmarks/roofline.py) — dominant term and the "
           "roofline fraction are taken from (A).")
-    print(f"| arch | shape | status | mem/dev GB | cmp(H) | mem(H) | coll(H) "
-          f"| cmp(A) | mem(A) | coll(A) | dominant(A) | frac | note |")
+    print("| arch | shape | status | mem/dev GB | cmp(H) | mem(H) | coll(H) "
+          "| cmp(A) | mem(A) | coll(A) | dominant(A) | frac | note |")
     print("|---|---|---|---|---|---|---|---|---|---|---|---|---|")
     for r in recs:
         if r["status"] == "skipped":

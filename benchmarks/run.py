@@ -4,7 +4,6 @@ Prints ``name,us_per_call,derived`` CSV (see DESIGN.md §8 for the mapping).
     PYTHONPATH=src python -m benchmarks.run [--quick]
 """
 import argparse
-import sys
 
 
 def main() -> None:

@@ -18,7 +18,7 @@ from .poly import (clipped_poly_max, eval_segments, horner, locate,  # noqa: E40
                    scale_unit)
 from .segmentation import (FastAcceptFitter, dp_segmentation,  # noqa: E402
                            greedy_segmentation, parallel_segmentation)
-from .index import PolyFitIndex1D, build_index_1d  # noqa: E402
+from .index import PolyFitIndex1D, assemble_index_1d, build_index_1d  # noqa: E402
 from .index2d import (MergeSortTree, PolyFitIndex2D, build_index_2d,  # noqa: E402
                       count_dominated, dominance_rank, query_count_2d)
 from .queries import (QueryResult, max_eval_segments,  # noqa: E402
@@ -30,6 +30,7 @@ __all__ = [
     "fit_minimax_lawson", "fit_minimax_lp", "lawson_batched", "max_error",
     "rescale", "FastAcceptFitter", "dp_segmentation", "greedy_segmentation",
     "parallel_segmentation", "PolyFitIndex1D", "build_index_1d",
+    "assemble_index_1d",
     "MergeSortTree", "PolyFitIndex2D", "build_index_2d", "count_dominated",
     "dominance_rank", "query_count_2d",
     "ExactMax", "ExactSum", "build_sparse_table", "sparse_table_range_max",

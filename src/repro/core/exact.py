@@ -17,7 +17,6 @@ double as the refinement backend for the relative-error guarantee
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp

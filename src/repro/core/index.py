@@ -37,7 +37,7 @@ from .poly import eval_segments, locate as locate_segments
 from .segmentation import (FastAcceptFitter, Fitter, greedy_segmentation,
                            parallel_segmentation)
 
-__all__ = ["PolyFitIndex1D", "build_index_1d"]
+__all__ = ["PolyFitIndex1D", "build_index_1d", "assemble_index_1d"]
 
 _SUPPORTED = ("sum", "count", "max", "min")
 
@@ -58,6 +58,9 @@ class PolyFitIndex1D:
     exact_sum: Optional[ExactSum]
     exact_max: Optional[ExactMax]
     n: int                   # dataset size
+    # per-segment certified E(I) — the dynamic layer's drift budget is the
+    # headroom delta - seg_err[i] (engine/dynamic.py); None on old pickles
+    seg_err: Optional[np.ndarray] = None
 
     @property
     def h(self) -> int:
@@ -194,12 +197,34 @@ def build_index_1d(
     else:
         segs = greedy_segmentation(fit_k, fit_F, deg, delta, fitter=eff_fitter)
 
+    return assemble_index_1d(segs, k, m_sorted, agg, deg, delta,
+                             keep_exact=keep_exact)
+
+
+def assemble_index_1d(
+    segs: Sequence[PolyModel],
+    k: np.ndarray,
+    m_sorted: np.ndarray,
+    agg: str,
+    deg: int,
+    delta: float,
+    keep_exact: bool = True,
+) -> PolyFitIndex1D:
+    """Assemble a PolyFitIndex1D from fitted segments + sorted data.
+
+    ``k`` must be sorted ascending and ``m_sorted`` in internal space
+    (negated for agg='min'); ``segs`` must tile the key range in order.
+    Shared by ``build_index_1d`` and the dynamic merge path
+    (``engine.dynamic``), which re-emits an index after selective refits.
+    """
+    is_extremal = agg in ("max", "min")
     h = len(segs)
     seg_lo = np.array([s.lo for s in segs])
     seg_hi = np.array([s.hi for s in segs])   # the fit's own scale hi
     coeffs = np.zeros((h, deg + 1))
     for i, s in enumerate(segs):
         coeffs[i, : len(s.coeffs)] = s.coeffs
+    seg_err = np.array([s.err for s in segs])
     seg_start = np.searchsorted(k, seg_lo, side="left").astype(np.int32)
 
     seg_agg = st = None
@@ -225,4 +250,5 @@ def build_index_1d(
         seg_agg=None if seg_agg is None else jnp.asarray(seg_agg),
         st=None if st is None else jnp.asarray(st),
         exact_sum=exact_sum, exact_max=exact_max, n=len(k),
+        seg_err=seg_err,
     )

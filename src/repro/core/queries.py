@@ -19,7 +19,6 @@ fallback is used (the paper likewise recommends deg <= 3 for MAX).
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import NamedTuple
 
 import jax

@@ -18,13 +18,13 @@ max_i |F(k_i) - P(k_i)| — the quantity the δ-guarantees are built on.
 """
 from __future__ import annotations
 
-from typing import Callable, List, Sequence
+from typing import Callable, List
 
 import jax.numpy as jnp
 import numpy as np
 
-from .fitting import (PolyModel, fit_lstsq, fit_minimax_lp,
-                      fit_minimax_lawson, lawson_batched, rescale)
+from .fitting import (PolyModel, fit_lstsq, fit_minimax_lp, fit_minimax_lawson,
+                      lawson_batched)
 
 __all__ = [
     "greedy_segmentation",

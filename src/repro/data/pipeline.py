@@ -12,7 +12,7 @@ query it instead of scanning histograms (``length_stats``).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 import numpy as np

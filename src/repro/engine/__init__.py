@@ -14,9 +14,13 @@ once, then execute every query type through an ``Engine`` with
 Serving, examples and benchmarks all route through this module; the Pallas
 kernels and their jnp oracles are implementation details behind it.
 """
+from .dynamic import (DeltaBuffer, DeltaBuffer2D, DynamicEngine,
+                      DynamicEngine2D)
 from .engine import BACKENDS, Engine
 from .plan import (IndexPlan, IndexPlan2D, big_sentinel, build_plan,
                    build_plan_2d, pad_to_multiple)
 
 __all__ = ["Engine", "BACKENDS", "IndexPlan", "IndexPlan2D", "build_plan",
-           "build_plan_2d", "big_sentinel", "pad_to_multiple"]
+           "build_plan_2d", "big_sentinel", "pad_to_multiple",
+           "DynamicEngine", "DynamicEngine2D", "DeltaBuffer",
+           "DeltaBuffer2D"]

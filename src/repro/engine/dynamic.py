@@ -1,0 +1,866 @@
+"""Dynamic PolyFit: delta-buffered inserts/deletes with selective refit
+(DESIGN.md §9).
+
+A static ``IndexPlan`` freezes the fitted key array; absorbing one new point
+used to mean rebuilding the whole plan.  ``DynamicEngine`` makes plans
+updatable while keeping every certified bound:
+
+* **Delta buffers** — fixed-capacity, device-resident, sentinel-padded
+  arrays (a sorted insert log and delete tombstones), registered as pytree
+  leaves so the fused query paths stay jittable with one compilation per
+  (aggregate, backend, batch-bucket, capacity).
+* **Fused exact correction** — every query executes the static plan's
+  backend-dispatched approximation *and* an exact delta scan
+  (``kernels/delta_scan.py``; one-hot membership matmul, like the segment
+  kernels) in a single jitted executor.  The only approximation error left
+  is the static plan's own E(I) <= delta, so Lemmas 5.1-5.4/6.3-6.4 hold
+  verbatim over the updated dataset (the buffered contribution is exact).
+* **Selective refit** — when the buffer fills, or a segment's accumulated
+  |measure| drift exceeds its error headroom (delta - E(I)), a merge pass
+  re-fits *only* the segments whose spans contain changed keys
+  (``core.segmentation.greedy_segmentation`` on the affected windows);
+  clean SUM/COUNT segments absorb the CF shift of upstream edits as a
+  constant-coefficient bump (adding c to F adds c to the fitted P exactly,
+  leaving E(I) unchanged), and clean MAX/MIN segments are untouched.  The
+  merged index is assembled (``core.index.assemble_index_1d``) and the new
+  plan is installed atomically — plans are immutable pytrees, so queries
+  already in flight keep the old plan and are never blocked; with
+  ``background=True`` the merge itself runs on a worker thread and only the
+  final pointer swap takes the lock.
+
+MAX/MIN deletes cannot be folded into a monotone max correction (the
+deleted point may *be* the maximum), so they trigger an eager synchronous
+merge; SUM/COUNT deletes ride the tombstone buffer like inserts.
+
+``DynamicEngine2D`` applies the same buffering + fused-correction scheme to
+2-key COUNT plans; its merge currently rebuilds the quadtree (selective
+leaf refit is a ROADMAP open item).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from functools import partial
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.fitting import PolyModel, fit_minimax_lp
+from ..core.index import PolyFitIndex1D, _continuum_post, assemble_index_1d
+from ..core.index2d import PolyFitIndex2D, build_index_2d
+from ..core.queries import QueryResult
+from ..core.segmentation import FastAcceptFitter, greedy_segmentation
+from ..kernels import ref as _ref
+from ..kernels.delta_scan import (delta_count2d_pallas, delta_max_pallas,
+                                  delta_sum_pallas)
+from ..kernels.poly_eval import DEFAULT_BQ
+from .engine import (_bucket_size, _pad_bucket, check_pow2, raw_count2d,
+                     raw_extremum, raw_sum, truth_count2d, truth_extremum,
+                     truth_sum)
+from .plan import (IndexPlan, IndexPlan2D, big_sentinel, build_plan,
+                   build_plan_2d)
+
+__all__ = ["DeltaBuffer", "DeltaBuffer2D", "DynamicEngine", "DynamicEngine2D"]
+
+
+# ---------------------------------------------------------------------------
+# device-resident delta buffers (pytree-registered, fixed capacity)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DeltaBuffer:
+    """Sorted insert log + delete tombstones for a 1-D plan.
+
+    Empty slots hold a huge-but-finite sentinel key (``big_sentinel``) so
+    they fail every membership test inside the delta-scan kernels; the
+    kernels never need the fill level.  Values live in *internal* space
+    (negated for MIN plans, mirroring the static index).
+    """
+
+    ins_keys: jnp.ndarray   # (cap,) sorted, sentinel-padded
+    ins_vals: jnp.ndarray   # (cap,) measures; 0 on padding
+    del_keys: jnp.ndarray   # (cap,) sorted, sentinel-padded
+    del_vals: jnp.ndarray   # (cap,) tombstoned measures; 0 on padding
+    cap: int
+
+    @staticmethod
+    def empty(cap: int, dtype=jnp.float64) -> "DeltaBuffer":
+        big = big_sentinel(dtype)
+        s = jnp.full((cap,), big, dtype)
+        z = jnp.zeros((cap,), dtype)
+        return DeltaBuffer(s, z, s, z, cap)
+
+
+jax.tree_util.register_dataclass(
+    DeltaBuffer,
+    data_fields=["ins_keys", "ins_vals", "del_keys", "del_vals"],
+    meta_fields=["cap"],
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class DeltaBuffer2D:
+    """Insert/delete point logs for a 2-key COUNT plan (x-sorted)."""
+
+    ins_x: jnp.ndarray
+    ins_y: jnp.ndarray
+    del_x: jnp.ndarray
+    del_y: jnp.ndarray
+    cap: int
+
+    @staticmethod
+    def empty(cap: int, dtype=jnp.float64) -> "DeltaBuffer2D":
+        big = big_sentinel(dtype)
+        s = jnp.full((cap,), big, dtype)
+        return DeltaBuffer2D(s, s, s, s, cap)
+
+
+jax.tree_util.register_dataclass(
+    DeltaBuffer2D,
+    data_fields=["ins_x", "ins_y", "del_x", "del_y"],
+    meta_fields=["cap"],
+)
+
+
+@partial(jax.jit, static_argnames=("cap",))
+def _append_sorted(keys, vals, new_k, new_v, *, cap: int):
+    """Merge a (sentinel-padded) batch into the sorted log, keeping shape.
+
+    Valid entries sort before the sentinels, so slicing back to ``cap``
+    drops padding only (caller guarantees fill + batch <= cap).
+    """
+    k = jnp.concatenate([keys, new_k])
+    v = jnp.concatenate([vals, new_v])
+    order = jnp.argsort(k)   # stable: existing entries first on ties
+    return k[order][:cap], v[order][:cap]
+
+
+def _pad_batch(arr: np.ndarray, fill, dtype) -> jnp.ndarray:
+    """Pad a host batch to the next power of two (bounds compilations)."""
+    m = len(arr)
+    size = max(1, 1 << (m - 1).bit_length()) if m else 1
+    out = np.full((size,), fill, np.float64)
+    out[:m] = arr
+    return jnp.asarray(out, dtype)
+
+
+# ---------------------------------------------------------------------------
+# fused delta corrections (traced inside the dynamic executors)
+# ---------------------------------------------------------------------------
+
+def _delta_sum(lq, uq, keys, vals, *, backend, interpret, bq):
+    if backend == "pallas":
+        return delta_sum_pallas(lq, uq, keys, vals, bq=bq, interpret=interpret)
+    if backend == "ref":
+        return _ref.delta_sum_ref(lq, uq, keys, vals)
+    # xla: the log is kept sorted -> prefix sum + two searchsorted lookups
+    cs = jnp.concatenate([jnp.zeros((1,), vals.dtype), jnp.cumsum(vals)])
+    return (cs[jnp.searchsorted(keys, uq, side="right")]
+            - cs[jnp.searchsorted(keys, lq, side="right")])
+
+
+def _delta_max(lq, uq, keys, vals, *, backend, interpret, bq):
+    if backend == "pallas":
+        return delta_max_pallas(lq, uq, keys, vals, bq=bq, interpret=interpret)
+    # xla + ref: dense masked max (the buffer is small and mutable, so a
+    # sparse table would be rebuilt every insert — not worth it)
+    return _ref.delta_max_ref(lq, uq, keys, vals)
+
+
+def _delta_count2d(lx, ux, ly, uy, kx, ky, *, backend, interpret, bq, dtype):
+    if backend == "pallas":
+        return delta_count2d_pallas(lx, ux, ly, uy, kx, ky, bq=bq,
+                                    interpret=interpret, dtype=dtype)
+    return _ref.delta_count2d_ref(lx, ux, ly, uy, kx, ky, dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# fused dynamic executors: static approximation + exact delta correction +
+# Q_rel acceptance + vectorized refinement, one jitted path per signature
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("backend", "eps_rel", "interpret", "bq"))
+def _exec_dyn_sum(plan: IndexPlan, buf: DeltaBuffer, lq, uq, *, backend: str,
+                  eps_rel: Optional[float], interpret: bool, bq: int):
+    dt = plan.dtype
+    lqr, uqr = lq.astype(dt), uq.astype(dt)
+    lqc = jnp.maximum(lqr, plan.domain_lo)
+    uqc = jnp.maximum(uqr, plan.domain_lo)
+    static = raw_sum(plan, lqc, uqc, backend=backend, interpret=interpret,
+                     bq=bq)
+    # exact correction over (lq, uq] — unclamped: buffered keys may lie
+    # outside the static domain
+    corr = (_delta_sum(lqr, uqr, buf.ins_keys, buf.ins_vals, backend=backend,
+                       interpret=interpret, bq=bq)
+            - _delta_sum(lqr, uqr, buf.del_keys, buf.del_vals,
+                         backend=backend, interpret=interpret, bq=bq))
+    approx = static + corr
+    if eps_rel is None:
+        return approx, approx, jnp.zeros(approx.shape, bool)
+    # Lemma 5.2 holds over the updated dataset: |approx - truth| <= 2*delta
+    # because the delta contribution is exact
+    two_d = 2.0 * plan.delta
+    ok = ((approx - two_d > 0) &
+          (two_d / jnp.maximum(approx - two_d, 1e-300) <= eps_rel))
+    truth = truth_sum(plan, lqr, uqr) + corr
+    return jnp.where(ok, approx, truth), approx, ~ok
+
+
+@partial(jax.jit, static_argnames=("backend", "eps_rel", "interpret", "bq"))
+def _exec_dyn_extremum(plan: IndexPlan, buf: DeltaBuffer, lq, uq, *,
+                       backend: str, eps_rel: Optional[float],
+                       interpret: bool, bq: int):
+    """MAX space throughout; the delete log is empty by construction
+    (extremal deletes trigger an eager merge in DynamicEngine.delete)."""
+    dt = plan.dtype
+    lqr, uqr = lq.astype(dt), uq.astype(dt)
+    lqc = jnp.maximum(lqr, plan.domain_lo)
+    uqc = jnp.maximum(uqr, plan.domain_lo)
+    static = raw_extremum(plan, lqc, uqc, backend=backend,
+                          interpret=interpret, bq=bq)
+    ins = _delta_max(lqr, uqr, buf.ins_keys, buf.ins_vals, backend=backend,
+                     interpret=interpret, bq=bq)
+    approx = jnp.maximum(static, ins)
+    neg = plan.agg == "min"
+    if eps_rel is None:
+        out = -approx if neg else approx
+        return out, out, jnp.zeros(out.shape, bool)
+    # Lemma 5.4: max(static +- delta, exact) stays within delta of the truth
+    ok = approx >= plan.delta * (1.0 + 1.0 / eps_rel)
+    truth = jnp.maximum(truth_extremum(plan, lqr, uqr), ins)
+    ans = jnp.where(ok, approx, truth)
+    if neg:
+        ans, approx = -ans, -approx
+    return ans, approx, ~ok
+
+
+@partial(jax.jit, static_argnames=("backend", "eps_rel", "interpret", "bq"))
+def _exec_dyn_count2d(plan: IndexPlan2D, buf: DeltaBuffer2D, lx, ux, ly, uy,
+                      *, backend: str, eps_rel: Optional[float],
+                      interpret: bool, bq: int):
+    dt = plan.dtype
+    x0, x1, y0, y1 = plan.root
+    lxr, uxr, lyr, uyr = (q.astype(dt) for q in (lx, ux, ly, uy))
+    lxc, uxc = (jnp.clip(q, x0, x1) for q in (lxr, uxr))
+    lyc, uyc = (jnp.clip(q, y0, y1) for q in (lyr, uyr))
+    static = raw_count2d(plan, lxc, uxc, lyc, uyc, backend=backend,
+                         interpret=interpret, bq=bq)
+    corr = (_delta_count2d(lxr, uxr, lyr, uyr, buf.ins_x, buf.ins_y,
+                           backend=backend, interpret=interpret, bq=bq,
+                           dtype=dt)
+            - _delta_count2d(lxr, uxr, lyr, uyr, buf.del_x, buf.del_y,
+                             backend=backend, interpret=interpret, bq=bq,
+                             dtype=dt))
+    approx = static + corr
+    if eps_rel is None:
+        return approx, approx, jnp.zeros(approx.shape, bool)
+    ok = approx >= 4.0 * plan.delta * (1.0 + 1.0 / eps_rel)   # Lemma 6.4
+    truth = truth_count2d(plan, lxr, uxr, lyr, uyr) + corr
+    return jnp.where(ok, approx, truth), approx, ~ok
+
+
+# ---------------------------------------------------------------------------
+# merge pass: apply the buffered ops, refit only the dirty segments
+# ---------------------------------------------------------------------------
+
+def _merge_1d(index: PolyFitIndex1D, keys: np.ndarray, meas: np.ndarray,
+              ins_k: np.ndarray, ins_v: np.ndarray,
+              del_k: np.ndarray, del_v: np.ndarray
+              ) -> Tuple[PolyFitIndex1D, np.ndarray, np.ndarray]:
+    """Merge buffered ops into (keys, meas) and selectively refit.
+
+    Returns (new_index, new_keys, new_meas) with measures in internal
+    space.  Only segments whose ``locate`` span contains a changed key are
+    re-segmented (greedy GS on the affected windows); clean SUM/COUNT
+    segments get their constant coefficient shifted by the exact upstream
+    CF delta, which preserves their certified E(I).
+    """
+    agg, deg, delta = index.agg, index.deg, index.delta
+    extremal = agg in ("max", "min")
+    n_old = len(keys)
+
+    # -- resolve tombstones against pending inserts, then the base data ----
+    removed = np.zeros(n_old, bool)
+    ins_removed = np.zeros(len(ins_k), bool)
+    for key, val in zip(del_k, del_v):
+        cand = np.where(~ins_removed & (ins_k == key) & (ins_v == val))[0]
+        if len(cand):
+            ins_removed[cand[0]] = True
+            continue
+        i0 = np.searchsorted(keys, key, side="left")
+        i1 = np.searchsorted(keys, key, side="right")
+        live = np.where(~removed[i0:i1] & (meas[i0:i1] == val))[0]
+        if not len(live):
+            live = np.where(~removed[i0:i1])[0]
+        if not len(live):
+            raise KeyError(f"delete of key {key!r}: no live occurrence")
+        removed[i0 + live[0]] = True
+
+    keep = ~removed
+    kept_old = np.where(keep)[0]
+    ik = ins_k[~ins_removed]
+    iv = ins_v[~ins_removed]
+    all_k = np.concatenate([keys[keep], ik])
+    all_v = np.concatenate([meas[keep], iv])
+    order = np.argsort(all_k, kind="stable")   # base entries first on ties
+    new_k, new_m = all_k[order], all_v[order]
+    if len(new_k) == 0:
+        raise ValueError("merge would empty the dataset")
+
+    # old position -> new position, for the CF shift of clean segments
+    inv = np.empty(len(order), np.int64)
+    inv[order] = np.arange(len(order))
+    old_to_new = np.full(n_old, -1, np.int64)
+    old_to_new[kept_old] = inv[: len(kept_old)]
+
+    # -- mark dirty segments (locate() rule: searchsorted right - 1) -------
+    seg_lo = np.asarray(index.seg_lo)
+    seg_hi = np.asarray(index.seg_hi)
+    coeffs = np.asarray(index.coeffs)
+    seg_start = np.asarray(index.seg_start)
+    seg_err = (np.asarray(index.seg_err) if index.seg_err is not None
+               else np.full(len(seg_lo), delta))
+    h = len(seg_lo)
+    changed = np.concatenate([ins_k, del_k])
+    dirty = np.zeros(h, bool)
+    dirty[np.clip(np.searchsorted(seg_lo, changed, side="right") - 1,
+                  0, h - 1)] = True
+    # duplicate keys straddling a boundary can leave a "clean" segment whose
+    # anchor position was removed — refit it rather than shift blindly
+    for s in range(h):
+        if not dirty[s] and old_to_new[seg_start[s]] < 0:
+            dirty[s] = True
+
+    old_F = np.cumsum(meas) if not extremal else meas
+    new_F = np.cumsum(new_m) if not extremal else new_m
+    ins_sorted = np.sort(ik)
+    keep_cum = np.concatenate([[0], np.cumsum(keep)])
+
+    def new_boundary(p: int) -> int:
+        """New-array position of old boundary position p (start of seg)."""
+        if p >= n_old:
+            return len(new_k)
+        # kept base keys before p + inserted keys sorting strictly before
+        # keys[p] (stable merge puts equal inserted keys after the base run)
+        return int(keep_cum[p]) + int(np.searchsorted(ins_sorted, keys[p],
+                                                      side="left"))
+
+    fitter = FastAcceptFitter(exact=fit_minimax_lp, delta=delta,
+                              post=_continuum_post if extremal else None)
+    segs: List[PolyModel] = []
+    i = 0
+    while i < h:
+        if not dirty[i]:
+            c = coeffs[i].copy()
+            if not extremal:
+                np_pos = old_to_new[seg_start[i]]
+                c[0] += new_F[np_pos] - old_F[seg_start[i]]
+            segs.append(PolyModel(float(seg_lo[i]), float(seg_hi[i]), c,
+                                  float(seg_err[i])))
+            i += 1
+            continue
+        j = i
+        while j < h and dirty[j]:
+            j += 1
+        start = 0 if i == 0 else new_boundary(int(seg_start[i]))
+        end = len(new_k) if j >= h else new_boundary(int(seg_start[j]))
+        if end > start:
+            segs.extend(greedy_segmentation(new_k[start:end],
+                                            new_F[start:end], deg, delta,
+                                            fitter=fitter))
+        i = j
+
+    new_index = assemble_index_1d(segs, new_k, new_m, agg, deg, delta,
+                                  keep_exact=True)
+    return new_index, new_k, new_m
+
+
+# ---------------------------------------------------------------------------
+# the dynamic engines
+# ---------------------------------------------------------------------------
+
+class _DeltaBufferedEngine:
+    """Shared delta-buffer bookkeeping + (background) refit machinery.
+
+    Subclasses implement ``_snapshot()`` (immutable view of the data + op
+    logs for the merge thread) and ``_merge(snap, mark)`` (the merge pass,
+    ending in a locked ``_install``); everything about thread lifecycle,
+    drain-until-empty waiting, residual-op marks, and error surfacing
+    lives here once.
+    """
+
+    _refit_error: Optional[BaseException] = None
+
+    def _init_dynamic(self, *, backend: str, capacity: int, interpret: bool,
+                      bq: int, min_bucket: int, auto_refit: bool,
+                      background: bool) -> None:
+        check_pow2("capacity", capacity)
+        check_pow2("bq", bq)
+        check_pow2("min_bucket", min_bucket)
+        self.backend = backend
+        self.capacity = capacity
+        self.interpret = interpret
+        self.bq = bq
+        self.min_bucket = min_bucket
+        self.auto_refit = auto_refit
+        self.background = background
+        self.refit_count = 0
+        self._lock = threading.RLock()
+        self._thread: Optional[threading.Thread] = None
+
+    @property
+    def n_pending(self) -> int:
+        return self._n_pending
+
+    def _ensure_room(self, m: int) -> None:
+        if m > self.capacity:
+            raise ValueError(f"batch of {m} exceeds buffer capacity "
+                             f"{self.capacity}; split the batch")
+        if self._n_pending + m > self.capacity:
+            self.refit(wait=True)   # drains every pending op (see refit)
+
+    def flush(self) -> None:
+        """Synchronously merge all buffered ops into a fresh plan."""
+        self.refit(wait=True)
+
+    def refit(self, wait: Optional[bool] = None) -> None:
+        """Run (or join) a merge pass.  ``wait=False`` returns immediately
+        with the merge running on a daemon thread; queries keep executing
+        against the old (plan, buffer) snapshot until the atomic install.
+
+        ``wait=True`` drains *every* pending op before returning: a joined
+        thread may be a stale background merge whose snapshot predates ops
+        logged since (they are replayed into the fresh buffer as
+        residuals), so keep merging until nothing is pending.  MAX/MIN
+        delete correctness relies on this — a residual tombstone would sit
+        in a buffer the extremum executor never reads."""
+        wait = (not self.background) if wait is None else wait
+        t = self._start_refit()
+        if wait:
+            while t is not None:
+                t.join()
+                self._raise_refit_error()
+                t = self._start_refit()
+        self._raise_refit_error()
+
+    def _raise_refit_error(self) -> None:
+        if self._refit_error is not None:
+            err, self._refit_error = self._refit_error, None
+            raise err
+
+    def _start_refit(self) -> Optional[threading.Thread]:
+        with self._lock:
+            if self._thread is not None and self._thread.is_alive():
+                return self._thread
+            if self._n_pending == 0:
+                return None
+            snap = self._snapshot()
+            mark = (len(self._ins_log), len(self._del_log))
+            t = threading.Thread(target=self._merge_and_install,
+                                 args=(snap, mark), daemon=True)
+            self._thread = t
+        t.start()
+        return t
+
+    def _merge_and_install(self, snap, mark) -> None:
+        try:
+            self._merge(snap, mark)
+        except BaseException as e:   # surface on the caller's next refit()
+            self._refit_error = e
+        finally:
+            self._thread = None
+
+    @staticmethod
+    def _flatten(log: List[Tuple[np.ndarray, np.ndarray]]):
+        if not log:
+            z = np.zeros((0,))
+            return z, z
+        return (np.concatenate([k for k, _ in log]),
+                np.concatenate([v for _, v in log]))
+
+
+class DynamicEngine(_DeltaBufferedEngine):
+    """Updatable 1-D plan: buffered inserts/deletes, fused exact
+    correction, selective (optionally background) refit.
+
+    Single-writer: ``insert``/``delete``/``refit`` are serialized by an
+    internal lock; queries are lock-free against an immutable
+    (plan, buffer) snapshot, so a refit never blocks them.
+    """
+
+    def __init__(self, index: PolyFitIndex1D, *, backend: str = "xla",
+                 capacity: int = 1024, interpret: bool = True,
+                 bq: int = DEFAULT_BQ, min_bucket: int = 64,
+                 auto_refit: bool = True, background: bool = False,
+                 drift_floor: float = 0.05):
+        if index.exact_sum is None and index.exact_max is None:
+            raise ValueError("DynamicEngine requires an index built with "
+                             "keep_exact=True (merge needs the raw data)")
+        self._init_dynamic(backend=backend, capacity=capacity,
+                           interpret=interpret, bq=bq,
+                           min_bucket=min_bucket, auto_refit=auto_refit,
+                           background=background)
+        self.drift_floor = drift_floor
+        self._agg = index.agg
+        if index.exact_sum is not None:
+            keys = np.asarray(index.exact_sum.keys)
+            cf = np.asarray(index.exact_sum.cf)
+            meas = np.diff(np.concatenate([[0.0], cf]))
+        else:
+            keys = np.asarray(index.exact_max.keys)
+            meas = np.asarray(index.exact_max.measures)   # internal space
+        self._install(index, keys, meas)
+
+    # -- state ----------------------------------------------------------
+
+    def _install(self, index: PolyFitIndex1D, keys: np.ndarray,
+                 meas: np.ndarray, residual_ins: Optional[list] = None,
+                 residual_del: Optional[list] = None) -> None:
+        """Swap in a fresh (index, plan, empty-or-replayed buffer)."""
+        with self._lock:
+            self._index = index
+            self._keys = keys
+            self._meas = meas
+            self._seg_lo_host = np.asarray(index.seg_lo)
+            err = (np.asarray(index.seg_err) if index.seg_err is not None
+                   else np.zeros(index.h))
+            self._budget = np.maximum(index.delta - err,
+                                      self.drift_floor * index.delta)
+            self._drift = np.zeros(index.h)
+            self._ins_log: List[Tuple[np.ndarray, np.ndarray]] = []
+            self._del_log: List[Tuple[np.ndarray, np.ndarray]] = []
+            self._n_pending = 0
+            plan = build_plan(index)
+            buf = DeltaBuffer.empty(self.capacity, plan.dtype)
+            self._state = (plan, buf)
+            for k, v in (residual_ins or []):
+                self._log_ops(k, v, delete=False)
+            for k, v in (residual_del or []):
+                self._log_ops(k, v, delete=True)
+
+    @property
+    def plan(self) -> IndexPlan:
+        return self._state[0]
+
+    @property
+    def index(self) -> PolyFitIndex1D:
+        return self._index
+
+    @property
+    def agg(self) -> str:
+        return self._agg
+
+    # -- updates --------------------------------------------------------
+
+    def _log_ops(self, keys: np.ndarray, vals: np.ndarray,
+                 delete: bool) -> None:
+        """Append a batch to the device buffer + host log + drift (locked)."""
+        if self._n_pending + len(keys) > self.capacity:
+            # _append_sorted would silently drop the largest keys past cap;
+            # overflowing here means the single-writer contract was broken
+            raise RuntimeError("delta buffer overflow: concurrent writers "
+                               "bypassed _ensure_room")
+        plan, buf = self._state
+        dt = plan.dtype
+        big = big_sentinel(dt)
+        pk = _pad_batch(keys, big, dt)
+        pv = _pad_batch(vals, 0.0, dt)
+        if delete:
+            dk, dv = _append_sorted(buf.del_keys, buf.del_vals, pk, pv,
+                                    cap=buf.cap)
+            buf = dataclasses.replace(buf, del_keys=dk, del_vals=dv)
+            self._del_log.append((keys, vals))
+        else:
+            ik, iv = _append_sorted(buf.ins_keys, buf.ins_vals, pk, pv,
+                                    cap=buf.cap)
+            buf = dataclasses.replace(buf, ins_keys=ik, ins_vals=iv)
+            self._ins_log.append((keys, vals))
+        self._state = (plan, buf)
+        self._n_pending += len(keys)
+        seg = np.clip(np.searchsorted(self._seg_lo_host, keys, side="right")
+                      - 1, 0, len(self._seg_lo_host) - 1)
+        np.add.at(self._drift, seg, np.abs(vals))
+
+    def insert(self, keys, measures=None) -> None:
+        """Buffer a batch of new (key, measure) records."""
+        keys = np.atleast_1d(np.asarray(keys, np.float64))
+        if measures is None:
+            if self._agg != "count":
+                raise ValueError("measures required unless agg='count'")
+            measures = np.ones_like(keys)
+        measures = np.broadcast_to(
+            np.asarray(measures, np.float64), keys.shape).copy()
+        if self._agg == "count":
+            measures = np.ones_like(keys)
+        if self._agg == "min":
+            measures = -measures
+        self._ensure_room(len(keys))
+        with self._lock:
+            self._log_ops(keys, measures, delete=False)
+            trigger = self._should_refit()
+        if trigger:
+            self.refit(wait=not self.background)
+
+    def delete(self, keys) -> None:
+        """Buffer delete tombstones for existing records (KeyError if a key
+        has no live occurrence).  MAX/MIN deletes merge eagerly: a removed
+        point may be the maximum, so no monotone correction exists."""
+        keys = np.atleast_1d(np.asarray(keys, np.float64))
+        self._ensure_room(len(keys))
+        with self._lock:
+            vals = []
+            batch_tomb: dict = {}   # duplicates within this batch advance
+            for k in keys:          # the victim cursor too
+                off = batch_tomb.get(float(k), 0)
+                vals.append(self._find_victim(float(k), extra_tomb=off))
+                batch_tomb[float(k)] = off + 1
+            self._log_ops(keys, np.array(vals), delete=True)
+            trigger = self._should_refit()
+        if self._agg in ("max", "min"):
+            self.refit(wait=True)
+        elif trigger:
+            self.refit(wait=not self.background)
+
+    def _find_victim(self, key: float, extra_tomb: int = 0) -> float:
+        """Measure (internal space) of the occurrence a tombstone removes:
+        base occurrences first (left to right), then pending inserts."""
+        tomb = extra_tomb + sum(int(np.sum(k == key))
+                                for k, _ in self._del_log)
+        i0 = np.searchsorted(self._keys, key, side="left")
+        i1 = np.searchsorted(self._keys, key, side="right")
+        pool = list(self._meas[i0:i1])
+        for k, v in self._ins_log:
+            pool.extend(v[k == key])
+        if tomb >= len(pool):
+            raise KeyError(f"delete of key {key!r}: no live occurrence")
+        return float(pool[tomb])
+
+    def _should_refit(self) -> bool:
+        if not self.auto_refit:
+            return False
+        return (self._n_pending >= self.capacity
+                or bool((self._drift > self._budget).any()))
+
+    # -- merge / refit (lifecycle in _DeltaBufferedEngine) ----------------
+
+    def _snapshot(self):
+        return (self._index, self._keys, self._meas,
+                list(self._ins_log), list(self._del_log))
+
+    def _merge(self, snap, mark) -> None:
+        index, keys, meas, ins_log, del_log = snap
+        ik, iv = self._flatten(ins_log)
+        dk, dv = self._flatten(del_log)
+        new_index, new_k, new_m = _merge_1d(index, keys, meas, ik, iv, dk, dv)
+        with self._lock:
+            residual_ins = self._ins_log[mark[0]:]
+            residual_del = self._del_log[mark[1]:]
+            self._install(new_index, new_k, new_m,
+                          residual_ins, residual_del)
+            self.refit_count += 1
+
+    # -- queries ---------------------------------------------------------
+
+    def _prepare(self, lq, uq):
+        lq, uq = jnp.asarray(lq), jnp.asarray(uq)
+        n = lq.shape[0]
+        size = _bucket_size(n, self.min_bucket)
+        return lq, uq, n, size, min(self.bq, size)
+
+    def sum(self, lq, uq, eps_rel: Optional[float] = None) -> QueryResult:
+        assert self._agg in ("sum", "count"), self._agg
+        plan, buf = self._state
+        if eps_rel is not None and plan.ref_cf is None:
+            raise ValueError("Q_rel refinement requires exact arrays")
+        lq, uq, n, size, bq = self._prepare(lq, uq)
+        fill = plan.domain_lo.astype(lq.dtype)
+        ans, approx, refined = _exec_dyn_sum(
+            plan, buf, _pad_bucket(lq, size, fill),
+            _pad_bucket(uq, size, fill), backend=self.backend,
+            eps_rel=eps_rel, interpret=self.interpret, bq=bq)
+        return QueryResult(ans[:n], approx[:n], refined[:n])
+
+    count = sum
+
+    def extremum(self, lq, uq, eps_rel: Optional[float] = None) -> QueryResult:
+        assert self._agg in ("max", "min"), self._agg
+        plan, buf = self._state
+        if eps_rel is not None and plan.ref_st is None:
+            raise ValueError("Q_rel refinement requires exact arrays")
+        backend = self.backend
+        if backend in ("pallas", "ref") and plan.deg > 3:
+            backend = "xla"   # no in-kernel closed form past deg 3
+        lq, uq, n, size, bq = self._prepare(lq, uq)
+        fill = plan.domain_lo.astype(lq.dtype)
+        ans, approx, refined = _exec_dyn_extremum(
+            plan, buf, _pad_bucket(lq, size, fill),
+            _pad_bucket(uq, size, fill), backend=backend,
+            eps_rel=eps_rel, interpret=self.interpret, bq=bq)
+        return QueryResult(ans[:n], approx[:n], refined[:n])
+
+    def query(self, lq, uq, eps_rel: Optional[float] = None) -> QueryResult:
+        if self._agg in ("sum", "count"):
+            return self.sum(lq, uq, eps_rel=eps_rel)
+        return self.extremum(lq, uq, eps_rel=eps_rel)
+
+
+class DynamicEngine2D(_DeltaBufferedEngine):
+    """Updatable 2-key COUNT plan: buffered point inserts/deletes with the
+    fused exact correction; the merge pass rebuilds the quadtree (selective
+    leaf refit is a ROADMAP open item)."""
+
+    def __init__(self, index: PolyFitIndex2D, *, backend: str = "xla",
+                 capacity: int = 1024, interpret: bool = True,
+                 bq: int = DEFAULT_BQ, min_bucket: int = 64,
+                 auto_refit: bool = True, background: bool = False):
+        if index.exact is None:
+            raise ValueError("DynamicEngine2D requires keep_exact=True")
+        self._init_dynamic(backend=backend, capacity=capacity,
+                           interpret=interpret, bq=bq,
+                           min_bucket=min_bucket, auto_refit=auto_refit,
+                           background=background)
+        px = np.asarray(index.exact.xs)
+        py = np.asarray(index.exact.ys_levels[0])
+        self._install(index, px, py)
+
+    def _install(self, index: PolyFitIndex2D, px: np.ndarray, py: np.ndarray,
+                 residual_ins: Optional[list] = None,
+                 residual_del: Optional[list] = None) -> None:
+        with self._lock:
+            self._index = index
+            self._px = px
+            self._py = py
+            self._ins_log: List[Tuple[np.ndarray, np.ndarray]] = []
+            self._del_log: List[Tuple[np.ndarray, np.ndarray]] = []
+            self._n_pending = 0
+            plan = build_plan_2d(index)
+            buf = DeltaBuffer2D.empty(self.capacity, plan.dtype)
+            self._state = (plan, buf)
+            for x, y in (residual_ins or []):
+                self._log_ops(x, y, delete=False)
+            for x, y in (residual_del or []):
+                self._log_ops(x, y, delete=True)
+
+    @property
+    def plan(self) -> IndexPlan2D:
+        return self._state[0]
+
+    @property
+    def index(self) -> PolyFitIndex2D:
+        return self._index
+
+    def _log_ops(self, xs: np.ndarray, ys: np.ndarray, delete: bool) -> None:
+        if self._n_pending + len(xs) > self.capacity:
+            raise RuntimeError("delta buffer overflow: concurrent writers "
+                               "bypassed _ensure_room")
+        plan, buf = self._state
+        dt = plan.dtype
+        big = big_sentinel(dt)
+        pkx = _pad_batch(xs, big, dt)
+        pky = _pad_batch(ys, big, dt)
+        if delete:
+            dx, dy = _append_sorted(buf.del_x, buf.del_y, pkx, pky,
+                                    cap=buf.cap)
+            buf = dataclasses.replace(buf, del_x=dx, del_y=dy)
+            self._del_log.append((xs, ys))
+        else:
+            ix, iy = _append_sorted(buf.ins_x, buf.ins_y, pkx, pky,
+                                    cap=buf.cap)
+            buf = dataclasses.replace(buf, ins_x=ix, ins_y=iy)
+            self._ins_log.append((xs, ys))
+        self._state = (plan, buf)
+        self._n_pending += len(xs)
+
+    def insert(self, xs, ys) -> None:
+        xs = np.atleast_1d(np.asarray(xs, np.float64))
+        ys = np.atleast_1d(np.asarray(ys, np.float64))
+        self._ensure_room(len(xs))
+        with self._lock:
+            self._log_ops(xs, ys, delete=False)
+            trigger = self.auto_refit and self._n_pending >= self.capacity
+        if trigger:
+            self.refit(wait=not self.background)
+
+    def delete(self, xs, ys) -> None:
+        xs = np.atleast_1d(np.asarray(xs, np.float64))
+        ys = np.atleast_1d(np.asarray(ys, np.float64))
+        self._ensure_room(len(xs))
+        with self._lock:
+            batch_tomb: dict = {}   # duplicates within this batch count too
+            for x, y in zip(xs, ys):
+                pt = (float(x), float(y))
+                self._check_live(*pt, extra_tomb=batch_tomb.get(pt, 0))
+                batch_tomb[pt] = batch_tomb.get(pt, 0) + 1
+            self._log_ops(xs, ys, delete=True)
+            trigger = self.auto_refit and self._n_pending >= self.capacity
+        if trigger:
+            self.refit(wait=not self.background)
+
+    def _count_point(self, log, x: float, y: float) -> int:
+        return sum(int(np.sum((lx == x) & (ly == y))) for lx, ly in log)
+
+    def _check_live(self, x: float, y: float, extra_tomb: int = 0) -> None:
+        i0 = np.searchsorted(self._px, x, side="left")
+        i1 = np.searchsorted(self._px, x, side="right")
+        base = int(np.sum(self._py[i0:i1] == y))
+        live = (base + self._count_point(self._ins_log, x, y)
+                - self._count_point(self._del_log, x, y) - extra_tomb)
+        if live <= 0:
+            raise KeyError(f"delete of point ({x!r}, {y!r}): not present")
+
+    # -- merge / refit (lifecycle in _DeltaBufferedEngine) ----------------
+
+    def _snapshot(self):
+        return (self._index, self._px, self._py,
+                list(self._ins_log), list(self._del_log))
+
+    def _merge(self, snap, mark) -> None:
+        index, px, py, ins_log, del_log = snap
+        ix, iy = self._flatten(ins_log)
+        dx, dy = self._flatten(del_log)
+        keep = np.ones(len(px), bool)
+        for x, y in zip(dx, dy):
+            cand = np.where(keep & (px == x) & (py == y))[0]
+            if len(cand):
+                keep[cand[0]] = False
+                continue
+            m = np.where((ix == x) & (iy == y) & ~np.isnan(ix))[0]
+            if not len(m):
+                raise KeyError(f"delete of point ({x!r}, {y!r})")
+            ix[m[0]] = iy[m[0]] = np.nan
+        alive = ~np.isnan(ix) if len(ix) else np.zeros(0, bool)
+        new_px = np.concatenate([px[keep], ix[alive]])
+        new_py = np.concatenate([py[keep], iy[alive]])
+        if len(new_px) == 0:
+            raise ValueError("merge would empty the dataset")
+        new_index = build_index_2d(new_px, new_py, deg=index.deg,
+                                   delta=index.delta,
+                                   max_depth=index.max_depth)
+        order = np.argsort(new_px, kind="stable")
+        with self._lock:
+            residual_ins = self._ins_log[mark[0]:]
+            residual_del = self._del_log[mark[1]:]
+            self._install(new_index, new_px[order], new_py[order],
+                          residual_ins, residual_del)
+            self.refit_count += 1
+
+    def count2d(self, lx, ux, ly, uy,
+                eps_rel: Optional[float] = None) -> QueryResult:
+        plan, buf = self._state
+        if eps_rel is not None and plan.ref_xs is None:
+            raise ValueError("Q_rel refinement requires exact arrays")
+        qs = [jnp.asarray(q) for q in (lx, ux, ly, uy)]
+        n = qs[0].shape[0]
+        size = _bucket_size(n, self.min_bucket)
+        bq = min(self.bq, size)
+        x0, _, y0, _ = plan.root
+        fills = (x0, x0, y0, y0)
+        padded = [_pad_bucket(q, size, f) for q, f in zip(qs, fills)]
+        ans, approx, refined = _exec_dyn_count2d(
+            plan, buf, *padded, backend=self.backend, eps_rel=eps_rel,
+            interpret=self.interpret, bq=bq)
+        return QueryResult(ans[:n], approx[:n], refined[:n])
+
+    query = count2d

@@ -41,9 +41,17 @@ from ..kernels.range_max import range_max_pallas
 from ..kernels.range_sum import range_sum_pallas
 from .plan import IndexPlan, IndexPlan2D
 
-__all__ = ["Engine", "BACKENDS"]
+__all__ = ["Engine", "BACKENDS", "raw_sum", "raw_extremum", "raw_count2d",
+           "truth_sum", "truth_extremum", "truth_count2d", "check_pow2"]
 
 BACKENDS = ("xla", "pallas", "ref")
+
+
+def check_pow2(name: str, v: int) -> None:
+    """Bucket/tile/capacity sizes must be powers of two (so smaller ones
+    always divide larger ones)."""
+    if v < 1 or v & (v - 1):
+        raise ValueError(f"{name} must be a power of two, got {v}")
 
 
 def _bucket_size(n: int, min_bucket: int) -> int:
@@ -68,6 +76,78 @@ def _cf_at(keys, cf, q):
 
 
 # ---------------------------------------------------------------------------
+# shared raw-approximation / static-truth primitives (traced inside jit by
+# both the static executors below and the dynamic ones in dynamic.py)
+# ---------------------------------------------------------------------------
+
+def raw_sum(plan: IndexPlan, lqc, uqc, *, backend: str, interpret: bool,
+            bq: int):
+    """Backend-dispatched raw SUM/COUNT approximation (clamped queries)."""
+    if backend == "pallas":
+        return range_sum_pallas(lqc, uqc, plan.seg_lo, plan.seg_next,
+                                plan.seg_hi, plan.coeffs,
+                                bq=bq, bh=plan.bh, interpret=interpret)
+    if backend == "ref":
+        return _ref.range_sum_ref(lqc, uqc, plan.seg_lo, plan.seg_next,
+                                  plan.seg_hi, plan.coeffs)
+    return (eval_segments(uqc, plan.seg_lo, plan.seg_hi, plan.coeffs)
+            - eval_segments(lqc, plan.seg_lo, plan.seg_hi, plan.coeffs))
+
+
+def raw_extremum(plan: IndexPlan, lqc, uqc, *, backend: str, interpret: bool,
+                 bq: int):
+    """Backend-dispatched raw MAX approximation, in MAX space (MIN plans run
+    on negated measures end to end)."""
+    if backend == "pallas":
+        return range_max_pallas(lqc, uqc, plan.seg_lo, plan.seg_next,
+                                plan.seg_hi, plan.coeffs, plan.seg_agg,
+                                bq=bq, bh=plan.bh, interpret=interpret)
+    if backend == "ref":
+        return _ref.range_max_ref(lqc, uqc, plan.seg_lo, plan.seg_next,
+                                  plan.seg_hi, plan.coeffs, plan.seg_agg)
+    return max_eval_segments(plan.seg_lo, plan.seg_hi, plan.coeffs,
+                             plan.st, lqc, uqc)
+
+
+def raw_count2d(plan: IndexPlan2D, lxc, uxc, lyc, uyc, *, backend: str,
+                interpret: bool, bq: int):
+    """Backend-dispatched raw 2-key COUNT approximation (clamped corners)."""
+    if backend == "pallas":
+        return corner_count2d_pallas(
+            lxc, uxc, lyc, uyc, plan.leaf_mx0, plan.leaf_mx1, plan.leaf_my0,
+            plan.leaf_my1, plan.leaf_bounds, plan.leaf_coeffs,
+            deg=plan.deg, bq=bq, bh=plan.bh, interpret=interpret)
+    if backend == "ref":
+        return _ref.corner_count2d_ref(
+            lxc, uxc, lyc, uyc, plan.leaf_mx0, plan.leaf_mx1, plan.leaf_my0,
+            plan.leaf_my1, plan.leaf_bounds, plan.leaf_coeffs, plan.deg)
+    ev = lambda u, v: quadtree_eval_cf(
+        plan.children, plan.leaf_of, plan.bounds, plan.qt_coeffs,
+        plan.leaf_nodes, plan.max_depth, plan.deg, u, v)
+    return ev(uxc, uyc) - ev(lxc, uyc) - ev(uxc, lyc) + ev(lxc, lyc)
+
+
+def truth_sum(plan: IndexPlan, lq, uq):
+    """Exact static SUM/COUNT over (lq, uq] from the plan's refinement CF."""
+    return _cf_at(plan.ref_keys, plan.ref_cf, uq) - _cf_at(
+        plan.ref_keys, plan.ref_cf, lq)
+
+
+def truth_extremum(plan: IndexPlan, lq, uq):
+    """Exact static MAX over [lq, uq] (MAX space) from the refinement table."""
+    i = jnp.searchsorted(plan.ref_keys, lq, side="left")
+    j = jnp.searchsorted(plan.ref_keys, uq, side="right")
+    return sparse_table_range_max(plan.ref_st, i, j)
+
+
+def truth_count2d(plan: IndexPlan2D, lx, ux, ly, uy):
+    """Exact static 2-key COUNT over (lx, ux] x (ly, uy] (merge-sort tree)."""
+    cf = lambda u, v: mst_cf(plan.ref_xs, plan.ref_ys_levels, u, v)
+    return (cf(ux, uy) - cf(lx, uy) - cf(ux, ly) + cf(lx, ly)).astype(
+        plan.dtype)
+
+
+# ---------------------------------------------------------------------------
 # fused jitted executors (one compilation per static signature)
 # ---------------------------------------------------------------------------
 
@@ -77,24 +157,15 @@ def _exec_sum(plan: IndexPlan, lq, uq, *, backend: str,
     dt = plan.dtype
     lqc = jnp.maximum(lq.astype(dt), plan.domain_lo)
     uqc = jnp.maximum(uq.astype(dt), plan.domain_lo)
-    if backend == "pallas":
-        approx = range_sum_pallas(lqc, uqc, plan.seg_lo, plan.seg_next,
-                                  plan.seg_hi, plan.coeffs,
-                                  bq=bq, bh=plan.bh, interpret=interpret)
-    elif backend == "ref":
-        approx = _ref.range_sum_ref(lqc, uqc, plan.seg_lo, plan.seg_next,
-                                    plan.seg_hi, plan.coeffs)
-    else:
-        approx = (eval_segments(uqc, plan.seg_lo, plan.seg_hi, plan.coeffs)
-                  - eval_segments(lqc, plan.seg_lo, plan.seg_hi, plan.coeffs))
+    approx = raw_sum(plan, lqc, uqc, backend=backend, interpret=interpret,
+                     bq=bq)
     if eps_rel is None:
         return approx, approx, jnp.zeros(approx.shape, bool)
     # Lemma 5.2 test: 2d / (A - 2d) <= eps_rel  (requires A > 2d)
     two_d = 2.0 * plan.delta
     ok = ((approx - two_d > 0) &
           (two_d / jnp.maximum(approx - two_d, 1e-300) <= eps_rel))
-    truth = _cf_at(plan.ref_keys, plan.ref_cf, uq) - _cf_at(
-        plan.ref_keys, plan.ref_cf, lq)
+    truth = truth_sum(plan, lq, uq)
     return jnp.where(ok, approx, truth), approx, ~ok
 
 
@@ -104,16 +175,8 @@ def _exec_extremum(plan: IndexPlan, lq, uq, *, backend: str,
     dt = plan.dtype
     lqc = jnp.maximum(lq.astype(dt), plan.domain_lo)
     uqc = jnp.maximum(uq.astype(dt), plan.domain_lo)
-    if backend == "pallas":
-        approx = range_max_pallas(lqc, uqc, plan.seg_lo, plan.seg_next,
-                                  plan.seg_hi, plan.coeffs, plan.seg_agg,
-                                  bq=bq, bh=plan.bh, interpret=interpret)
-    elif backend == "ref":
-        approx = _ref.range_max_ref(lqc, uqc, plan.seg_lo, plan.seg_next,
-                                    plan.seg_hi, plan.coeffs, plan.seg_agg)
-    else:
-        approx = max_eval_segments(plan.seg_lo, plan.seg_hi, plan.coeffs,
-                                   plan.st, lqc, uqc)
+    approx = raw_extremum(plan, lqc, uqc, backend=backend,
+                          interpret=interpret, bq=bq)
     neg = plan.agg == "min"
     if eps_rel is None:
         out = -approx if neg else approx
@@ -121,9 +184,7 @@ def _exec_extremum(plan: IndexPlan, lq, uq, *, backend: str,
     # Lemma 5.4 test: A >= delta * (1 + 1/eps_rel), in MAX space (MIN runs
     # on negated measures end to end, exactly like core.queries.query_max)
     ok = approx >= plan.delta * (1.0 + 1.0 / eps_rel)
-    i = jnp.searchsorted(plan.ref_keys, lq, side="left")
-    j = jnp.searchsorted(plan.ref_keys, uq, side="right")
-    truth = sparse_table_range_max(plan.ref_st, i, j)
+    truth = truth_extremum(plan, lq, uq)
     ans = jnp.where(ok, approx, truth)
     if neg:
         ans, approx = -ans, -approx
@@ -137,26 +198,13 @@ def _exec_count2d(plan: IndexPlan2D, lx, ux, ly, uy, *, backend: str,
     x0, x1, y0, y1 = plan.root
     lxc, uxc = (jnp.clip(q.astype(dt), x0, x1) for q in (lx, ux))
     lyc, uyc = (jnp.clip(q.astype(dt), y0, y1) for q in (ly, uy))
-    if backend == "pallas":
-        approx = corner_count2d_pallas(
-            lxc, uxc, lyc, uyc, plan.leaf_mx0, plan.leaf_mx1, plan.leaf_my0,
-            plan.leaf_my1, plan.leaf_bounds, plan.leaf_coeffs,
-            deg=plan.deg, bq=bq, bh=plan.bh, interpret=interpret)
-    elif backend == "ref":
-        approx = _ref.corner_count2d_ref(
-            lxc, uxc, lyc, uyc, plan.leaf_mx0, plan.leaf_mx1, plan.leaf_my0,
-            plan.leaf_my1, plan.leaf_bounds, plan.leaf_coeffs, plan.deg)
-    else:
-        ev = lambda u, v: quadtree_eval_cf(
-            plan.children, plan.leaf_of, plan.bounds, plan.qt_coeffs,
-            plan.leaf_nodes, plan.max_depth, plan.deg, u, v)
-        approx = ev(uxc, uyc) - ev(lxc, uyc) - ev(uxc, lyc) + ev(lxc, lyc)
+    approx = raw_count2d(plan, lxc, uxc, lyc, uyc, backend=backend,
+                         interpret=interpret, bq=bq)
     if eps_rel is None:
         return approx, approx, jnp.zeros(approx.shape, bool)
     # Lemma 6.4 test: A >= 4*delta*(1 + 1/eps_rel)
     ok = approx >= 4.0 * plan.delta * (1.0 + 1.0 / eps_rel)
-    cf = lambda u, v: mst_cf(plan.ref_xs, plan.ref_ys_levels, u, v)
-    truth = (cf(ux, uy) - cf(lx, uy) - cf(ux, ly) + cf(lx, ly)).astype(dt)
+    truth = truth_count2d(plan, lx, ux, ly, uy)
     return jnp.where(ok, approx, truth), approx, ~ok
 
 
@@ -176,10 +224,8 @@ class Engine:
                  bq: int = DEFAULT_BQ, min_bucket: int = 64):
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}, got {backend}")
-        for name, v in (("bq", bq), ("min_bucket", min_bucket)):
-            if v < 1 or v & (v - 1):
-                # bucket sizes are powers of two so bq always divides them
-                raise ValueError(f"{name} must be a power of two, got {v}")
+        check_pow2("bq", bq)
+        check_pow2("min_bucket", min_bucket)
         self.backend = backend
         self.interpret = interpret
         self.bq = bq

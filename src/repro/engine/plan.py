@@ -33,7 +33,7 @@ import numpy as np
 
 from ..core.index import PolyFitIndex1D
 from ..core.index2d import PolyFitIndex2D
-from ..kernels.poly_eval import DEFAULT_BH, DEFAULT_BQ
+from ..kernels.poly_eval import DEFAULT_BH
 
 __all__ = ["IndexPlan", "IndexPlan2D", "build_plan", "build_plan_2d",
            "big_sentinel", "pad_to_multiple"]

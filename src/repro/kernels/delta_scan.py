@@ -1,0 +1,181 @@
+"""Pallas TPU kernels: exact delta-buffer scans for dynamic plans.
+
+A ``DynamicEngine`` (engine/dynamic.py) buffers inserts/deletes in fixed-
+capacity, sentinel-padded device arrays between merges.  Queries fuse the
+static plan's approximation with an *exact* correction over the buffer, so
+the certified error bounds survive updates: the only approximation error
+left is the static plan's own E(I) <= delta.
+
+All three kernels reuse the one-hot membership matmul pattern of
+``poly_eval.py``/``range_sum.py`` — membership of each buffered key in each
+query range is a (BQ, BD) compare tile, turned into a gathered reduction on
+the MXU (SUM/COUNT) or a masked VPU max (MAX/MIN), accumulated across
+buffer tiles in VMEM scratch:
+
+* ``delta_sum_pallas``     — sum of buffered measures with key in (lq, uq]
+                             (the CF-difference range of Eq. 5);
+* ``delta_max_pallas``     — max of buffered measures with key in [lq, uq]
+                             (MAX range semantics; -inf on empty);
+* ``delta_count2d_pallas`` — count of buffered points in the half-open
+                             rectangle (lx, ux] x (ly, uy] (Eq. 19).
+
+Empty buffer slots hold a huge-but-finite sentinel key (``plan.big_sentinel``)
+so they fail every membership test without needing a separate count input —
+the kernels are oblivious to the fill level.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .poly_eval import DEFAULT_BH, DEFAULT_BQ
+
+__all__ = ["delta_sum_pallas", "delta_max_pallas", "delta_count2d_pallas"]
+
+
+def _delta_sum_kernel(lq_ref, uq_ref, k_ref, v_ref, out_ref, acc,
+                      *, n_tiles: int):
+    d = pl.program_id(1)
+
+    @pl.when(d == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    lq = lq_ref[...]
+    uq = uq_ref[...]
+    k = k_ref[...]
+    v = v_ref[...]
+    # (BQ, BD) membership in (lq, uq]; sentinel-padded slots never match
+    member = ((lq[:, None] < k[None, :]) &
+              (k[None, :] <= uq[:, None])).astype(v.dtype)
+    acc[...] += jnp.dot(member, v, preferred_element_type=v.dtype)
+
+    @pl.when(d == n_tiles - 1)
+    def _finalize():
+        out_ref[...] = acc[...]
+
+
+def delta_sum_pallas(lq, uq, keys, vals, bq: int = DEFAULT_BQ,
+                     bd: int = DEFAULT_BH, interpret: bool = True):
+    """Exact sum of buffered measures with key in (lq, uq] per query."""
+    Q, D = lq.shape[0], keys.shape[0]
+    bd = min(bd, D)
+    assert Q % bq == 0 and D % bd == 0, (Q, D, bq, bd)
+    n_tiles = D // bd
+    kernel = functools.partial(_delta_sum_kernel, n_tiles=n_tiles)
+    return pl.pallas_call(
+        kernel,
+        grid=(Q // bq, n_tiles),
+        in_specs=[
+            pl.BlockSpec((bq,), lambda i, j: (i,)),
+            pl.BlockSpec((bq,), lambda i, j: (i,)),
+            pl.BlockSpec((bd,), lambda i, j: (j,)),
+            pl.BlockSpec((bd,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bq,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((Q,), vals.dtype),
+        scratch_shapes=[pltpu.VMEM((bq,), vals.dtype)],
+        interpret=interpret,
+    )(lq, uq, keys, vals)
+
+
+def _delta_max_kernel(lq_ref, uq_ref, k_ref, v_ref, out_ref, acc,
+                      *, n_tiles: int):
+    d = pl.program_id(1)
+
+    @pl.when(d == 0)
+    def _init():
+        acc[...] = jnp.full_like(acc, -jnp.inf)
+
+    lq = lq_ref[...]
+    uq = uq_ref[...]
+    k = k_ref[...]
+    v = v_ref[...]
+    member = (lq[:, None] <= k[None, :]) & (k[None, :] <= uq[:, None])
+    tile_max = jnp.max(jnp.where(member, v[None, :], -jnp.inf), axis=1)
+    acc[...] = jnp.maximum(acc[...], tile_max)
+
+    @pl.when(d == n_tiles - 1)
+    def _finalize():
+        out_ref[...] = acc[...]
+
+
+def delta_max_pallas(lq, uq, keys, vals, bq: int = DEFAULT_BQ,
+                     bd: int = DEFAULT_BH, interpret: bool = True):
+    """Exact max of buffered measures with key in [lq, uq] (-inf if none)."""
+    Q, D = lq.shape[0], keys.shape[0]
+    bd = min(bd, D)
+    assert Q % bq == 0 and D % bd == 0, (Q, D, bq, bd)
+    n_tiles = D // bd
+    kernel = functools.partial(_delta_max_kernel, n_tiles=n_tiles)
+    return pl.pallas_call(
+        kernel,
+        grid=(Q // bq, n_tiles),
+        in_specs=[
+            pl.BlockSpec((bq,), lambda i, j: (i,)),
+            pl.BlockSpec((bq,), lambda i, j: (i,)),
+            pl.BlockSpec((bd,), lambda i, j: (j,)),
+            pl.BlockSpec((bd,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bq,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((Q,), vals.dtype),
+        scratch_shapes=[pltpu.VMEM((bq,), vals.dtype)],
+        interpret=interpret,
+    )(lq, uq, keys, vals)
+
+
+def _delta_count2d_kernel(lx_ref, ux_ref, ly_ref, uy_ref, kx_ref, ky_ref,
+                          out_ref, acc, *, n_tiles: int):
+    d = pl.program_id(1)
+
+    @pl.when(d == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    lx = lx_ref[...]
+    ux = ux_ref[...]
+    ly = ly_ref[...]
+    uy = uy_ref[...]
+    kx = kx_ref[...]
+    ky = ky_ref[...]
+    member = ((lx[:, None] < kx[None, :]) & (kx[None, :] <= ux[:, None]) &
+              (ly[:, None] < ky[None, :]) & (ky[None, :] <= uy[:, None])
+              ).astype(acc.dtype)
+    ones = jnp.ones((member.shape[1],), acc.dtype)
+    acc[...] += jnp.dot(member, ones, preferred_element_type=acc.dtype)
+
+    @pl.when(d == n_tiles - 1)
+    def _finalize():
+        out_ref[...] = acc[...]
+
+
+def delta_count2d_pallas(lx, ux, ly, uy, keys_x, keys_y,
+                         bq: int = DEFAULT_BQ, bd: int = DEFAULT_BH,
+                         interpret: bool = True, dtype=None):
+    """Exact count of buffered points in (lx, ux] x (ly, uy] per query."""
+    Q, D = lx.shape[0], keys_x.shape[0]
+    bd = min(bd, D)
+    assert Q % bq == 0 and D % bd == 0, (Q, D, bq, bd)
+    dtype = dtype or keys_x.dtype
+    n_tiles = D // bd
+    kernel = functools.partial(_delta_count2d_kernel, n_tiles=n_tiles)
+    return pl.pallas_call(
+        kernel,
+        grid=(Q // bq, n_tiles),
+        in_specs=[
+            pl.BlockSpec((bq,), lambda i, j: (i,)),
+            pl.BlockSpec((bq,), lambda i, j: (i,)),
+            pl.BlockSpec((bq,), lambda i, j: (i,)),
+            pl.BlockSpec((bq,), lambda i, j: (i,)),
+            pl.BlockSpec((bd,), lambda i, j: (j,)),
+            pl.BlockSpec((bd,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bq,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((Q,), dtype),
+        scratch_shapes=[pltpu.VMEM((bq,), dtype)],
+        interpret=interpret,
+    )(lx, ux, ly, uy, keys_x, keys_y)

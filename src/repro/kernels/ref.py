@@ -17,7 +17,8 @@ import jax.numpy as jnp
 from ..core.poly import clipped_poly_max, eval_segments, locate
 
 __all__ = ["poly_eval_ref", "range_sum_ref", "range_max_ref",
-           "corner_count2d_ref"]
+           "corner_count2d_ref", "delta_sum_ref", "delta_max_ref",
+           "delta_count2d_ref"]
 
 
 def poly_eval_ref(q, seg_lo, seg_next, seg_hi, coeffs):
@@ -48,6 +49,28 @@ def range_max_ref(lq, uq, seg_lo, seg_next, seg_hi, coeffs, seg_agg):
                 (seg_next[None, :] <= uq[:, None]))
     m_mid = jnp.max(jnp.where(interior, seg_agg[None, :], -jnp.inf), axis=1)
     return jnp.maximum(jnp.maximum(m_left, m_right), m_mid)
+
+
+def delta_sum_ref(lq, uq, keys, vals):
+    """Exact sum of buffered measures with key in (lq, uq] (delta_scan
+    oracle); sentinel-padded slots never satisfy membership."""
+    member = ((lq[:, None] < keys[None, :]) &
+              (keys[None, :] <= uq[:, None])).astype(vals.dtype)
+    return member @ vals
+
+
+def delta_max_ref(lq, uq, keys, vals):
+    """Exact max of buffered measures with key in [lq, uq]; -inf if none."""
+    member = (lq[:, None] <= keys[None, :]) & (keys[None, :] <= uq[:, None])
+    return jnp.max(jnp.where(member, vals[None, :], -jnp.inf), axis=1)
+
+
+def delta_count2d_ref(lx, ux, ly, uy, keys_x, keys_y, dtype=None):
+    """Exact count of buffered points in (lx, ux] x (ly, uy]."""
+    dtype = dtype or keys_x.dtype
+    member = ((lx[:, None] < keys_x[None, :]) & (keys_x[None, :] <= ux[:, None]) &
+              (ly[:, None] < keys_y[None, :]) & (keys_y[None, :] <= uy[:, None]))
+    return jnp.sum(member.astype(dtype), axis=1)
 
 
 def _leaf_cf_eval(qx, qy, mx0, mx1, my0, my1, bounds, coeffs, deg):

@@ -11,21 +11,18 @@ path is exercised shape-only by launch/dryrun.py.
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding
 
 from ..checkpoint import CheckpointManager
 from ..configs import ARCHS, SHAPES
 from ..data.pipeline import SyntheticTokens
 from ..dist.fault_tolerance import (FailureInjector, HeartbeatMonitor,
                                     SimulatedPodFailure, elastic_remesh)
-from ..dist.sharding import batch_specs, named, param_specs, state_specs
+from ..dist.sharding import batch_specs, param_specs, state_specs
 from ..models import init_model
-from ..optim import TrainState, adamw_init
+from ..optim import adamw_init
 from ..train import make_train_step
 
 

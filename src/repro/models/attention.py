@@ -5,7 +5,6 @@ per-layer window sizes (gemma3 5:1 local:global, h2o-danube SWA).
 from __future__ import annotations
 
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -15,7 +15,6 @@ single B/C group (G=1) as in the released configs.
 from __future__ import annotations
 
 import math
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

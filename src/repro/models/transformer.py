@@ -16,9 +16,8 @@ Entry points:
 """
 from __future__ import annotations
 
-import math
 from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -26,9 +25,8 @@ import jax.numpy as jnp
 from . import attention as attn
 from . import moe as moe_mod
 from . import ssm as ssm_mod
-from .layers import (BATCH, causal_window_mask, embed, init_embed,
-                     init_linear, init_rms, linear, logits, rms_norm,
-                     shard_hint)
+from .layers import (BATCH, embed, init_embed, init_linear, init_rms, linear,
+                     logits, rms_norm, shard_hint)
 from .layers import init_swiglu, swiglu
 
 __all__ = ["init_model", "forward_train", "init_cache", "prefill",

@@ -5,8 +5,7 @@ dist.sharding.state_specs), so FSDP shards m/v alongside the weights.
 """
 from __future__ import annotations
 
-import math
-from typing import Any, Dict, NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

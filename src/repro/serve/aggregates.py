@@ -18,7 +18,8 @@ import jax.numpy as jnp
 
 from ..core import build_index_1d, build_index_2d
 from ..data import hki_series, osm_points, tweet_latitudes
-from ..engine import Engine, build_plan, build_plan_2d
+from ..engine import (DynamicEngine, DynamicEngine2D, Engine, build_plan,
+                      build_plan_2d)
 from .step import make_aggregate_step
 
 __all__ = ["AggregateService"]
@@ -29,16 +30,25 @@ class AggregateService:
 
     Request kinds: 'count' (1-D COUNT over TWEET latitudes), 'max' (1-D MAX
     over the HKI series), 'count2d' (2-key COUNT over OSM points).
+
+    ``dynamic=True`` wraps every plan in a delta-buffered
+    ``DynamicEngine``/``DynamicEngine2D`` (engine/dynamic.py) and opens the
+    ``insert``/``delete``/``flush`` endpoints: updates are absorbed without
+    a rebuild, queries keep their certified bounds, and merges refit only
+    affected segments on a background-installable plan swap.
     """
 
     def __init__(self, backend: str = "xla", eps_abs: float = 100.0,
                  eps_rel: Optional[float] = 0.01, n1: int = 150_000,
                  n2: int = 60_000, interpret: bool = True,
-                 verbose: bool = True):
+                 verbose: bool = True, dynamic: bool = False,
+                 capacity: int = 1024):
         self.backend = backend
         self.eps_rel = eps_rel
+        self.dynamic = dynamic
         say = print if verbose else (lambda *a, **k: None)
-        say(f"[server] building indexes (backend={backend}) ...")
+        say(f"[server] building indexes (backend={backend}, "
+            f"dynamic={dynamic}) ...")
         t0 = time.time()
         lat = tweet_latitudes(n1)
         count_idx = build_index_1d(lat, None, "count", deg=2,
@@ -49,22 +59,42 @@ class AggregateService:
         idx2d = build_index_2d(px, py, deg=3, delta=eps_abs / 4)
 
         self.engine = Engine(backend=backend, interpret=interpret)
-        self.plans = {
-            "count": build_plan(count_idx),
-            "max": build_plan(max_idx),
-            "count2d": build_plan_2d(idx2d),
-        }
         self.domains: Dict[str, Tuple[float, ...]] = {
             "count": (float(lat.min()), float(lat.max())),
             "max": (float(ts.min()), float(ts.max())),
             "count2d": (float(px.min()), float(px.max()),
                         float(py.min()), float(py.max())),
         }
-        # one engine-bound callable per request type — the only dispatch a
-        # request pays is a dict lookup; everything below it is one jitted
-        # executable per (aggregate, backend, batch-bucket)
-        self._steps = {kind: make_aggregate_step(self.engine, plan, eps_rel)
-                       for kind, plan in self.plans.items()}
+        if dynamic:
+            self._dyn = {
+                "count": DynamicEngine(count_idx, backend=backend,
+                                       interpret=interpret,
+                                       capacity=capacity, background=True),
+                "max": DynamicEngine(max_idx, backend=backend,
+                                     interpret=interpret, capacity=capacity,
+                                     background=True),
+                "count2d": DynamicEngine2D(idx2d, backend=backend,
+                                           interpret=interpret,
+                                           capacity=capacity,
+                                           background=True),
+            }
+            self.plans = {k: d.plan for k, d in self._dyn.items()}
+            self._steps = {
+                kind: (lambda d: lambda *r: d.query(*r, eps_rel=eps_rel))(dyn)
+                for kind, dyn in self._dyn.items()}
+        else:
+            self._dyn = {}
+            self.plans = {
+                "count": build_plan(count_idx),
+                "max": build_plan(max_idx),
+                "count2d": build_plan_2d(idx2d),
+            }
+            # one engine-bound callable per request type — the only dispatch
+            # a request pays is a dict lookup; everything below it is one
+            # jitted executable per (aggregate, backend, batch-bucket)
+            self._steps = {kind: make_aggregate_step(self.engine, plan,
+                                                     eps_rel)
+                           for kind, plan in self.plans.items()}
         say(f"[server] ready in {time.time() - t0:.1f}s — sizes: " +
             " ".join(f"{k}={p.size_bytes()}B" for k, p in self.plans.items()))
 
@@ -73,6 +103,34 @@ class AggregateService:
         res = self._steps[kind](*ranges)
         jax.block_until_ready(res.answer)
         return res
+
+    # -- update endpoints (dynamic mode) ---------------------------------
+
+    def _dyn_engine(self, kind: str):
+        if not self.dynamic:
+            raise RuntimeError("updates require AggregateService("
+                               "dynamic=True)")
+        return self._dyn[kind]
+
+    def insert(self, kind: str, *args) -> None:
+        """Buffer new records: (keys[, measures]) for 1-D, (xs, ys) for
+        'count2d'.  Subsequent queries fold them in exactly."""
+        self._dyn_engine(kind).insert(*args)
+
+    def delete(self, kind: str, *args) -> None:
+        """Buffer delete tombstones for existing records."""
+        self._dyn_engine(kind).delete(*args)
+
+    def flush(self, kind: Optional[str] = None) -> None:
+        """Merge buffered updates into fresh plans (all kinds by default)."""
+        if not self.dynamic:
+            raise RuntimeError("updates require AggregateService("
+                               "dynamic=True)")
+        kinds = [kind] if kind is not None else list(self._dyn)
+        for k in kinds:
+            self._dyn_engine(k).flush()
+        for k in kinds:
+            self.plans[k] = self._dyn[k].plan
 
     def warmup(self, batch_size: int = 1024) -> None:
         """Pre-compile the per-request-type executables for one bucket."""

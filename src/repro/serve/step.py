@@ -6,7 +6,6 @@ from __future__ import annotations
 from typing import Callable, Optional
 
 import jax
-import jax.numpy as jnp
 
 from ..models import decode_step, prefill
 

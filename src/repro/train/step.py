@@ -7,8 +7,7 @@ microbatch's FSDP all-gathers with the previous one's compute.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Callable, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

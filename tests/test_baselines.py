@@ -4,7 +4,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.core import (ExactSum, FitingTree, PGMIndex, RMIIndex,
-                        build_index_1d, cone_segments, query_sum)
+                        build_index_1d, cone_segments)
 
 
 def _data(n=20_000, seed=2):

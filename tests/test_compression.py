@@ -1,0 +1,66 @@
+"""repro.dist.compression: int8 quantize/dequantize contracts."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.dist.compression import dequantize_int8, quantize_int8  # noqa: E402
+
+
+@pytest.mark.parametrize("shape", [(16,), (8, 32), (2, 3, 5)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_round_trip_error_bound(shape, dtype):
+    """|dequantize(quantize(x)) - x| <= scale/2 elementwise (round-to-
+    nearest of symmetric per-tensor quantization)."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(0, 3.0, shape), dtype)
+    q, scale = quantize_int8(x)
+    back = dequantize_int8(q, scale, dtype=dtype)
+    err = np.abs(np.asarray(back) - np.asarray(x))
+    assert err.max() <= float(scale) / 2 + 1e-7
+
+
+def test_dtype_and_shape_preservation():
+    x = jnp.asarray(np.linspace(-4, 4, 24).reshape(4, 6), jnp.float32)
+    q, scale = quantize_int8(x)
+    assert q.dtype == jnp.int8
+    assert q.shape == x.shape
+    assert scale.dtype == x.dtype
+    assert scale.shape == ()
+    for out_dtype in (jnp.float32, jnp.float64, jnp.bfloat16):
+        back = dequantize_int8(q, scale, dtype=out_dtype)
+        assert back.dtype == out_dtype
+        assert back.shape == x.shape
+
+
+def test_codes_bounded_and_extremes_hit():
+    """Codes stay in [-127, 127] and the absolute max maps to +-127."""
+    x = jnp.asarray([0.5, -2.0, 4.0, -1.0], jnp.float32)
+    q, scale = quantize_int8(x)
+    qn = np.asarray(q)
+    assert qn.min() >= -127 and qn.max() <= 127
+    assert qn[2] == 127
+    np.testing.assert_allclose(float(scale), 4.0 / 127.0, rtol=1e-6)
+
+
+def test_all_zero_tensor():
+    x = jnp.zeros((5, 5), jnp.float32)
+    q, scale = quantize_int8(x)
+    assert float(scale) == 0.0
+    assert np.all(np.asarray(q) == 0)
+    assert np.all(np.asarray(dequantize_int8(q, scale)) == 0.0)
+
+
+def test_jit_and_symmetry():
+    """jit-safe, and quantization is sign-symmetric: q(-x) == -q(x)."""
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(0, 1, (32,)), jnp.float32)
+    q1, s1 = jax.jit(quantize_int8)(x)
+    q2, s2 = quantize_int8(x)
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+    assert float(s1) == float(s2)
+    qneg, sneg = quantize_int8(-x)
+    np.testing.assert_array_equal(np.asarray(qneg), -np.asarray(q2))
+    assert float(sneg) == float(s2)

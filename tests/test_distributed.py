@@ -4,7 +4,16 @@ import os
 import subprocess
 import sys
 
+import jax
 import pytest
+
+# The subprocesses force their own device meshes, but exercising them only
+# makes sense on a multi-device container; single-device CI hosts skip
+# (this replaces the old --ignore flags, so the CI invocation matches the
+# ROADMAP tier-1 command).
+pytestmark = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="distribution tests need a container with >= 8 devices")
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 ENV = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))

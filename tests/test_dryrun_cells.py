@@ -7,7 +7,16 @@ import os
 import subprocess
 import sys
 
+import jax
 import pytest
+
+# The dry-run subprocess forces a 512-device topology; running it (and
+# auditing the committed sweep) is only meaningful on a multi-device
+# container — single-device CI hosts skip (this replaces the old --ignore
+# flags, so the CI invocation matches the ROADMAP tier-1 command).
+pytestmark = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="dry-run cells need a container with >= 8 devices")
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 ENV = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))

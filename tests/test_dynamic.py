@@ -1,0 +1,368 @@
+"""Dynamic engine: delta-buffered updates must preserve every certified
+bound, agree across backends, and survive (selective, background) refits."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core import (ExactMax, ExactSum, MergeSortTree,  # noqa: E402
+                        build_index_1d, build_index_2d)
+from repro.engine import (BACKENDS, DynamicEngine,  # noqa: E402
+                          DynamicEngine2D)
+
+N = 2500
+NQ = 256
+DELTA = 25.0
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(42)
+    keys = np.sort(rng.uniform(0, 600, N))
+    meas = rng.uniform(0, 10, N)
+    return keys, meas
+
+
+@pytest.fixture(scope="module")
+def updates(data):
+    keys, _ = data
+    rng = np.random.default_rng(43)
+    ins_k = np.concatenate([rng.uniform(0, 600, 56),
+                            [-5.0, 610.0]])   # includes out-of-domain keys
+    ins_v = rng.uniform(0, 10, len(ins_k))
+    del_k = np.unique(keys[rng.integers(0, N, 24)])
+    return ins_k, ins_v, del_k
+
+
+@pytest.fixture(scope="module")
+def queries(data):
+    keys, _ = data
+    rng = np.random.default_rng(44)
+    a = keys[rng.integers(0, N, NQ)]
+    b = keys[rng.integers(0, N, NQ)]
+    return np.minimum(a, b), np.maximum(a, b)
+
+
+@pytest.fixture(scope="module")
+def indexes(data):
+    keys, meas = data
+    out = {}
+    for agg, m, deg in (("sum", meas, 2), ("count", None, 2),
+                        ("max", meas * 100, 3), ("min", meas * 100, 3)):
+        out[agg] = build_index_1d(keys, m, agg, deg=deg, delta=DELTA)
+    return out
+
+
+def _apply_updates(keys, meas, ins_k, ins_v, del_k):
+    """Ground-truth multiset after the updates (first occurrence deleted)."""
+    all_k = np.concatenate([keys, ins_k])
+    all_v = np.concatenate([meas, ins_v])
+    alive = np.ones(len(all_k), bool)
+    for k in del_k:
+        hit = np.where(alive & (all_k == k))[0]
+        alive[hit[0]] = False
+    return all_k[alive], all_v[alive]
+
+
+def _truth_1d(agg, keys, meas, lq, uq):
+    if agg in ("sum", "count"):
+        m = np.ones_like(keys) if agg == "count" else meas
+        ex = ExactSum.build(keys, m)
+        return np.asarray(ex.cf_at(jnp.asarray(uq)) - ex.cf_at(jnp.asarray(lq)))
+    sgn = -1.0 if agg == "min" else 1.0
+    ex = ExactMax.build(keys, sgn * meas)
+    return sgn * np.asarray(ex.query(jnp.asarray(lq), jnp.asarray(uq)))
+
+
+def _measures_for(agg, meas):
+    return None if agg == "count" else (
+        meas * 100 if agg in ("max", "min") else meas)
+
+
+def _dyn_with_updates(indexes, agg, backend, updates):
+    ins_k, ins_v, del_k = updates
+    dyn = DynamicEngine(indexes[agg], backend=backend, capacity=256,
+                        auto_refit=False)
+    if agg == "count":
+        dyn.insert(ins_k)
+    elif agg in ("max", "min"):
+        dyn.insert(ins_k, ins_v * 100)
+    else:
+        dyn.insert(ins_k, ins_v)
+    dyn.delete(del_k)
+    return dyn
+
+
+def _updated_truth(agg, data, updates, lq, uq):
+    keys, meas = data
+    ins_k, ins_v, del_k = updates
+    scale = 100 if agg in ("max", "min") else 1
+    uk, uv = _apply_updates(keys, meas * scale, ins_k, ins_v * scale, del_k)
+    return _truth_1d(agg, uk, uv, lq, uq)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("agg", ["sum", "count", "max", "min"])
+def test_certified_bounds_after_updates(indexes, data, updates, queries,
+                                        agg, backend):
+    """Lemma 5.1/5.3 must hold over the *updated* dataset while the updates
+    sit in the delta buffer (the correction is exact)."""
+    lq, uq = queries
+    dyn = _dyn_with_updates(indexes, agg, backend, updates)
+    truth = _updated_truth(agg, data, updates, lq, uq)
+    res = dyn.query(lq, uq)
+    bound = 2 * DELTA if agg in ("sum", "count") else DELTA
+    assert np.max(np.abs(np.asarray(res.answer) - truth)) <= bound + 1e-6
+
+
+@pytest.mark.parametrize("agg", ["sum", "count", "max", "min"])
+def test_cross_backend_equivalence_post_update(indexes, updates, queries,
+                                               agg):
+    """All three backends produce identical post-update f64 answers."""
+    lq, uq = queries
+    outs = {}
+    for b in BACKENDS:
+        dyn = _dyn_with_updates(indexes, agg, b, updates)
+        outs[b] = np.asarray(dyn.query(lq, uq).answer)
+    for b in ("pallas", "ref"):
+        np.testing.assert_allclose(outs[b], outs["xla"], rtol=1e-9,
+                                   atol=1e-9)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("agg", ["sum", "max"])
+def test_qrel_after_updates(indexes, data, updates, queries, agg, backend):
+    """Fused Q_rel refinement keeps the relative bound after updates."""
+    lq, uq = queries
+    dyn = _dyn_with_updates(indexes, agg, backend, updates)
+    truth = _updated_truth(agg, data, updates, lq, uq)
+    eps_rel = 0.05
+    ans = np.asarray(dyn.query(lq, uq, eps_rel=eps_rel).answer)
+    pos = np.abs(truth) > 0
+    rel = np.abs(ans[pos] - truth[pos]) / np.abs(truth[pos])
+    assert rel.max() <= eps_rel + 1e-9
+
+
+@pytest.mark.parametrize("agg", ["sum", "max"])
+def test_flush_refits_and_preserves_bounds(indexes, data, updates, queries,
+                                           agg):
+    """A merge pass empties the buffer, re-certifies the touched segments,
+    and post-refit answers stay within the certified bound (and close to
+    the buffered answers)."""
+    lq, uq = queries
+    dyn = _dyn_with_updates(indexes, "sum" if agg == "sum" else agg,
+                            "xla", updates)
+    before = np.asarray(dyn.query(lq, uq).answer)
+    if agg == "sum":
+        assert dyn.n_pending > 0   # max deletes merged eagerly already
+    dyn.flush()
+    assert dyn.n_pending == 0
+    assert dyn.refit_count >= 1
+    truth = _updated_truth(agg, data, updates, lq, uq)
+    after = np.asarray(dyn.query(lq, uq).answer)
+    bound = 2 * DELTA if agg == "sum" else DELTA
+    assert np.max(np.abs(after - truth)) <= bound + 1e-6
+    assert np.max(np.abs(before - truth)) <= bound + 1e-6
+    # every refit segment is re-certified at delta
+    assert float(np.max(np.asarray(dyn.index.seg_err))) <= DELTA + 1e-9
+
+
+def test_selective_refit_leaves_far_segments_alone(data):
+    """Only segments whose span contains changed keys are refit; clean SUM
+    segments absorb upstream inserts as an exact constant-coefficient
+    shift."""
+    keys, meas = data
+    idx = build_index_1d(keys, meas, "sum", deg=2, delta=DELTA)
+    dyn = DynamicEngine(idx, capacity=256, auto_refit=False)
+    # edits confined to keys < 50
+    rng = np.random.default_rng(7)
+    ins_k = rng.uniform(0, 50, 30)
+    dyn.insert(ins_k, rng.uniform(0, 10, 30))
+    net = float(np.sum(dyn._ins_log[0][1]))
+    old_lo = np.asarray(idx.seg_lo)
+    old_coeffs = np.asarray(idx.coeffs)
+    dyn.flush()
+    new_lo = np.asarray(dyn.index.seg_lo)
+    new_coeffs = np.asarray(dyn.index.coeffs)
+    far_old = np.where(old_lo > 100)[0]
+    assert len(far_old) > 2
+    for i in far_old:
+        j = np.searchsorted(new_lo, old_lo[i])
+        assert new_lo[j] == old_lo[i]
+        # non-constant coefficients bit-identical; constant shifted by the
+        # exact net inserted mass upstream
+        np.testing.assert_array_equal(new_coeffs[j, 1:], old_coeffs[i, 1:])
+        np.testing.assert_allclose(new_coeffs[j, 0] - old_coeffs[i, 0], net,
+                                   rtol=1e-12)
+
+
+def test_capacity_trigger_auto_refits(data):
+    keys, meas = data
+    idx = build_index_1d(keys, meas, "sum", deg=2, delta=DELTA)
+    dyn = DynamicEngine(idx, capacity=64, auto_refit=True)
+    rng = np.random.default_rng(8)
+    for _ in range(3):
+        dyn.insert(rng.uniform(0, 600, 40), rng.uniform(0, 10, 40))
+    assert dyn.refit_count >= 1
+    assert dyn.n_pending < 64
+
+
+def test_drift_trigger_refits_hot_segment(data):
+    """Accumulated |measure| drift past a segment's error headroom forces a
+    merge before the buffer fills."""
+    keys, meas = data
+    idx = build_index_1d(keys, meas, "sum", deg=2, delta=DELTA)
+    dyn = DynamicEngine(idx, capacity=1024, auto_refit=True)
+    hot = float(np.asarray(idx.seg_lo)[3]) + 1e-9
+    dyn.insert(np.full(8, hot), np.full(8, 50.0))
+    assert dyn.refit_count >= 1
+    assert dyn.n_pending == 0
+
+
+def test_extremal_delete_merges_eagerly(data, queries):
+    keys, meas = data
+    idx = build_index_1d(keys, meas * 100, "max", deg=3, delta=DELTA)
+    dyn = DynamicEngine(idx, backend="pallas", capacity=128,
+                        auto_refit=False)
+    dyn.delete(keys[[10, 500, 2000]])
+    assert dyn.refit_count == 1 and dyn.n_pending == 0
+    lq, uq = queries
+    uk, uv = _apply_updates(keys, meas * 100, np.zeros(0), np.zeros(0),
+                            keys[[10, 500, 2000]])
+    truth = _truth_1d("max", uk, uv, lq, uq)
+    res = dyn.query(lq, uq)
+    assert np.max(np.abs(np.asarray(res.answer) - truth)) <= DELTA + 1e-6
+
+
+def test_background_refit_never_blocks_queries(data, queries):
+    keys, meas = data
+    idx = build_index_1d(keys, meas, "sum", deg=2, delta=DELTA)
+    dyn = DynamicEngine(idx, capacity=256, auto_refit=False,
+                        background=True)
+    rng = np.random.default_rng(9)
+    ins_k = rng.uniform(0, 600, 50)
+    ins_v = rng.uniform(0, 10, 50)
+    dyn.insert(ins_k, ins_v)
+    lq, uq = queries
+    truth = _updated_truth("sum", data, (ins_k, ins_v, np.zeros(0)), lq, uq)
+    dyn.refit(wait=False)   # merge runs on a worker thread
+    # queries keep answering within bounds throughout the merge
+    for _ in range(5):
+        ans = np.asarray(dyn.query(lq, uq).answer)
+        assert np.max(np.abs(ans - truth)) <= 2 * DELTA + 1e-6
+    dyn.refit(wait=True)    # join + surface any merge error
+    assert dyn.refit_count == 1 and dyn.n_pending == 0
+    ans = np.asarray(dyn.query(lq, uq).answer)
+    assert np.max(np.abs(ans - truth)) <= 2 * DELTA + 1e-6
+
+
+def test_duplicate_deletes_in_one_batch_take_distinct_victims(data):
+    """delete([k, k]) must tombstone *both* occurrences' measures, not the
+    first one twice — the buffered SUM correction is exact."""
+    keys, meas = data
+    k = 300.0
+    keys2 = np.sort(np.concatenate([keys, [k, k]]))
+    order = np.argsort(np.concatenate([keys, [k, k]]), kind="stable")
+    meas2 = np.concatenate([meas, [4.0, 9.0]])[order]
+    idx = build_index_1d(keys2, meas2, "sum", deg=2, delta=DELTA)
+    dyn = DynamicEngine(idx, capacity=64, auto_refit=False)
+    dyn.delete([k, k])
+    dels = dyn._del_log[0][1]
+    assert sorted(dels.tolist()) == [4.0, 9.0]
+    with pytest.raises(KeyError):
+        dyn.delete([k])   # only two occurrences existed
+
+
+def test_2d_duplicate_delete_of_single_point_raises(dyn2d_setup):
+    px, py, idx, _, _, _ = dyn2d_setup
+    dyn = DynamicEngine2D(idx, capacity=64, auto_refit=False)
+    x, y = float(px[0]), float(py[0])
+    with pytest.raises(KeyError):
+        dyn.delete([x, x], [y, y])   # one live occurrence, two tombstones
+
+
+def test_delete_missing_key_raises(data):
+    keys, meas = data
+    idx = build_index_1d(keys, meas, "sum", deg=2, delta=DELTA)
+    dyn = DynamicEngine(idx, capacity=64, auto_refit=False)
+    with pytest.raises(KeyError):
+        dyn.delete([keys[0] + 0.123456789])
+
+
+def test_oversize_batch_raises(data):
+    keys, meas = data
+    idx = build_index_1d(keys, meas, "sum", deg=2, delta=DELTA)
+    dyn = DynamicEngine(idx, capacity=64, auto_refit=False)
+    with pytest.raises(ValueError, match="capacity"):
+        dyn.insert(np.linspace(0, 600, 100), np.ones(100))
+
+
+@pytest.fixture(scope="module")
+def dyn2d_setup():
+    rng = np.random.default_rng(13)
+    px = rng.uniform(0, 120, 4000)
+    py = rng.uniform(0, 120, 4000)
+    idx = build_index_2d(px, py, deg=2, delta=DELTA, max_depth=6)
+    ins_x = rng.uniform(0, 120, 48)
+    ins_y = rng.uniform(0, 120, 48)
+    del_i = rng.integers(0, 4000, 16)
+    qa = rng.uniform(0, 120, 128)
+    qb = qa + rng.uniform(0.5, 40, 128)
+    qc = rng.uniform(0, 120, 128)
+    qd = qc + rng.uniform(0.5, 40, 128)
+    keep = np.ones(4000, bool)
+    keep[del_i] = False
+    tree = MergeSortTree.build(np.concatenate([px[keep], ins_x]),
+                               np.concatenate([py[keep], ins_y]))
+    cf = lambda u, v: tree.cf(jnp.asarray(u), jnp.asarray(v))
+    truth = np.asarray(cf(qb, qd) - cf(qa, qd) - cf(qb, qc) + cf(qa, qc))
+    return px, py, idx, (ins_x, ins_y, px[del_i], py[del_i]), \
+        (qa, qb, qc, qd), truth
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_2d_bounds_after_updates(dyn2d_setup, backend):
+    px, py, idx, (ix, iy, dx, dy), q, truth = dyn2d_setup
+    dyn = DynamicEngine2D(idx, backend=backend, capacity=128,
+                          auto_refit=False)
+    dyn.insert(ix, iy)
+    dyn.delete(dx, dy)
+    res = dyn.count2d(*q)
+    assert np.max(np.abs(np.asarray(res.answer) - truth)) <= 4 * DELTA + 1e-6
+
+
+def test_2d_cross_backend_and_flush(dyn2d_setup):
+    px, py, idx, (ix, iy, dx, dy), q, truth = dyn2d_setup
+    outs = {}
+    for b in BACKENDS:
+        dyn = DynamicEngine2D(idx, backend=b, capacity=128,
+                              auto_refit=False)
+        dyn.insert(ix, iy)
+        dyn.delete(dx, dy)
+        outs[b] = np.asarray(dyn.count2d(*q).answer)
+    for b in ("pallas", "ref"):
+        np.testing.assert_allclose(outs[b], outs["xla"], rtol=1e-9,
+                                   atol=1e-9)
+    dyn.flush()
+    assert dyn.refit_count == 1 and dyn.n_pending == 0
+    res = np.asarray(dyn.count2d(*q).answer)
+    assert np.max(np.abs(res - truth)) <= 4 * DELTA + 1e-6
+
+
+def test_serve_dynamic_endpoints():
+    from repro.serve.aggregates import AggregateService
+    svc = AggregateService(backend="ref", n1=4000, n2=2500, eps_abs=50.0,
+                          eps_rel=None, verbose=False, dynamic=True,
+                          capacity=128)
+    c0, c1 = svc.domains["count"]
+    lq = np.full(16, c0)
+    uq = np.full(16, c1)
+    base = float(np.asarray(svc.serve("count", lq, uq).answer)[0])
+    svc.insert("count", np.linspace(c0 + 1e-6, c1 - 1e-6, 32))
+    upd = float(np.asarray(svc.serve("count", lq, uq).answer)[0])
+    assert abs(upd - (base + 32)) < 1e-6
+    svc.flush("count")
+    post = float(np.asarray(svc.serve("count", lq, uq).answer)[0])
+    assert abs(post - upd) <= 50.0 + 1e-6

@@ -1,11 +1,9 @@
 """Unit tests for minimax polynomial fitting (paper §4.1 / Eq. 9-10)."""
 import numpy as np
-import pytest
 
-from repro.core import (PolyModel, continuum_error, eval_poly, fit_lstsq,
+from repro.core import (continuum_error, eval_poly, fit_lstsq,
                         fit_minimax_lawson, fit_minimax_lp, lawson_batched,
                         max_error)
-from repro.core.fitting import rescale
 import jax.numpy as jnp
 
 

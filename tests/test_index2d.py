@@ -3,8 +3,8 @@ import numpy as np
 import jax.numpy as jnp
 import pytest
 
-from repro.core import (MergeSortTree, build_index_2d, count_dominated,
-                        dominance_rank, query_count_2d)
+from repro.core import (MergeSortTree, build_index_2d, dominance_rank,
+                        query_count_2d)
 from repro.data import make_queries_2d, osm_points
 
 

@@ -8,7 +8,7 @@ import pytest
 from repro.checkpoint import CheckpointManager
 from repro.data.pipeline import SyntheticTokens, length_stats
 from repro.dist.compression import dequantize_int8, quantize_int8
-from repro.optim import TrainState, adamw_init, adamw_update, clip_by_global_norm
+from repro.optim import adamw_init, adamw_update, clip_by_global_norm
 
 
 def test_adamw_converges_quadratic():
