@@ -21,6 +21,7 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .common import dataset, emit_history, row, time_fn
 
@@ -37,10 +38,175 @@ def _emit_engine_json(results, meta, out_path=None):
 
 # CI smoke shape: must match a committed BENCH_engine.json record's meta so
 # check_regression.py can pair the fresh run with its baseline
-TINY = dict(n=30_000, nq=1024, n2=10_000, nq2=256)
+TINY = dict(n=30_000, nq=1024, n2=10_000, nq2=256,
+            hs=(512, 2048), hs2=(1024, 4096), nqh=256)
+
+
+def _synthetic_plan_1d(H: int, agg: str, deg: int, rng, dtype=jnp.float64):
+    """Kernel-shaped IndexPlan with exactly H segments (no index build —
+    fitting tens of thousands of segments would dominate the sweep)."""
+    from repro.core.exact import build_sparse_table
+    from repro.engine.plan import IndexPlan, big_sentinel, pad_to_multiple
+
+    big = big_sentinel(dtype)
+    edges = np.sort(rng.uniform(0.0, 1000.0, H + 1))
+    seg_lo = jnp.asarray(edges[:-1], dtype)
+    seg_hi = jnp.asarray(edges[1:], dtype)
+    nxt = jnp.concatenate([seg_lo[1:], jnp.full((1,), big, dtype)])
+    coeffs = jnp.asarray(rng.normal(0, 1, (H, deg + 1)), dtype)
+    seg_agg = jnp.asarray(rng.normal(0, 1, H), dtype)
+    st = jnp.asarray(build_sparse_table(np.asarray(seg_agg)))
+    bh = min(512, H)
+    return IndexPlan(
+        agg=agg, deg=deg, delta=1.0, h=H, n=H, bh=bh,
+        seg_lo=pad_to_multiple(seg_lo, bh, big),
+        seg_next=pad_to_multiple(nxt, bh, big),
+        seg_hi=pad_to_multiple(seg_hi, bh, big),
+        coeffs=pad_to_multiple(coeffs, bh, 0.0),
+        seg_agg=pad_to_multiple(seg_agg, bh, -jnp.inf),
+        st=st, ref_keys=None, ref_cf=None, ref_st=None)
+
+
+def _synthetic_plan_2d(L: int, deg: int, rng, dtype=jnp.float64):
+    """Full uniform quadtree of depth g with L = 4^g leaves: descent arrays
+    for the XLA backend plus the flat leaf tables in the plan's Morton
+    layout for both Pallas paths."""
+    from repro.engine.plan import big_sentinel
+    from repro.kernels.locate import dyadic_cuts, leaf_morton_codes
+
+    g = int(round(np.log(L) / np.log(4)))
+    assert 4 ** g == L, f"L must be a power of 4, got {L}"
+    children, bounds, leaf_of, leaf_nodes = [], [], [], []
+
+    def build(x0, x1, y0, y1, d):
+        node = len(children)
+        children.append([-1, -1, -1, -1])
+        bounds.append((x0, x1, y0, y1))
+        leaf_of.append(-1)
+        if d == g:
+            leaf_of[node] = len(leaf_nodes)
+            leaf_nodes.append(node)
+            return node
+        xm, ym = 0.5 * (x0 + x1), 0.5 * (y0 + y1)
+        children[node][0] = build(x0, xm, y0, ym, d + 1)
+        children[node][1] = build(xm, x1, y0, ym, d + 1)
+        children[node][2] = build(x0, xm, ym, y1, d + 1)
+        children[node][3] = build(xm, x1, ym, y1, d + 1)
+        return node
+
+    build(0.0, 100.0, 0.0, 100.0, 0)
+    k = (deg + 1) * (deg + 1)
+    coeffs_slot = rng.normal(0, 1, (L, k))
+    bounds = np.asarray(bounds)
+    lb = bounds[np.asarray(leaf_nodes)]
+    xc = dyadic_cuts(0.0, 100.0, g)
+    z = leaf_morton_codes(lb, xc, xc, g)
+    order = np.argsort(z)
+    lbz = lb[order]
+    big = big_sentinel(dtype)
+    mx1 = np.where(lbz[:, 1] >= 100.0, big, lbz[:, 1])
+    my1 = np.where(lbz[:, 3] >= 100.0, big, lbz[:, 3])
+    to = lambda a: jnp.asarray(a, dtype)
+    return dict(mx0=to(lbz[:, 0]), mx1=to(mx1), my0=to(lbz[:, 2]),
+                my1=to(my1), bounds=to(lbz), coeffs=to(coeffs_slot[order]),
+                xcuts=to(xc), ycuts=to(xc),
+                leaf_z=jnp.asarray(z[order], jnp.int32), depth=g,
+                children=jnp.asarray(np.asarray(children, np.int32)),
+                leaf_of=jnp.asarray(np.asarray(leaf_of, np.int32)),
+                node_bounds=to(bounds),
+                leaf_nodes=jnp.asarray(np.asarray(leaf_nodes, np.int32)),
+                coeffs_slot=to(coeffs_slot))
+
+
+def _qt4(tb, lx, ux, ly, uy):
+    """4-corner inclusion-exclusion through the quadtree descent (the XLA
+    backend's op sequence) over the synthetic uniform tree."""
+    from repro.core.index2d import quadtree_eval_cf
+
+    ev = lambda u, v: quadtree_eval_cf(
+        tb["children"], tb["leaf_of"], tb["node_bounds"], tb["coeffs_slot"],
+        tb["leaf_nodes"], tb["depth"], 2, u, v)
+    return ev(ux, uy) - ev(lx, uy) - ev(ux, ly) + ev(lx, ly)
+
+
+def run_hsweep(hs=(512, 2048, 8192, 32768), hs2=(1024, 4096, 16384),
+               nqh=512, record=None):
+    """Locate->gather vs one-hot scan vs XLA as the table grows: the
+    log-vs-linear crossover (DESIGN.md §10).  Synthetic tables, raw
+    kernel/primitive timings (no Q_rel refinement)."""
+    from repro.core.poly import eval_segments
+    from repro.core.queries import max_eval_segments
+    from repro.kernels.leaf_eval2d import (corner_count2d_gather_pallas,
+                                           corner_count2d_pallas)
+    from repro.kernels.range_max import (range_max_gather_pallas,
+                                         range_max_pallas)
+    from repro.kernels.range_sum import (range_sum_gather_pallas,
+                                         range_sum_pallas)
+
+    rows = []
+    rng = np.random.default_rng(0x10C)
+
+    def rec(name, t, derived=""):
+        rows.append(row(name, t / nqh * 1e6, derived))
+        if record is not None:
+            record.append({"name": name, "us_per_query": t / nqh * 1e6,
+                           "derived": derived})
+
+    for H in hs:
+        plan = _synthetic_plan_1d(H, "sum", 2, rng)
+        lq = jnp.asarray(rng.uniform(0, 1000, nqh))
+        uq = jnp.maximum(lq + 50.0, lq)
+        runs = {
+            "pallas": jax.jit(lambda l, u, p=plan: range_sum_gather_pallas(
+                l, u, p.seg_lo, p.seg_hi, p.coeffs, bq=nqh)),
+            "pallas_scan": jax.jit(lambda l, u, p=plan: range_sum_pallas(
+                l, u, p.seg_lo, p.seg_next, p.seg_hi, p.coeffs,
+                bq=nqh, bh=p.bh)),
+            "xla": jax.jit(lambda l, u, p=plan: eval_segments(
+                u, p.seg_lo, p.seg_hi, p.coeffs) - eval_segments(
+                l, p.seg_lo, p.seg_hi, p.coeffs)),
+        }
+        for b, f in runs.items():
+            t, _ = time_fn(f, lq, uq)
+            rec(f"hsweep.sum.{b}.H{H}", t, f"Hpad={plan.seg_lo.shape[0]}")
+        planm = _synthetic_plan_1d(H, "max", 3, rng)
+        runs = {
+            "pallas": jax.jit(lambda l, u, p=planm: range_max_gather_pallas(
+                l, u, p.seg_lo, p.seg_hi, p.coeffs, p.st, bq=nqh)),
+            "pallas_scan": jax.jit(lambda l, u, p=planm: range_max_pallas(
+                l, u, p.seg_lo, p.seg_next, p.seg_hi, p.coeffs, p.seg_agg,
+                bq=nqh, bh=p.bh)),
+            "xla": jax.jit(lambda l, u, p=planm: max_eval_segments(
+                p.seg_lo, p.seg_hi, p.coeffs, p.st, l, u)),
+        }
+        for b, f in runs.items():
+            t, _ = time_fn(f, lq, uq)
+            rec(f"hsweep.max.{b}.H{H}", t, f"Hpad={planm.seg_lo.shape[0]}")
+
+    for L in hs2:
+        tb = _synthetic_plan_2d(L, 2, rng)
+        lx = jnp.asarray(rng.uniform(0, 100, nqh))
+        ux = jnp.minimum(lx + 10.0, 100.0)
+        ly = jnp.asarray(rng.uniform(0, 100, nqh))
+        uy = jnp.minimum(ly + 10.0, 100.0)
+        runs = {
+            "pallas": jax.jit(lambda a, b, c, d: corner_count2d_gather_pallas(
+                a, b, c, d, tb["xcuts"], tb["ycuts"], tb["leaf_z"],
+                tb["bounds"], tb["coeffs"], deg=2, depth=tb["depth"],
+                bq=nqh)),
+            "pallas_scan": jax.jit(lambda a, b, c, d: corner_count2d_pallas(
+                a, b, c, d, tb["mx0"], tb["mx1"], tb["my0"], tb["my1"],
+                tb["bounds"], tb["coeffs"], deg=2, bq=nqh, bh=min(512, L))),
+            "xla": jax.jit(lambda a, b, c, d: _qt4(tb, a, b, c, d)),
+        }
+        for b, f in runs.items():
+            t, _ = time_fn(f, lx, ux, ly, uy)
+            rec(f"hsweep.count2d.{b}.L{L}", t, f"Lpad={L}")
+    return rows
 
 
 def run(n=200_000, nq=4096, n2=40_000, nq2=1024, eps_rel=0.01,
+        hs=(512, 2048, 8192, 32768), hs2=(1024, 4096, 16384), nqh=512,
         out_path=None):
     from repro.core import build_index_1d, build_index_2d
     from repro.data import make_queries_1d, make_queries_2d
@@ -95,9 +261,13 @@ def run(n=200_000, nq=4096, n2=40_000, nq2=1024, eps_rel=0.01,
         record(f"engine.count2d.{b}.Qabs", t, nq2,
                f"Lpad={plan2.leaf_mx0.shape[0]}")
 
+    # ---------------- H-sweep: the log-vs-linear crossover ----------------
+    rows.extend(run_hsweep(hs=hs, hs2=hs2, nqh=nqh, record=engine_results))
+
     _emit_engine_json(engine_results, {
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
         "n": n, "nq": nq, "n2": n2, "nq2": nq2,
+        "hs": list(hs), "hs2": list(hs2), "nqh": nqh,
         "device": jax.devices()[0].platform,
         "machine": platform.machine(),
     }, out_path)

@@ -19,9 +19,10 @@ import jax.numpy as jnp
 
 from .common import dataset, row, time_fn
 
-_ENGINE_BACKENDS = ("xla", "ref", "pallas")
+_ENGINE_BACKENDS = ("xla", "ref", "pallas", "pallas_scan")
 _BACKEND_TAG = {"xla": "polyfit", "ref": "polyfit_kernel_ref",
-                "pallas": "polyfit_pallas_interp"}
+                "pallas": "polyfit_pallas_interp",
+                "pallas_scan": "polyfit_pallas_onehot"}
 
 
 def run(n1=200_000, n2=100_000, nq=1000, eps_abs=100.0, eps_rel=0.01):

@@ -20,7 +20,7 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--batches", type=int, default=100)
     ap.add_argument("--batch-size", type=int, default=1024)
-    ap.add_argument("--backend", choices=("xla", "pallas", "ref"),
+    ap.add_argument("--backend", choices=("xla", "pallas", "pallas_scan", "ref"),
                     default="xla")
     args = ap.parse_args()
 

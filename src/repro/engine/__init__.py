@@ -2,7 +2,9 @@
 
 Lower a constructed index into a canonical device-resident ``IndexPlan``
 once, then execute every query type through an ``Engine`` with
-``backend='xla' | 'pallas' | 'ref'``:
+``backend='xla' | 'pallas' | 'pallas_scan' | 'ref'`` (``pallas`` is the
+O(log H) locate->gather path, ``pallas_scan`` the one-hot membership scan
+it replaced — kept for A/B benchmarking, DESIGN.md §10):
 
     from repro.core import build_index_1d
     from repro.engine import Engine, build_plan

@@ -53,8 +53,10 @@ from ..core.index2d import PolyFitIndex2D, build_index_2d
 from ..core.queries import QueryResult
 from ..core.segmentation import FastAcceptFitter, greedy_segmentation
 from ..kernels import ref as _ref
-from ..kernels.delta_scan import (delta_count2d_pallas, delta_max_pallas,
-                                  delta_sum_pallas)
+from ..kernels.delta_scan import (delta_count2d_gather_pallas,
+                                  delta_count2d_pallas,
+                                  delta_max_gather_pallas, delta_max_pallas,
+                                  delta_sum_gather_pallas, delta_sum_pallas)
 from ..kernels.poly_eval import DEFAULT_BQ
 from .engine import (_bucket_size, _pad_bucket, check_pow2, raw_count2d,
                      raw_extremum, raw_sum, truth_count2d, truth_extremum,
@@ -77,49 +79,73 @@ class DeltaBuffer:
     they fail every membership test inside the delta-scan kernels; the
     kernels never need the fill level.  Values live in *internal* space
     (negated for MIN plans, mirroring the static index).
+
+    Appends also maintain the locate->gather correction structures
+    (DESIGN.md §10): exclusive prefix sums over both logs (a buffered
+    SUM/COUNT correction is then two binary searches + a subtraction) and,
+    for MAX/MIN plans, a sparse table over the insert log (the located span
+    answers in O(1)).  Sentinel slots carry value 0, so the prefix sums are
+    flat across the tail and the structures are fill-level oblivious too.
     """
 
     ins_keys: jnp.ndarray   # (cap,) sorted, sentinel-padded
     ins_vals: jnp.ndarray   # (cap,) measures; 0 on padding
+    ins_cf: jnp.ndarray     # (cap+1,) exclusive prefix sum of ins_vals
     del_keys: jnp.ndarray   # (cap,) sorted, sentinel-padded
     del_vals: jnp.ndarray   # (cap,) tombstoned measures; 0 on padding
+    del_cf: jnp.ndarray     # (cap+1,) exclusive prefix sum of del_vals
+    ins_st: Optional[jnp.ndarray]   # (L, cap) sparse table (max/min only)
     cap: int
 
     @staticmethod
-    def empty(cap: int, dtype=jnp.float64) -> "DeltaBuffer":
+    def empty(cap: int, dtype=jnp.float64,
+              with_st: bool = False) -> "DeltaBuffer":
         big = big_sentinel(dtype)
         s = jnp.full((cap,), big, dtype)
         z = jnp.zeros((cap,), dtype)
-        return DeltaBuffer(s, z, s, z, cap)
+        cf = jnp.zeros((cap + 1,), dtype)
+        st = (jnp.full((max(1, cap.bit_length()), cap), -jnp.inf, dtype)
+              if with_st else None)
+        return DeltaBuffer(s, z, cf, s, z, cf, st, cap)
 
 
 jax.tree_util.register_dataclass(
     DeltaBuffer,
-    data_fields=["ins_keys", "ins_vals", "del_keys", "del_vals"],
+    data_fields=["ins_keys", "ins_vals", "ins_cf", "del_keys", "del_vals",
+                 "del_cf", "ins_st"],
     meta_fields=["cap"],
 )
 
 
 @dataclasses.dataclass(frozen=True)
 class DeltaBuffer2D:
-    """Insert/delete point logs for a 2-key COUNT plan (x-sorted)."""
+    """Insert/delete point logs for a 2-key COUNT plan (x-sorted).
+
+    ``*_ylv`` are merge-sort-tree level arrays (level l = y values sorted
+    within blocks of 2^l of the x-order), rebuilt on append, so the
+    locate->gather correction answers each corner's dominance count in
+    O(log^2 cap) instead of scanning the log.
+    """
 
     ins_x: jnp.ndarray
     ins_y: jnp.ndarray
+    ins_ylv: jnp.ndarray    # (L, cap) per-level block-sorted y arrays
     del_x: jnp.ndarray
     del_y: jnp.ndarray
+    del_ylv: jnp.ndarray    # (L, cap)
     cap: int
 
     @staticmethod
     def empty(cap: int, dtype=jnp.float64) -> "DeltaBuffer2D":
         big = big_sentinel(dtype)
         s = jnp.full((cap,), big, dtype)
-        return DeltaBuffer2D(s, s, s, s, cap)
+        lv = jnp.full((max(1, cap.bit_length()), cap), big, dtype)
+        return DeltaBuffer2D(s, s, lv, s, s, lv, cap)
 
 
 jax.tree_util.register_dataclass(
     DeltaBuffer2D,
-    data_fields=["ins_x", "ins_y", "del_x", "del_y"],
+    data_fields=["ins_x", "ins_y", "ins_ylv", "del_x", "del_y", "del_ylv"],
     meta_fields=["cap"],
 )
 
@@ -137,6 +163,37 @@ def _append_sorted(keys, vals, new_k, new_v, *, cap: int):
     return k[order][:cap], v[order][:cap]
 
 
+@jax.jit
+def _prefix_sum_jnp(vals):
+    """Exclusive prefix-sum array ((cap+1,)) over the sorted log's values."""
+    return jnp.concatenate([jnp.zeros((1,), vals.dtype), jnp.cumsum(vals)])
+
+
+@partial(jax.jit, static_argnames=("cap",))
+def _sparse_table_jnp(vals, *, cap: int):
+    """(L, cap) sparse table over the sorted log (``build_sparse_table``
+    semantics: st[j, i] = max(vals[i : i+2^j]), -inf past the end)."""
+    rows = [vals]
+    for j in range(1, max(1, cap.bit_length())):
+        half = 1 << (j - 1)
+        prev = rows[-1]
+        shifted = jnp.concatenate(
+            [prev[half:], jnp.full((half,), -jnp.inf, prev.dtype)])
+        rows.append(jnp.maximum(prev, shifted))
+    return jnp.stack(rows)
+
+
+@partial(jax.jit, static_argnames=("cap",))
+def _mst_levels_jnp(ys, *, cap: int):
+    """(L, cap) merge-sort-tree levels of the x-sorted log's y values
+    (level l = per-block sort with block size 2^l; level 0 = x order)."""
+    rows = [ys]
+    for l in range(1, max(1, cap.bit_length())):
+        b = 1 << l
+        rows.append(jnp.sort(ys.reshape(cap // b, b), axis=1).reshape(-1))
+    return jnp.stack(rows)
+
+
 def _pad_batch(arr: np.ndarray, fill, dtype) -> jnp.ndarray:
     """Pad a host batch to the next power of two (bounds compilations)."""
     m = len(arr)
@@ -150,27 +207,39 @@ def _pad_batch(arr: np.ndarray, fill, dtype) -> jnp.ndarray:
 # fused delta corrections (traced inside the dynamic executors)
 # ---------------------------------------------------------------------------
 
-def _delta_sum(lq, uq, keys, vals, *, backend, interpret, bq):
+def _delta_sum(lq, uq, keys, vals, cf, *, backend, interpret, bq):
     if backend == "pallas":
+        # locate->gather: two binary searches into the append-maintained
+        # prefix-sum array (O(log D) instead of the O(D) one-hot sweep)
+        return delta_sum_gather_pallas(lq, uq, keys, cf, bq=bq,
+                                       interpret=interpret)
+    if backend == "pallas_scan":
         return delta_sum_pallas(lq, uq, keys, vals, bq=bq, interpret=interpret)
     if backend == "ref":
         return _ref.delta_sum_ref(lq, uq, keys, vals)
-    # xla: the log is kept sorted -> prefix sum + two searchsorted lookups
-    cs = jnp.concatenate([jnp.zeros((1,), vals.dtype), jnp.cumsum(vals)])
-    return (cs[jnp.searchsorted(keys, uq, side="right")]
-            - cs[jnp.searchsorted(keys, lq, side="right")])
+    # xla: the log is sorted and cf precomputed -> two searchsorted lookups
+    return (cf[jnp.searchsorted(keys, uq, side="right")]
+            - cf[jnp.searchsorted(keys, lq, side="right")])
 
 
-def _delta_max(lq, uq, keys, vals, *, backend, interpret, bq):
+def _delta_max(lq, uq, keys, vals, st, *, backend, interpret, bq):
     if backend == "pallas":
+        # locate the covered span of the sorted log, O(1) sparse-table RMQ
+        return delta_max_gather_pallas(lq, uq, keys, st, bq=bq,
+                                       interpret=interpret)
+    if backend == "pallas_scan":
         return delta_max_pallas(lq, uq, keys, vals, bq=bq, interpret=interpret)
-    # xla + ref: dense masked max (the buffer is small and mutable, so a
-    # sparse table would be rebuilt every insert — not worth it)
+    # xla + ref: dense masked max over the (small) buffer
     return _ref.delta_max_ref(lq, uq, keys, vals)
 
 
-def _delta_count2d(lx, ux, ly, uy, kx, ky, *, backend, interpret, bq, dtype):
+def _delta_count2d(lx, ux, ly, uy, kx, ky, ylv, *, backend, interpret, bq,
+                   dtype):
     if backend == "pallas":
+        # locate->gather: merge-sort-tree dominance counts, O(log^2 D)
+        return delta_count2d_gather_pallas(lx, ux, ly, uy, kx, ylv, bq=bq,
+                                           interpret=interpret, dtype=dtype)
+    if backend == "pallas_scan":
         return delta_count2d_pallas(lx, ux, ly, uy, kx, ky, bq=bq,
                                     interpret=interpret, dtype=dtype)
     return _ref.delta_count2d_ref(lx, ux, ly, uy, kx, ky, dtype=dtype)
@@ -192,9 +261,9 @@ def _exec_dyn_sum(plan: IndexPlan, buf: DeltaBuffer, lq, uq, *, backend: str,
                      bq=bq)
     # exact correction over (lq, uq] — unclamped: buffered keys may lie
     # outside the static domain
-    corr = (_delta_sum(lqr, uqr, buf.ins_keys, buf.ins_vals, backend=backend,
-                       interpret=interpret, bq=bq)
-            - _delta_sum(lqr, uqr, buf.del_keys, buf.del_vals,
+    corr = (_delta_sum(lqr, uqr, buf.ins_keys, buf.ins_vals, buf.ins_cf,
+                       backend=backend, interpret=interpret, bq=bq)
+            - _delta_sum(lqr, uqr, buf.del_keys, buf.del_vals, buf.del_cf,
                          backend=backend, interpret=interpret, bq=bq))
     approx = static + corr
     if eps_rel is None:
@@ -220,8 +289,8 @@ def _exec_dyn_extremum(plan: IndexPlan, buf: DeltaBuffer, lq, uq, *,
     uqc = jnp.maximum(uqr, plan.domain_lo)
     static = raw_extremum(plan, lqc, uqc, backend=backend,
                           interpret=interpret, bq=bq)
-    ins = _delta_max(lqr, uqr, buf.ins_keys, buf.ins_vals, backend=backend,
-                     interpret=interpret, bq=bq)
+    ins = _delta_max(lqr, uqr, buf.ins_keys, buf.ins_vals, buf.ins_st,
+                     backend=backend, interpret=interpret, bq=bq)
     approx = jnp.maximum(static, ins)
     neg = plan.agg == "min"
     if eps_rel is None:
@@ -248,11 +317,11 @@ def _exec_dyn_count2d(plan: IndexPlan2D, buf: DeltaBuffer2D, lx, ux, ly, uy,
     static = raw_count2d(plan, lxc, uxc, lyc, uyc, backend=backend,
                          interpret=interpret, bq=bq)
     corr = (_delta_count2d(lxr, uxr, lyr, uyr, buf.ins_x, buf.ins_y,
-                           backend=backend, interpret=interpret, bq=bq,
-                           dtype=dt)
+                           buf.ins_ylv, backend=backend, interpret=interpret,
+                           bq=bq, dtype=dt)
             - _delta_count2d(lxr, uxr, lyr, uyr, buf.del_x, buf.del_y,
-                             backend=backend, interpret=interpret, bq=bq,
-                             dtype=dt))
+                             buf.del_ylv, backend=backend,
+                             interpret=interpret, bq=bq, dtype=dt))
     approx = static + corr
     if eps_rel is None:
         return approx, approx, jnp.zeros(approx.shape, bool)
@@ -533,7 +602,12 @@ class DynamicEngine(_DeltaBufferedEngine):
             self._del_log: List[Tuple[np.ndarray, np.ndarray]] = []
             self._n_pending = 0
             plan = build_plan(index)
-            buf = DeltaBuffer.empty(self.capacity, plan.dtype)
+            # the insert-log sparse table is only read by the locate->gather
+            # MAX correction, so only that backend pays its upkeep
+            buf = DeltaBuffer.empty(
+                self.capacity, plan.dtype,
+                with_st=(self._agg in ("max", "min")
+                         and self.backend == "pallas"))
             self._state = (plan, buf)
             for k, v in (residual_ins or []):
                 self._log_ops(k, v, delete=False)
@@ -570,12 +644,16 @@ class DynamicEngine(_DeltaBufferedEngine):
         if delete:
             dk, dv = _append_sorted(buf.del_keys, buf.del_vals, pk, pv,
                                     cap=buf.cap)
-            buf = dataclasses.replace(buf, del_keys=dk, del_vals=dv)
+            buf = dataclasses.replace(buf, del_keys=dk, del_vals=dv,
+                                      del_cf=_prefix_sum_jnp(dv))
             self._del_log.append((keys, vals))
         else:
             ik, iv = _append_sorted(buf.ins_keys, buf.ins_vals, pk, pv,
                                     cap=buf.cap)
-            buf = dataclasses.replace(buf, ins_keys=ik, ins_vals=iv)
+            st = (buf.ins_st if buf.ins_st is None
+                  else _sparse_table_jnp(iv, cap=buf.cap))
+            buf = dataclasses.replace(buf, ins_keys=ik, ins_vals=iv,
+                                      ins_cf=_prefix_sum_jnp(iv), ins_st=st)
             self._ins_log.append((keys, vals))
         self._state = (plan, buf)
         self._n_pending += len(keys)
@@ -690,7 +768,7 @@ class DynamicEngine(_DeltaBufferedEngine):
         if eps_rel is not None and plan.ref_st is None:
             raise ValueError("Q_rel refinement requires exact arrays")
         backend = self.backend
-        if backend in ("pallas", "ref") and plan.deg > 3:
+        if backend in ("pallas", "pallas_scan", "ref") and plan.deg > 3:
             backend = "xla"   # no in-kernel closed form past deg 3
         lq, uq, n, size, bq = self._prepare(lq, uq)
         fill = plan.domain_lo.astype(lq.dtype)
@@ -760,15 +838,24 @@ class DynamicEngine2D(_DeltaBufferedEngine):
         big = big_sentinel(dt)
         pkx = _pad_batch(xs, big, dt)
         pky = _pad_batch(ys, big, dt)
+        # merge-sort-tree levels are only read by the locate->gather
+        # correction, so only that backend pays the per-append block sorts
+        lv = self.backend == "pallas"
         if delete:
             dx, dy = _append_sorted(buf.del_x, buf.del_y, pkx, pky,
                                     cap=buf.cap)
-            buf = dataclasses.replace(buf, del_x=dx, del_y=dy)
+            buf = dataclasses.replace(
+                buf, del_x=dx, del_y=dy,
+                del_ylv=_mst_levels_jnp(dy, cap=buf.cap) if lv
+                else buf.del_ylv)
             self._del_log.append((xs, ys))
         else:
             ix, iy = _append_sorted(buf.ins_x, buf.ins_y, pkx, pky,
                                     cap=buf.cap)
-            buf = dataclasses.replace(buf, ins_x=ix, ins_y=iy)
+            buf = dataclasses.replace(
+                buf, ins_x=ix, ins_y=iy,
+                ins_ylv=_mst_levels_jnp(iy, cap=buf.cap) if lv
+                else buf.ins_ylv)
             self._ins_log.append((xs, ys))
         self._state = (plan, buf)
         self._n_pending += len(xs)

@@ -4,10 +4,17 @@
 ``Engine`` executes SUM/COUNT/MAX/MIN (1 key) and COUNT (2 keys) against
 ``IndexPlan``/``IndexPlan2D`` through a pluggable backend:
 
-* ``'xla'``    — searchsorted locate + gather + Horner, sparse-table interior
-                 MAX (the reference semantics of ``core.queries``);
-* ``'pallas'`` — the one-hot membership TPU kernels (interpret mode on CPU);
-* ``'ref'``    — pure-jnp oracles mirroring the kernel contracts exactly.
+* ``'xla'``         — searchsorted locate + gather + Horner, sparse-table
+                      interior MAX (the reference semantics of
+                      ``core.queries``);
+* ``'pallas'``      — the locate->gather TPU kernels (DESIGN.md §10):
+                      branch-free binary search resolves each endpoint in
+                      O(log H), then exactly one coefficient row is
+                      gathered and evaluated (interpret mode on CPU);
+* ``'pallas_scan'`` — the original one-hot membership kernels, O(Q*H) per
+                      batch — kept for A/B benchmarking (the H-sweep in
+                      benchmarks/bench_kernels.py shows the crossover);
+* ``'ref'``         — pure-jnp oracles mirroring the kernel contracts.
 
 Every path is a single jitted function that computes the raw approximation,
 applies the Lemma 5.2/5.4 (or 6.4) Q_rel acceptance test, and merges the
@@ -35,16 +42,17 @@ from ..core.index2d import mst_cf, quadtree_eval_cf
 from ..core.poly import eval_segments
 from ..core.queries import QueryResult, max_eval_segments
 from ..kernels import ref as _ref
-from ..kernels.leaf_eval2d import corner_count2d_pallas
+from ..kernels.leaf_eval2d import (corner_count2d_gather_pallas,
+                                   corner_count2d_pallas)
 from ..kernels.poly_eval import DEFAULT_BQ
-from ..kernels.range_max import range_max_pallas
-from ..kernels.range_sum import range_sum_pallas
+from ..kernels.range_max import range_max_gather_pallas, range_max_pallas
+from ..kernels.range_sum import range_sum_gather_pallas, range_sum_pallas
 from .plan import IndexPlan, IndexPlan2D
 
 __all__ = ["Engine", "BACKENDS", "raw_sum", "raw_extremum", "raw_count2d",
            "truth_sum", "truth_extremum", "truth_count2d", "check_pow2"]
 
-BACKENDS = ("xla", "pallas", "ref")
+BACKENDS = ("xla", "pallas", "pallas_scan", "ref")
 
 
 def check_pow2(name: str, v: int) -> None:
@@ -84,6 +92,10 @@ def raw_sum(plan: IndexPlan, lqc, uqc, *, backend: str, interpret: bool,
             bq: int):
     """Backend-dispatched raw SUM/COUNT approximation (clamped queries)."""
     if backend == "pallas":
+        return range_sum_gather_pallas(lqc, uqc, plan.seg_lo, plan.seg_hi,
+                                       plan.coeffs, bq=bq,
+                                       interpret=interpret)
+    if backend == "pallas_scan":
         return range_sum_pallas(lqc, uqc, plan.seg_lo, plan.seg_next,
                                 plan.seg_hi, plan.coeffs,
                                 bq=bq, bh=plan.bh, interpret=interpret)
@@ -99,6 +111,10 @@ def raw_extremum(plan: IndexPlan, lqc, uqc, *, backend: str, interpret: bool,
     """Backend-dispatched raw MAX approximation, in MAX space (MIN plans run
     on negated measures end to end)."""
     if backend == "pallas":
+        return range_max_gather_pallas(lqc, uqc, plan.seg_lo, plan.seg_hi,
+                                       plan.coeffs, plan.st, bq=bq,
+                                       interpret=interpret)
+    if backend == "pallas_scan":
         return range_max_pallas(lqc, uqc, plan.seg_lo, plan.seg_next,
                                 plan.seg_hi, plan.coeffs, plan.seg_agg,
                                 bq=bq, bh=plan.bh, interpret=interpret)
@@ -112,7 +128,13 @@ def raw_extremum(plan: IndexPlan, lqc, uqc, *, backend: str, interpret: bool,
 def raw_count2d(plan: IndexPlan2D, lxc, uxc, lyc, uyc, *, backend: str,
                 interpret: bool, bq: int):
     """Backend-dispatched raw 2-key COUNT approximation (clamped corners)."""
-    if backend == "pallas":
+    if backend == "pallas" and plan.leaf_z is not None:
+        return corner_count2d_gather_pallas(
+            lxc, uxc, lyc, uyc, plan.xcuts, plan.ycuts, plan.leaf_z,
+            plan.leaf_bounds, plan.leaf_coeffs, deg=plan.deg,
+            depth=plan.max_depth, bq=bq, interpret=interpret)
+    if backend in ("pallas", "pallas_scan"):
+        # scan fallback: plans whose depth exceeds the Morton int32 range
         return corner_count2d_pallas(
             lxc, uxc, lyc, uyc, plan.leaf_mx0, plan.leaf_mx1, plan.leaf_my0,
             plan.leaf_my1, plan.leaf_bounds, plan.leaf_coeffs,
@@ -272,7 +294,7 @@ class Engine:
         if eps_rel is not None:
             self._require_exact(plan.ref_st is not None)
         backend = self.backend
-        if backend in ("pallas", "ref") and plan.deg > 3:
+        if backend in ("pallas", "pallas_scan", "ref") and plan.deg > 3:
             # in-kernel closed-form extrema stop at deg 3 (the paper's
             # recommended MAX range); higher degrees take the XLA path
             backend = "xla"

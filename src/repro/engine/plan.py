@@ -16,7 +16,13 @@ engine structure.  It bundles, per 1-D index:
 
 ``IndexPlan2D`` is the 2-key analogue: quadtree descent arrays for the XLA
 backend, the flattened tile-padded leaf table for the one-hot Pallas/ref
-backends, and the merge-sort-tree arrays for exact refinement.
+backends, and the merge-sort-tree arrays for exact refinement.  The leaf
+table is stored in Morton (Z-order) so the locate->gather backend can
+binary-search it (DESIGN.md §10): ``xcuts``/``ycuts`` are the exact dyadic
+split grids (rebuilt with the tree's own midpoint recursion, so cell
+resolution is bit-identical to the descent's tie rule) and ``leaf_z`` the
+sorted per-leaf Morton interval starts.  The one-hot membership path is
+order-independent, so both Pallas backends share one table.
 
 Both are registered dataclass pytrees: array fields are jit-traced children,
 everything shape-like (``agg``, ``deg``, ``h``, ``bh``, ...) is static
@@ -33,6 +39,8 @@ import numpy as np
 
 from ..core.index import PolyFitIndex1D
 from ..core.index2d import PolyFitIndex2D
+from ..kernels.locate import (INT_SENTINEL, MAX_MORTON_DEPTH, dyadic_cuts,
+                              leaf_morton_codes)
 from ..kernels.poly_eval import DEFAULT_BH
 
 __all__ = ["IndexPlan", "IndexPlan2D", "build_plan", "build_plan_2d",
@@ -160,13 +168,17 @@ class IndexPlan2D:
     bounds: jnp.ndarray      # (N, 4)
     leaf_nodes: jnp.ndarray  # (n_leaves,) int32
     qt_coeffs: jnp.ndarray   # (n_leaves, (deg+1)^2) — descent-path coeffs
-    # -- flat tile-padded leaf table (Pallas/ref backends) ---------------
+    # -- flat tile-padded leaf table (Pallas/ref backends), Morton order --
     leaf_mx0: jnp.ndarray    # (Lp,) membership lower x (sentinel-padded)
     leaf_mx1: jnp.ndarray    # (Lp,) membership upper x (sentinel on root edge)
     leaf_my0: jnp.ndarray    # (Lp,)
     leaf_my1: jnp.ndarray    # (Lp,)
     leaf_bounds: jnp.ndarray  # (Lp, 4) actual x0,x1,y0,y1 (scaling spans)
     leaf_coeffs: jnp.ndarray  # (Lp, (deg+1)^2)
+    # -- locate->gather extras (None when max_depth exceeds Morton range) -
+    leaf_z: Optional[jnp.ndarray]  # (Lp,) int32 sorted z-interval starts
+    xcuts: Optional[jnp.ndarray]   # (2^max_depth - 1,) exact split grid
+    ycuts: Optional[jnp.ndarray]   # (2^max_depth - 1,)
     # -- exact refinement (merge-sort tree) ------------------------------
     ref_xs: Optional[jnp.ndarray]         # (n,)
     ref_ys_levels: Optional[jnp.ndarray]  # (L, n)
@@ -185,7 +197,8 @@ jax.tree_util.register_dataclass(
     IndexPlan2D,
     data_fields=["children", "leaf_of", "bounds", "leaf_nodes", "qt_coeffs",
                  "leaf_mx0", "leaf_mx1", "leaf_my0", "leaf_my1",
-                 "leaf_bounds", "leaf_coeffs", "ref_xs", "ref_ys_levels"],
+                 "leaf_bounds", "leaf_coeffs", "leaf_z", "xcuts", "ycuts",
+                 "ref_xs", "ref_ys_levels"],
     meta_fields=["deg", "delta", "n", "n_leaves", "max_depth", "bh", "root"],
 )
 
@@ -204,6 +217,29 @@ def build_plan_2d(index: PolyFitIndex2D, dtype=jnp.float64,
     big = big_sentinel(dtype)
     x0r, x1r, y0r, y1r = (float(b) for b in index.root_bounds)
     lb = np.asarray(index.bounds)[np.asarray(index.leaf_nodes)]  # (L, 4) f64
+    coeffs = np.asarray(index.coeffs)
+
+    # locate->gather precomputation: exact dyadic split grids + Morton
+    # z-interval starts, the whole leaf table reordered by z so the scan
+    # path (order-independent) and the binary-search path share one table
+    leaf_z = xcuts = ycuts = None
+    depth = int(index.max_depth)
+    if depth <= MAX_MORTON_DEPTH:
+        xc = dyadic_cuts(x0r, x1r, depth)
+        yc = dyadic_cuts(y0r, y1r, depth)
+        if (np.all(np.diff(xc) > 0) if len(xc) else True) and (
+                np.all(np.diff(yc) > 0) if len(yc) else True):
+            z = leaf_morton_codes(lb, xc, yc, depth)
+            order = np.argsort(z)
+            lb = lb[order]
+            coeffs = coeffs[order]
+            leaf_z = pad_to_multiple(jnp.asarray(z[order], jnp.int32), bh,
+                                     INT_SENTINEL)
+            # empty cut grids (depth 0) keep a sentinel entry so the kernel
+            # always has a non-empty array to search (count stays 0)
+            xcuts = jnp.asarray(xc if len(xc) else [big], dtype)
+            ycuts = jnp.asarray(yc if len(yc) else [big], dtype)
+
     mx0 = lb[:, 0]
     mx1 = np.where(lb[:, 1] >= x1r, big, lb[:, 1])
     my0 = lb[:, 2]
@@ -227,6 +263,7 @@ def build_plan_2d(index: PolyFitIndex2D, dtype=jnp.float64,
         leaf_my0=pad_to_multiple(to(my0), bh, big),
         leaf_my1=pad_to_multiple(to(my1), bh, big),
         leaf_bounds=pad_to_multiple(to(lb), bh, 0.0),
-        leaf_coeffs=pad_to_multiple(to(index.coeffs), bh, 0.0),
+        leaf_coeffs=pad_to_multiple(to(coeffs), bh, 0.0),
+        leaf_z=leaf_z, xcuts=xcuts, ycuts=ycuts,
         ref_xs=ref_xs, ref_ys_levels=ref_ys,
     )

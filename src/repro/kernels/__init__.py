@@ -4,11 +4,15 @@ Each kernel ships as <name>.py (pl.pallas_call + BlockSpec), with ops.py as
 the jit'd public wrapper and ref.py as the pure-jnp oracle the tests sweep
 against (DESIGN.md §3 for the TPU adaptation rationale).
 """
-from .delta_scan import (delta_count2d_pallas, delta_max_pallas,
-                         delta_sum_pallas)
-from .leaf_eval2d import corner_count2d_pallas
+from .delta_scan import (delta_count2d_gather_pallas, delta_count2d_pallas,
+                         delta_max_gather_pallas, delta_max_pallas,
+                         delta_sum_gather_pallas, delta_sum_pallas)
+from .leaf_eval2d import corner_count2d_gather_pallas, corner_count2d_pallas
+from .locate import bsearch_count, locate_pallas
 from .ops import SegTable, from_index, poly_eval, range_max, range_sum
 
 __all__ = ["SegTable", "from_index", "poly_eval", "range_max", "range_sum",
-           "corner_count2d_pallas", "delta_sum_pallas", "delta_max_pallas",
-           "delta_count2d_pallas"]
+           "corner_count2d_pallas", "corner_count2d_gather_pallas",
+           "delta_sum_pallas", "delta_max_pallas", "delta_count2d_pallas",
+           "delta_sum_gather_pallas", "delta_max_gather_pallas",
+           "delta_count2d_gather_pallas", "bsearch_count", "locate_pallas"]

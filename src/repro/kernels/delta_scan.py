@@ -22,6 +22,18 @@ buffer tiles in VMEM scratch:
 Empty buffer slots hold a huge-but-finite sentinel key (``plan.big_sentinel``)
 so they fail every membership test without needing a separate count input —
 the kernels are oblivious to the fill level.
+
+The ``*_gather_pallas`` variants are the O(Q*log D) locate->gather rewrites
+(DESIGN.md §10) the engine's ``pallas`` backend uses (the scans above stay
+available as ``pallas_scan``).  They exploit structure the buffers already
+maintain on append (engine/dynamic.py):
+
+* SUM — the log is sorted, so an exclusive prefix-sum array turns the
+  correction into two binary searches and a subtraction;
+* MAX — a sparse table over the sorted log answers the located span in
+  O(1) (two gathers), exactly like interior segments in range_max;
+* 2-D COUNT — per-level block-sorted y arrays (the merge-sort-tree layout
+  of ``core.index2d``) answer each corner's dominance count in O(log^2 D).
 """
 from __future__ import annotations
 
@@ -32,9 +44,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..core.index2d import mst_count_prefix
+from .locate import bsearch_count, rmq_gather
 from .poly_eval import DEFAULT_BH, DEFAULT_BQ
 
-__all__ = ["delta_sum_pallas", "delta_max_pallas", "delta_count2d_pallas"]
+__all__ = ["delta_sum_pallas", "delta_max_pallas", "delta_count2d_pallas",
+           "delta_sum_gather_pallas", "delta_max_gather_pallas",
+           "delta_count2d_gather_pallas"]
 
 
 def _delta_sum_kernel(lq_ref, uq_ref, k_ref, v_ref, out_ref, acc,
@@ -83,6 +99,37 @@ def delta_sum_pallas(lq, uq, keys, vals, bq: int = DEFAULT_BQ,
     )(lq, uq, keys, vals)
 
 
+def _delta_sum_gather_kernel(lq_ref, uq_ref, k_ref, cf_ref, out_ref):
+    k = k_ref[...]
+    cf = cf_ref[...]
+    # membership (lq, uq]: prefix sums at the "# keys <= q" counts
+    cu = bsearch_count(k, uq_ref[...], side="right")
+    cl = bsearch_count(k, lq_ref[...], side="right")
+    out_ref[...] = jnp.take(cf, cu) - jnp.take(cf, cl)
+
+
+def delta_sum_gather_pallas(lq, uq, keys, cf, bq: int = DEFAULT_BQ,
+                            interpret: bool = True):
+    """Exact sum of buffered measures with key in (lq, uq] via the buffer's
+    exclusive prefix-sum array ``cf`` ((D+1,), cf[i] = sum(vals[:i]),
+    maintained on append): two O(log D) binary searches + a subtraction."""
+    Q, D = lq.shape[0], keys.shape[0]
+    assert Q % bq == 0 and cf.shape[0] == D + 1, (Q, bq, cf.shape, D)
+    return pl.pallas_call(
+        _delta_sum_gather_kernel,
+        grid=(Q // bq,),
+        in_specs=[
+            pl.BlockSpec((bq,), lambda i: (i,)),
+            pl.BlockSpec((bq,), lambda i: (i,)),
+            pl.BlockSpec((D,), lambda i: (0,)),
+            pl.BlockSpec((D + 1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bq,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((Q,), cf.dtype),
+        interpret=interpret,
+    )(lq, uq, keys, cf)
+
+
 def _delta_max_kernel(lq_ref, uq_ref, k_ref, v_ref, out_ref, acc,
                       *, n_tiles: int):
     d = pl.program_id(1)
@@ -126,6 +173,37 @@ def delta_max_pallas(lq, uq, keys, vals, bq: int = DEFAULT_BQ,
         scratch_shapes=[pltpu.VMEM((bq,), vals.dtype)],
         interpret=interpret,
     )(lq, uq, keys, vals)
+
+
+def _delta_max_gather_kernel(lq_ref, uq_ref, k_ref, st_ref, out_ref):
+    k = k_ref[...]
+    # membership [lq, uq]: the sorted log's covered span is [i0, i1)
+    i0 = bsearch_count(k, lq_ref[...], side="left")
+    i1 = bsearch_count(k, uq_ref[...], side="right")
+    out_ref[...] = rmq_gather(st_ref[...], i0, i1)
+
+
+def delta_max_gather_pallas(lq, uq, keys, st, bq: int = DEFAULT_BQ,
+                            interpret: bool = True):
+    """Exact max of buffered measures with key in [lq, uq] (-inf if none):
+    locate the sorted log's covered span, then an O(1) two-gather RMQ
+    against the buffer's sparse table (rebuilt on append)."""
+    Q, D = lq.shape[0], keys.shape[0]
+    assert Q % bq == 0 and st.shape[1] == D, (Q, bq, st.shape, D)
+    levels = st.shape[0]
+    return pl.pallas_call(
+        _delta_max_gather_kernel,
+        grid=(Q // bq,),
+        in_specs=[
+            pl.BlockSpec((bq,), lambda i: (i,)),
+            pl.BlockSpec((bq,), lambda i: (i,)),
+            pl.BlockSpec((D,), lambda i: (0,)),
+            pl.BlockSpec((levels, D), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((Q,), st.dtype),
+        interpret=interpret,
+    )(lq, uq, keys, st)
 
 
 def _delta_count2d_kernel(lx_ref, ux_ref, ly_ref, uy_ref, kx_ref, ky_ref,
@@ -179,3 +257,49 @@ def delta_count2d_pallas(lx, ux, ly, uy, keys_x, keys_y,
         scratch_shapes=[pltpu.VMEM((bq,), dtype)],
         interpret=interpret,
     )(lx, ux, ly, uy, keys_x, keys_y)
+
+
+def _delta_count2d_gather_kernel(lx_ref, ux_ref, ly_ref, uy_ref,
+                                 kx_ref, ylv_ref, out_ref, *, dtype):
+    kx = kx_ref[...]
+    ylv = ylv_ref[...]
+
+    def cf(x, y):
+        # dominance count #(px <= x & py <= y): x-prefix by binary search,
+        # then the merge-sort-tree prefix count (same op sequence as the
+        # exact-refinement path in core.index2d)
+        i = bsearch_count(kx, x, side="right")
+        return mst_count_prefix(kx, ylv, i, y).astype(dtype)
+
+    lx, ux, ly, uy = lx_ref[...], ux_ref[...], ly_ref[...], uy_ref[...]
+    out_ref[...] = cf(ux, uy) - cf(lx, uy) - cf(ux, ly) + cf(lx, ly)
+
+
+def delta_count2d_gather_pallas(lx, ux, ly, uy, keys_x, ys_levels,
+                                bq: int = DEFAULT_BQ, interpret: bool = True,
+                                dtype=None):
+    """Exact count of buffered points in (lx, ux] x (ly, uy] per query in
+    O(log^2 D): the buffer is x-sorted and ``ys_levels`` ((L, D), level l =
+    y values sorted within blocks of 2^l, rebuilt on append) decomposes any
+    x-prefix into <= L sorted blocks, each answered by a binary search —
+    the merge-sort-tree scheme of core.index2d applied to the delta log."""
+    Q, D = lx.shape[0], keys_x.shape[0]
+    assert Q % bq == 0 and ys_levels.shape[1] == D, (Q, bq, ys_levels.shape)
+    dtype = dtype or keys_x.dtype
+    levels = ys_levels.shape[0]
+    kernel = functools.partial(_delta_count2d_gather_kernel, dtype=dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=(Q // bq,),
+        in_specs=[
+            pl.BlockSpec((bq,), lambda i: (i,)),
+            pl.BlockSpec((bq,), lambda i: (i,)),
+            pl.BlockSpec((bq,), lambda i: (i,)),
+            pl.BlockSpec((bq,), lambda i: (i,)),
+            pl.BlockSpec((D,), lambda i: (0,)),
+            pl.BlockSpec((levels, D), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((Q,), dtype),
+        interpret=interpret,
+    )(lx, ux, ly, uy, keys_x, ys_levels)

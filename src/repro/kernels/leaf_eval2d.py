@@ -22,6 +22,12 @@ u, on the leaf's scaled coordinates) and combines with signs (+,-,-,+).
 Grid: (num_query_blocks, num_leaf_tiles), leaf tiles innermost; the
 (BQ, 4*(K+4)) gather accumulator lives in VMEM scratch across the inner
 loop (K = (deg+1)^2 coefficients + 4 scaling bounds per corner slot).
+
+``corner_count2d_gather_pallas`` is the O(Q*log L) locate->gather rewrite
+(the engine's ``pallas`` backend; the one-hot scan above stays available as
+``pallas_scan``): leaves are disjoint intervals in Morton (Z-order) space,
+so a corner resolves with three branch-free binary searches instead of a
+membership scan — see kernels/locate.py and DESIGN.md §10.
 """
 from __future__ import annotations
 
@@ -32,9 +38,84 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .locate import locate_leaf2d
 from .poly_eval import DEFAULT_BH, DEFAULT_BQ
 
-__all__ = ["corner_count2d_pallas"]
+__all__ = ["corner_count2d_pallas", "corner_count2d_gather_pallas"]
+
+
+def _bivariate_horner(qx, qy, c, b, deg: int):
+    """P(u(qx), v(qy)) per row from gathered coeff rows c (BQ, (deg+1)^2)
+    and scaling bounds b (BQ, 4) — the exact op sequence of the one-hot
+    kernel's finalize step, so results are bit-identical."""
+    span_x = jnp.where(b[:, 1] > b[:, 0], b[:, 1] - b[:, 0], 1.0)
+    span_y = jnp.where(b[:, 3] > b[:, 2], b[:, 3] - b[:, 2], 1.0)
+    us = jnp.clip((2.0 * qx - b[:, 0] - b[:, 1]) / span_x, -1.0, 1.0)
+    vs = jnp.clip((2.0 * qy - b[:, 2] - b[:, 3]) / span_y, -1.0, 1.0)
+    v = jnp.zeros_like(us)
+    for i in range(deg, -1, -1):
+        inner = jnp.zeros_like(vs)
+        for j in range(deg, -1, -1):
+            inner = inner * vs + c[:, i * (deg + 1) + j]
+        v = v * us + inner
+    return v
+
+
+def _corner_count2d_gather_kernel(lx_ref, ux_ref, ly_ref, uy_ref,
+                                  xcuts_ref, ycuts_ref, z_ref,
+                                  bounds_ref, coef_ref, out_ref,
+                                  *, deg: int, depth: int):
+    xcuts = xcuts_ref[...]
+    ycuts = ycuts_ref[...]
+    z = z_ref[...]
+    bounds = bounds_ref[...]
+    coef = coef_ref[...]
+    corners = ((ux_ref[...], uy_ref[...]), (lx_ref[...], uy_ref[...]),
+               (ux_ref[...], ly_ref[...]), (lx_ref[...], ly_ref[...]))
+    vals = []
+    for qx, qy in corners:
+        leaf = locate_leaf2d(qx, qy, xcuts, ycuts, z, depth)   # O(log L)
+        c = jnp.take(coef, leaf, axis=0)
+        b = jnp.take(bounds, leaf, axis=0)
+        vals.append(_bivariate_horner(qx, qy, c, b, deg))
+    out_ref[...] = vals[0] - vals[1] - vals[2] + vals[3]
+
+
+def corner_count2d_gather_pallas(lx, ux, ly, uy, xcuts, ycuts, leaf_z,
+                                 bounds, coeffs, deg: int, depth: int,
+                                 bq: int = DEFAULT_BQ, interpret: bool = True):
+    """Locate->gather 4-corner COUNT (DESIGN.md §10): the quadtree leaves
+    are disjoint Morton intervals, so each corner resolves with three
+    binary searches (cell x, cell y, leaf z) and one gathered bivariate
+    Horner — no scan over the leaf table.  ``leaf_z`` must be sorted
+    ascending (the plan stores the whole leaf table in z order) and
+    sentinel-padded; corners must be pre-clamped into the root region.
+    """
+    Q, L = lx.shape[0], leaf_z.shape[0]
+    assert Q % bq == 0, (Q, bq)
+    k = (deg + 1) * (deg + 1)
+    assert coeffs.shape[1] == k, coeffs.shape
+    nx, ny = xcuts.shape[0], ycuts.shape[0]
+    kernel = functools.partial(_corner_count2d_gather_kernel, deg=deg,
+                               depth=depth)
+    return pl.pallas_call(
+        kernel,
+        grid=(Q // bq,),
+        in_specs=[
+            pl.BlockSpec((bq,), lambda i: (i,)),
+            pl.BlockSpec((bq,), lambda i: (i,)),
+            pl.BlockSpec((bq,), lambda i: (i,)),
+            pl.BlockSpec((bq,), lambda i: (i,)),
+            pl.BlockSpec((nx,), lambda i: (0,)),
+            pl.BlockSpec((ny,), lambda i: (0,)),
+            pl.BlockSpec((L,), lambda i: (0,)),
+            pl.BlockSpec((L, 4), lambda i: (0, 0)),
+            pl.BlockSpec((L, k), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((Q,), coeffs.dtype),
+        interpret=interpret,
+    )(lx, ux, ly, uy, xcuts, ycuts, leaf_z, bounds, coeffs)
 
 
 def _corner_count2d_kernel(lx_ref, ux_ref, ly_ref, uy_ref,

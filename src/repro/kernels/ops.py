@@ -7,10 +7,12 @@ kernels without the engine's fused refinement path).  The wrappers handle
 the kernel ABI only: query clamping to the index domain and padding queries
 to block multiples (with domain-minimum sentinels, sliced off afterwards).
 
-``backend`` selects: 'pallas' (interpret-mode on CPU — the TPU-shaped code
-path) or 'ref' (plain XLA, faster on CPU hosts; identical semantics, see
-ref.py).  Benchmarks run both.  For the full engine — backend dispatch plus
-in-path Q_rel refinement — use ``repro.engine.Engine``.
+``backend`` selects: 'pallas' (the locate->gather kernels, interpret-mode
+on CPU — the TPU-shaped code path), 'pallas_scan' (the original one-hot
+membership kernels, kept for A/B benchmarking) or 'ref' (plain XLA, faster
+on CPU hosts; identical semantics, see ref.py).  Benchmarks run all of
+them.  For the full engine — backend dispatch plus in-path Q_rel
+refinement — use ``repro.engine.Engine``.
 """
 from __future__ import annotations
 
@@ -22,8 +24,8 @@ import jax.numpy as jnp
 from ..engine.plan import IndexPlan, build_plan
 from . import ref as _ref
 from .poly_eval import DEFAULT_BH, DEFAULT_BQ, poly_eval_pallas
-from .range_sum import range_sum_pallas
-from .range_max import range_max_pallas
+from .range_sum import range_sum_gather_pallas, range_sum_pallas
+from .range_max import range_max_gather_pallas, range_max_pallas
 
 __all__ = ["SegTable", "from_index", "poly_eval", "range_sum", "range_max"]
 
@@ -79,8 +81,14 @@ def range_sum(table: IndexPlan, lq, uq, backend: str = "pallas",
                                   table.seg_hi, table.coeffs)
     lp, n = _pad_queries(lq, bq, table.seg_lo[0])
     up, _ = _pad_queries(uq, bq, table.seg_lo[0])
-    out = range_sum_pallas(lp, up, table.seg_lo, table.seg_next, table.seg_hi,
-                           table.coeffs, bq=bq, bh=bh, interpret=interpret)
+    if backend == "pallas_scan":
+        out = range_sum_pallas(lp, up, table.seg_lo, table.seg_next,
+                               table.seg_hi, table.coeffs,
+                               bq=bq, bh=bh, interpret=interpret)
+    else:
+        out = range_sum_gather_pallas(lp, up, table.seg_lo, table.seg_hi,
+                                      table.coeffs, bq=bq,
+                                      interpret=interpret)
     return out[:n]
 
 
@@ -96,7 +104,12 @@ def range_max(table: IndexPlan, lq, uq, backend: str = "pallas",
                                   table.seg_hi, table.coeffs, table.seg_agg)
     lp, n = _pad_queries(lq, bq, table.seg_lo[0])
     up, _ = _pad_queries(uq, bq, table.seg_lo[0])
-    out = range_max_pallas(lp, up, table.seg_lo, table.seg_next, table.seg_hi,
-                           table.coeffs, table.seg_agg,
-                           bq=bq, bh=bh, interpret=interpret)
+    if backend == "pallas_scan":
+        out = range_max_pallas(lp, up, table.seg_lo, table.seg_next,
+                               table.seg_hi, table.coeffs, table.seg_agg,
+                               bq=bq, bh=bh, interpret=interpret)
+    else:
+        out = range_max_gather_pallas(lp, up, table.seg_lo, table.seg_hi,
+                                      table.coeffs, table.st, bq=bq,
+                                      interpret=interpret)
     return out[:n]

@@ -1,18 +1,19 @@
-"""Pallas TPU kernel: fused range-MAX query evaluation (Eq. 17).
+"""Pallas TPU kernels: fused range-MAX query evaluation (Eq. 17).
 
-Per (query-block x segment-tile) step, three contributions accumulate:
+* ``range_max_gather_pallas`` — locate->gather (DESIGN.md §10, the engine's
+  ``pallas`` backend): both boundary segments are located with the
+  branch-free binary search of ``locate.py`` (O(log H)), their coefficient
+  rows gathered, and the strictly-interior span (il, iu) answered in O(1)
+  with two gathers against the plan's per-segment sparse table — the same
+  two-window RMQ the XLA backend uses, so no scan over seg_agg remains.
+* ``range_max_pallas`` — the original one-hot membership scan (the
+  ``pallas_scan`` backend): boundary rows via MXU matmul, interior via a
+  dense masked reduction over every resident tile — O(Q*H).
 
-* left/right boundary segments — resolved with the same one-hot matmul as
-  range_sum (coefficients + scale bounds gathered on the MXU);
-* interior segments — the aR-tree traversal is replaced by a dense masked
-  reduction: a segment j is strictly interior iff seg_lo[j] > lq and
-  seg_next[j] <= uq, both locally decidable, so the tile contributes
-  rowmax(where(mask, seg_agg, -inf)) — branch-free VPU work (DESIGN.md §3).
-
-Finalization computes each boundary polynomial's max over its clipped
-interval via closed-form zero-derivative points (P' quadratic for deg <= 3,
-the paper's recommended MAX degree; higher degrees use the XLA path in
-core.queries).  MIN is served by the same kernel on negated aggregates.
+Both compute boundary extrema with ``core.poly.clipped_poly_max``
+(closed-form zero-derivative points, deg <= 3 — the paper's recommended
+MAX degree; higher degrees use the XLA path in core.queries), and MIN is
+served on negated aggregates, so answers are bit-identical across paths.
 """
 from __future__ import annotations
 
@@ -24,11 +25,68 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from ..core.poly import clipped_poly_max
+from .locate import locate_segments, rmq_gather
 from .poly_eval import DEFAULT_BH, DEFAULT_BQ
 
-__all__ = ["range_max_pallas"]
+__all__ = ["range_max_pallas", "range_max_gather_pallas"]
 
 _NEG = -jnp.inf
+
+
+def _range_max_gather_kernel(lq_ref, uq_ref, lo_ref, hi_ref, coef_ref,
+                             st_ref, out_ref):
+    lq = lq_ref[...]
+    uq = uq_ref[...]
+    lo = lo_ref[...]
+    hi = hi_ref[...]
+    coef = coef_ref[...]
+    il = locate_segments(lo, lq)
+    iu = locate_segments(lo, uq)
+    lo_l, hi_l = jnp.take(lo, il), jnp.take(hi, il)
+    lo_u, hi_u = jnp.take(lo, iu), jnp.take(hi, iu)
+    cl = jnp.take(coef, il, axis=0)
+    cu = jnp.take(coef, iu, axis=0)
+    same = il == iu
+    # left boundary: [lq, min(hi_l, uq)], suppressed when lq past hi_l
+    m_left = clipped_poly_max(cl, lo_l, hi_l, lq, jnp.minimum(hi_l, uq))
+    m_left = jnp.where(lq <= hi_l, m_left, _NEG)
+    # right boundary: [max(lo_u, lq), uq], suppressed when same segment
+    m_right = clipped_poly_max(cu, lo_u, hi_u, jnp.maximum(lo_u, lq), uq)
+    m_right = jnp.where(same, _NEG, m_right)
+    # interior segments are exactly (il, iu): seg_lo[j] > lq <=> j > il and
+    # seg_next[j] <= uq <=> j < iu — an O(1) sparse-table range max
+    m_int = rmq_gather(st_ref[...], il + 1, iu)
+    out_ref[...] = jnp.maximum(jnp.maximum(m_left, m_right), m_int)
+
+
+def range_max_gather_pallas(lq, uq, seg_lo, seg_hi, coeffs, st,
+                            bq: int = DEFAULT_BQ, interpret: bool = True):
+    """Locate->gather range MAX; ``st`` is the plan's (L, h) sparse table
+    over per-segment aggregates (unpadded — in-domain queries never locate
+    the sentinel tail)."""
+    Q, H = lq.shape[0], seg_lo.shape[0]
+    assert Q % bq == 0, (Q, bq)
+    deg = coeffs.shape[1] - 1
+    assert deg <= 3, "in-kernel closed forms cover deg<=3 (paper's MAX range)"
+    # monotone cast: per-entry rounding commutes with max, so an f32 table
+    # sees exactly the f32 per-segment aggregates the one-hot path scans
+    st = st.astype(coeffs.dtype)
+    levels, h = st.shape
+    return pl.pallas_call(
+        _range_max_gather_kernel,
+        grid=(Q // bq,),
+        in_specs=[
+            pl.BlockSpec((bq,), lambda i: (i,)),
+            pl.BlockSpec((bq,), lambda i: (i,)),
+            pl.BlockSpec((H,), lambda i: (0,)),
+            pl.BlockSpec((H,), lambda i: (0,)),
+            pl.BlockSpec((H, deg + 1), lambda i: (0, 0)),
+            pl.BlockSpec((levels, h), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((Q,), coeffs.dtype),
+        interpret=interpret,
+    )(lq, uq, seg_lo, seg_hi, coeffs, st)
 
 
 def _range_max_kernel(lq_ref, uq_ref, lo_ref, nxt_ref, hi_ref, coef_ref,

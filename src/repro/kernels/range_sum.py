@@ -1,11 +1,19 @@
-"""Pallas TPU kernel: fused range-SUM/COUNT query evaluation (Eq. 14).
+"""Pallas TPU kernels: fused range-SUM/COUNT query evaluation (Eq. 14).
 
-One pass over the segment table answers A = P_{I(u)}(u) - P_{I(l)}(l) for a
-whole batch of (l, u) ranges: both endpoints' one-hot membership rows are
-resolved against the *same* segment tile while it is resident in VMEM,
-doubling arithmetic intensity versus two poly_eval passes (the segment
-table is read once instead of twice — this kernel is memory-bound on the
-table when H is large, see EXPERIMENTS.md §Perf).
+Two implementations of A = P_{I(u)}(u) - P_{I(l)}(l) per (l, u) range:
+
+* ``range_sum_gather_pallas`` — the locate->gather path (DESIGN.md §10,
+  the engine's ``pallas`` backend): both endpoints are resolved with the
+  branch-free binary search of ``locate.py`` in O(log H) probe rounds,
+  then exactly one (deg+1)-coefficient row per endpoint is gathered and
+  Horner-evaluated.  Per-query work is independent of the table size.
+* ``range_sum_pallas`` — the original one-hot membership scan (the
+  ``pallas_scan`` backend, kept for A/B benchmarking): both endpoints'
+  one-hot rows are resolved against each resident segment tile with an MXU
+  matmul — O(Q*H) work, memory-bound on the table when H is large.
+
+Both paths gather the same rows and share ``core.poly.horner``/
+``scale_unit``, so their answers are bit-identical.
 """
 from __future__ import annotations
 
@@ -17,9 +25,48 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from ..core.poly import horner, scale_unit
+from .locate import locate_segments
 from .poly_eval import DEFAULT_BH, DEFAULT_BQ
 
-__all__ = ["range_sum_pallas"]
+__all__ = ["range_sum_pallas", "range_sum_gather_pallas"]
+
+
+def _range_sum_gather_kernel(lq_ref, uq_ref, lo_ref, hi_ref, coef_ref,
+                             out_ref):
+    lo = lo_ref[...]
+    hi = hi_ref[...]
+    coef = coef_ref[...]
+    vals = []
+    for q_ref in (lq_ref, uq_ref):
+        q = q_ref[...]
+        idx = locate_segments(lo, q)                       # O(log H)
+        c = jnp.take(coef, idx, axis=0)                    # (BQ, deg+1)
+        u = scale_unit(q, jnp.take(lo, idx), jnp.take(hi, idx))
+        vals.append(horner(c, u))
+    out_ref[...] = vals[1] - vals[0]
+
+
+def range_sum_gather_pallas(lq, uq, seg_lo, seg_hi, coeffs,
+                            bq: int = DEFAULT_BQ, interpret: bool = True):
+    """Locate->gather range SUM: grid over query blocks only, the whole
+    (sentinel-padded) segment table resident per block."""
+    Q, H = lq.shape[0], seg_lo.shape[0]
+    assert Q % bq == 0, (Q, bq)
+    deg = coeffs.shape[1] - 1
+    return pl.pallas_call(
+        _range_sum_gather_kernel,
+        grid=(Q // bq,),
+        in_specs=[
+            pl.BlockSpec((bq,), lambda i: (i,)),
+            pl.BlockSpec((bq,), lambda i: (i,)),
+            pl.BlockSpec((H,), lambda i: (0,)),
+            pl.BlockSpec((H,), lambda i: (0,)),
+            pl.BlockSpec((H, deg + 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((Q,), coeffs.dtype),
+        interpret=interpret,
+    )(lq, uq, seg_lo, seg_hi, coeffs)
 
 
 def _range_sum_kernel(lq_ref, uq_ref, lo_ref, nxt_ref, hi_ref, coef_ref,

@@ -4,9 +4,10 @@
 ``repro.engine``: it builds one PolyFit index per (dataset, aggregate),
 lowers each to a canonical device-resident plan once, and serves batched
 requests through per-request-type callables created by
-``serve.step.make_aggregate_step``.  The backend ('xla' | 'pallas' | 'ref')
-is a constructor argument, so the same service code runs the XLA reference
-path on CPU hosts and the Pallas kernels on TPU.
+``serve.step.make_aggregate_step``.  The backend ('xla' | 'pallas' |
+'pallas_scan' | 'ref') is a constructor argument, so the same service code
+runs the XLA reference path on CPU hosts and the Pallas locate->gather
+kernels (or the one-hot scan variant, DESIGN.md §10) on TPU.
 """
 from __future__ import annotations
 

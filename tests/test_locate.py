@@ -1,0 +1,251 @@
+"""Locate->gather edge cases: the branch-free binary search and every
+gather kernel must agree with the one-hot scan path bit-for-bit on the
+awkward inputs — endpoints exactly on segment/leaf boundaries, endpoints
+outside the domain, sentinel-padded tail tiles, and empty or single-entry
+delta buffers."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core import build_index_1d, build_index_2d  # noqa: E402
+from repro.core.poly import locate  # noqa: E402
+from repro.engine import (BACKENDS, DynamicEngine,  # noqa: E402
+                          DynamicEngine2D, Engine, build_plan, build_plan_2d)
+from repro.engine.plan import big_sentinel  # noqa: E402
+from repro.kernels.delta_scan import (delta_count2d_gather_pallas,  # noqa: E402
+                                      delta_max_gather_pallas,
+                                      delta_sum_gather_pallas)
+from repro.kernels.locate import (bsearch_count, dyadic_cuts,  # noqa: E402
+                                  locate_pallas)
+from repro.kernels.ref import (delta_count2d_ref, delta_max_ref,  # noqa: E402
+                               delta_sum_ref)
+
+PALLAS_BACKENDS = ("pallas", "pallas_scan")
+
+
+# ---------------------------------------------------------------------------
+# the binary-search primitive
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [1, 2, 3, 17, 256, 1000])
+@pytest.mark.parametrize("side", ["left", "right"])
+def test_bsearch_count_matches_searchsorted(n, side):
+    rng = np.random.default_rng(n)
+    keys = np.sort(rng.uniform(0, 100, n))
+    q = np.concatenate([rng.uniform(-10, 110, 199), keys[: min(n, 50)],
+                        [keys[0], keys[-1], -1e30, 1e30]])
+    got = np.asarray(bsearch_count(jnp.asarray(keys), jnp.asarray(q),
+                                   side=side))
+    np.testing.assert_array_equal(got, np.searchsorted(keys, q, side=side))
+
+
+def test_bsearch_count_duplicate_keys():
+    keys = np.array([1.0, 3.0, 3.0, 3.0, 7.0, 7.0, 9.0])
+    q = np.array([3.0, 7.0, 0.0, 9.0, 10.0])
+    for side in ("left", "right"):
+        got = np.asarray(bsearch_count(jnp.asarray(keys), jnp.asarray(q),
+                                       side=side))
+        np.testing.assert_array_equal(got, np.searchsorted(keys, q, side=side))
+
+
+def test_locate_kernel_boundary_and_sentinel_tail():
+    """Endpoints exactly on seg_lo boundaries, below/above the domain, and
+    a table whose tail is sentinel tiles must all match core.poly.locate."""
+    rng = np.random.default_rng(0)
+    seg = np.sort(rng.uniform(0, 100, 37))
+    big = big_sentinel(np.float64)
+    padded = np.concatenate([seg, np.full(512 - 37, big)])   # sentinel tail
+    q = np.concatenate([seg,                     # exactly on every boundary
+                        seg - 1e-9, seg + 1e-9,  # straddling them
+                        [-1e9, seg[0] - 1.0, seg[-1] + 1.0, 1e9],
+                        rng.uniform(-5, 105, 141)])
+    q = np.pad(q, (0, (-len(q)) % 256), constant_values=seg[0])
+    got = np.asarray(locate_pallas(jnp.asarray(q), jnp.asarray(padded),
+                                   bq=256))
+    want = np.asarray(locate(jnp.asarray(q), jnp.asarray(padded)))
+    np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# static engine paths on boundary endpoints
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def boundary_setup():
+    rng = np.random.default_rng(5)
+    keys = np.sort(rng.uniform(0, 500, 2000))
+    meas = rng.uniform(0, 10, 2000)
+    return keys, meas
+
+
+@pytest.mark.parametrize("agg,deg", [("sum", 2), ("count", 2), ("max", 3),
+                                     ("min", 3)])
+def test_gather_bit_identical_on_boundaries_1d(boundary_setup, agg, deg):
+    keys, meas = boundary_setup
+    m = None if agg == "count" else (
+        meas * 100 if agg in ("max", "min") else meas)
+    idx = build_index_1d(keys, m, agg, deg=deg, delta=20.0)
+    plan = build_plan(idx)
+    sl = np.asarray(idx.seg_lo)
+    sh = np.asarray(idx.seg_hi)
+    lq = np.concatenate([sl, sh, [-1e9, sl[0], sh[-1]]])
+    uq = np.concatenate([sh, sl + (sh - sl) / 2, [sl[-1], 1e9, 1e9]])
+    lq, uq = np.minimum(lq, uq), np.maximum(lq, uq)
+    outs = {b: np.asarray(Engine(backend=b).query(plan, lq, uq).answer)
+            for b in BACKENDS}
+    # the gather path reads the very rows the one-hot matmul selects
+    np.testing.assert_array_equal(outs["pallas"], outs["pallas_scan"])
+    np.testing.assert_array_equal(outs["pallas"], outs["ref"])
+    np.testing.assert_allclose(outs["pallas"], outs["xla"], rtol=1e-9,
+                               atol=1e-9)
+
+
+def test_gather_bit_identical_on_split_lines_2d():
+    rng = np.random.default_rng(9)
+    px = rng.uniform(0, 120, 4000)
+    py = rng.uniform(0, 120, 4000)
+    idx = build_index_2d(px, py, deg=2, delta=20.0, max_depth=5)
+    plan = build_plan_2d(idx)
+    assert plan.leaf_z is not None
+    xc = np.asarray(plan.xcuts)
+    yc = np.asarray(plan.ycuts)
+    x0, x1, y0, y1 = plan.root
+    # corners exactly on split lines + the root's own corners/edges
+    lx = np.concatenate([xc, [x0, x0, x1], rng.uniform(0, 120, 29)])
+    ux = np.concatenate([xc + 1.0, [x1, x0, x1], rng.uniform(0, 120, 29)])
+    ly = np.concatenate([yc, [y0, y1, y0], rng.uniform(0, 120, 29)])
+    uy = np.concatenate([yc + 1.0, [y1, y1, y1], rng.uniform(0, 120, 29)])
+    lx, ux = np.minimum(lx, ux), np.maximum(lx, ux)
+    ly, uy = np.minimum(ly, uy), np.maximum(ly, uy)
+    outs = {b: np.asarray(Engine(backend=b).count2d(plan, lx, ux, ly, uy)
+                          .answer) for b in BACKENDS}
+    np.testing.assert_array_equal(outs["pallas"], outs["pallas_scan"])
+    np.testing.assert_array_equal(outs["pallas"], outs["ref"])
+    np.testing.assert_allclose(outs["pallas"], outs["xla"], rtol=1e-9,
+                               atol=1e-9)
+
+
+def test_morton_leaf_table_is_sorted_and_disjoint():
+    rng = np.random.default_rng(11)
+    idx = build_index_2d(rng.uniform(0, 50, 3000), rng.uniform(0, 50, 3000),
+                        deg=2, delta=15.0, max_depth=4)
+    plan = build_plan_2d(idx)
+    z = np.asarray(plan.leaf_z)[: idx.n_leaves]
+    assert np.all(np.diff(z) > 0), "leaf z-interval starts must be sorted"
+    assert z[0] == 0, "the first leaf must cover Morton cell 0"
+    cuts = dyadic_cuts(*map(float, plan.root[:2]), idx.max_depth)
+    assert len(cuts) == (1 << idx.max_depth) - 1
+
+
+# ---------------------------------------------------------------------------
+# delta-buffer kernels: empty and single-entry buffers
+# ---------------------------------------------------------------------------
+
+def _padded_buffer(fill, cap=64, seed=0):
+    rng = np.random.default_rng(seed)
+    big = big_sentinel(np.float64)
+    keys = np.full(cap, big)
+    vals = np.zeros(cap)
+    keys[:fill] = np.sort(rng.uniform(0, 100, fill))
+    vals[:fill] = rng.uniform(-5, 5, fill)
+    return jnp.asarray(keys), jnp.asarray(vals)
+
+
+@pytest.mark.parametrize("fill", [0, 1, 2, 64])
+def test_delta_sum_gather_matches_ref(fill):
+    keys, vals = _padded_buffer(fill)
+    cf = jnp.concatenate([jnp.zeros((1,)), jnp.cumsum(vals)])
+    rng = np.random.default_rng(fill + 1)
+    lq = jnp.asarray(np.sort(rng.uniform(-10, 110, 128)))
+    uq = lq + 20.0
+    got = np.asarray(delta_sum_gather_pallas(lq, uq, keys, cf, bq=128))
+    want = np.asarray(delta_sum_ref(lq, uq, keys, vals))
+    np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-12)
+
+
+@pytest.mark.parametrize("fill", [0, 1, 2, 64])
+def test_delta_max_gather_matches_ref(fill):
+    from repro.engine.dynamic import _sparse_table_jnp
+    keys, vals = _padded_buffer(fill, seed=3)
+    st = _sparse_table_jnp(vals, cap=64)
+    rng = np.random.default_rng(fill + 7)
+    lq = jnp.asarray(np.sort(rng.uniform(-10, 110, 128)))
+    uq = lq + 15.0
+    got = np.asarray(delta_max_gather_pallas(lq, uq, keys, st, bq=128))
+    want = np.asarray(delta_max_ref(lq, uq, keys, vals))
+    np.testing.assert_array_equal(got, want)    # max is exact
+
+
+@pytest.mark.parametrize("fill", [0, 1, 2, 64])
+def test_delta_count2d_gather_matches_ref(fill):
+    from repro.engine.dynamic import _mst_levels_jnp
+    rng = np.random.default_rng(fill + 13)
+    big = big_sentinel(np.float64)
+    xs = np.full(64, big)
+    ys = np.full(64, big)
+    xs[:fill] = np.sort(rng.uniform(0, 100, fill))
+    ys[:fill] = rng.uniform(0, 100, fill)
+    xs, ys = jnp.asarray(xs), jnp.asarray(ys)
+    ylv = _mst_levels_jnp(ys, cap=64)
+    qs = [jnp.asarray(rng.uniform(-10, 110, 128)) for _ in range(2)]
+    lx, ly = qs
+    ux, uy = lx + 30.0, ly + 30.0
+    got = np.asarray(delta_count2d_gather_pallas(lx, ux, ly, uy, xs, ylv,
+                                                 bq=128))
+    want = np.asarray(delta_count2d_ref(lx, ux, ly, uy, xs, ys))
+    np.testing.assert_array_equal(got, want)    # integer counts are exact
+
+
+# ---------------------------------------------------------------------------
+# dynamic engines with empty / single-entry buffers, all backends
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("agg", ["count", "max"])
+def test_dynamic_empty_and_single_entry_buffers(boundary_setup, agg):
+    keys, meas = boundary_setup
+    m = None if agg == "count" else meas * 100
+    idx = build_index_1d(keys, m, agg, deg=2 if agg == "count" else 3,
+                         delta=20.0)
+    rng = np.random.default_rng(17)
+    a = keys[rng.integers(0, len(keys), 64)]
+    b = keys[rng.integers(0, len(keys), 64)]
+    lq, uq = np.minimum(a, b), np.maximum(a, b)
+    ref_empty = ref_single = None
+    for backend in BACKENDS:
+        dyn = DynamicEngine(idx, backend=backend, capacity=64,
+                            auto_refit=False)
+        r0 = np.asarray(dyn.query(lq, uq).answer)       # empty buffer
+        dyn.insert(np.array([keys[100]]),
+                   None if agg == "count" else np.array([123.0]))
+        r1 = np.asarray(dyn.query(lq, uq).answer)       # single entry
+        if ref_empty is None:
+            ref_empty, ref_single = r0, r1
+        else:
+            np.testing.assert_allclose(r0, ref_empty, rtol=1e-9, atol=1e-9)
+            np.testing.assert_allclose(r1, ref_single, rtol=1e-9, atol=1e-9)
+
+
+def test_dynamic2d_empty_and_single_entry_buffers():
+    rng = np.random.default_rng(23)
+    px = rng.uniform(0, 80, 2500)
+    py = rng.uniform(0, 80, 2500)
+    idx = build_index_2d(px, py, deg=2, delta=20.0, max_depth=5)
+    qa = rng.uniform(0, 80, 64)
+    qb = qa + rng.uniform(0.5, 30, 64)
+    qc = rng.uniform(0, 80, 64)
+    qd = qc + rng.uniform(0.5, 30, 64)
+    ref_empty = ref_single = None
+    for backend in BACKENDS:
+        dyn = DynamicEngine2D(idx, backend=backend, capacity=64,
+                              auto_refit=False)
+        r0 = np.asarray(dyn.count2d(qa, qb, qc, qd).answer)
+        dyn.insert(np.array([40.0]), np.array([40.0]))
+        r1 = np.asarray(dyn.count2d(qa, qb, qc, qd).answer)
+        if ref_empty is None:
+            ref_empty, ref_single = r0, r1
+        else:
+            np.testing.assert_array_equal(r0, ref_empty)   # integer counts
+            np.testing.assert_array_equal(r1, ref_single)
