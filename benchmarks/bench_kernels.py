@@ -41,6 +41,10 @@ def _emit_engine_json(results, meta, out_path=None):
 TINY = dict(n=30_000, nq=1024, n2=10_000, nq2=256,
             hs=(512, 2048), hs2=(1024, 4096), nqh=256)
 
+# shard-sweep shape (the --shards mode); its record carries this meta so it
+# pairs only with committed shard-sweep baselines
+SHARD_SWEEP = dict(shard_h=4096, shard_nq=512, shard_s=(1, 2, 4, 8))
+
 
 def _synthetic_plan_1d(H: int, agg: str, deg: int, rng, dtype=jnp.float64):
     """Kernel-shaped IndexPlan with exactly H segments (no index build —
@@ -205,6 +209,49 @@ def run_hsweep(hs=(512, 2048, 8192, 32768), hs2=(1024, 4096, 16384),
     return rows
 
 
+def run_shards(shard_h=4096, shard_nq=512, shard_s=(1, 2, 4, 8),
+               out_path=None):
+    """Sharded-plan sweep (`shard.{sum,max}.S{n}`): the shard_map executor
+    against device-partitioned synthetic plans, S = 1 as the single-device
+    reference point.  Needs >= max(shard_s) local devices (the CI job and
+    `--shards` force host devices via XLA_FLAGS)."""
+    from repro.engine.sharded import ShardedEngine, shard_plan
+
+    if jax.device_count() < max(shard_s):
+        raise RuntimeError(
+            f"shard sweep needs {max(shard_s)} devices, have "
+            f"{jax.device_count()}; set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={max(shard_s)}")
+    rng = np.random.default_rng(0x5A)
+    rows = []
+    results = []
+    lq = jnp.asarray(rng.uniform(0, 1000, shard_nq))
+    uq = jnp.maximum(lq + 40.0, lq)
+
+    def rec(name, t, derived=""):
+        rows.append(row(name, t / shard_nq * 1e6, derived))
+        results.append({"name": name, "us_per_query": t / shard_nq * 1e6,
+                        "derived": derived})
+
+    for agg, deg in (("sum", 2), ("max", 3)):
+        plan = _synthetic_plan_1d(shard_h, agg, deg, rng)
+        for s in shard_s:
+            eng = ShardedEngine(s)
+            splan = shard_plan(plan, s)   # partition outside the timed loop
+            f = (eng.sum if agg == "sum" else eng.extremum)
+            t, _ = time_fn(lambda l, u: f(splan, l, u), lq, uq)
+            rec(f"shard.{agg}.S{s}", t,
+                f"H={shard_h};Hs={splan.seg_lo.shape[1]}")
+
+    _emit_engine_json(results, {
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "shard_h": shard_h, "shard_nq": shard_nq, "shard_s": list(shard_s),
+        "device": jax.devices()[0].platform,
+        "machine": platform.machine(),
+    }, out_path)
+    return rows
+
+
 def run(n=200_000, nq=4096, n2=40_000, nq2=1024, eps_rel=0.01,
         hs=(512, 2048, 8192, 32768), hs2=(1024, 4096, 16384), nqh=512,
         out_path=None):
@@ -292,11 +339,27 @@ def main():
     p.add_argument("--tiny", action="store_true",
                    help="small shapes for the CI benchmark-smoke job "
                         "(meta matches the committed baseline record)")
+    p.add_argument("--shards", action="store_true",
+                   help="run the sharded-plan sweep (shard.{sum,max}.S{n}) "
+                        "instead of the kernel/engine sweep; forces 8 host "
+                        "devices if fewer are visible")
     p.add_argument("--out", default=None,
                    help="write the JSON record here instead of appending "
                         "to the committed BENCH_engine.json")
     args = p.parse_args()
-    run(**TINY, out_path=args.out) if args.tiny else run(out_path=args.out)
+    if args.shards:
+        # must happen before jax initializes its backends (nothing above
+        # touches devices at import time)
+        import os
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                flags + " --xla_force_host_platform_device_count=8").strip()
+        run_shards(**SHARD_SWEEP, out_path=args.out)
+    elif args.tiny:
+        run(**TINY, out_path=args.out)
+    else:
+        run(out_path=args.out)
 
 
 if __name__ == "__main__":

@@ -26,10 +26,11 @@ import json
 import pathlib
 import sys
 
-# capacity pairs bench_updates records; hs/hs2/nqh pair the H-sweep shape
-# (records missing a key on both sides still pair — .get(None) == .get(None))
+# capacity pairs bench_updates records; hs/hs2/nqh pair the H-sweep shape;
+# shard_* pair the sharded-plan sweep (records missing a key on both sides
+# still pair — .get(None) == .get(None))
 MATCH_META = ("n", "nq", "n2", "nq2", "capacity", "hs", "hs2", "nqh",
-              "device")
+              "shard_h", "shard_nq", "shard_s", "device")
 
 
 def _load_history(path: str):

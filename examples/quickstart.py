@@ -1,41 +1,56 @@
-"""Quickstart: build a PolyFit index, answer approximate range aggregates
-with deterministic guarantees, compare against exact.
+"""Quickstart: fit a PolyFit session, answer approximate range aggregates
+with deterministic guarantees through the declarative API, compare against
+exact.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import build_index_1d, query_max, query_sum
+from repro.api import ErrorBudget, PolyFit, QueryBatch, QuerySpec, TableSpec
 from repro.data import hki_series, make_queries_1d, tweet_latitudes
+from repro.engine.engine import truth_sum
 
 
 def main():
-    # --- range COUNT over tweet-like latitudes (Q_abs guarantee) ----------
+    # one declarative fit: the ErrorBudget owns the eps_abs -> delta
+    # derivations (Lemma 5.1: delta = eps_abs/2 for COUNT; 5.3: eps_abs
+    # for MAX), so no hand-inlined /2 or /4 arithmetic anywhere
     lat = tweet_latitudes(200_000)
+    t, v = hki_series(200_000)
     eps_abs = 100.0
-    idx = build_index_1d(lat, None, "count", deg=2, delta=eps_abs / 2)
-    print(f"COUNT index: {idx.h} segments, {idx.size_bytes()} bytes "
+    session = PolyFit.fit(
+        {"lat": lat, "hki": (t, v)},
+        {"lat": TableSpec("count", ErrorBudget(abs=eps_abs)),
+         "hki": TableSpec("max", ErrorBudget(abs=50.0, rel=0.01))})
+
+    # --- range COUNT over tweet-like latitudes (Q_abs guarantee) ----------
+    plan = session.plan("lat")
+    print(f"COUNT index: {plan.h} segments, {plan.size_bytes()} bytes "
           f"(vs {lat.nbytes} bytes of raw keys)")
-    lq, uq = make_queries_1d(lat, 5)
-    res = query_sum(idx, lq, uq)
-    truth = np.asarray(idx.exact_sum.cf_at(jnp.asarray(uq))
-                       - idx.exact_sum.cf_at(jnp.asarray(lq)))
-    for l, u, a, t in zip(lq, uq, np.asarray(res.answer), truth):
-        print(f"  count in ({l:8.3f}, {u:8.3f}] ~ {a:10.1f}  exact {t:8.0f}  "
-              f"err {abs(a - t):6.2f} <= {eps_abs}")
+    lqc, uqc = make_queries_1d(lat, 5)
+    lqm, uqm = make_queries_1d(t, 5)
+
+    # one mixed-aggregate batch; answers come back in request order
+    res_count, res_max = session.query(QueryBatch.of(
+        QuerySpec.range("lat", lqc, uqc),
+        QuerySpec.range("hki", lqm, uqm)))
+
+    truth = np.asarray(truth_sum(session.plan("lat"), jnp.asarray(lqc),
+                                 jnp.asarray(uqc)))
+    for l, u, a, tr in zip(lqc, uqc, np.asarray(res_count.answer), truth):
+        print(f"  count in ({l:8.3f}, {u:8.3f}] ~ {a:10.1f}  exact {tr:8.0f}"
+              f"  err {abs(a - tr):6.2f} <= {eps_abs}")
 
     # --- range MAX over a stock-index series (Q_rel + refinement) ---------
-    t, v = hki_series(200_000)
-    idxm = build_index_1d(t, v, "max", deg=3, delta=50.0)
-    lq, uq = make_queries_1d(t, 5)
-    resm = query_max(idxm, lq, uq, eps_rel=0.01)
-    truthm = np.asarray(idxm.exact_max.query(jnp.asarray(lq), jnp.asarray(uq)))
-    print(f"\nMAX index: {idxm.h} segments, {idxm.size_bytes()} bytes")
-    for l, u, a, tr, rf in zip(lq, uq, np.asarray(resm.answer), truthm,
-                               np.asarray(resm.refined)):
+    planm = session.plan("hki")
+    print(f"\nMAX index: {planm.h} segments, {planm.size_bytes()} bytes")
+    truthm = np.asarray(session.query(
+        QuerySpec.range("hki", lqm, uqm, rel=1e-12)).answer)
+    for l, u, a, tr, rf in zip(lqm, uqm, np.asarray(res_max.answer), truthm,
+                               np.asarray(res_max.refined)):
         print(f"  max in [{l:9.1f}, {u:9.1f}] ~ {a:10.1f}  exact {tr:10.1f}"
-              f"  rel_err {abs(a - tr) / tr:.4f}  refined={bool(rf)}")
+              f"  rel_err {abs(a - tr) / abs(tr):.4f}  refined={bool(rf)}")
 
 
 if __name__ == "__main__":

@@ -1,27 +1,31 @@
-"""Two-key spatial COUNT (paper §6): quadtree PolyFit over an OSM-like point
-cloud; rectangle queries with 4-corner inclusion-exclusion (Eq. 19).
+"""Two-key spatial COUNT (paper §6) through the declarative API: quadtree
+PolyFit over an OSM-like point cloud; rectangle queries with 4-corner
+inclusion-exclusion (Eq. 19).
 
     PYTHONPATH=src python examples/two_key_spatial.py
 """
 import numpy as np
-import jax.numpy as jnp
 
-from repro.core import build_index_2d, query_count_2d
+from repro.api import ErrorBudget, PolyFit, QuerySpec, TableSpec
 from repro.data import make_queries_2d, osm_points
 
 
 def main():
     px, py = osm_points(80_000)
     eps_abs = 200.0
-    idx = build_index_2d(px, py, deg=3, delta=eps_abs / 4)
-    print(f"quadtree: {idx.n_leaves} leaves, {idx.size_bytes()} bytes, "
-          f"max_depth={idx.max_depth} (n={len(px)})")
+    # Lemma 6.3 (delta = eps_abs/4) lives inside the ErrorBudget
+    session = PolyFit.fit(
+        {"osm": (px, py)},
+        {"osm": TableSpec("count2d", ErrorBudget(abs=eps_abs))})
+    plan = session.plan("osm")
+    print(f"quadtree: {plan.n_leaves} leaves, {plan.size_bytes()} bytes, "
+          f"max_depth={plan.max_depth} (n={len(px)})")
+
     x0, x1, y0, y1 = make_queries_2d(px, py, 8)
-    res = query_count_2d(idx, x0, x1, y0, y1)
-    t = idx.exact
-    truth = np.asarray(
-        t.cf(jnp.asarray(x1), jnp.asarray(y1)) - t.cf(jnp.asarray(x0), jnp.asarray(y1))
-        - t.cf(jnp.asarray(x1), jnp.asarray(y0)) + t.cf(jnp.asarray(x0), jnp.asarray(y0)))
+    res = session.query(QuerySpec.rect("osm", x0, x1, y0, y1))
+    # rel=1e-12 forces the in-path exact refinement -> ground truth
+    truth = np.asarray(session.query(
+        QuerySpec.rect("osm", x0, x1, y0, y1, rel=1e-12)).answer)
     for i in range(len(x0)):
         a = float(np.asarray(res.answer)[i])
         print(f"  rect [{x0[i]:7.2f},{x1[i]:7.2f}]x[{y0[i]:7.2f},{y1[i]:7.2f}]"

@@ -1,0 +1,24 @@
+"""repro.api — the declarative PolyFit query API (DESIGN.md §11).
+
+One import surface for everything a caller needs:
+
+* ``ErrorBudget(abs=..., rel=...)`` — the composable error budget; the only
+  place the Lemma 5.1/5.3/6.3 delta derivations live.
+* ``TableSpec`` — fit-time description of a table (aggregate, budget,
+  degree, dynamic buffering, sharding).
+* ``QuerySpec`` / ``QueryBatch`` — declarative, mixed-aggregate request
+  batches (registered pytrees).
+* ``PolyFit`` — the session facade: ``PolyFit.fit(datasets, specs)`` builds
+  the indexes, ``session.query(batch)`` answers mixed batches in request
+  order through grouped fused executors, ``session.insert/delete/flush``
+  delegate to the delta-buffered dynamic engines.
+
+``repro.engine`` (Engine, DynamicEngine, plans, kernels) remains available
+but is considered internal; new code should target this module.
+"""
+from .budget import ErrorBudget
+from .session import PolyFit
+from .spec import DEFAULT_REL, QueryBatch, QuerySpec, TableSpec
+
+__all__ = ["ErrorBudget", "PolyFit", "QueryBatch", "QuerySpec", "TableSpec",
+           "DEFAULT_REL"]

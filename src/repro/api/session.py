@@ -1,0 +1,263 @@
+"""The ``PolyFit`` session facade: one declarative entry point for every
+aggregate family, batch shape, dynamism level and device layout.
+
+    from repro.api import ErrorBudget, PolyFit, QueryBatch, QuerySpec, TableSpec
+
+    session = PolyFit.fit(
+        {"lat": keys, "price": (ts, vals), "geo": (xs, ys)},
+        {"lat":   TableSpec("count",   ErrorBudget(abs=100, rel=0.01)),
+         "price": TableSpec("max",     ErrorBudget(abs=50.0)),
+         "geo":   TableSpec("count2d", ErrorBudget(abs=200))})
+    results = session.query(QueryBatch.of(
+        QuerySpec.range("lat", -10.0, 30.0),
+        QuerySpec.rect("geo", x0, x1, y0, y1),
+        QuerySpec.range("price", t0, t1)))
+
+``fit`` builds one index per named table with the delta its ``ErrorBudget``
+derives (Lemma 5.1/5.3/6.3 — see ``budget.py``), lowers each to a canonical
+device plan, and wires the execution stack the ``TableSpec`` asks for:
+static plans dispatch straight through ``engine.execute_*``, ``dynamic``
+tables get a delta-buffered ``DynamicEngine`` (inserts/deletes without
+rebuild), ``shards=N`` partitions the plan across N devices behind the
+``shard_map`` executor (``engine/sharded.py``).  ``query`` groups a mixed
+batch by (plan, guarantee), pads each group to its power-of-two bucket,
+runs one fused jitted executor per group, and scatters the answers back in
+request order — so callers never touch ``Engine``/``DynamicEngine``, which
+are now internal machinery behind this facade.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import build_index_1d, build_index_2d
+from ..core.queries import QueryResult
+from ..engine import (DynamicEngine, DynamicEngine2D, ShardedEngine,
+                      build_plan, build_plan_2d, execute)
+from ..kernels.poly_eval import DEFAULT_BQ
+from .budget import ErrorBudget
+from .spec import DEFAULT_REL, QueryBatch, QuerySpec, TableSpec
+
+__all__ = ["PolyFit"]
+
+Request = Union[QuerySpec, QueryBatch, Sequence[QuerySpec]]
+
+
+class _Table:
+    """One fitted table: the spec plus whichever execution stack it needs."""
+
+    def __init__(self, name: str, spec: TableSpec, data, *, backend: str,
+                 interpret: bool, bq: int, min_bucket: int):
+        self.name = name
+        self.spec = spec
+        self.dyn = None
+        self.sharded = None
+        self._static_plan = None
+        agg = spec.agg
+        if agg == "count2d":
+            xs, ys = (np.asarray(a, np.float64) for a in data)
+            idx = build_index_2d(xs, ys, deg=spec.degree,
+                                 delta=spec.budget.delta(agg))
+            if spec.dynamic:
+                self.dyn = DynamicEngine2D(
+                    idx, backend=backend, interpret=interpret,
+                    capacity=spec.capacity, background=spec.background,
+                    auto_refit=spec.auto_refit, bq=bq,
+                    min_bucket=min_bucket)
+            else:
+                self._static_plan = build_plan_2d(idx)
+        else:
+            keys, meas = data
+            keys = np.asarray(keys, np.float64)
+            meas = None if meas is None else np.asarray(meas, np.float64)
+            idx = build_index_1d(keys, meas, agg, deg=spec.degree,
+                                 delta=spec.budget.delta(agg))
+            if spec.dynamic:
+                self.dyn = DynamicEngine(
+                    idx, backend=backend, interpret=interpret,
+                    capacity=spec.capacity, background=spec.background,
+                    auto_refit=spec.auto_refit, bq=bq,
+                    min_bucket=min_bucket)
+            else:
+                self._static_plan = build_plan(idx)
+            if spec.shards is not None:
+                self.sharded = ShardedEngine(spec.shards,
+                                             min_bucket=min_bucket)
+                self.sharded.shard(self.plan)   # warm the partition cache
+
+    @property
+    def plan(self):
+        return self.dyn.plan if self.dyn is not None else self._static_plan
+
+    def resolve_rel(self, rel) -> Optional[float]:
+        return self.spec.budget.rel if rel is DEFAULT_REL else rel
+
+
+class PolyFit:
+    """A fitted PolyFit session — construct with :meth:`fit`."""
+
+    def __init__(self, tables: Dict[str, _Table], *, backend: str,
+                 interpret: bool, bq: int, min_bucket: int):
+        self._tables = tables
+        self.backend = backend
+        self.interpret = interpret
+        self.bq = bq
+        self.min_bucket = min_bucket
+
+    # -- construction ----------------------------------------------------
+
+    @classmethod
+    def fit(cls, datasets: Mapping, specs: Mapping[str, TableSpec], *,
+            backend: str = "xla", interpret: bool = True,
+            bq: int = DEFAULT_BQ, min_bucket: int = 64) -> "PolyFit":
+        """Build one index per named table and return the query session.
+
+        ``datasets`` maps table name -> data: a bare key array (COUNT),
+        ``(keys, measures)`` for SUM/MAX/MIN, ``(xs, ys)`` for 2-key COUNT.
+        ``specs`` maps the same names to ``TableSpec``s; the spec's
+        ``ErrorBudget`` is the only source of build deltas.
+        """
+        missing = set(datasets) ^ set(specs)
+        if missing:
+            raise ValueError(f"datasets and specs disagree on tables: "
+                             f"{sorted(missing)}")
+        tables = {}
+        for name, spec in specs.items():
+            data = datasets[name]
+            if spec.agg == "count2d":
+                if not (isinstance(data, tuple) and len(data) == 2):
+                    raise ValueError(f"table {name!r}: count2d data must be "
+                                     "(xs, ys)")
+            elif spec.agg == "count":
+                if not isinstance(data, tuple):
+                    data = (data, None)
+                elif len(data) == 1:
+                    data = (data[0], None)
+            elif not (isinstance(data, tuple) and len(data) == 2):
+                raise ValueError(f"table {name!r}: {spec.agg} data must be "
+                                 "(keys, measures)")
+            tables[name] = _Table(name, spec, data, backend=backend,
+                                  interpret=interpret, bq=bq,
+                                  min_bucket=min_bucket)
+        return cls(tables, backend=backend, interpret=interpret, bq=bq,
+                   min_bucket=min_bucket)
+
+    # -- introspection ---------------------------------------------------
+
+    @property
+    def tables(self) -> Tuple[str, ...]:
+        return tuple(self._tables)
+
+    def spec(self, table: str) -> TableSpec:
+        return self._table(table).spec
+
+    def budget(self, table: str) -> ErrorBudget:
+        return self._table(table).spec.budget
+
+    def plan(self, table: str):
+        """The table's current device plan (fresh after dynamic merges)."""
+        return self._table(table).plan
+
+    def size_bytes(self) -> Dict[str, int]:
+        return {k: t.plan.size_bytes() for k, t in self._tables.items()}
+
+    def _table(self, name: str) -> _Table:
+        t = self._tables.get(name)
+        if t is None:
+            raise KeyError(f"unknown table {name!r}; fitted tables: "
+                           f"{sorted(self._tables)}")
+        return t
+
+    # -- queries ---------------------------------------------------------
+
+    def query(self, request: Request):
+        """Answer a request batch, preserving request order.
+
+        A single ``QuerySpec`` returns its ``QueryResult``; a
+        ``QueryBatch`` (or a sequence of specs) returns a list of
+        ``QueryResult``s aligned with the specs.  Specs are grouped by
+        (table, guarantee); each group enters one fused jitted executor.
+        """
+        if isinstance(request, QuerySpec):
+            return self._exec_group(request.table,
+                                    request.ranges,
+                                    self._resolve(request))
+        specs = list(request.specs if isinstance(request, QueryBatch)
+                     else request)
+        if not specs:
+            return []
+        groups: Dict[Tuple[str, Optional[float]], List[int]] = {}
+        for i, spec in enumerate(specs):
+            if not isinstance(spec, QuerySpec):
+                raise TypeError(f"expected QuerySpec, got {type(spec)}")
+            groups.setdefault((spec.table, self._resolve(spec)),
+                              []).append(i)
+        out: List[Optional[QueryResult]] = [None] * len(specs)
+        for (table, rel), idxs in groups.items():
+            # jnp.concatenate keeps device-resident sub-batches on device
+            # (and is a cheap host concat for numpy ranges)
+            ranges = tuple(
+                jnp.concatenate([jnp.asarray(specs[i].ranges[j])
+                                 for i in idxs])
+                if len(idxs) > 1 else specs[idxs[0]].ranges[j]
+                for j in range(len(specs[idxs[0]].ranges)))
+            res = self._exec_group(table, ranges, rel)
+            off = 0
+            for i in idxs:
+                m = len(specs[i])
+                out[i] = QueryResult(res.answer[off:off + m],
+                                     res.approx[off:off + m],
+                                     res.refined[off:off + m])
+                off += m
+        return out
+
+    def _resolve(self, spec: QuerySpec) -> Optional[float]:
+        t = self._table(spec.table)
+        if len(spec.ranges) != t.spec.n_ranges:
+            raise ValueError(
+                f"table {spec.table!r} ({t.spec.agg}) takes "
+                f"{t.spec.n_ranges} range coordinates, spec has "
+                f"{len(spec.ranges)}")
+        return t.resolve_rel(spec.rel)
+
+    def _exec_group(self, table: str, ranges, eps_rel) -> QueryResult:
+        t = self._table(table)
+        if t.sharded is not None:
+            if t.dyn is not None:
+                plan, buf = t.dyn.snapshot()
+                return t.sharded.query(plan, *ranges, eps_rel=eps_rel,
+                                       buf=buf)
+            return t.sharded.query(t.plan, *ranges, eps_rel=eps_rel)
+        if t.dyn is not None:
+            return t.dyn.query(*ranges, eps_rel=eps_rel)
+        return execute(t.plan, tuple(jnp.asarray(r) for r in ranges),
+                       backend=self.backend, eps_rel=eps_rel,
+                       interpret=self.interpret, bq=self.bq,
+                       min_bucket=self.min_bucket)
+
+    # -- updates (dynamic tables) ----------------------------------------
+
+    def _dyn(self, table: str):
+        t = self._table(table)
+        if t.dyn is None:
+            raise RuntimeError(f"table {table!r} is static; fit it with "
+                               "TableSpec(dynamic=True) to take updates")
+        return t.dyn
+
+    def insert(self, table: str, *args) -> None:
+        """Buffer new records: (keys[, measures]) for 1-D tables,
+        (xs, ys) for 2-key COUNT.  Queries fold them in exactly."""
+        self._dyn(table).insert(*args)
+
+    def delete(self, table: str, *args) -> None:
+        """Buffer delete tombstones for existing records."""
+        self._dyn(table).delete(*args)
+
+    def flush(self, table: Optional[str] = None) -> None:
+        """Merge buffered updates into fresh plans (all tables default)."""
+        names = [table] if table is not None else [
+            k for k, t in self._tables.items() if t.dyn is not None]
+        for name in names:
+            self._dyn(name).flush()

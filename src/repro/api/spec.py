@@ -1,0 +1,174 @@
+"""Declarative request/fit descriptions for the ``PolyFit`` session facade.
+
+``QuerySpec`` names a fitted table and carries the query ranges (scalars or
+equal-length batches); ``QueryBatch`` is an ordered tuple of specs that may
+mix aggregates and dimensions freely — the session groups them by
+(plan, guarantee), dispatches each group through one fused executor, and
+scatters answers back in request order.  Both are registered pytrees (range
+arrays are data, the table name / guarantee are static metadata), so whole
+batches can ride ``jax.tree`` utilities and jitted wrappers.
+
+``TableSpec`` is the fit-time counterpart: aggregate family, ``ErrorBudget``
+(the only source of build deltas — see ``budget.py``), degree, dynamic
+buffering, and optional cross-device sharding.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .budget import DELTA_FRACTION, ErrorBudget
+
+__all__ = ["QuerySpec", "QueryBatch", "TableSpec", "DEFAULT_REL"]
+
+# sentinel: "use the table budget's rel" (None means "Q_abs only, no
+# refinement", so a third state is needed for per-spec overrides)
+DEFAULT_REL = ...
+
+_NRANGES = {"sum": 2, "count": 2, "max": 2, "min": 2, "count2d": 4}
+
+
+def _norm_range(r):
+    """Normalize one range coordinate to a rank-1 array.
+
+    Device arrays (and tracers — both are ``jax.Array``) pass through
+    untouched so the serving hot path never pays a device->host sync and
+    specs stay constructible inside jit; everything else becomes a host
+    float64 array."""
+    if isinstance(r, jax.Array):
+        return jnp.atleast_1d(r)
+    return np.atleast_1d(np.asarray(r, np.float64))
+
+
+@dataclasses.dataclass(frozen=True)
+class QuerySpec:
+    """One declarative request: ``QuerySpec("sales", (lo, hi))``.
+
+    ``ranges`` is ``(lq, uq)`` for 1-D tables or ``(lx, ux, ly, uy)`` for
+    2-key COUNT; entries may be python scalars or equal-length 1-D arrays
+    (a whole sub-batch in one spec — the serving fast path).  ``rel``
+    overrides the table's default Q_rel target for this spec only:
+    ``DEFAULT_REL`` (the default) inherits the table budget, ``None`` forces
+    Q_abs-only, a float is an explicit eps_rel.
+    """
+
+    table: str
+    ranges: Tuple
+    rel: object = DEFAULT_REL
+
+    def __post_init__(self):
+        if len(self.ranges) not in (2, 4):
+            raise ValueError("QuerySpec.ranges must have 2 entries (1-D) or "
+                             f"4 (2-D); got {len(self.ranges)}")
+        object.__setattr__(self, "ranges",
+                           tuple(_norm_range(r) for r in self.ranges))
+        n = {r.shape[0] for r in self.ranges}
+        if len(n) != 1:
+            raise ValueError(f"QuerySpec.ranges lengths differ: {sorted(n)}")
+
+    def __len__(self) -> int:
+        return int(self.ranges[0].shape[0])
+
+    @classmethod
+    def range(cls, table: str, lq, uq, rel=DEFAULT_REL) -> "QuerySpec":
+        """1-D range (SUM/COUNT over (lq, uq], MAX/MIN over [lq, uq])."""
+        return cls(table, (lq, uq), rel)
+
+    @classmethod
+    def rect(cls, table: str, lx, ux, ly, uy, rel=DEFAULT_REL) -> "QuerySpec":
+        """2-key COUNT over the rectangle (lx, ux] x (ly, uy]."""
+        return cls(table, (lx, ux, ly, uy), rel)
+
+
+def _spec_flatten(s: QuerySpec):
+    return tuple(s.ranges), (s.table, s.rel, len(s.ranges))
+
+
+def _spec_unflatten(meta, ranges):
+    s = object.__new__(QuerySpec)
+    object.__setattr__(s, "table", meta[0])
+    object.__setattr__(s, "ranges", tuple(ranges))
+    object.__setattr__(s, "rel", meta[1])
+    return s
+
+
+jax.tree_util.register_pytree_node(QuerySpec, _spec_flatten, _spec_unflatten)
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryBatch:
+    """An ordered, possibly mixed-aggregate batch of ``QuerySpec``s."""
+
+    specs: Tuple[QuerySpec, ...]
+
+    def __post_init__(self):
+        object.__setattr__(self, "specs", tuple(self.specs))
+
+    @classmethod
+    def of(cls, *specs: QuerySpec) -> "QueryBatch":
+        return cls(specs)
+
+    def __len__(self) -> int:
+        return len(self.specs)
+
+    def __iter__(self):
+        return iter(self.specs)
+
+    def __getitem__(self, i):
+        return self.specs[i]
+
+    @property
+    def n_queries(self) -> int:
+        return sum(len(s) for s in self.specs)
+
+
+jax.tree_util.register_pytree_node(
+    QueryBatch,
+    lambda b: (b.specs, None),
+    lambda _, specs: QueryBatch(tuple(specs)))
+
+
+@dataclasses.dataclass(frozen=True)
+class TableSpec:
+    """Fit-time description of one table (dataset x aggregate).
+
+    ``agg``: 'sum' | 'count' | 'max' | 'min' | 'count2d'.
+    ``budget``: the table's ``ErrorBudget`` — the *only* place the build
+    delta comes from.  ``deg`` defaults to 2 for SUM/COUNT and 3 for
+    MAX/MIN/2-D (the paper's recommendations).  ``dynamic`` wraps the plan
+    in a delta-buffered engine (inserts/deletes without rebuild);
+    ``shards`` partitions the plan's segment tables across that many
+    devices and serves it through the shard_map executor
+    (``engine/sharded.py`` — 1-D aggregates only).
+    """
+
+    agg: str
+    budget: ErrorBudget
+    deg: Optional[int] = None
+    dynamic: bool = False
+    capacity: int = 1024
+    background: bool = True
+    auto_refit: bool = True
+    shards: Optional[int] = None
+
+    def __post_init__(self):
+        if self.agg not in _NRANGES:
+            raise ValueError(f"unknown aggregate {self.agg!r}; expected one "
+                             f"of {sorted(_NRANGES)}")
+        if self.shards is not None and self.agg == "count2d":
+            raise ValueError("sharded execution covers 1-D aggregates only "
+                             "(2-D sharding is a ROADMAP item)")
+        assert self.agg in DELTA_FRACTION
+
+    @property
+    def degree(self) -> int:
+        return self.deg if self.deg is not None else (
+            2 if self.agg in ("sum", "count") else 3)
+
+    @property
+    def n_ranges(self) -> int:
+        return _NRANGES[self.agg]

@@ -1,7 +1,8 @@
 """repro.engine — unified backend-dispatched query execution (DESIGN.md §7).
 
 Lower a constructed index into a canonical device-resident ``IndexPlan``
-once, then execute every query type through an ``Engine`` with
+once, then execute every query type through the module-level ``execute_*``
+dispatch path (or the ``Engine`` shim that binds a backend onto it) with
 ``backend='xla' | 'pallas' | 'pallas_scan' | 'ref'`` (``pallas`` is the
 O(log H) locate->gather path, ``pallas_scan`` the one-hot membership scan
 it replaced — kept for A/B benchmarking, DESIGN.md §10):
@@ -13,16 +14,25 @@ it replaced — kept for A/B benchmarking, DESIGN.md §10):
     eng = Engine(backend="pallas")
     res = eng.query(plan, lq, uq, eps_rel=0.01)   # fused approx + refine
 
-Serving, examples and benchmarks all route through this module; the Pallas
-kernels and their jnp oracles are implementation details behind it.
+``shard_plan`` + ``ShardedEngine`` (engine/sharded.py) partition a 1-D
+plan's segment tables across devices and answer through a ``shard_map``
+executor with psum/pmax combination — bit-identical to the single-device
+path.  This module is the execution layer behind the declarative
+``repro.api.PolyFit`` facade, which new code should prefer; the Pallas
+kernels and their jnp oracles are implementation details below it.
 """
 from .dynamic import (DeltaBuffer, DeltaBuffer2D, DynamicEngine,
                       DynamicEngine2D)
-from .engine import BACKENDS, Engine
+from .engine import (BACKENDS, Engine, execute, execute_count2d,
+                     execute_extremum, execute_sum)
 from .plan import (IndexPlan, IndexPlan2D, big_sentinel, build_plan,
                    build_plan_2d, pad_to_multiple)
+from .sharded import (ShardedDelta, ShardedEngine, ShardedPlan,
+                      make_shard_mesh, shard_buffer, shard_plan)
 
 __all__ = ["Engine", "BACKENDS", "IndexPlan", "IndexPlan2D", "build_plan",
            "build_plan_2d", "big_sentinel", "pad_to_multiple",
            "DynamicEngine", "DynamicEngine2D", "DeltaBuffer",
-           "DeltaBuffer2D"]
+           "DeltaBuffer2D", "execute", "execute_sum", "execute_extremum",
+           "execute_count2d", "ShardedEngine", "ShardedPlan", "ShardedDelta",
+           "shard_plan", "shard_buffer", "make_shard_mesh"]

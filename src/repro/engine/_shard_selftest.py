@@ -1,0 +1,116 @@
+"""Sharded-plan self-test: forces an 8-device host topology (scoped to this
+module, like ``launch.dryrun``'s 512-device override) and verifies that the
+shard_map executor is bit-identical to the single-device path.
+
+    PYTHONPATH=src python -m repro.engine._shard_selftest
+
+Checks, for S in {2, 4, 8} across sum/count/max/min:
+
+* static answers (Q_abs and fused Q_rel refinement, including the refined
+  mask) equal the unsharded XLA executor bit for bit;
+* queries whose endpoints straddle (or sit exactly on) shard boundaries;
+* post-insert/delete dynamic state: a live ``DynamicEngine`` buffer
+  partitioned with ``shard_buffer`` yields bit-identical corrected answers;
+* a mixed sum/max ``QueryBatch`` served through a sharded ``PolyFit``
+  session matches the unsharded session.
+
+Prints ``ALL_SHARD_OK`` on success (the marker tests/test_sharded.py
+asserts on).
+"""
+from __future__ import annotations
+
+import os
+
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=8")
+
+import numpy as np  # noqa: E402
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", True)
+
+SHARDS = (2, 4, 8)
+
+
+def _check(name, ref, got):
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(got),
+                                  err_msg=name)
+    print(f"[shard-selftest] {name}: OK")
+
+
+def run() -> None:
+    from repro.api import ErrorBudget, PolyFit, QueryBatch, QuerySpec, TableSpec
+    from repro.core import build_index_1d
+    from repro.engine import (DynamicEngine, Engine, ShardedEngine,
+                              build_plan, shard_plan)
+
+    assert jax.device_count() >= 8, jax.device_count()
+    rng = np.random.default_rng(7)
+    n = 4000
+    keys = np.sort(rng.uniform(0, 1000, n))
+    meas = rng.uniform(0, 10, n)
+    a = keys[rng.integers(0, n, 128)]
+    b = keys[rng.integers(0, n, 128)]
+    lq, uq = np.minimum(a, b), np.maximum(a, b)
+    eng = Engine(backend="xla")
+
+    for agg, m, deg in (("sum", meas, 2), ("count", None, 2),
+                        ("max", meas * 100, 3), ("min", meas * 100, 3)):
+        plan = build_plan(build_index_1d(keys, m, agg, deg=deg, delta=25.0))
+        ref = eng.query(plan, lq, uq)
+        refr = eng.query(plan, lq, uq, eps_rel=0.05)
+        for s in SHARDS:
+            se = ShardedEngine(s)
+            sp = shard_plan(plan, s)
+            _check(f"{agg}.S{s}.qabs", ref.answer,
+                   se.query(plan, lq, uq).answer)
+            got = se.query(plan, lq, uq, eps_rel=0.05)
+            _check(f"{agg}.S{s}.qrel", refr.answer, got.answer)
+            _check(f"{agg}.S{s}.refined", refr.refined, got.refined)
+            edges = np.asarray([e for e in sp.bounds[1:-1]
+                                if np.isfinite(e)], np.float64)
+            if len(edges):
+                sl, su = edges - 1e-9, edges + 13.0
+                _check(f"{agg}.S{s}.straddle",
+                       eng.query(plan, sl, su).answer,
+                       se.query(plan, sl, su).answer)
+                _check(f"{agg}.S{s}.on-edge",
+                       eng.query(plan, edges, su).answer,
+                       se.query(plan, edges, su).answer)
+
+    # dynamic state: buffered inserts (and COUNT deletes) fold in exactly
+    for agg, m in (("count", None), ("sum", meas), ("max", meas * 100)):
+        dyn = DynamicEngine(
+            build_index_1d(keys, m, agg, deg=2 if agg != "max" else 3,
+                           delta=25.0),
+            backend="xla", capacity=256, auto_refit=False)
+        ins_k = rng.uniform(-50, 1100, 60)
+        dyn.insert(ins_k, None if agg == "count" else rng.uniform(0, 900, 60))
+        if agg != "max":
+            dyn.delete(keys[10:20])
+        ref = dyn.query(lq, uq, eps_rel=0.05)
+        plan, buf = dyn.snapshot()
+        for s in SHARDS:
+            got = ShardedEngine(s).query(plan, lq, uq, eps_rel=0.05, buf=buf)
+            _check(f"dyn.{agg}.S{s}", ref.answer, got.answer)
+
+    # the facade end to end: sharded session == unsharded session
+    budget = ErrorBudget(abs=50.0, rel=0.01)
+    specs = lambda s: {"cnt": TableSpec("count", budget, shards=s),
+                       "mx": TableSpec("max", budget, shards=s)}
+    data = {"cnt": keys, "mx": (keys, meas * 100)}
+    base = PolyFit.fit(data, specs(None))
+    batch = QueryBatch.of(QuerySpec.range("cnt", lq[:64], uq[:64]),
+                          QuerySpec.range("mx", lq, uq),
+                          QuerySpec.range("cnt", lq[64:], uq[64:], rel=None))
+    want = base.query(batch)
+    for s in SHARDS:
+        got = PolyFit.fit(data, specs(s)).query(batch)
+        for i, (w, g) in enumerate(zip(want, got)):
+            _check(f"session.S{s}.spec{i}", w.answer, g.answer)
+
+    print("ALL_SHARD_OK")
+
+
+if __name__ == "__main__":
+    run()

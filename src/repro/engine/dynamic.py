@@ -483,6 +483,13 @@ class _DeltaBufferedEngine:
     def n_pending(self) -> int:
         return self._n_pending
 
+    def snapshot(self):
+        """The current immutable (plan, delta-buffer) pair, as one atomic
+        read — the state queries execute against.  External executors
+        (e.g. ``engine.sharded``) must take both from one snapshot so the
+        buffer matches the installed plan."""
+        return self._state
+
     def _ensure_room(self, m: int) -> None:
         if m > self.capacity:
             raise ValueError(f"batch of {m} exceeds buffer capacity "

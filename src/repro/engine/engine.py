@@ -50,7 +50,8 @@ from ..kernels.range_sum import range_sum_gather_pallas, range_sum_pallas
 from .plan import IndexPlan, IndexPlan2D
 
 __all__ = ["Engine", "BACKENDS", "raw_sum", "raw_extremum", "raw_count2d",
-           "truth_sum", "truth_extremum", "truth_count2d", "check_pow2"]
+           "truth_sum", "truth_extremum", "truth_count2d", "check_pow2",
+           "execute_sum", "execute_extremum", "execute_count2d", "execute"]
 
 BACKENDS = ("xla", "pallas", "pallas_scan", "ref")
 
@@ -231,7 +232,105 @@ def _exec_count2d(plan: IndexPlan2D, lx, ux, ly, uy, *, backend: str,
 
 
 # ---------------------------------------------------------------------------
-# the engine
+# the dispatch path: one module-level entry per aggregate family.
+# Everything public (the Engine shims below, the PolyFit session facade in
+# repro.api, the serving layer) routes through these four functions, so
+# bucketing, validation and executor selection live exactly once.
+# ---------------------------------------------------------------------------
+
+def _prepare(*qs, min_bucket: int, bq: int):
+    """Cast to a common device batch + bucket geometry."""
+    check_pow2("bq", bq)                # the bucket math below relies on
+    check_pow2("min_bucket", min_bucket)  # pow2 sizes (bq divides size)
+    qs = [jnp.asarray(q) for q in qs]
+    n = qs[0].shape[0]
+    size = _bucket_size(n, min_bucket)
+    return qs, n, size, min(bq, size)   # both powers of two -> bq | size
+
+
+def _require_exact(cond: bool):
+    if not cond:
+        raise ValueError("Q_rel refinement requires a plan built with "
+                         "with_exact=True")
+
+
+def _check_backend(backend: str):
+    if backend not in BACKENDS:
+        raise ValueError(f"backend must be one of {BACKENDS}, got {backend}")
+
+
+def execute_sum(plan: IndexPlan, lq, uq, *, backend: str = "xla",
+                eps_rel: Optional[float] = None, interpret: bool = True,
+                bq: int = DEFAULT_BQ, min_bucket: int = 64) -> QueryResult:
+    """1-D SUM/COUNT over (lq, uq] through the fused jitted executor."""
+    assert plan.agg in ("sum", "count"), plan.agg
+    _check_backend(backend)
+    if eps_rel is not None:
+        _require_exact(plan.ref_cf is not None)
+    (lq, uq), n, size, bq = _prepare(lq, uq, min_bucket=min_bucket, bq=bq)
+    fill = plan.domain_lo.astype(lq.dtype)
+    ans, approx, refined = _exec_sum(
+        plan, _pad_bucket(lq, size, fill), _pad_bucket(uq, size, fill),
+        backend=backend, eps_rel=eps_rel, interpret=interpret, bq=bq)
+    return QueryResult(ans[:n], approx[:n], refined[:n])
+
+
+def execute_extremum(plan: IndexPlan, lq, uq, *, backend: str = "xla",
+                     eps_rel: Optional[float] = None, interpret: bool = True,
+                     bq: int = DEFAULT_BQ, min_bucket: int = 64) -> QueryResult:
+    """1-D MAX/MIN over [lq, uq] (MIN plans run on negated measures)."""
+    assert plan.agg in ("max", "min"), plan.agg
+    _check_backend(backend)
+    if eps_rel is not None:
+        _require_exact(plan.ref_st is not None)
+    if backend in ("pallas", "pallas_scan", "ref") and plan.deg > 3:
+        # in-kernel closed-form extrema stop at deg 3 (the paper's
+        # recommended MAX range); higher degrees take the XLA path
+        backend = "xla"
+    (lq, uq), n, size, bq = _prepare(lq, uq, min_bucket=min_bucket, bq=bq)
+    fill = plan.domain_lo.astype(lq.dtype)
+    ans, approx, refined = _exec_extremum(
+        plan, _pad_bucket(lq, size, fill), _pad_bucket(uq, size, fill),
+        backend=backend, eps_rel=eps_rel, interpret=interpret, bq=bq)
+    return QueryResult(ans[:n], approx[:n], refined[:n])
+
+
+def execute_count2d(plan: IndexPlan2D, lx, ux, ly, uy, *,
+                    backend: str = "xla", eps_rel: Optional[float] = None,
+                    interpret: bool = True, bq: int = DEFAULT_BQ,
+                    min_bucket: int = 64) -> QueryResult:
+    """2-key COUNT over (lx, ux] x (ly, uy] via 4-corner inclusion-exclusion."""
+    _check_backend(backend)
+    if eps_rel is not None:
+        _require_exact(plan.ref_xs is not None)
+    (lx, ux, ly, uy), n, size, bq = _prepare(lx, ux, ly, uy,
+                                             min_bucket=min_bucket, bq=bq)
+    x0, _, y0, _ = plan.root
+    args = (_pad_bucket(lx, size, x0), _pad_bucket(ux, size, x0),
+            _pad_bucket(ly, size, y0), _pad_bucket(uy, size, y0))
+    ans, approx, refined = _exec_count2d(
+        plan, *args, backend=backend, eps_rel=eps_rel, interpret=interpret,
+        bq=bq)
+    return QueryResult(ans[:n], approx[:n], refined[:n])
+
+
+def execute(plan: Union[IndexPlan, IndexPlan2D], ranges, *,
+            backend: str = "xla", eps_rel: Optional[float] = None,
+            interpret: bool = True, bq: int = DEFAULT_BQ,
+            min_bucket: int = 64) -> QueryResult:
+    """Dispatch on the plan: (lq, uq) for 1-D, (lx, ux, ly, uy) for 2-D."""
+    kw = dict(backend=backend, eps_rel=eps_rel, interpret=interpret, bq=bq,
+              min_bucket=min_bucket)
+    if isinstance(plan, IndexPlan2D):
+        return execute_count2d(plan, *ranges, **kw)
+    if plan.agg in ("sum", "count"):
+        return execute_sum(plan, *ranges, **kw)
+    return execute_extremum(plan, *ranges, **kw)
+
+
+# ---------------------------------------------------------------------------
+# the engine — a thin configuration shim over the dispatch path (kept for
+# downstream callers; new code should go through repro.api.PolyFit)
 # ---------------------------------------------------------------------------
 
 class Engine:
@@ -240,12 +339,16 @@ class Engine:
     One instance serves any number of plans; jit compiles (and caches) one
     executable per (aggregate, backend, batch-bucket, plan-layout).
     ``interpret`` controls Pallas interpret mode (True for CPU hosts).
+
+    Every method is a shim binding this instance's (backend, interpret, bq,
+    min_bucket) onto the module-level ``execute_*`` dispatch functions — the
+    same path the ``repro.api`` session facade uses, so old and new callers
+    hit bit-identical executors.
     """
 
     def __init__(self, backend: str = "xla", interpret: bool = True,
                  bq: int = DEFAULT_BQ, min_bucket: int = 64):
-        if backend not in BACKENDS:
-            raise ValueError(f"backend must be one of {BACKENDS}, got {backend}")
+        _check_backend(backend)
         check_pow2("bq", bq)
         check_pow2("min_bucket", min_bucket)
         self.backend = backend
@@ -253,81 +356,25 @@ class Engine:
         self.bq = bq
         self.min_bucket = min_bucket
 
-    # -- helpers --------------------------------------------------------
-
-    def _prepare(self, *qs: jnp.ndarray):
-        """Cast to a common device batch + bucket geometry."""
-        qs = [jnp.asarray(q) for q in qs]
-        n = qs[0].shape[0]
-        size = _bucket_size(n, self.min_bucket)
-        bq = min(self.bq, size)   # both powers of two -> bq divides size
-        return qs, n, size, bq
-
-    @staticmethod
-    def _require_exact(cond: bool):
-        if not cond:
-            raise ValueError("Q_rel refinement requires a plan built with "
-                             "with_exact=True")
-
-    # -- 1-D SUM / COUNT -------------------------------------------------
+    def _kw(self, eps_rel):
+        return dict(backend=self.backend, eps_rel=eps_rel,
+                    interpret=self.interpret, bq=self.bq,
+                    min_bucket=self.min_bucket)
 
     def sum(self, plan: IndexPlan, lq, uq,
             eps_rel: Optional[float] = None) -> QueryResult:
-        assert plan.agg in ("sum", "count"), plan.agg
-        if eps_rel is not None:
-            self._require_exact(plan.ref_cf is not None)
-        (lq, uq), n, size, bq = self._prepare(lq, uq)
-        fill = plan.domain_lo.astype(lq.dtype)
-        ans, approx, refined = _exec_sum(
-            plan, _pad_bucket(lq, size, fill), _pad_bucket(uq, size, fill),
-            backend=self.backend, eps_rel=eps_rel,
-            interpret=self.interpret, bq=bq)
-        return QueryResult(ans[:n], approx[:n], refined[:n])
+        return execute_sum(plan, lq, uq, **self._kw(eps_rel))
 
     count = sum   # COUNT is SUM over unit measures
 
-    # -- 1-D MAX / MIN ---------------------------------------------------
-
     def extremum(self, plan: IndexPlan, lq, uq,
                  eps_rel: Optional[float] = None) -> QueryResult:
-        assert plan.agg in ("max", "min"), plan.agg
-        if eps_rel is not None:
-            self._require_exact(plan.ref_st is not None)
-        backend = self.backend
-        if backend in ("pallas", "pallas_scan", "ref") and plan.deg > 3:
-            # in-kernel closed-form extrema stop at deg 3 (the paper's
-            # recommended MAX range); higher degrees take the XLA path
-            backend = "xla"
-        (lq, uq), n, size, bq = self._prepare(lq, uq)
-        fill = plan.domain_lo.astype(lq.dtype)
-        ans, approx, refined = _exec_extremum(
-            plan, _pad_bucket(lq, size, fill), _pad_bucket(uq, size, fill),
-            backend=backend, eps_rel=eps_rel,
-            interpret=self.interpret, bq=bq)
-        return QueryResult(ans[:n], approx[:n], refined[:n])
-
-    # -- 2-D COUNT -------------------------------------------------------
+        return execute_extremum(plan, lq, uq, **self._kw(eps_rel))
 
     def count2d(self, plan: IndexPlan2D, lx, ux, ly, uy,
                 eps_rel: Optional[float] = None) -> QueryResult:
-        if eps_rel is not None:
-            self._require_exact(plan.ref_xs is not None)
-        (lx, ux, ly, uy), n, size, bq = self._prepare(lx, ux, ly, uy)
-        x0, _, y0, _ = plan.root
-        args = (_pad_bucket(lx, size, x0), _pad_bucket(ux, size, x0),
-                _pad_bucket(ly, size, y0), _pad_bucket(uy, size, y0))
-        ans, approx, refined = _exec_count2d(
-            plan, *args, backend=self.backend, eps_rel=eps_rel,
-            interpret=self.interpret, bq=bq)
-        return QueryResult(ans[:n], approx[:n], refined[:n])
-
-    # -- uniform entry ---------------------------------------------------
+        return execute_count2d(plan, lx, ux, ly, uy, **self._kw(eps_rel))
 
     def query(self, plan: Union[IndexPlan, IndexPlan2D], *ranges,
               eps_rel: Optional[float] = None) -> QueryResult:
-        """Dispatch on the plan: (lq, uq) for 1-D, (lx, ux, ly, uy) for 2-D."""
-        if isinstance(plan, IndexPlan2D):
-            return self.count2d(plan, *ranges, eps_rel=eps_rel)
-        if plan.agg in ("sum", "count"):
-            return self.sum(plan, *ranges, eps_rel=eps_rel)
-        return self.extremum(plan, *ranges, eps_rel=eps_rel)
+        return execute(plan, ranges, **self._kw(eps_rel))

@@ -1,0 +1,556 @@
+"""Sharded plans: segment tables partitioned across devices (ROADMAP item).
+
+``shard_plan`` splits an ``IndexPlan``'s segment table (and its exact
+refinement arrays) into contiguous key ranges — shard ``s`` owns segments
+``[off_s, off_{s+1})`` and therefore every key in ``[seg_lo[off_s],
+seg_lo[off_{s+1}])`` — stacks the per-shard slices on a leading axis, and a
+``shard_map`` executor answers query batches with each shard computing only
+the part of the answer its key range owns:
+
+* **SUM/COUNT** — the raw answer is ``F(uq) - F(lq)`` (Eq. 14); each
+  endpoint is evaluated by exactly one owner shard (the clamped query is
+  masked elsewhere), the two totals are combined with ``psum`` (one nonzero
+  term each), and the final subtraction happens on the replicated totals —
+  the identical operation sequence as the single-device executor, so
+  answers are **bit-identical**, not merely close.  A naive
+  "clamp-to-shard-range and sum partial sums" scheme would not be: segment
+  fits are discontinuous at boundaries, so telescoping F over shard edges
+  adds up to ``2*delta*(S-1)`` of spurious error.
+* **MAX/MIN** — Eq. 17 decomposes exactly: the boundary-segment closed-form
+  extrema are computed by the shards owning ``lq``/``uq`` (same arithmetic
+  as ``core.queries.max_eval_segments``), interior segments reduce through
+  per-shard sparse tables, and ``pmax`` combines — floating-point ``max``
+  is associative, so this too is bit-identical to the XLA backend.
+* **Exact refinement / delta buffers** — the refinement CF arrays and the
+  ``DeltaBuffer`` logs are partitioned by the same key ranges.  Prefix-CF
+  lookups use *global* prefix values stored at local positions (owner-masked
+  psum again), masked buffer maxima ride ``pmax``, so Q_rel refinement and
+  post-insert/delete dynamic answers stay bit-identical as well.
+
+The mapped body runs the XLA primitive path (``eval_segments`` /
+``poly_max_on_interval`` / ``sparse_table_range_max``) regardless of the
+engine backend — exactly the arithmetic of ``backend='xla'`` (and of
+``'ref'`` for SUM/COUNT, which shares ``eval_segments``).  Kernel backends
+still apply *within* each unsharded plan; sharding is about datasets larger
+than one device, where each shard's table again becomes a candidate for the
+locate->gather kernels (a follow-up once multi-device Pallas lowering is
+validated on hardware).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from ..core.exact import build_sparse_table, sparse_table_range_max
+from ..core.poly import eval_segments, locate, scale_unit
+from ..core.queries import QueryResult, poly_max_on_interval
+from .dynamic import DeltaBuffer
+from .engine import _bucket_size, _pad_bucket, check_pow2
+from .plan import IndexPlan, big_sentinel
+
+__all__ = ["ShardedPlan", "ShardedDelta", "ShardedEngine", "shard_plan",
+           "shard_buffer", "make_shard_mesh"]
+
+_AXIS = "shards"
+
+
+def make_shard_mesh(nshards: int) -> Mesh:
+    """A 1-axis mesh over the first ``nshards`` local devices."""
+    devs = jax.devices()
+    if nshards > len(devs):
+        raise ValueError(f"nshards={nshards} exceeds the {len(devs)} "
+                         "available devices (force host devices with "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+    return Mesh(np.array(devs[:nshards]), (_AXIS,))
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedPlan:
+    """Per-shard slices of an ``IndexPlan``, stacked on a leading S axis.
+
+    ``bounds`` (static metadata) are the S+1 owning-range edges
+    ``(-inf, seg_lo[off_1], ..., +inf)``; ``rlo``/``rhi`` carry the same
+    values as per-shard arrays for the mapped body's ownership masks.
+    ``ref_cf`` holds *global* inclusive-prefix values at local positions
+    (entry ``i`` of shard ``s`` is ``CF[a_s + i]`` of the unsharded array),
+    so an owner shard's lookup returns exactly the unsharded value.
+    """
+
+    # -- static metadata ------------------------------------------------
+    agg: str
+    deg: int
+    delta: float
+    h: int                    # true global segment count
+    n: int
+    nshards: int
+    domain_lo: float
+    bounds: Tuple[float, ...]  # S+1 owning-range edges (host copy)
+    # -- per-shard range/offset arrays (S,) ------------------------------
+    rlo: jnp.ndarray
+    rhi: jnp.ndarray
+    off: jnp.ndarray          # int32 global index of first owned segment
+    hloc: jnp.ndarray         # int32 owned segment count
+    # -- stacked segment tables (S, Hs[, deg+1]) -------------------------
+    seg_lo: jnp.ndarray
+    seg_hi: jnp.ndarray
+    coeffs: jnp.ndarray
+    seg_agg: Optional[jnp.ndarray]   # max/min only
+    st: Optional[jnp.ndarray]        # (S, L, Hs) local sparse tables
+    # -- sharded exact-refinement arrays ---------------------------------
+    ref_keys: Optional[jnp.ndarray]  # (S, R) sentinel-padded key slices
+    ref_cf: Optional[jnp.ndarray]    # (S, R+1) global-prefix CF slices
+    ref_st: Optional[jnp.ndarray]    # (S, L2, R) local measure tables
+
+    @property
+    def dtype(self):
+        return self.coeffs.dtype
+
+
+jax.tree_util.register_dataclass(
+    ShardedPlan,
+    data_fields=["rlo", "rhi", "off", "hloc", "seg_lo", "seg_hi", "coeffs",
+                 "seg_agg", "st", "ref_keys", "ref_cf", "ref_st"],
+    meta_fields=["agg", "deg", "delta", "h", "n", "nshards", "domain_lo",
+                 "bounds"],
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedDelta:
+    """Per-shard slices of a ``DeltaBuffer``, partitioned by the plan's
+    owning key ranges.  ``ins_cf``/``del_cf`` hold *global* exclusive
+    prefix sums at local positions (same trick as ``ShardedPlan.ref_cf``)."""
+
+    ins_keys: jnp.ndarray   # (S, C) sentinel-padded
+    ins_vals: jnp.ndarray   # (S, C)
+    ins_cf: jnp.ndarray     # (S, C+1)
+    del_keys: jnp.ndarray
+    del_vals: jnp.ndarray
+    del_cf: jnp.ndarray
+    cap: int
+
+    @property
+    def dtype(self):
+        return self.ins_vals.dtype
+
+
+jax.tree_util.register_dataclass(
+    ShardedDelta,
+    data_fields=["ins_keys", "ins_vals", "ins_cf", "del_keys", "del_vals",
+                 "del_cf"],
+    meta_fields=["cap"],
+)
+
+
+# ---------------------------------------------------------------------------
+# host-side partitioning
+# ---------------------------------------------------------------------------
+
+def _pad2(rows, length, fill):
+    """Stack host rows padded to ``length`` along their first axis."""
+    out = np.full((len(rows), length) + rows[0].shape[1:], fill,
+                  rows[0].dtype)   # empty slices still carry the dtype
+    for s, r in enumerate(rows):
+        out[s, : len(r)] = r
+    return jnp.asarray(out)
+
+
+def shard_plan(plan: IndexPlan, nshards: int) -> ShardedPlan:
+    """Partition a 1-D plan's segment table into ``nshards`` contiguous
+    key ranges (balanced by segment count), shard-local sparse tables and
+    refinement slices included.  Plans with fewer segments than shards
+    leave the surplus shards empty (they own the degenerate range
+    [+inf, +inf) and contribute the psum/pmax identity)."""
+    if nshards < 1:
+        raise ValueError(f"nshards must be >= 1, got {nshards}")
+    h = plan.h
+    dt = plan.dtype
+    big = big_sentinel(dt)
+    seg_lo = np.asarray(plan.seg_lo)[:h]
+    seg_hi = np.asarray(plan.seg_hi)[:h]
+    coeffs = np.asarray(plan.coeffs)[:h]
+    seg_agg = np.asarray(plan.seg_agg)[:h]
+    cuts = np.round(np.linspace(0, h, nshards + 1)).astype(np.int64)
+    inner = np.where(cuts[1:-1] < h,
+                     seg_lo[np.minimum(cuts[1:-1], h - 1)], np.inf)
+    bounds = np.concatenate([[-np.inf], inner, [np.inf]])
+
+    lo_rows = [seg_lo[a:b] for a, b in zip(cuts[:-1], cuts[1:])]
+    hi_rows = [seg_hi[a:b] for a, b in zip(cuts[:-1], cuts[1:])]
+    cf_rows = [coeffs[a:b] for a, b in zip(cuts[:-1], cuts[1:])]
+    ag_rows = [seg_agg[a:b] for a, b in zip(cuts[:-1], cuts[1:])]
+    hs = max(int(b - a) for a, b in zip(cuts[:-1], cuts[1:]))
+
+    extremal = plan.agg in ("max", "min")
+    st = None
+    if extremal:
+        st = jnp.asarray(np.stack([
+            build_sparse_table(np.concatenate(
+                [r, np.full(hs - len(r), -np.inf)])) for r in ag_rows]))
+
+    ref_keys = ref_cf = ref_st = None
+    if plan.ref_keys is not None:
+        keys = np.asarray(plan.ref_keys)
+        splits = np.searchsorted(keys, bounds[1:-1], side="left")
+        edges = np.concatenate([[0], splits, [len(keys)]]).astype(np.int64)
+        k_rows = [keys[a:b] for a, b in zip(edges[:-1], edges[1:])]
+        r = max(len(kr) for kr in k_rows)
+        ref_keys = _pad2(k_rows, r, big)
+        if plan.ref_cf is not None:
+            pcf = np.concatenate([[0.0], np.asarray(plan.ref_cf)])
+            # local slice of the *global* padded prefix CF; tail repeats the
+            # last value (owner lookups never index past their true length)
+            rows = []
+            for a, b in zip(edges[:-1], edges[1:]):
+                sl = pcf[a: b + 1]
+                rows.append(np.concatenate(
+                    [sl, np.full(r + 1 - len(sl), sl[-1])]))
+            ref_cf = jnp.asarray(np.stack(rows))
+        if plan.ref_st is not None:
+            meas = np.asarray(plan.ref_st)[0]   # level 0 = raw measures
+            ref_st = jnp.asarray(np.stack([
+                build_sparse_table(np.concatenate(
+                    [meas[a:b], np.full(r - (b - a), -np.inf)]))
+                for a, b in zip(edges[:-1], edges[1:])]))
+
+    return ShardedPlan(
+        agg=plan.agg, deg=plan.deg, delta=plan.delta, h=h, n=plan.n,
+        nshards=nshards, domain_lo=float(seg_lo[0]),
+        bounds=tuple(float(b) for b in bounds),
+        rlo=jnp.asarray(bounds[:-1], dt), rhi=jnp.asarray(bounds[1:], dt),
+        off=jnp.asarray(cuts[:-1], jnp.int32),
+        hloc=jnp.asarray(np.diff(cuts), jnp.int32),
+        seg_lo=_pad2(lo_rows, hs, big), seg_hi=_pad2(hi_rows, hs, big),
+        coeffs=_pad2(cf_rows, hs, 0.0),
+        seg_agg=_pad2(ag_rows, hs, -np.inf) if extremal else None,
+        st=st, ref_keys=ref_keys, ref_cf=ref_cf, ref_st=ref_st,
+    )
+
+
+def shard_buffer(buf: DeltaBuffer, splan: ShardedPlan) -> ShardedDelta:
+    """Partition a delta buffer by the plan's owning key ranges.
+
+    Sentinel slots sort past every real key and land on the last shard with
+    value 0 (they fail every membership/ownership test).  The CF slices keep
+    global prefix values so owner lookups reproduce the unsharded arithmetic
+    bit for bit.
+    """
+    cap = buf.cap
+    inner = np.asarray(splan.bounds[1:-1])
+    big = big_sentinel(splan.dtype)
+
+    def split(keys, vals, cf):
+        k = np.asarray(keys)
+        v = np.asarray(vals)
+        c = np.asarray(cf)
+        edges = np.concatenate(
+            [[0], np.searchsorted(k, inner, side="left"), [cap]]
+        ).astype(np.int64)
+        krs, vrs, crs = [], [], []
+        for a, b in zip(edges[:-1], edges[1:]):
+            krs.append(k[a:b])
+            vrs.append(v[a:b])
+            sl = c[a: b + 1]
+            crs.append(np.concatenate(
+                [sl, np.full(cap + 1 - len(sl), sl[-1])]))
+        return (_pad2(krs, cap, big), _pad2(vrs, cap, 0.0),
+                jnp.asarray(np.stack(crs)))
+
+    ik, iv, icf = split(buf.ins_keys, buf.ins_vals, buf.ins_cf)
+    dk, dv, dcf = split(buf.del_keys, buf.del_vals, buf.del_cf)
+    return ShardedDelta(ik, iv, icf, dk, dv, dcf, cap)
+
+
+# ---------------------------------------------------------------------------
+# mapped-body helpers (each runs on one shard's local block; the leading
+# length-1 mapped axis is stripped with [0])
+# ---------------------------------------------------------------------------
+
+def _own(q, rlo, rhi):
+    return (q >= rlo) & (q < rhi)
+
+
+def _psum_owned(val, own, zero=0.0):
+    return jax.lax.psum(jnp.where(own, val, zero), _AXIS)
+
+
+def _sum_endpoints(sp: ShardedPlan, lqc, uqc):
+    """(F(lq), F(uq)) totals — each endpoint evaluated by its owner only."""
+    rlo, rhi = sp.rlo[0], sp.rhi[0]
+    args = (sp.seg_lo[0], sp.seg_hi[0], sp.coeffs[0])
+    fl = _psum_owned(eval_segments(lqc, *args), _own(lqc, rlo, rhi))
+    fu = _psum_owned(eval_segments(uqc, *args), _own(uqc, rlo, rhi))
+    return fl, fu
+
+
+def _extremum_raw(sp: ShardedPlan, lqc, uqc):
+    """Eq. 17 decomposed: owner-computed boundary extrema + per-shard
+    interior sparse-table maxima, combined with pmax (exact for max)."""
+    rlo, rhi = sp.rlo[0], sp.rhi[0]
+    seg_lo, seg_hi, coeffs = sp.seg_lo[0], sp.seg_hi[0], sp.coeffs[0]
+    off, hloc = sp.off[0], sp.hloc[0]
+    own_l = _own(lqc, rlo, rhi)
+    own_u = _own(uqc, rlo, rhi)
+    il_loc = locate(lqc, seg_lo)
+    iu_loc = locate(uqc, seg_lo)
+    il = _psum_owned(off + il_loc, own_l, 0)
+    iu = _psum_owned(off + iu_loc, own_u, 0)
+    same = il == iu
+    ninf = -jnp.inf
+
+    # left boundary segment: [lq, min(hi_l, uq)] — owner shard only
+    lo_l, hi_l = seg_lo[il_loc], seg_hi[il_loc]
+    ua_l = scale_unit(lqc, lo_l, hi_l)
+    ub_l = scale_unit(jnp.minimum(hi_l, uqc), lo_l, hi_l)
+    m_left = poly_max_on_interval(coeffs[il_loc], ua_l, ub_l)
+    m_left = jnp.where(lqc <= hi_l, m_left, ninf)
+    m_left = jnp.where(own_l, m_left, ninf)
+    # right boundary segment: [max(lo_u, lq), uq] — owner shard only
+    lo_u, hi_u = seg_lo[iu_loc], seg_hi[iu_loc]
+    ua_u = scale_unit(jnp.maximum(lo_u, lqc), lo_u, hi_u)
+    ub_u = scale_unit(uqc, lo_u, hi_u)
+    m_right = jnp.where(same | ~own_u, ninf,
+                        poly_max_on_interval(coeffs[iu_loc], ua_u, ub_u))
+    # interior fully-covered segments owned by this shard
+    a = jnp.clip(il + 1 - off, 0, hloc)
+    b = jnp.clip(iu - off, 0, hloc)
+    m_mid = sparse_table_range_max(sp.st[0], a, b)
+    part = jnp.maximum(jnp.maximum(m_left, m_right), m_mid)
+    return jax.lax.pmax(part, _AXIS)
+
+
+def _truth_sum_tot(sp: ShardedPlan, lq, uq):
+    """Exact static SUM over (lq, uq] from the sharded refinement CF."""
+    rlo, rhi = sp.rlo[0], sp.rhi[0]
+    keys, pcf = sp.ref_keys[0], sp.ref_cf[0]
+    cl = _psum_owned(pcf[jnp.searchsorted(keys, lq, side="right")],
+                     _own(lq, rlo, rhi))
+    cu = _psum_owned(pcf[jnp.searchsorted(keys, uq, side="right")],
+                     _own(uq, rlo, rhi))
+    return cu - cl
+
+
+def _truth_extremum_tot(sp: ShardedPlan, lq, uq):
+    """Exact static MAX over [lq, uq] — per-shard slice maxima + pmax."""
+    keys = sp.ref_keys[0]
+    i = jnp.searchsorted(keys, lq, side="left")
+    j = jnp.searchsorted(keys, uq, side="right")
+    return jax.lax.pmax(sparse_table_range_max(sp.ref_st[0], i, j), _AXIS)
+
+
+def _delta_sum_tot(keys, pcf, lq, uq, rlo, rhi):
+    """Exact buffered SUM over (lq, uq] — owner-masked global-prefix diffs."""
+    cl = _psum_owned(pcf[jnp.searchsorted(keys, lq, side="right")],
+                     _own(lq, rlo, rhi))
+    cu = _psum_owned(pcf[jnp.searchsorted(keys, uq, side="right")],
+                     _own(uq, rlo, rhi))
+    return cu - cl
+
+
+def _delta_max_tot(keys, vals, lq, uq):
+    """Exact buffered MAX over [lq, uq] — per-shard masked max + pmax."""
+    member = (lq[:, None] <= keys[None, :]) & (keys[None, :] <= uq[:, None])
+    part = jnp.max(jnp.where(member, vals[None, :], -jnp.inf), axis=1)
+    return jax.lax.pmax(part, _AXIS)
+
+
+# ---------------------------------------------------------------------------
+# fused sharded executors (one compilation per mesh/bucket/layout signature)
+# ---------------------------------------------------------------------------
+
+def _specs(mesh, n_in):
+    return dict(mesh=mesh, in_specs=(P(_AXIS),) * n_in + (P(), P()),
+                out_specs=(P(), P(), P()))
+
+
+@partial(jax.jit, static_argnames=("mesh", "eps_rel"))
+def _exec_shard_sum(splan: ShardedPlan, lq, uq, *, mesh: Mesh,
+                    eps_rel: Optional[float]):
+    def body(sp, lq, uq):
+        dt = sp.coeffs.dtype
+        lqc = jnp.maximum(lq.astype(dt), sp.domain_lo)
+        uqc = jnp.maximum(uq.astype(dt), sp.domain_lo)
+        fl, fu = _sum_endpoints(sp, lqc, uqc)
+        approx = fu - fl
+        if eps_rel is None:
+            return approx, approx, jnp.zeros(approx.shape, bool)
+        two_d = 2.0 * sp.delta
+        ok = ((approx - two_d > 0) &
+              (two_d / jnp.maximum(approx - two_d, 1e-300) <= eps_rel))
+        truth = _truth_sum_tot(sp, lq, uq)
+        return jnp.where(ok, approx, truth), approx, ~ok
+
+    return shard_map(body, **_specs(mesh, 1))(splan, lq, uq)
+
+
+@partial(jax.jit, static_argnames=("mesh", "eps_rel"))
+def _exec_shard_extremum(splan: ShardedPlan, lq, uq, *, mesh: Mesh,
+                         eps_rel: Optional[float]):
+    def body(sp, lq, uq):
+        dt = sp.coeffs.dtype
+        lqc = jnp.maximum(lq.astype(dt), sp.domain_lo)
+        uqc = jnp.maximum(uq.astype(dt), sp.domain_lo)
+        approx = _extremum_raw(sp, lqc, uqc)
+        neg = sp.agg == "min"
+        if eps_rel is None:
+            out = -approx if neg else approx
+            return out, out, jnp.zeros(out.shape, bool)
+        ok = approx >= sp.delta * (1.0 + 1.0 / eps_rel)
+        truth = _truth_extremum_tot(sp, lq, uq)
+        ans = jnp.where(ok, approx, truth)
+        if neg:
+            ans, approx = -ans, -approx
+        return ans, approx, ~ok
+
+    return shard_map(body, **_specs(mesh, 1))(splan, lq, uq)
+
+
+@partial(jax.jit, static_argnames=("mesh", "eps_rel"))
+def _exec_shard_dyn_sum(splan: ShardedPlan, sbuf: ShardedDelta, lq, uq, *,
+                        mesh: Mesh, eps_rel: Optional[float]):
+    def body(sp, sb, lq, uq):
+        dt = sp.coeffs.dtype
+        rlo, rhi = sp.rlo[0], sp.rhi[0]
+        lqr, uqr = lq.astype(dt), uq.astype(dt)
+        lqc = jnp.maximum(lqr, sp.domain_lo)
+        uqc = jnp.maximum(uqr, sp.domain_lo)
+        fl, fu = _sum_endpoints(sp, lqc, uqc)
+        static = fu - fl
+        # exact correction over (lq, uq] — unclamped, as in _exec_dyn_sum
+        corr = (_delta_sum_tot(sb.ins_keys[0], sb.ins_cf[0],
+                               lqr, uqr, rlo, rhi)
+                - _delta_sum_tot(sb.del_keys[0], sb.del_cf[0],
+                                 lqr, uqr, rlo, rhi))
+        approx = static + corr
+        if eps_rel is None:
+            return approx, approx, jnp.zeros(approx.shape, bool)
+        two_d = 2.0 * sp.delta
+        ok = ((approx - two_d > 0) &
+              (two_d / jnp.maximum(approx - two_d, 1e-300) <= eps_rel))
+        truth = _truth_sum_tot(sp, lqr, uqr) + corr
+        return jnp.where(ok, approx, truth), approx, ~ok
+
+    return shard_map(body, **_specs(mesh, 2))(splan, sbuf, lq, uq)
+
+
+@partial(jax.jit, static_argnames=("mesh", "eps_rel"))
+def _exec_shard_dyn_extremum(splan: ShardedPlan, sbuf: ShardedDelta, lq, uq,
+                             *, mesh: Mesh, eps_rel: Optional[float]):
+    def body(sp, sb, lq, uq):
+        dt = sp.coeffs.dtype
+        lqr, uqr = lq.astype(dt), uq.astype(dt)
+        lqc = jnp.maximum(lqr, sp.domain_lo)
+        uqc = jnp.maximum(uqr, sp.domain_lo)
+        static = _extremum_raw(sp, lqc, uqc)
+        ins = _delta_max_tot(sb.ins_keys[0], sb.ins_vals[0], lqr, uqr)
+        approx = jnp.maximum(static, ins)
+        neg = sp.agg == "min"
+        if eps_rel is None:
+            out = -approx if neg else approx
+            return out, out, jnp.zeros(out.shape, bool)
+        ok = approx >= sp.delta * (1.0 + 1.0 / eps_rel)
+        truth = jnp.maximum(_truth_extremum_tot(sp, lqr, uqr), ins)
+        ans = jnp.where(ok, approx, truth)
+        if neg:
+            ans, approx = -ans, -approx
+        return ans, approx, ~ok
+
+    return shard_map(body, **_specs(mesh, 2))(splan, sbuf, lq, uq)
+
+
+# ---------------------------------------------------------------------------
+# the sharded engine
+# ---------------------------------------------------------------------------
+
+class ShardedEngine:
+    """Executes queries against device-partitioned 1-D plans.
+
+    ``shard(plan)`` partitions (and caches) a plan; ``sum``/``extremum``
+    accept either an ``IndexPlan`` (sharded on first use) or a prepared
+    ``ShardedPlan``.  Passing ``buf=`` a ``DeltaBuffer`` (e.g. a
+    ``DynamicEngine``'s live buffer) folds buffered updates in exactly,
+    keeping dynamic answers bit-identical to the single-device path.
+    """
+
+    def __init__(self, nshards: int, *, mesh: Optional[Mesh] = None,
+                 min_bucket: int = 64):
+        check_pow2("nshards", nshards)
+        check_pow2("min_bucket", min_bucket)
+        self.nshards = nshards
+        self.mesh = mesh if mesh is not None else make_shard_mesh(nshards)
+        self.min_bucket = min_bucket
+        self._plan_cache: dict = {}
+        self._buf_cache: dict = {}
+
+    # -- partition caches ------------------------------------------------
+
+    def shard(self, plan: IndexPlan) -> ShardedPlan:
+        if isinstance(plan, ShardedPlan):
+            return plan
+        hit = self._plan_cache.get(id(plan))
+        if hit is None or hit[0] is not plan:
+            self._plan_cache = {id(plan): (plan, shard_plan(plan,
+                                                           self.nshards))}
+            hit = self._plan_cache[id(plan)]
+        return hit[1]
+
+    def _shard_buf(self, splan: ShardedPlan,
+                   buf: DeltaBuffer) -> ShardedDelta:
+        # a partition is only valid for the owning ranges it was split
+        # with, so the (single-entry) cache keys on buffer identity AND
+        # the plan's bounds
+        hit = self._buf_cache.get(id(buf))
+        if hit is None or hit[0] is not buf or hit[1] != splan.bounds:
+            self._buf_cache = {
+                id(buf): (buf, splan.bounds, shard_buffer(buf, splan))}
+            hit = self._buf_cache[id(buf)]
+        return hit[2]
+
+    # -- queries ---------------------------------------------------------
+
+    def _run(self, plan, lq, uq, eps_rel, buf, exec_static, exec_dyn,
+             need_ref):
+        splan = self.shard(plan)
+        if eps_rel is not None and getattr(splan, need_ref) is None:
+            raise ValueError("Q_rel refinement requires a plan built with "
+                             "with_exact=True")
+        lq, uq = jnp.asarray(lq), jnp.asarray(uq)
+        n = lq.shape[0]
+        size = _bucket_size(n, self.min_bucket)
+        fill = jnp.asarray(splan.domain_lo, lq.dtype)
+        args = (_pad_bucket(lq, size, fill), _pad_bucket(uq, size, fill))
+        if buf is None:
+            ans, approx, refined = exec_static(
+                splan, *args, mesh=self.mesh, eps_rel=eps_rel)
+        else:
+            sbuf = self._shard_buf(splan, buf)
+            ans, approx, refined = exec_dyn(
+                splan, sbuf, *args, mesh=self.mesh, eps_rel=eps_rel)
+        return QueryResult(ans[:n], approx[:n], refined[:n])
+
+    def sum(self, plan, lq, uq, eps_rel: Optional[float] = None,
+            buf: Optional[DeltaBuffer] = None) -> QueryResult:
+        assert (plan.agg in ("sum", "count")), plan.agg
+        return self._run(plan, lq, uq, eps_rel, buf, _exec_shard_sum,
+                         _exec_shard_dyn_sum, "ref_cf")
+
+    count = sum
+
+    def extremum(self, plan, lq, uq, eps_rel: Optional[float] = None,
+                 buf: Optional[DeltaBuffer] = None) -> QueryResult:
+        assert plan.agg in ("max", "min"), plan.agg
+        return self._run(plan, lq, uq, eps_rel, buf, _exec_shard_extremum,
+                         _exec_shard_dyn_extremum, "ref_st")
+
+    def query(self, plan, lq, uq, eps_rel: Optional[float] = None,
+              buf: Optional[DeltaBuffer] = None) -> QueryResult:
+        if plan.agg in ("sum", "count"):
+            return self.sum(plan, lq, uq, eps_rel, buf)
+        return self.extremum(plan, lq, uq, eps_rel, buf)

@@ -1,13 +1,17 @@
-"""Aggregate-query serving on the unified engine (DESIGN.md §7).
+"""Aggregate-query serving on the declarative PolyFit session (DESIGN.md
+§7, §11).
 
 ``AggregateService`` is the deployment-shaped wrapper around
-``repro.engine``: it builds one PolyFit index per (dataset, aggregate),
-lowers each to a canonical device-resident plan once, and serves batched
-requests through per-request-type callables created by
-``serve.step.make_aggregate_step``.  The backend ('xla' | 'pallas' |
-'pallas_scan' | 'ref') is a constructor argument, so the same service code
-runs the XLA reference path on CPU hosts and the Pallas locate->gather
-kernels (or the one-hot scan variant, DESIGN.md §10) on TPU.
+``repro.api.PolyFit``: it declares one ``TableSpec`` per (dataset,
+aggregate) with a shared ``ErrorBudget`` — the budget, not the service,
+owns the Lemma 5.1/5.3/6.3 delta derivations — fits them into one session,
+and serves batched requests by handing each one to ``session.query`` as a
+``QuerySpec``.  The request endpoints (``serve``/``insert``/``delete``/
+``flush``/``warmup``) are unchanged from the pre-session service; only the
+machinery below them moved behind the facade.  The backend ('xla' |
+'pallas' | 'pallas_scan' | 'ref') is a constructor argument, so the same
+service code runs the XLA reference path on CPU hosts and the Pallas
+locate->gather kernels (or the one-hot scan variant, DESIGN.md §10) on TPU.
 """
 from __future__ import annotations
 
@@ -17,128 +21,101 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from ..core import build_index_1d, build_index_2d
+from ..api import ErrorBudget, PolyFit, QuerySpec, TableSpec
 from ..data import hki_series, osm_points, tweet_latitudes
-from ..engine import (DynamicEngine, DynamicEngine2D, Engine, build_plan,
-                      build_plan_2d)
-from .step import make_aggregate_step
 
 __all__ = ["AggregateService"]
 
 
 class AggregateService:
-    """Holds one plan per (dataset, aggregate); serves batched requests.
+    """Holds one fitted table per (dataset, aggregate); serves batched
+    requests through the ``PolyFit`` session.
 
     Request kinds: 'count' (1-D COUNT over TWEET latitudes), 'max' (1-D MAX
     over the HKI series), 'count2d' (2-key COUNT over OSM points).
 
-    ``dynamic=True`` wraps every plan in a delta-buffered
-    ``DynamicEngine``/``DynamicEngine2D`` (engine/dynamic.py) and opens the
-    ``insert``/``delete``/``flush`` endpoints: updates are absorbed without
-    a rebuild, queries keep their certified bounds, and merges refit only
-    affected segments on a background-installable plan swap.
+    ``dynamic=True`` fits every table with delta-buffered updates
+    (engine/dynamic.py) and opens the ``insert``/``delete``/``flush``
+    endpoints: updates are absorbed without a rebuild, queries keep their
+    certified bounds, and merges refit only affected segments on a
+    background-installable plan swap.  ``shards=N`` serves the 1-D tables
+    from device-partitioned plans through the shard_map executor
+    (engine/sharded.py; needs N local devices).
     """
 
     def __init__(self, backend: str = "xla", eps_abs: float = 100.0,
                  eps_rel: Optional[float] = 0.01, n1: int = 150_000,
                  n2: int = 60_000, interpret: bool = True,
                  verbose: bool = True, dynamic: bool = False,
-                 capacity: int = 1024):
+                 capacity: int = 1024, shards: Optional[int] = None):
         self.backend = backend
         self.eps_rel = eps_rel
         self.dynamic = dynamic
         say = print if verbose else (lambda *a, **k: None)
         say(f"[server] building indexes (backend={backend}, "
-            f"dynamic={dynamic}) ...")
+            f"dynamic={dynamic}, shards={shards}) ...")
         t0 = time.time()
         lat = tweet_latitudes(n1)
-        count_idx = build_index_1d(lat, None, "count", deg=2,
-                                   delta=eps_abs / 2)
         ts, vals = hki_series(n1)
-        max_idx = build_index_1d(ts, vals, "max", deg=3, delta=eps_abs)
         px, py = osm_points(n2)
-        idx2d = build_index_2d(px, py, deg=3, delta=eps_abs / 4)
 
-        self.engine = Engine(backend=backend, interpret=interpret)
+        budget = ErrorBudget(abs=eps_abs, rel=eps_rel)
+        kw = dict(dynamic=dynamic, capacity=capacity, background=True)
+        self.session = PolyFit.fit(
+            {"count": lat, "max": (ts, vals), "count2d": (px, py)},
+            {"count": TableSpec("count", budget, deg=2, shards=shards, **kw),
+             "max": TableSpec("max", budget, deg=3, shards=shards, **kw),
+             "count2d": TableSpec("count2d", budget, deg=3, **kw)},
+            backend=backend, interpret=interpret)
+
         self.domains: Dict[str, Tuple[float, ...]] = {
             "count": (float(lat.min()), float(lat.max())),
             "max": (float(ts.min()), float(ts.max())),
             "count2d": (float(px.min()), float(px.max()),
                         float(py.min()), float(py.max())),
         }
-        if dynamic:
-            self._dyn = {
-                "count": DynamicEngine(count_idx, backend=backend,
-                                       interpret=interpret,
-                                       capacity=capacity, background=True),
-                "max": DynamicEngine(max_idx, backend=backend,
-                                     interpret=interpret, capacity=capacity,
-                                     background=True),
-                "count2d": DynamicEngine2D(idx2d, backend=backend,
-                                           interpret=interpret,
-                                           capacity=capacity,
-                                           background=True),
-            }
-            self.plans = {k: d.plan for k, d in self._dyn.items()}
-            self._steps = {
-                kind: (lambda d: lambda *r: d.query(*r, eps_rel=eps_rel))(dyn)
-                for kind, dyn in self._dyn.items()}
-        else:
-            self._dyn = {}
-            self.plans = {
-                "count": build_plan(count_idx),
-                "max": build_plan(max_idx),
-                "count2d": build_plan_2d(idx2d),
-            }
-            # one engine-bound callable per request type — the only dispatch
-            # a request pays is a dict lookup; everything below it is one
-            # jitted executable per (aggregate, backend, batch-bucket)
-            self._steps = {kind: make_aggregate_step(self.engine, plan,
-                                                     eps_rel)
-                           for kind, plan in self.plans.items()}
         say(f"[server] ready in {time.time() - t0:.1f}s — sizes: " +
-            " ".join(f"{k}={p.size_bytes()}B" for k, p in self.plans.items()))
+            " ".join(f"{k}={b}B" for k, b in self.session.size_bytes().items()))
+
+    @property
+    def plans(self):
+        """Current device plans (fresh after dynamic merges)."""
+        return {k: self.session.plan(k) for k in self.session.tables}
 
     def serve(self, kind: str, *ranges):
         """Answer one batched request; blocks until the device is done."""
-        res = self._steps[kind](*ranges)
+        res = self.session.query(QuerySpec(kind, ranges))
         jax.block_until_ready(res.answer)
         return res
 
     # -- update endpoints (dynamic mode) ---------------------------------
 
-    def _dyn_engine(self, kind: str):
+    def _require_dynamic(self):
         if not self.dynamic:
             raise RuntimeError("updates require AggregateService("
                                "dynamic=True)")
-        return self._dyn[kind]
 
     def insert(self, kind: str, *args) -> None:
         """Buffer new records: (keys[, measures]) for 1-D, (xs, ys) for
         'count2d'.  Subsequent queries fold them in exactly."""
-        self._dyn_engine(kind).insert(*args)
+        self._require_dynamic()
+        self.session.insert(kind, *args)
 
     def delete(self, kind: str, *args) -> None:
         """Buffer delete tombstones for existing records."""
-        self._dyn_engine(kind).delete(*args)
+        self._require_dynamic()
+        self.session.delete(kind, *args)
 
     def flush(self, kind: Optional[str] = None) -> None:
         """Merge buffered updates into fresh plans (all kinds by default)."""
-        if not self.dynamic:
-            raise RuntimeError("updates require AggregateService("
-                               "dynamic=True)")
-        kinds = [kind] if kind is not None else list(self._dyn)
-        for k in kinds:
-            self._dyn_engine(k).flush()
-        for k in kinds:
-            self.plans[k] = self._dyn[k].plan
+        self._require_dynamic()
+        self.session.flush(kind)
 
     def warmup(self, batch_size: int = 1024) -> None:
         """Pre-compile the per-request-type executables for one bucket."""
         c0, c1 = self.domains["count"]
-        l = jnp.full((batch_size,), c0)
-        u = jnp.full((batch_size,), c1)
-        self.serve("count", l, u)
+        self.serve("count", jnp.full((batch_size,), c0),
+                   jnp.full((batch_size,), c1))
         m0, m1 = self.domains["max"]
         self.serve("max", jnp.full((batch_size,), m0),
                    jnp.full((batch_size,), m1))

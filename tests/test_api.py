@@ -1,0 +1,258 @@
+"""Declarative API: ErrorBudget delta derivations, QuerySpec/QueryBatch
+semantics, the PolyFit session facade (mixed batches answered in request
+order), and bit-identical equivalence between the legacy Engine surface and
+the new dispatch path on every backend."""
+import numpy as np
+import pytest
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.api import (DEFAULT_REL, ErrorBudget, PolyFit,  # noqa: E402
+                       QueryBatch, QuerySpec, TableSpec)
+from repro.core import build_index_1d, build_index_2d  # noqa: E402
+from repro.engine import (BACKENDS, Engine, build_plan,  # noqa: E402
+                          build_plan_2d)
+
+N = 3000
+DELTA = 25.0
+EPS_ABS = 2 * DELTA          # so budget-derived sum/count deltas equal DELTA
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(7)
+    keys = np.sort(rng.uniform(0, 800, N))
+    meas = rng.uniform(0, 10, N)
+    px = rng.uniform(0, 120, 4000)
+    py = rng.uniform(0, 120, 4000)
+    return keys, meas, px, py
+
+
+@pytest.fixture(scope="module")
+def queries(data):
+    keys, _, px, py = data
+    rng = np.random.default_rng(11)
+    a = keys[rng.integers(0, N, 200)]
+    b = keys[rng.integers(0, N, 200)]
+    qa = rng.uniform(0, 100, 64)
+    qc = rng.uniform(0, 100, 64)
+    return (np.minimum(a, b), np.maximum(a, b),
+            qa, qa + rng.uniform(1, 30, 64), qc, qc + rng.uniform(1, 30, 64))
+
+
+def _session(data, backend="xla", rel=0.05, **tweaks):
+    keys, meas, px, py = data
+    budget = ErrorBudget(abs=2 * DELTA, rel=rel)
+    bmax = ErrorBudget(abs=DELTA, rel=rel)
+    b2d = ErrorBudget(abs=4 * DELTA, rel=rel)
+    return PolyFit.fit(
+        {"cnt": keys, "sm": (keys, meas), "mx": (keys, meas * 100),
+         "mn": (keys, meas * 100), "geo": (px, py)},
+        {"cnt": TableSpec("count", budget, **tweaks),
+         "sm": TableSpec("sum", budget, **tweaks),
+         "mx": TableSpec("max", bmax, **tweaks),
+         "mn": TableSpec("min", bmax, **tweaks),
+         "geo": TableSpec("count2d", b2d)},
+        backend=backend)
+
+
+# ---------------------------------------------------------------------------
+# ErrorBudget: the Lemma 5.1/5.3/6.3 derivations live in exactly one place
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("agg,frac", [("sum", 0.5), ("count", 0.5),
+                                      ("max", 1.0), ("min", 1.0),
+                                      ("count2d", 0.25)])
+def test_budget_delta_derivation(agg, frac):
+    b = ErrorBudget(abs=100.0, rel=0.01)
+    assert b.delta(agg) == pytest.approx(100.0 * frac)
+    assert b.bound(agg) == pytest.approx(100.0)   # round-trips to eps_abs
+    assert ErrorBudget.from_delta(b.delta(agg), agg).abs == pytest.approx(100.0)
+
+
+def test_budget_validation():
+    with pytest.raises(ValueError, match="abs"):
+        ErrorBudget(abs=0.0)
+    with pytest.raises(ValueError, match="rel"):
+        ErrorBudget(abs=1.0, rel=-0.5)
+    with pytest.raises(ValueError, match="aggregate"):
+        ErrorBudget(abs=1.0).delta("median")
+
+
+def test_spec_validation(data):
+    session = _session(data)
+    with pytest.raises(KeyError, match="unknown table"):
+        session.query(QuerySpec.range("nope", 0.0, 1.0))
+    with pytest.raises(ValueError, match="range coordinates"):
+        session.query(QuerySpec.range("geo", 0.0, 1.0))
+    with pytest.raises(ValueError, match="lengths differ"):
+        QuerySpec("cnt", (np.zeros(3), np.zeros(4)))
+    with pytest.raises(ValueError, match="1-D"):
+        QuerySpec("cnt", (1.0, 2.0, 3.0))
+    with pytest.raises(ValueError, match="sharded"):
+        TableSpec("count2d", ErrorBudget(abs=1.0), shards=2)
+
+
+# ---------------------------------------------------------------------------
+# mixed batches: request-order scatter across aggregates and dimensions
+# ---------------------------------------------------------------------------
+
+def test_mixed_batch_request_order(data, queries):
+    """A batch interleaving sum/max/count2d/count (twice, with a per-spec
+    guarantee override) answers each spec exactly like a per-kind call."""
+    lq, uq, qa, qb, qc, qd = queries
+    session = _session(data)
+    batch = QueryBatch.of(
+        QuerySpec.range("sm", lq[:100], uq[:100]),
+        QuerySpec.rect("geo", qa, qb, qc, qd),
+        QuerySpec.range("mx", lq, uq),
+        QuerySpec.range("cnt", lq[100:], uq[100:], rel=None),
+        QuerySpec.range("sm", lq[100:], uq[100:]),
+        QuerySpec.range("mn", lq, uq),
+    )
+    assert batch.n_queries == 100 + 64 + 200 + 100 + 100 + 200
+    results = session.query(batch)
+    assert len(results) == 6
+    singles = [session.query(s) for s in batch]
+    for got, want, spec in zip(results, singles, batch):
+        assert got.answer.shape[0] == len(spec)
+        np.testing.assert_array_equal(np.asarray(got.answer),
+                                      np.asarray(want.answer))
+        np.testing.assert_array_equal(np.asarray(got.refined),
+                                      np.asarray(want.refined))
+
+
+def test_scalar_specs_and_empty_batch(data):
+    session = _session(data)
+    res = session.query(QuerySpec.range("cnt", 100.0, 300.0))
+    assert res.answer.shape == (1,)
+    assert session.query(QueryBatch.of()) == []
+
+
+def test_batch_pytree_roundtrip(data, queries):
+    lq, uq, *_ = queries
+    batch = QueryBatch.of(QuerySpec.range("cnt", lq, uq, rel=None),
+                          QuerySpec.range("mx", lq, uq))
+    leaves, treedef = jax.tree.flatten(batch)
+    rebuilt = jax.tree.unflatten(treedef, leaves)
+    assert rebuilt[0].table == "cnt" and rebuilt[0].rel is None
+    assert rebuilt[1].rel is DEFAULT_REL
+    np.testing.assert_array_equal(rebuilt[0].ranges[0], lq)
+
+
+# ---------------------------------------------------------------------------
+# old-vs-new equivalence: Engine shims and the session hit the same
+# executors bit for bit, on every backend
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_engine_session_bit_identical(data, queries, backend):
+    keys, meas, px, py = data
+    lq, uq, qa, qb, qc, qd = queries
+    session = _session(data, backend=backend)
+    eng = Engine(backend=backend)
+    cases_1d = {
+        "cnt": build_plan(build_index_1d(keys, None, "count", deg=2,
+                                         delta=DELTA)),
+        "sm": build_plan(build_index_1d(keys, meas, "sum", deg=2,
+                                        delta=DELTA)),
+        "mx": build_plan(build_index_1d(keys, meas * 100, "max", deg=3,
+                                        delta=DELTA)),
+        "mn": build_plan(build_index_1d(keys, meas * 100, "min", deg=3,
+                                        delta=DELTA)),
+    }
+    for eps_rel in (None, 0.05):
+        for name, plan in cases_1d.items():
+            old = eng.query(plan, lq, uq, eps_rel=eps_rel)
+            new = session.query(QuerySpec.range(name, lq, uq, rel=eps_rel))
+            np.testing.assert_array_equal(np.asarray(old.answer),
+                                          np.asarray(new.answer))
+            np.testing.assert_array_equal(np.asarray(old.approx),
+                                          np.asarray(new.approx))
+            np.testing.assert_array_equal(np.asarray(old.refined),
+                                          np.asarray(new.refined))
+        plan2 = build_plan_2d(build_index_2d(px, py, deg=3, delta=DELTA))
+        old = eng.count2d(plan2, qa, qb, qc, qd, eps_rel=eps_rel)
+        new = session.query(QuerySpec.rect("geo", qa, qb, qc, qd,
+                                           rel=eps_rel))
+        np.testing.assert_array_equal(np.asarray(old.answer),
+                                      np.asarray(new.answer))
+
+
+def test_engine_methods_are_shims(data, queries):
+    """Engine.sum/extremum/count2d must route through the module-level
+    dispatch functions (one code path for old and new callers)."""
+    from repro.engine import execute_extremum, execute_sum
+    keys, meas, *_ = data
+    lq, uq, *_ = queries
+    plan = build_plan(build_index_1d(keys, meas, "sum", deg=2, delta=DELTA))
+    a = Engine(backend="ref").sum(plan, lq, uq)
+    via = execute_sum(plan, lq, uq, backend="ref")
+    np.testing.assert_array_equal(np.asarray(a.answer),
+                                  np.asarray(via.answer))
+    planm = build_plan(build_index_1d(keys, meas, "max", deg=3, delta=DELTA))
+    b = Engine(backend="ref").extremum(planm, lq, uq)
+    vib = execute_extremum(planm, lq, uq, backend="ref")
+    np.testing.assert_array_equal(np.asarray(b.answer),
+                                  np.asarray(vib.answer))
+
+
+# ---------------------------------------------------------------------------
+# guarantees + dynamic tables through the facade
+# ---------------------------------------------------------------------------
+
+def test_session_certified_bounds(data, queries):
+    """Budget-declared Q_abs bounds hold end to end through the facade."""
+    keys, meas, *_ = data
+    lq, uq, *_ = queries
+    session = _session(data, rel=None)
+    truth = _exact_sum(keys, meas, lq, uq)
+    got = np.asarray(session.query(QuerySpec.range("sm", lq, uq)).answer)
+    assert np.max(np.abs(got - truth)) <= session.budget("sm").bound("sum") + 1e-6
+
+
+def test_session_qrel_refinement(data, queries):
+    keys, meas, *_ = data
+    lq, uq, *_ = queries
+    session = _session(data, rel=0.05)
+    truth = _exact_sum(keys, meas, lq, uq)
+    res = session.query(QuerySpec.range("sm", lq, uq))
+    ans = np.asarray(res.answer)
+    pos = np.abs(truth) > 0
+    assert (np.abs(ans[pos] - truth[pos]) / np.abs(truth[pos])).max() <= 0.05 + 1e-9
+    assert np.asarray(res.refined).mean() < 1.0
+
+
+def test_dynamic_session_updates(data):
+    keys, meas, *_ = data
+    budget = ErrorBudget(abs=2 * DELTA)
+    session = PolyFit.fit(
+        {"cnt": keys}, {"cnt": TableSpec("count", budget, dynamic=True,
+                                         capacity=128, background=False,
+                                         auto_refit=False)})
+    lq = np.full(8, keys[0] - 1.0)
+    uq = np.full(8, keys[-1] + 1.0)
+    base = float(np.asarray(session.query(
+        QuerySpec.range("cnt", lq, uq)).answer)[0])
+    session.insert("cnt", np.linspace(keys[0], keys[-1], 32))
+    upd = float(np.asarray(session.query(
+        QuerySpec.range("cnt", lq, uq)).answer)[0])
+    assert abs(upd - (base + 32)) < 1e-6
+    session.delete("cnt", keys[:4])
+    del_upd = float(np.asarray(session.query(
+        QuerySpec.range("cnt", lq, uq)).answer)[0])
+    assert abs(del_upd - (upd - 4)) < 1e-6
+    session.flush()
+    post = float(np.asarray(session.query(
+        QuerySpec.range("cnt", lq, uq)).answer)[0])
+    assert abs(post - del_upd) <= 2 * DELTA + 1e-6
+    with pytest.raises(RuntimeError, match="static"):
+        _session(data).insert("cnt", [1.0])
+
+
+def _exact_sum(keys, meas, lq, uq):
+    cf = np.cumsum(meas)
+    p = np.concatenate([[0.0], cf])
+    return (p[np.searchsorted(keys, uq, side="right")]
+            - p[np.searchsorted(keys, lq, side="right")])

@@ -1,0 +1,180 @@
+"""Sharded plans (engine/sharded.py): partitioned segment tables answered
+through the shard_map executor must be bit-identical to the single-device
+path — static, Q_rel-refined, boundary-straddling, and post-insert/delete
+dynamic state, at S in {2, 4, 8}.
+
+The in-process tests need >= 8 local devices (CI forces them with
+XLA_FLAGS=--xla_force_host_platform_device_count=8); single-device hosts
+still get coverage through the subprocess self-test, which forces its own
+8-device host topology exactly like launch/dryrun.py does."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core import build_index_1d  # noqa: E402
+from repro.engine import (DynamicEngine, Engine, ShardedEngine,  # noqa: E402
+                          build_plan, shard_buffer, shard_plan)
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ENV = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+
+multidevice = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="sharding tests need >= 8 devices (run the tier-1 job with "
+           "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+N = 4000
+DELTA = 25.0
+SHARDS = (2, 4, 8)
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(3)
+    keys = np.sort(rng.uniform(0, 1000, N))
+    meas = rng.uniform(0, 10, N)
+    a = keys[rng.integers(0, N, 160)]
+    b = keys[rng.integers(0, N, 160)]
+    return keys, meas, np.minimum(a, b), np.maximum(a, b)
+
+
+@pytest.fixture(scope="module")
+def plans(data):
+    keys, meas, _, _ = data
+    out = {}
+    for agg, m, deg in (("sum", meas, 2), ("count", None, 2),
+                        ("max", meas * 100, 3), ("min", meas * 100, 3)):
+        out[agg] = build_plan(build_index_1d(keys, m, agg, deg=deg,
+                                             delta=DELTA))
+    return out
+
+
+def test_shard_selftest_subprocess():
+    """Full bit-identity sweep in a subprocess with 8 forced host devices
+    (keeps the main pytest process on its single real device)."""
+    r = subprocess.run([sys.executable, "-m", "repro.engine._shard_selftest"],
+                       env=ENV, cwd=ROOT, capture_output=True, text=True,
+                       timeout=900)
+    assert "ALL_SHARD_OK" in r.stdout, r.stdout[-3000:] + r.stderr[-3000:]
+
+
+@multidevice
+@pytest.mark.parametrize("nshards", SHARDS)
+@pytest.mark.parametrize("agg", ["sum", "count", "max", "min"])
+def test_sharded_bit_identical(plans, data, agg, nshards):
+    _, _, lq, uq = data
+    plan = plans[agg]
+    ref = Engine(backend="xla").query(plan, lq, uq)
+    got = ShardedEngine(nshards).query(plan, lq, uq)
+    np.testing.assert_array_equal(np.asarray(ref.answer),
+                                  np.asarray(got.answer))
+
+
+@multidevice
+@pytest.mark.parametrize("nshards", SHARDS)
+@pytest.mark.parametrize("agg", ["sum", "max"])
+def test_sharded_qrel_bit_identical(plans, data, agg, nshards):
+    """Fused Q_rel refinement (sharded refinement arrays) matches, answer
+    and refined mask alike."""
+    _, _, lq, uq = data
+    plan = plans[agg]
+    ref = Engine(backend="xla").query(plan, lq, uq, eps_rel=0.05)
+    got = ShardedEngine(nshards).query(plan, lq, uq, eps_rel=0.05)
+    np.testing.assert_array_equal(np.asarray(ref.answer),
+                                  np.asarray(got.answer))
+    np.testing.assert_array_equal(np.asarray(ref.refined),
+                                  np.asarray(got.refined))
+
+
+@multidevice
+@pytest.mark.parametrize("agg", ["sum", "max"])
+def test_sharded_boundary_straddle(plans, agg):
+    """Queries with endpoints exactly on / just around shard boundaries."""
+    plan = plans[agg]
+    eng = Engine(backend="xla")
+    for nshards in SHARDS:
+        sp = shard_plan(plan, nshards)
+        edges = np.asarray([e for e in sp.bounds[1:-1] if np.isfinite(e)])
+        assert len(edges) == nshards - 1
+        for lo, hi in ((edges, edges + 29.0), (edges - 1e-9, edges + 1e-9),
+                       (np.full_like(edges, float(edges.min()) - 5.0),
+                        np.full_like(edges, float(edges.max()) + 5.0))):
+            ref = eng.query(plan, lo, hi)
+            got = ShardedEngine(nshards).query(plan, lo, hi)
+            np.testing.assert_array_equal(np.asarray(ref.answer),
+                                          np.asarray(got.answer))
+
+
+@multidevice
+@pytest.mark.parametrize("nshards", SHARDS)
+def test_sharded_dynamic_state(data, nshards):
+    """Partitioned delta buffers: post-insert/delete answers bit-identical
+    (COUNT exercises tombstones; MAX exercises the insert sparse path)."""
+    keys, meas, lq, uq = data
+    rng = np.random.default_rng(17)
+    for agg, m in (("count", None), ("sum", meas), ("max", meas * 100)):
+        dyn = DynamicEngine(
+            build_index_1d(keys, m, agg, deg=3 if agg == "max" else 2,
+                           delta=DELTA),
+            backend="xla", capacity=256, auto_refit=False)
+        dyn.insert(rng.uniform(-50, 1100, 48),
+                   None if agg == "count" else rng.uniform(0, 500, 48))
+        if agg != "max":
+            dyn.delete(keys[30:40])
+        ref = dyn.query(lq, uq, eps_rel=0.05)
+        plan, buf = dyn.snapshot()
+        got = ShardedEngine(nshards).query(plan, lq, uq, eps_rel=0.05,
+                                           buf=buf)
+        np.testing.assert_array_equal(np.asarray(ref.answer),
+                                      np.asarray(got.answer))
+        np.testing.assert_array_equal(np.asarray(ref.refined),
+                                      np.asarray(got.refined))
+
+
+@multidevice
+def test_shard_buffer_partition(plans):
+    """Every buffered op lands on exactly one shard, in its key range."""
+    from repro.engine import DeltaBuffer, big_sentinel
+    plan = plans["sum"]
+    sp = shard_plan(plan, 4)
+    buf = DeltaBuffer.empty(64)
+    rng = np.random.default_rng(5)
+    # emulate the DynamicEngine append path with a sorted host batch
+    k = np.sort(rng.uniform(0, 1000, 32))
+    v = rng.uniform(0, 5, 32)
+    import jax.numpy as jnp
+    big = big_sentinel(jnp.float64)
+    keys = jnp.concatenate([jnp.asarray(k), jnp.full((32,), big)])
+    vals = jnp.concatenate([jnp.asarray(v), jnp.zeros((32,))])
+    cf = jnp.concatenate([jnp.zeros((1,)), jnp.cumsum(vals)])
+    buf = DeltaBuffer(keys, vals, cf, buf.del_keys, buf.del_vals,
+                      buf.del_cf, None, 64)
+    sb = shard_buffer(buf, sp)
+    ik = np.asarray(sb.ins_keys)
+    total_real = sum(int((ik[s] < big / 2).sum()) for s in range(4))
+    assert total_real == 32
+    for s in range(4):
+        real = ik[s][ik[s] < big / 2]
+        assert np.all(real >= sp.bounds[s])
+        assert np.all(real < sp.bounds[s + 1])
+
+
+@multidevice
+def test_sharded_plan_fewer_segments_than_shards():
+    """Plans with h < S leave surplus shards empty but stay correct."""
+    keys = np.sort(np.random.default_rng(0).uniform(0, 100, 500))
+    plan = build_plan(build_index_1d(keys, None, "count", deg=2,
+                                     delta=1000.0))
+    assert plan.h < 8
+    lq = np.asarray([0.0, 10.0, 50.0])
+    uq = np.asarray([100.0, 60.0, 55.0])
+    ref = Engine(backend="xla").query(plan, lq, uq)
+    got = ShardedEngine(8).query(plan, lq, uq)
+    np.testing.assert_array_equal(np.asarray(ref.answer),
+                                  np.asarray(got.answer))
