@@ -122,6 +122,24 @@ def _synthetic_plan_2d(L: int, deg: int, rng, dtype=jnp.float64):
                 coeffs_slot=to(coeffs_slot))
 
 
+def _synthetic_indexplan2d(tb, agg: str, deg: int, L: int):
+    """Wrap the synthetic uniform-quadtree dict as a real IndexPlan2D so the
+    engine's 2-D measure executors (execute_sum2d / execute_extremum2d)
+    can run against it (Q_abs only — no refinement arrays)."""
+    from repro.engine.plan import IndexPlan2D
+
+    return IndexPlan2D(
+        deg=deg, delta=1.0, n=L, n_leaves=L, max_depth=tb["depth"],
+        bh=min(512, L), root=(0.0, 100.0, 0.0, 100.0),
+        children=tb["children"], leaf_of=tb["leaf_of"],
+        bounds=tb["node_bounds"], leaf_nodes=tb["leaf_nodes"],
+        qt_coeffs=tb["coeffs_slot"],
+        leaf_mx0=tb["mx0"], leaf_mx1=tb["mx1"], leaf_my0=tb["my0"],
+        leaf_my1=tb["my1"], leaf_bounds=tb["bounds"],
+        leaf_coeffs=tb["coeffs"], leaf_z=tb["leaf_z"], xcuts=tb["xcuts"],
+        ycuts=tb["ycuts"], ref_xs=None, ref_ys_levels=None, agg=agg)
+
+
 def _qt4(tb, lx, ux, ly, uy):
     """4-corner inclusion-exclusion through the quadtree descent (the XLA
     backend's op sequence) over the synthetic uniform tree."""
@@ -206,6 +224,23 @@ def run_hsweep(hs=(512, 2048, 8192, 32768), hs2=(1024, 4096, 16384),
         for b, f in runs.items():
             t, _ = time_fn(f, lx, ux, ly, uy)
             rec(f"hsweep.count2d.{b}.L{L}", t, f"Lpad={L}")
+
+        # 2-D measure aggregates (DESIGN.md §12) through the engine
+        # executors: SUM shares the 4-corner kernels, dominance MAX is the
+        # single-corner eval path
+        from repro.engine import execute_extremum2d, execute_sum2d
+
+        plan_s = _synthetic_indexplan2d(tb, "sum2d", 2, L)
+        plan_m = _synthetic_indexplan2d(tb, "max2d", 2, L)
+        qu = jnp.asarray(rng.uniform(0, 100, nqh))
+        qv = jnp.asarray(rng.uniform(0, 100, nqh))
+        for b in ("pallas", "pallas_scan", "xla"):
+            t, _ = time_fn(lambda a, c, d, e: execute_sum2d(
+                plan_s, a, c, d, e, backend=b, bq=nqh), lx, ux, ly, uy)
+            rec(f"hsweep.sum2d.{b}.L{L}", t, f"Lpad={L}")
+            t, _ = time_fn(lambda a, c: execute_extremum2d(
+                plan_m, a, c, backend=b, bq=nqh), qu, qv)
+            rec(f"hsweep.max2d.{b}.L{L}", t, f"Lpad={L}")
     return rows
 
 

@@ -111,15 +111,108 @@ def run(n=100_000, nq=2048, capacity=2048, backends=("xla", "pallas", "ref"),
     return rows
 
 
+def run2d(n=40_000, nq=1024, capacity=1024,
+          backends=("xla", "pallas", "ref"), out_path=None):
+    """DynamicEngine2D sweep (``--dim 2``): sum2d insert/delete throughput,
+    buffered-query latency, and the selective-refit merge on OSM points
+    with synthetic per-node weights.  Metric names carry the ``updates2d.``
+    prefix and the record's meta carries ``dim=2`` so check_regression
+    pairs it only with 2-D baselines."""
+    from repro.core import build_index_2d
+    from repro.data import make_queries_2d, osm_points
+    from repro.engine import DynamicEngine2D
+
+    rows = []
+    results = []
+
+    def record(name, value, derived=""):
+        rows.append(row(name, value, derived))
+        results.append({"name": name, "us_per_query": value,
+                        "derived": derived})
+
+    px, py = osm_points(n)
+    rng = np.random.default_rng(0x2DB)
+    w = 50.0 + 20.0 * np.sin(px / 7.0) + 15.0 * np.cos(py / 11.0)
+    # ~1% relative tightness in measure units (matches the 1-D bench shape)
+    delta = 0.01 * float(np.abs(w).sum())
+    idx = build_index_2d(px, py, measures=w, agg="sum2d", deg=2,
+                         delta=delta, max_depth=8)
+    q = tuple(map(jnp.asarray, make_queries_2d(px, py, nq)))
+    batch = 128
+    x0, x1 = float(px.min()), float(px.max())
+    y0, y1 = float(py.min()), float(py.max())
+
+    warm = DynamicEngine2D(idx, capacity=capacity, auto_refit=False)
+    for _ in range(4):
+        warm.insert(rng.uniform(x0, x1, batch), rng.uniform(y0, y1, batch),
+                    rng.uniform(0, 100, batch))
+        jax.block_until_ready(warm._state[1].ins_x)
+
+    for backend in backends:
+        dyn = DynamicEngine2D(idx, backend=backend, capacity=capacity,
+                              auto_refit=False)
+        n_batches = capacity // batch
+        ins = [(rng.uniform(x0, x1, batch), rng.uniform(y0, y1, batch),
+                rng.uniform(0, 100, batch)) for _ in range(n_batches)]
+        half = n_batches // 2
+        times = []
+        for b in ins[:half]:
+            t0 = time.perf_counter()
+            dyn.insert(*b)
+            jax.block_until_ready(dyn._state[1].ins_x)
+            times.append(time.perf_counter() - t0)
+        dt = float(np.median(times))
+        record(f"updates2d.insert.{backend}", dt / batch * 1e6,
+               f"recs_per_s={batch / dt:.0f}")
+
+        t, _ = time_fn(lambda *r: dyn.sum2d(*r), *q)
+        record(f"updates2d.query_halffull.{backend}", t / nq * 1e6,
+               f"pending={dyn.n_pending}")
+        for b in ins[half:]:
+            dyn.insert(*b)
+        dyn.delete(px[: batch // 2], py[: batch // 2])
+        t, _ = time_fn(lambda *r: dyn.sum2d(*r), *q)
+        record(f"updates2d.query_full.{backend}", t / nq * 1e6,
+               f"pending={dyn.n_pending}")
+
+        # -- merge: the selective leaf refit + plan install ---------------
+        t0 = time.perf_counter()
+        dyn.flush()
+        st = dyn.last_refit_stats or {}
+        record(f"updates2d.merge.{backend}",
+               (time.perf_counter() - t0) * 1e6,
+               f"refit={st.get('refit')}/{st.get('n_leaves')}"
+               f";split={st.get('split')}")
+
+        t, _ = time_fn(lambda *r: dyn.sum2d(*r), *q)
+        record(f"updates2d.query_postmerge.{backend}", t / nq * 1e6)
+
+    _emit_json(results, {
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "n": n, "nq": nq, "capacity": capacity, "dim": 2,
+        "device": jax.devices()[0].platform,
+        "machine": platform.machine(),
+    }, out_path)
+    return rows
+
+
 def main():
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--tiny", action="store_true",
                    help="small shapes for CI smoke runs")
+    p.add_argument("--dim", type=int, default=1, choices=(1, 2),
+                   help="1: DynamicEngine on TWEET (default); 2: "
+                        "DynamicEngine2D sum2d on OSM (selective refit)")
     p.add_argument("--out", default=None,
                    help="write the JSON record here instead of the "
                         "committed BENCH_updates.json")
     args = p.parse_args()
-    if args.tiny:
+    if args.dim == 2:
+        if args.tiny:
+            run2d(n=8_000, nq=512, capacity=512, out_path=args.out)
+        else:
+            run2d(out_path=args.out)
+    elif args.tiny:
         run(n=30_000, nq=1024, capacity=1024, out_path=args.out)
     else:
         run(out_path=args.out)

@@ -27,10 +27,11 @@ import pathlib
 import sys
 
 # capacity pairs bench_updates records; hs/hs2/nqh pair the H-sweep shape;
-# shard_* pair the sharded-plan sweep (records missing a key on both sides
-# still pair — .get(None) == .get(None))
+# shard_* pair the sharded-plan sweep; dim separates bench_updates' 2-D
+# mode from the 1-D records (records missing a key on both sides still
+# pair — .get(None) == .get(None))
 MATCH_META = ("n", "nq", "n2", "nq2", "capacity", "hs", "hs2", "nqh",
-              "shard_h", "shard_nq", "shard_s", "device")
+              "shard_h", "shard_nq", "shard_s", "dim", "device")
 
 
 def _load_history(path: str):

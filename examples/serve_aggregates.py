@@ -24,6 +24,10 @@ def _random_request(srv, kind, n, rng):
         lo, hi = srv.domains[kind]
         a = rng.uniform(lo, hi, n); c = rng.uniform(lo, hi, n)
         return (jnp.asarray(np.minimum(a, c)), jnp.asarray(np.maximum(a, c)))
+    if kind == "max2d":   # dominance corners (DESIGN.md §12)
+        x1, y1 = srv.domains[kind]
+        return (jnp.asarray(rng.uniform(x1 - 40, x1, n)),
+                jnp.asarray(rng.uniform(y1 - 40, y1, n)))
     x0, x1, y0, y1 = srv.domains[kind]
     ax = rng.uniform(x0, x1, n); bx = ax + rng.uniform(0.1, 5, n)
     ay = rng.uniform(y0, y1, n); by = ay + rng.uniform(0.1, 5, n)
@@ -38,9 +42,9 @@ def run_mixed(srv, batches, batch_size, rng):
     for _ in range(batches):
         batch = QueryBatch.of(
             QuerySpec("count", _random_request(srv, "count", sub, rng)),
-            QuerySpec("count2d", _random_request(srv, "count2d", sub, rng)),
+            QuerySpec("sum2d", _random_request(srv, "sum2d", sub, rng)),
             QuerySpec("max", _random_request(srv, "max", sub, rng)),
-            QuerySpec("count", _random_request(srv, "count", sub, rng)))
+            QuerySpec("max2d", _random_request(srv, "max2d", sub, rng)))
         t0 = time.perf_counter()
         results = srv.session.query(batch)
         jax.block_until_ready([r.answer for r in results])
@@ -63,11 +67,11 @@ def main():
 
     srv = AggregateService(backend=args.backend)
     rng = np.random.default_rng(0)
-    stats = {k: [] for k in ("count", "max", "count2d")}
+    stats = {k: [] for k in ("count", "max", "count2d", "sum2d", "max2d")}
     refined = {k: 0 for k in stats}
     total = {k: 0 for k in stats}
     for b in range(args.batches):
-        kind = ("count", "max", "count2d")[b % 3]
+        kind = ("count", "max", "count2d", "sum2d", "max2d")[b % 5]
         req = _random_request(srv, kind, args.batch_size, rng)
         t0 = time.perf_counter()
         res = srv.serve(kind, *req)

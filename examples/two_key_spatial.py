@@ -1,6 +1,7 @@
-"""Two-key spatial COUNT (paper §6) through the declarative API: quadtree
-PolyFit over an OSM-like point cloud; rectangle queries with 4-corner
-inclusion-exclusion (Eq. 19).
+"""Two-key spatial aggregates through the declarative API: quadtree
+PolyFit over an OSM-like point cloud — rectangle COUNT and SUM with
+4-corner inclusion-exclusion (Eq. 19 / DESIGN.md §12) and dominance MAX
+at a corner.
 
     PYTHONPATH=src python examples/two_key_spatial.py
 """
@@ -12,11 +13,18 @@ from repro.data import make_queries_2d, osm_points
 
 def main():
     px, py = osm_points(80_000)
+    # synthetic per-node weights so the measure-carrying tables have
+    # something to aggregate
+    w = 50.0 + 20.0 * np.sin(px / 7.0) + 15.0 * np.cos(py / 11.0)
     eps_abs = 200.0
-    # Lemma 6.3 (delta = eps_abs/4) lives inside the ErrorBudget
+    # Lemma 6.3 (delta = eps_abs/4) lives inside the ErrorBudget; the SUM
+    # budget is stated in measure units
     session = PolyFit.fit(
-        {"osm": (px, py)},
-        {"osm": TableSpec("count2d", ErrorBudget(abs=eps_abs))})
+        {"osm": (px, py), "spend": (px, py, w), "peak": (px, py, w)},
+        {"osm": TableSpec("count2d", ErrorBudget(abs=eps_abs)),
+         "spend": TableSpec("sum2d",
+                            ErrorBudget(abs=eps_abs * float(w.mean()))),
+         "peak": TableSpec("max2d", ErrorBudget(abs=5.0))})
     plan = session.plan("osm")
     print(f"quadtree: {plan.n_leaves} leaves, {plan.size_bytes()} bytes, "
           f"max_depth={plan.max_depth} (n={len(px)})")
@@ -31,6 +39,23 @@ def main():
         print(f"  rect [{x0[i]:7.2f},{x1[i]:7.2f}]x[{y0[i]:7.2f},{y1[i]:7.2f}]"
               f" ~ {a:9.1f}  exact {truth[i]:7.0f}  err {abs(a - truth[i]):6.1f}"
               f" <= {eps_abs}")
+
+    # rectangle SUM over the weighted points (same corners)
+    sums = np.asarray(session.query(
+        QuerySpec.rect("spend", x0, x1, y0, y1)).answer)
+    exact = np.asarray(session.query(
+        QuerySpec.rect("spend", x0, x1, y0, y1, rel=1e-12)).answer)
+    print("sum2d:   " + "  ".join(
+        f"{s_:10.0f}(err {abs(s_ - e_):7.1f})" for s_, e_ in
+        zip(sums[:4], exact[:4])))
+
+    # dominance MAX: the heaviest node south-west of each corner
+    peak = np.asarray(session.query(
+        QuerySpec.corner("peak", x1, y1)).answer)
+    dom_truth = [w[(px <= a) & (py <= b)].max() for a, b in zip(x1, y1)]
+    print("max2d:   " + "  ".join(
+        f"{p_:6.2f}(exact {t_:6.2f})" for p_, t_ in
+        zip(peak[:4], dom_truth[:4])))
 
 
 if __name__ == "__main__":

@@ -32,10 +32,10 @@ from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import build_index_1d, build_index_2d
+from ..core import AGGS_2D, build_index_1d, build_index_2d
 from ..core.queries import QueryResult
 from ..engine import (DynamicEngine, DynamicEngine2D, ShardedEngine,
-                      build_plan, build_plan_2d, execute)
+                      ShardedEngine2D, build_plan, build_plan_2d, execute)
 from ..kernels.poly_eval import DEFAULT_BQ
 from .budget import ErrorBudget
 from .spec import DEFAULT_REL, QueryBatch, QuerySpec, TableSpec
@@ -56,9 +56,14 @@ class _Table:
         self.sharded = None
         self._static_plan = None
         agg = spec.agg
-        if agg == "count2d":
-            xs, ys = (np.asarray(a, np.float64) for a in data)
-            idx = build_index_2d(xs, ys, deg=spec.degree,
+        if agg in AGGS_2D:
+            if agg == "count2d":
+                xs, ys = (np.asarray(a, np.float64) for a in data)
+                ws = None
+            else:
+                xs, ys, ws = (np.asarray(a, np.float64) for a in data)
+            idx = build_index_2d(xs, ys, measures=ws, agg=agg,
+                                 deg=spec.degree,
                                  delta=spec.budget.delta(agg))
             if spec.dynamic:
                 self.dyn = DynamicEngine2D(
@@ -68,6 +73,10 @@ class _Table:
                     min_bucket=min_bucket)
             else:
                 self._static_plan = build_plan_2d(idx)
+            if spec.shards is not None:
+                self.sharded = ShardedEngine2D(spec.shards,
+                                               min_bucket=min_bucket)
+                self.sharded.shard(self.plan)   # warm the partition cache
         else:
             keys, meas = data
             keys = np.asarray(keys, np.float64)
@@ -130,6 +139,10 @@ class PolyFit:
                 if not (isinstance(data, tuple) and len(data) == 2):
                     raise ValueError(f"table {name!r}: count2d data must be "
                                      "(xs, ys)")
+            elif spec.agg in ("sum2d", "max2d", "min2d"):
+                if not (isinstance(data, tuple) and len(data) == 3):
+                    raise ValueError(f"table {name!r}: {spec.agg} data must "
+                                     "be (xs, ys, measures)")
             elif spec.agg == "count":
                 if not isinstance(data, tuple):
                     data = (data, None)

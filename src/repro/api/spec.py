@@ -29,7 +29,8 @@ __all__ = ["QuerySpec", "QueryBatch", "TableSpec", "DEFAULT_REL"]
 # refinement", so a third state is needed for per-spec overrides)
 DEFAULT_REL = ...
 
-_NRANGES = {"sum": 2, "count": 2, "max": 2, "min": 2, "count2d": 4}
+_NRANGES = {"sum": 2, "count": 2, "max": 2, "min": 2, "count2d": 4,
+            "sum2d": 4, "max2d": 2, "min2d": 2}
 
 
 def _norm_range(r):
@@ -80,8 +81,13 @@ class QuerySpec:
 
     @classmethod
     def rect(cls, table: str, lx, ux, ly, uy, rel=DEFAULT_REL) -> "QuerySpec":
-        """2-key COUNT over the rectangle (lx, ux] x (ly, uy]."""
+        """2-key COUNT/SUM over the rectangle (lx, ux] x (ly, uy]."""
         return cls(table, (lx, ux, ly, uy), rel)
+
+    @classmethod
+    def corner(cls, table: str, u, v, rel=DEFAULT_REL) -> "QuerySpec":
+        """2-key dominance MAX/MIN over {x <= u, y <= v}."""
+        return cls(table, (u, v), rel)
 
 
 def _spec_flatten(s: QuerySpec):
@@ -136,14 +142,16 @@ jax.tree_util.register_pytree_node(
 class TableSpec:
     """Fit-time description of one table (dataset x aggregate).
 
-    ``agg``: 'sum' | 'count' | 'max' | 'min' | 'count2d'.
+    ``agg``: 'sum' | 'count' | 'max' | 'min' for one key, or 'count2d' |
+    'sum2d' | 'max2d' | 'min2d' for two (2-D MAX/MIN are dominance-corner
+    queries — DESIGN.md §12).
     ``budget``: the table's ``ErrorBudget`` — the *only* place the build
     delta comes from.  ``deg`` defaults to 2 for SUM/COUNT and 3 for
     MAX/MIN/2-D (the paper's recommendations).  ``dynamic`` wraps the plan
     in a delta-buffered engine (inserts/deletes without rebuild);
-    ``shards`` partitions the plan's segment tables across that many
-    devices and serves it through the shard_map executor
-    (``engine/sharded.py`` — 1-D aggregates only).
+    ``shards`` partitions the plan's tables across that many devices and
+    serves it through the shard_map executors (``engine/sharded.py`` —
+    1-D key ranges, 2-D Morton z-ranges).
     """
 
     agg: str
@@ -159,9 +167,6 @@ class TableSpec:
         if self.agg not in _NRANGES:
             raise ValueError(f"unknown aggregate {self.agg!r}; expected one "
                              f"of {sorted(_NRANGES)}")
-        if self.shards is not None and self.agg == "count2d":
-            raise ValueError("sharded execution covers 1-D aggregates only "
-                             "(2-D sharding is a ROADMAP item)")
         assert self.agg in DELTA_FRACTION
 
     @property

@@ -19,8 +19,10 @@ from .poly import (clipped_poly_max, eval_segments, horner, locate,  # noqa: E40
 from .segmentation import (FastAcceptFitter, dp_segmentation,  # noqa: E402
                            greedy_segmentation, parallel_segmentation)
 from .index import PolyFitIndex1D, assemble_index_1d, build_index_1d  # noqa: E402
-from .index2d import (MergeSortTree, PolyFitIndex2D, build_index_2d,  # noqa: E402
-                      count_dominated, dominance_rank, query_count_2d)
+from .index2d import (AGGS_2D, MergeSortTree, PolyFitIndex2D,  # noqa: E402
+                      build_index_2d, count_dominated, dominance_rank,
+                      query_count_2d, query_dommax_2d, query_sum_2d,
+                      selective_refit_2d)
 from .queries import (QueryResult, max_eval_segments,  # noqa: E402
                       poly_max_on_interval, query_max, query_sum)
 from .baselines import FitingTree, PGMIndex, RMIIndex, cone_segments  # noqa: E402
@@ -31,8 +33,9 @@ __all__ = [
     "rescale", "FastAcceptFitter", "dp_segmentation", "greedy_segmentation",
     "parallel_segmentation", "PolyFitIndex1D", "build_index_1d",
     "assemble_index_1d",
-    "MergeSortTree", "PolyFitIndex2D", "build_index_2d", "count_dominated",
-    "dominance_rank", "query_count_2d",
+    "AGGS_2D", "MergeSortTree", "PolyFitIndex2D", "build_index_2d",
+    "count_dominated", "dominance_rank", "query_count_2d", "query_sum_2d",
+    "query_dommax_2d", "selective_refit_2d",
     "ExactMax", "ExactSum", "build_sparse_table", "sparse_table_range_max",
     "QueryResult", "max_eval_segments", "poly_max_on_interval", "query_max",
     "query_sum", "clipped_poly_max", "eval_segments", "horner", "locate",

@@ -1,48 +1,78 @@
 """PolyFit with two keys (paper §6): quadtree-segmented bivariate surfaces.
 
-Pipeline (COUNT, the aggregate the paper evaluates):
+Pipeline (COUNT is the aggregate the paper evaluates; SUM/MAX/MIN over
+(x, y) are the measure-carrying extension, DESIGN.md §12):
 
-1. ``CF_count(u, v)`` = #points with x<=u and y<=v (Def. 6.2).  Exact values
-   are produced offline by a vectorized divide-and-conquer dominance counter
-   (numpy mergesort + searchsorted; O(n log^2 n), no Python-level per-point
-   loops).
+1. The fitted function per aggregate family:
+   * ``count2d`` — ``CF_count(u, v)`` = #points with x<=u and y<=v (Def. 6.2);
+   * ``sum2d``   — ``CF_sum(u, v)`` = sum of measures over the dominated set
+     (so rectangle SUM decomposes by the same 4-corner inclusion-exclusion);
+   * ``max2d``/``min2d`` — the *dominance max* staircase
+     ``DMAX(u, v) = max{w_i : x_i <= u, y_i <= v}`` (MIN negates measures),
+     floored at the dataset minimum so the function is total and monotone.
+     MAX does not telescope over rectangle corners, so 2-D MAX/MIN queries
+     are dominance (corner) queries — see DESIGN.md §12 for what a
+     full-rectangle decomposition would need.
+   Exact values are produced offline by a *weighted* merge-sort tree
+   (numpy block sorts + searchsorted; O(n log^2 n), no per-point loops).
 2. Quadtree segmentation (Fig. 10): a region whose best bivariate fit
    P(u,v) = sum a_ij u^i v^j (i,j <= deg) violates E(I) <= delta is split
    into 4 children at the midpoint.  Constraints are the data points inside
    the region plus a fixed evaluation grid and the region corners (all with
-   exact CF values), which controls the fit away from data — query corners
+   exact F values), which controls the fit away from data — query corners
    mix x and y from *different* records, so data points alone do not cover
-   the evaluation locations (documented deviation, DESIGN.md §6).
-3. Query (Eq. 19): 4-corner inclusion-exclusion, each corner evaluated in
-   its own leaf region.  Leaves are found with a fixed-depth, branch-free
-   quadtree descent (vectorized over query batches).
-4. Guarantees: delta = eps_abs/4 (Lemma 6.3); the Q_rel test
-   A >= 4*delta*(1+1/eps_rel) (Lemma 6.4) routes failing queries to the
-   exact backend — a merge-sort tree (static BIT decomposition over x-rank
-   with per-level sorted y arrays), which answers exact rectangle counts in
-   O(log^2 n) fully vectorized gathers.
+   the evaluation locations (documented deviation, DESIGN.md §6).  Each
+   leaf carries its certified fit error (``leaf_err`` — the selective
+   refit's per-leaf certificate and the source of ``certified_delta``)
+   and its exact measure aggregate (``leaf_agg`` — a tested partition
+   invariant today, and the interior-leaf table a future full-rectangle
+   MAX decomposition would reduce over; see ROADMAP).
+3. Query: 4-corner inclusion-exclusion for COUNT/SUM (Eq. 19), a single
+   corner evaluation for dominance MAX/MIN.  Leaves are found with a
+   fixed-depth, branch-free quadtree descent (vectorized over batches).
+4. Guarantees: delta = eps_abs/4 (Lemma 6.3) for COUNT/SUM, eps_abs for
+   dominance MAX/MIN (the Lemma 5.3 shape); the Q_rel acceptance tests
+   (Lemma 6.4 / 5.4) route failing queries to the exact merge-sort-tree
+   backend, which answers rectangle sums and dominance maxima in O(log^2 n)
+   fully vectorized gathers.
+5. ``selective_refit_2d`` absorbs a merged batch of inserts/deletes without
+   rebuilding the tree: a changed point (x0, y0) alters a CF-type function
+   only inside its dominance region {u >= x0, v >= y0}, and *constantly* on
+   any leaf wholly inside it — so clean dominated leaves take an exact
+   constant-coefficient bump (E(I) unchanged), leaves crossed by the
+   region's boundary rays are re-fitted (and re-split while the certificate
+   fails), and every other leaf is untouched, bit for bit.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 __all__ = [
+    "AGGS_2D",
     "dominance_rank",
     "count_dominated",
     "MergeSortTree",
     "PolyFitIndex2D",
     "build_index_2d",
+    "selective_refit_2d",
     "query_count_2d",
+    "query_sum_2d",
+    "query_dommax_2d",
     "mst_count_prefix",
+    "mst_weighted_prefix",
     "mst_cf",
+    "mst_cf_sum",
+    "mst_dommax",
     "quadtree_locate",
     "quadtree_eval_cf",
 ]
+
+AGGS_2D = ("count2d", "sum2d", "max2d", "min2d")
 
 
 # ---------------------------------------------------------------------------
@@ -97,25 +127,88 @@ def mst_count_prefix(xs: jnp.ndarray, ys_levels: jnp.ndarray, i: jnp.ndarray,
     return total
 
 
+def mst_weighted_prefix(xs: jnp.ndarray, ys_levels: jnp.ndarray,
+                        wacc_levels: jnp.ndarray, i: jnp.ndarray,
+                        v: jnp.ndarray, *, mode: str) -> jnp.ndarray:
+    """Weighted dominance reduction over x-rank [0, i) with y <= v.
+
+    ``wacc_levels`` are per-level, per-block *inclusive* prefix arrays over
+    the block-y-sorted weights: prefix sums for mode='sum', prefix maxima
+    for mode='max' (identities 0 / -inf).  Same block decomposition — and
+    the same in-block binary search, so the same op sequence — as
+    ``mst_count_prefix``; one extra clamped gather per level turns the
+    in-block count into the block's weighted contribution.  Plain jnp on
+    values, so it runs inside Pallas kernel bodies as well as jitted XLA.
+    """
+    if mode not in ("sum", "max"):
+        raise ValueError(f"mode must be 'sum' or 'max', got {mode!r}")
+    is_sum = mode == "sum"
+    n = int(xs.shape[0])
+    levels = int(ys_levels.shape[0])
+    ident = 0.0 if is_sum else -jnp.inf
+    total = jnp.full(jnp.shape(i), ident, wacc_levels.dtype)
+    pos = jnp.zeros_like(i)
+    for l in range(levels - 1, -1, -1):
+        b = 1 << l
+        take = pos + b <= i
+        lo = jnp.zeros_like(i)
+        hi = jnp.full_like(i, b)
+        for _ in range(l + 1):
+            active = lo < hi
+            mid = (lo + hi) // 2
+            idx = jnp.clip(pos + jnp.minimum(mid, b - 1), 0, n - 1)
+            go_right = active & (ys_levels[l][idx] <= v)
+            lo = jnp.where(go_right, mid + 1, lo)
+            hi = jnp.where(active & ~go_right, mid, hi)
+        val = wacc_levels[l][jnp.clip(pos + lo - 1, 0, n - 1)]
+        val = jnp.where(take & (lo > 0), val, ident)
+        total = total + val if is_sum else jnp.maximum(total, val)
+        pos = jnp.where(take, pos + b, pos)
+    return total
+
+
 def mst_cf(xs: jnp.ndarray, ys_levels: jnp.ndarray, u, v) -> jnp.ndarray:
     """CF_count(u, v) = #points with x <= u and y <= v, vectorized."""
     i = jnp.searchsorted(xs, u, side="right")
     return mst_count_prefix(xs, ys_levels, i, v)
 
 
+def mst_cf_sum(xs: jnp.ndarray, ys_levels: jnp.ndarray,
+               wcum_levels: jnp.ndarray, u, v) -> jnp.ndarray:
+    """CF_sum(u, v) = sum of measures with x <= u and y <= v, vectorized."""
+    i = jnp.searchsorted(xs, u, side="right")
+    return mst_weighted_prefix(xs, ys_levels, wcum_levels, i, v, mode="sum")
+
+
+def mst_dommax(xs: jnp.ndarray, ys_levels: jnp.ndarray,
+               wpmax_levels: jnp.ndarray, u, v) -> jnp.ndarray:
+    """DMAX(u, v) = max measure with x <= u and y <= v (-inf if none)."""
+    i = jnp.searchsorted(xs, u, side="right")
+    return mst_weighted_prefix(xs, ys_levels, wpmax_levels, i, v, mode="max")
+
+
 @dataclasses.dataclass(frozen=True)
 class MergeSortTree:
-    """Static BIT-style decomposition for exact rectangle counts in JAX.
+    """Static BIT-style decomposition for exact rectangle counts — and,
+    when built with weights, exact dominance sums/maxima — in JAX.
 
-    xs        (n,)   x-sorted keys
-    ys_levels (L, n) y values sorted within blocks of size 2^l at level l
+    xs           (n,)   x-sorted keys
+    ys_levels    (L, n) y values sorted within blocks of size 2^l at level l
+    wcum_levels  (L, n) per-block inclusive prefix sums of the weights,
+                        carried through the same block sorts (weighted only)
+    wpmax_levels (L, n) per-block inclusive prefix maxima (weighted only)
+    ws           (n,)   weights in x-sorted order (weighted only)
     """
 
     xs: jnp.ndarray
     ys_levels: jnp.ndarray
+    wcum_levels: Optional[jnp.ndarray] = None
+    wpmax_levels: Optional[jnp.ndarray] = None
+    ws: Optional[jnp.ndarray] = None
 
     @staticmethod
-    def build(px: np.ndarray, py: np.ndarray) -> "MergeSortTree":
+    def build(px: np.ndarray, py: np.ndarray,
+              ws: Optional[np.ndarray] = None) -> "MergeSortTree":
         order = np.argsort(px, kind="stable")
         xs = np.asarray(px, np.float64)[order]
         ys = np.asarray(py, np.float64)[order]
@@ -126,12 +219,36 @@ class MergeSortTree:
         arrs[0] = ys  # level 0: blocks of size 1 (already "sorted")
         padded = np.full(npad, np.inf)
         padded[:n] = ys
+        if ws is None:
+            for l in range(1, levels):
+                b = 1 << l
+                # vectorized per-block sort: reshape to (npad/b, b), sort rows
+                padded = np.sort(padded.reshape(-1, b), axis=1).reshape(-1)
+                arrs[l] = padded[:n]
+            return MergeSortTree(jnp.asarray(xs), jnp.asarray(arrs))
+        w = np.asarray(ws, np.float64)[order]
+        wcum = np.empty((levels, n), np.float64)
+        wpmax = np.empty((levels, n), np.float64)
+        wcum[0] = w
+        wpmax[0] = w
+        wpad = np.zeros(npad)
+        wpad[:n] = w
         for l in range(1, levels):
             b = 1 << l
-            # vectorized per-block sort: reshape to (npad/b, b), sort rows
-            padded = np.sort(padded.reshape(-1, b), axis=1).reshape(-1)
+            yb = padded.reshape(-1, b)
+            # stable per-block argsort: same sorted y values as np.sort,
+            # plus the permutation to carry the weights along
+            perm = np.argsort(yb, axis=1, kind="stable")
+            yb = np.take_along_axis(yb, perm, axis=1)
+            wb = np.take_along_axis(wpad.reshape(-1, b), perm, axis=1)
+            padded = yb.reshape(-1)
+            wpad = wb.reshape(-1)
             arrs[l] = padded[:n]
-        return MergeSortTree(jnp.asarray(xs), jnp.asarray(arrs))
+            wcum[l] = np.cumsum(wb, axis=1).reshape(-1)[:n]
+            wpmax[l] = np.maximum.accumulate(wb, axis=1).reshape(-1)[:n]
+        return MergeSortTree(jnp.asarray(xs), jnp.asarray(arrs),
+                             jnp.asarray(wcum), jnp.asarray(wpmax),
+                             jnp.asarray(w))
 
     @property
     def n(self) -> int:
@@ -154,6 +271,14 @@ class MergeSortTree:
     def cf(self, u, v) -> jnp.ndarray:
         """CF_count(u, v), vectorized."""
         return mst_cf(self.xs, self.ys_levels, u, v)
+
+    def cf_sum(self, u, v) -> jnp.ndarray:
+        """CF_sum(u, v), vectorized (weighted trees only)."""
+        return mst_cf_sum(self.xs, self.ys_levels, self.wcum_levels, u, v)
+
+    def dommax(self, u, v) -> jnp.ndarray:
+        """Dominance max of measures (-inf if the dominated set is empty)."""
+        return mst_dommax(self.xs, self.ys_levels, self.wpmax_levels, u, v)
 
     def cf_np(self, u, v) -> np.ndarray:
         """CF_count on the host (numpy) — used during construction where
@@ -180,6 +305,45 @@ class MergeSortTree:
             total = total + np.where(take, lo, 0)
             pos = np.where(take, pos + b, pos)
         return total
+
+    def _weighted_prefix_np(self, i: np.ndarray, v: np.ndarray,
+                            mode: str) -> np.ndarray:
+        """Host twin of ``mst_weighted_prefix`` (construction-time oracle)."""
+        is_sum = mode == "sum"
+        xs = np.asarray(self.xs)
+        ysl = np.asarray(self.ys_levels)
+        wacc = np.asarray(self.wcum_levels if is_sum else self.wpmax_levels)
+        n = len(xs)
+        ident = 0.0 if is_sum else -np.inf
+        total = np.full(np.shape(i), ident)
+        pos = np.zeros_like(i)
+        for l in range(ysl.shape[0] - 1, -1, -1):
+            b = 1 << l
+            take = pos + b <= i
+            lo = np.zeros_like(i)
+            hi = np.full_like(i, b)
+            for _ in range(l + 1):
+                active = lo < hi
+                mid = (lo + hi) // 2
+                idx = np.clip(pos + np.minimum(mid, b - 1), 0, n - 1)
+                go_right = active & (ysl[l][idx] <= v)
+                lo = np.where(go_right, mid + 1, lo)
+                hi = np.where(active & ~go_right, mid, hi)
+            val = wacc[l][np.clip(pos + lo - 1, 0, n - 1)]
+            val = np.where(take & (lo > 0), val, ident)
+            total = total + val if is_sum else np.maximum(total, val)
+            pos = np.where(take, pos + b, pos)
+        return total
+
+    def cf_sum_np(self, u, v) -> np.ndarray:
+        i = np.searchsorted(np.asarray(self.xs), np.asarray(u, np.float64),
+                            side="right")
+        return self._weighted_prefix_np(i, np.asarray(v, np.float64), "sum")
+
+    def dommax_np(self, u, v) -> np.ndarray:
+        i = np.searchsorted(np.asarray(self.xs), np.asarray(u, np.float64),
+                            side="right")
+        return self._weighted_prefix_np(i, np.asarray(v, np.float64), "max")
 
 
 # ---------------------------------------------------------------------------
@@ -243,10 +407,24 @@ class PolyFitIndex2D:
     root_bounds: Tuple[float, float, float, float]
     exact: Optional[MergeSortTree]
     n: int
+    # -- measure-carrying extension (DESIGN.md §12) ----------------------
+    agg: str = "count2d"
+    leaf_err: Optional[np.ndarray] = None   # (n_leaves,) certified E(I)
+    leaf_agg: Optional[jnp.ndarray] = None  # (n_leaves,) exact per-leaf agg
+    measures_sorted: Optional[np.ndarray] = None  # host, x-sorted internal
+    extremal_floor: Optional[float] = None  # frozen DMAX floor (max2d/min2d)
 
     @property
     def n_leaves(self) -> int:
         return int(self.coeffs.shape[0])
+
+    @property
+    def certified_delta(self) -> float:
+        """The per-leaf certificate actually achieved: delta unless a leaf
+        hit max_depth with residual error (then that error governs)."""
+        if self.leaf_err is None:
+            return float(self.delta)
+        return float(max(self.delta, float(np.max(self.leaf_err))))
 
     def size_bytes(self) -> int:
         return int(self.children.nbytes + self.bounds.nbytes + self.coeffs.nbytes)
@@ -257,7 +435,7 @@ class PolyFitIndex2D:
                                self.max_depth, u, v)
 
     def eval_cf(self, u, v):
-        """P_{leaf(u,v)}(u, v): approximate CF_count (vectorized)."""
+        """P_{leaf(u,v)}(u, v): approximate fitted function (vectorized)."""
         return quadtree_eval_cf(self.children, self.leaf_of, self.bounds,
                                 self.coeffs, self.leaf_nodes, self.max_depth,
                                 self.deg, u, v)
@@ -284,7 +462,7 @@ def quadtree_locate(children, leaf_of, bounds, max_depth: int, u, v):
 
 def quadtree_eval_cf(children, leaf_of, bounds, coeffs, leaf_nodes,
                      max_depth: int, deg: int, u, v):
-    """P_{leaf(u,v)}(u, v): approximate CF_count over flat quadtree arrays."""
+    """P_{leaf(u,v)}(u, v): the fitted surface over flat quadtree arrays."""
     leaf = quadtree_locate(children, leaf_of, bounds, max_depth, u, v)
     # leaf coeffs are stored for *scaled* coordinates of the leaf region
     node_ids = leaf_nodes[leaf]
@@ -307,75 +485,56 @@ def _scale01(x, lo, hi):
     return jnp.clip((2.0 * x - lo - hi) / span, -1.0, 1.0)
 
 
-def build_index_2d(
-    px: np.ndarray,
-    py: np.ndarray,
-    deg: int = 3,
-    delta: float = 100.0,
-    grid: int = 8,
-    max_depth: int = 12,
-    max_fit_points: int = 2048,
-    fast_accept: bool = True,
-    keep_exact: bool = True,
-) -> PolyFitIndex2D:
-    """Quadtree segmentation of CF_count (paper §6, Fig. 10)."""
-    px = np.asarray(px, np.float64)
-    py = np.asarray(py, np.float64)
-    n = len(px)
-    tree = MergeSortTree.build(px, py)
+class _QuadtreeBuilder:
+    """Shared quadtree fitting machinery.
 
-    # order data by x for fast in-region slicing
-    xo = np.argsort(px, kind="stable")
-    sx, sy = px[xo], py[xo]
+    Used by ``build_index_2d`` for full construction and by
+    ``selective_refit_2d`` to re-fit (and, when the certificate fails,
+    re-split) only the dirty leaves against a fresh exact oracle.
+    """
 
-    def cf_exact(us, vs):
-        return tree.cf_np(us, vs)
+    def __init__(self, sx, sy, cf_exact, *, deg, delta, grid, max_depth,
+                 max_fit_points, fast_accept):
+        self.sx, self.sy = sx, sy          # x-sorted data coordinates
+        self.cf_exact = cf_exact           # vectorized host oracle for F
+        self.deg = deg
+        self.delta = delta
+        self.max_depth = max_depth
+        self.max_fit_points = max_fit_points
+        self.fast_accept = fast_accept
+        gg = np.linspace(0.0, 1.0, grid)
+        gu, gv = np.meshgrid(gg, gg)
+        self.gu, self.gv = gu.ravel(), gv.ravel()
+        self.rng = np.random.default_rng(0xF17)
 
-    x0r, x1r = float(px.min()), float(px.max())
-    y0r, y1r = float(py.min()), float(py.max())
-
-    children: List[List[int]] = []
-    bounds: List[Tuple[float, float, float, float]] = []
-    leaf_of: List[int] = []
-    leaf_nodes: List[int] = []
-    leaf_coeffs: List[np.ndarray] = []
-
-    gg = np.linspace(0.0, 1.0, grid)
-    gu, gv = np.meshgrid(gg, gg)
-    gu, gv = gu.ravel(), gv.ravel()
-
-    def region_points(x0, x1, y0, y1):
-        i0 = np.searchsorted(sx, x0, side="left")
-        i1 = np.searchsorted(sx, x1, side="right")
-        xs = sx[i0:i1]
-        ys = sy[i0:i1]
+    def region_points(self, x0, x1, y0, y1):
+        i0 = np.searchsorted(self.sx, x0, side="left")
+        i1 = np.searchsorted(self.sx, x1, side="right")
+        xs = self.sx[i0:i1]
+        ys = self.sy[i0:i1]
         m = (ys >= y0) & (ys <= y1)
         return xs[m], ys[m]
 
-    fit_rng = np.random.default_rng(0xF17)
-
-    def fit_region(x0, x1, y0, y1, depth):
-        rx, ry = region_points(x0, x1, y0, y1)
+    def fit_region(self, x0, x1, y0, y1):
+        rx, ry = self.region_points(x0, x1, y0, y1)
         # constraint set: data points in region + grid + corners
-        cu = np.concatenate([rx, x0 + (x1 - x0) * gu])
-        cv = np.concatenate([ry, y0 + (y1 - y0) * gv])
-        F = cf_exact(cu, cv).astype(np.float64)
+        cu = np.concatenate([rx, x0 + (x1 - x0) * self.gu])
+        cv = np.concatenate([ry, y0 + (y1 - y0) * self.gv])
+        F = np.asarray(self.cf_exact(cu, cv), np.float64)
         usc = np.clip((2 * cu - x0 - x1) / max(x1 - x0, 1e-300), -1, 1)
         vsc = np.clip((2 * cv - y0 - y1) / max(y1 - y0, 1e-300), -1, 1)
+        deg, delta = self.deg, self.delta
 
-        def full_err(coef):
-            return float(np.max(np.abs(F - _vander2d(usc, vsc, deg) @ coef)))
-
-        if fast_accept:
+        if self.fast_accept:
             coef, err = _fit2d_lstsq(usc, vsc, F, deg)
             if err <= delta:
                 return coef, err
         # LP on a bounded constraint subsample, validated (and repaired with
         # the worst violators, Remez-style) against the full set
         m = len(F)
-        if m <= max_fit_points:
+        if m <= self.max_fit_points:
             return _fit2d_lp(usc, vsc, F, deg)
-        sub = fit_rng.choice(m, max_fit_points, replace=False)
+        sub = self.rng.choice(m, self.max_fit_points, replace=False)
         for _ in range(3):
             coef, _ = _fit2d_lp(usc[sub], vsc[sub], F[sub], deg)
             resid = np.abs(F - _vander2d(usc, vsc, deg) @ coef)
@@ -386,45 +545,317 @@ def build_index_2d(
             sub = np.unique(np.concatenate([sub, worst]))
         return coef, err
 
-    def build(x0, x1, y0, y1, depth) -> int:
+    def build(self, x0, x1, y0, y1, depth, children, bounds, depths,
+              node_coef) -> int:
+        """DFS-construct the (sub)tree over [x0,x1]x[y0,y1], appending to
+        the host topology lists; ``node_coef[node] = (coef, err)`` marks
+        leaves.  Returns the subtree's root node id."""
         node = len(children)
         children.append([-1, -1, -1, -1])
         bounds.append((x0, x1, y0, y1))
-        leaf_of.append(-1)
-        coef, err = fit_region(x0, x1, y0, y1, depth)
-        if err <= delta or depth >= max_depth:
-            leaf_of[node] = len(leaf_coeffs)
-            leaf_nodes.append(node)
-            leaf_coeffs.append(coef)
+        depths.append(depth)
+        coef, err = self.fit_region(x0, x1, y0, y1)
+        if err <= self.delta or depth >= self.max_depth:
+            node_coef[node] = (coef, err)
             return node
         xm, ym = 0.5 * (x0 + x1), 0.5 * (y0 + y1)
-        children[node][0] = build(x0, xm, y0, ym, depth + 1)
-        children[node][1] = build(xm, x1, y0, ym, depth + 1)
-        children[node][2] = build(x0, xm, ym, y1, depth + 1)
-        children[node][3] = build(xm, x1, ym, y1, depth + 1)
+        args = (children, bounds, depths, node_coef)
+        children[node][0] = self.build(x0, xm, y0, ym, depth + 1, *args)
+        children[node][1] = self.build(xm, x1, y0, ym, depth + 1, *args)
+        children[node][2] = self.build(x0, xm, ym, y1, depth + 1, *args)
+        children[node][3] = self.build(xm, x1, ym, y1, depth + 1, *args)
         return node
+
+
+def _internal_measures(px, measures, agg: str) -> np.ndarray:
+    """Measures in internal space (MIN negated; COUNT is unit measures)."""
+    if agg == "count2d":
+        return np.ones_like(px)
+    if measures is None:
+        raise ValueError("measures required unless agg='count2d'")
+    w = np.asarray(measures, np.float64)
+    if w.shape != px.shape:
+        raise ValueError(f"measures shape {w.shape} != points {px.shape}")
+    return -w if agg == "min2d" else w
+
+
+def _oracle_2d(tree: MergeSortTree, agg: str, floor: Optional[float]):
+    """Host-side exact-F oracle the quadtree fits against."""
+    if agg == "count2d":
+        return lambda us, vs: tree.cf_np(us, vs)
+    if agg == "sum2d":
+        return lambda us, vs: tree.cf_sum_np(us, vs)
+    return lambda us, vs: np.maximum(tree.dommax_np(us, vs), floor)
+
+
+def _assemble_index_2d(children, bounds, depths, node_coef, *, agg, deg,
+                       delta, max_depth, root_bounds, tree, keep_exact,
+                       sx, sy, sw, floor) -> PolyFitIndex2D:
+    """Assemble the device index from host topology + per-node leaf fits.
+
+    Leaf slots are assigned in ascending node-id order (preorder for a
+    fresh build; refit-split leaves append after the surviving ones).
+    ``leaf_agg`` is recomputed exactly from the data through the descent's
+    own membership rule, so it is a true partition aggregate.
+    """
+    children = np.asarray(children, np.int32)
+    bounds_a = np.asarray(bounds, np.float64)
+    nnodes = len(children)
+    leaf_of = np.full(nnodes, -1, np.int32)
+    leaf_nodes: List[int] = []
+    coeffs: List[np.ndarray] = []
+    leaf_err: List[float] = []
+    for node in range(nnodes):
+        got = node_coef.get(node)
+        if got is None:
+            continue
+        leaf_of[node] = len(leaf_nodes)
+        leaf_nodes.append(node)
+        coeffs.append(got[0])
+        leaf_err.append(got[1])
+    leaf_nodes_a = np.asarray(leaf_nodes, np.int32)
+
+    children_j = jnp.asarray(children)
+    leaf_of_j = jnp.asarray(leaf_of)
+    bounds_j = jnp.asarray(bounds_a)
+
+    # exact per-leaf measure aggregate over the descent's own partition
+    leaf = np.asarray(quadtree_locate(children_j, leaf_of_j, bounds_j,
+                                      max_depth, jnp.asarray(sx),
+                                      jnp.asarray(sy)))
+    nl = len(leaf_nodes)
+    if agg in ("max2d", "min2d"):
+        la = np.full(nl, -np.inf)
+        np.maximum.at(la, leaf, sw)
+    else:
+        la = np.zeros(nl)
+        np.add.at(la, leaf, sw)
+
+    return PolyFitIndex2D(
+        deg=deg, delta=float(delta),
+        children=children_j, leaf_of=leaf_of_j, bounds=bounds_j,
+        coeffs=jnp.asarray(np.stack(coeffs)),
+        leaf_nodes=jnp.asarray(leaf_nodes_a),
+        max_depth=max_depth, root_bounds=root_bounds,
+        exact=tree if keep_exact else None, n=len(sx),
+        agg=agg, leaf_err=np.asarray(leaf_err, np.float64),
+        leaf_agg=jnp.asarray(la),
+        measures_sorted=None if agg == "count2d" else sw,
+        extremal_floor=floor,
+    )
+
+
+def build_index_2d(
+    px: np.ndarray,
+    py: np.ndarray,
+    measures: Optional[np.ndarray] = None,
+    agg: str = "count2d",
+    deg: int = 3,
+    delta: float = 100.0,
+    grid: int = 8,
+    max_depth: int = 12,
+    max_fit_points: int = 2048,
+    fast_accept: bool = True,
+    keep_exact: bool = True,
+) -> PolyFitIndex2D:
+    """Quadtree segmentation of the aggregate's F (paper §6, Fig. 10).
+
+    ``agg='count2d'`` fits CF_count (measures ignored); ``'sum2d'`` fits
+    CF_sum over ``measures``; ``'max2d'``/``'min2d'`` fit the dominance-max
+    staircase (MIN on negated measures end to end), floored at the dataset
+    minimum so F is total — dominance answers are certified wherever the
+    true dominance max reaches that frozen floor (every query that
+    dominates at least one point of the build-time dataset).
+    """
+    if agg not in AGGS_2D:
+        raise ValueError(f"agg must be one of {AGGS_2D}, got {agg!r}")
+    px = np.asarray(px, np.float64)
+    py = np.asarray(py, np.float64)
+    w = _internal_measures(px, measures, agg)
+    tree = MergeSortTree.build(px, py, ws=None if agg == "count2d" else w)
+
+    # order data by x for fast in-region slicing
+    xo = np.argsort(px, kind="stable")
+    sx, sy, sw = px[xo], py[xo], w[xo]
+    floor = float(sw.min()) if agg in ("max2d", "min2d") else None
+    cf_exact = _oracle_2d(tree, agg, floor)
+
+    x0r, x1r = float(px.min()), float(px.max())
+    y0r, y1r = float(py.min()), float(py.max())
+
+    builder = _QuadtreeBuilder(sx, sy, cf_exact, deg=deg, delta=delta,
+                               grid=grid, max_depth=max_depth,
+                               max_fit_points=max_fit_points,
+                               fast_accept=fast_accept)
+    children: List[List[int]] = []
+    bounds: List[Tuple[float, float, float, float]] = []
+    depths: List[int] = []
+    node_coef: Dict[int, Tuple[np.ndarray, float]] = {}
 
     import sys
     old_limit = sys.getrecursionlimit()
     sys.setrecursionlimit(max(old_limit, 10000))
     try:
-        build(x0r, x1r, y0r, y1r, 0)
+        builder.build(x0r, x1r, y0r, y1r, 0, children, bounds, depths,
+                      node_coef)
     finally:
         sys.setrecursionlimit(old_limit)
 
-    return PolyFitIndex2D(
-        deg=deg, delta=float(delta),
-        children=jnp.asarray(np.asarray(children, np.int32)),
-        leaf_of=jnp.asarray(np.asarray(leaf_of, np.int32)),
-        bounds=jnp.asarray(np.asarray(bounds, np.float64)),
-        coeffs=jnp.asarray(np.stack(leaf_coeffs)),
-        leaf_nodes=jnp.asarray(np.asarray(leaf_nodes, np.int32)),
-        max_depth=max_depth,
-        root_bounds=(x0r, x1r, y0r, y1r),
-        exact=tree if keep_exact else None,
-        n=n,
-    )
+    return _assemble_index_2d(
+        children, bounds, depths, node_coef, agg=agg, deg=deg, delta=delta,
+        max_depth=max_depth, root_bounds=(x0r, x1r, y0r, y1r), tree=tree,
+        keep_exact=keep_exact, sx=sx, sy=sy, sw=sw, floor=floor)
 
+
+def selective_refit_2d(
+    index: PolyFitIndex2D,
+    px: np.ndarray,
+    py: np.ndarray,
+    w: np.ndarray,
+    changed_x: np.ndarray,
+    changed_y: np.ndarray,
+    changed_w: np.ndarray,
+    *,
+    grid: int = 8,
+    max_fit_points: int = 2048,
+    fast_accept: bool = True,
+    keep_exact: bool = True,
+) -> Tuple[PolyFitIndex2D, dict]:
+    """Absorb a merged update batch by refitting *only* the dirty leaves.
+
+    ``px, py, w`` is the merged dataset (w in *internal* space — negated
+    for min2d, unit for count2d); ``changed_*`` lists every inserted or
+    deleted point with its signed internal measure (+w insert, -w delete).
+
+    A changed point (x0, y0) alters a CF-type F only on its dominance
+    region {u >= x0, v >= y0}:
+
+    * leaves wholly inside it see an exact *constant* shift (every point of
+      the leaf dominates (x0, y0)), absorbed as a constant-coefficient bump
+      that leaves the certified E(I) untouched;
+    * leaves crossed by the region's boundary rays ({x0} x [y0, inf) and
+      [x0, inf) x {y0}) see a non-constant change and are re-fitted against
+      the fresh exact oracle — re-split on the spot while the certificate
+      fails and depth remains;
+    * every other leaf keeps its coefficient row bit for bit.
+
+    For dominance-MAX trees the change is max-composition, not additive, so
+    every leaf intersecting the dominance region is re-fitted (the rest are
+    untouched).  Points outside the frozen root rectangle cannot be covered
+    by the existing topology: the function falls back to a full rebuild and
+    reports it in the stats.
+
+    Returns ``(new_index, stats)`` with stats keys ``n_leaves`` (before),
+    ``refit``, ``split`` (leaves that re-split), ``shifted``, ``rebuild``.
+    """
+    agg, deg, delta = index.agg, index.deg, index.delta
+    max_depth = index.max_depth
+    px = np.asarray(px, np.float64)
+    py = np.asarray(py, np.float64)
+    w = np.asarray(w, np.float64)
+    x0r, x1r, y0r, y1r = index.root_bounds
+    out_of_root = (px.min() < x0r or px.max() > x1r
+                   or py.min() < y0r or py.max() > y1r)
+    if out_of_root:
+        meas = None
+        if agg != "count2d":
+            meas = -w if agg == "min2d" else w
+        idx = build_index_2d(px, py, measures=meas, agg=agg, deg=deg,
+                             delta=delta, grid=grid, max_depth=max_depth,
+                             max_fit_points=max_fit_points,
+                             fast_accept=fast_accept, keep_exact=keep_exact)
+        return idx, {"n_leaves": index.n_leaves, "refit": idx.n_leaves,
+                     "split": 0, "shifted": 0, "rebuild": True}
+
+    extremal = agg in ("max2d", "min2d")
+    tree = MergeSortTree.build(px, py, ws=None if agg == "count2d" else w)
+    xo = np.argsort(px, kind="stable")
+    sx, sy, sw = px[xo], py[xo], w[xo]
+    floor = index.extremal_floor if extremal else None
+    cf_exact = _oracle_2d(tree, agg, floor)
+
+    builder = _QuadtreeBuilder(sx, sy, cf_exact, deg=deg, delta=delta,
+                               grid=grid, max_depth=max_depth,
+                               max_fit_points=max_fit_points,
+                               fast_accept=fast_accept)
+
+    # host topology (mutable for splits)
+    children = [list(r) for r in np.asarray(index.children)]
+    bounds = [tuple(float(x) for x in b) for b in np.asarray(index.bounds)]
+    depths = list(_node_depths(np.asarray(index.children)))
+    leaf_nodes = np.asarray(index.leaf_nodes)
+    old_coeffs = np.asarray(index.coeffs)
+    old_err = (np.asarray(index.leaf_err) if index.leaf_err is not None
+               else np.full(len(leaf_nodes), float(delta)))
+    lb = np.asarray(index.bounds)[leaf_nodes]   # (L, 4): x0, x1, y0, y1
+
+    cx = np.asarray(changed_x, np.float64)[None, :]
+    cy = np.asarray(changed_y, np.float64)[None, :]
+    cw = np.asarray(changed_w, np.float64)
+    # (L, C) classification against each changed point's dominance region
+    untouched = (lb[:, 1:2] < cx) | (lb[:, 3:4] < cy)
+    if extremal:
+        dirty = (~untouched).any(axis=1)
+        shift = np.zeros(len(lb))
+    else:
+        dominated = (lb[:, 0:1] >= cx) & (lb[:, 2:3] >= cy)
+        dirty = (~(untouched | dominated)).any(axis=1)
+        shift = np.where(dirty, 0.0,
+                         np.where(dominated, cw[None, :], 0.0).sum(axis=1))
+
+    node_coef: Dict[int, Tuple[np.ndarray, float]] = {}
+    n_refit = n_split = n_shift = 0
+    for s, node in enumerate(leaf_nodes):
+        node = int(node)
+        if not dirty[s]:
+            c = old_coeffs[s]
+            if shift[s] != 0.0:
+                c = c.copy()
+                c[0] += shift[s]   # the (u^0 v^0) term: an exact CF bump
+                n_shift += 1
+            node_coef[node] = (c, float(old_err[s]))
+            continue
+        x0, x1, y0, y1 = lb[s]
+        coef, err = builder.fit_region(x0, x1, y0, y1)
+        n_refit += 1
+        if err <= delta or depths[node] >= max_depth:
+            node_coef[node] = (coef, err)
+            continue
+        # certificate fails with depth to spare: re-split this leaf in place
+        n_split += 1
+        xm, ym = 0.5 * (x0 + x1), 0.5 * (y0 + y1)
+        args = (children, bounds, depths, node_coef)
+        d = depths[node] + 1
+        children[node][0] = builder.build(x0, xm, y0, ym, d, *args)
+        children[node][1] = builder.build(xm, x1, y0, ym, d, *args)
+        children[node][2] = builder.build(x0, xm, ym, y1, d, *args)
+        children[node][3] = builder.build(xm, x1, ym, y1, d, *args)
+
+    new_index = _assemble_index_2d(
+        children, bounds, depths, node_coef, agg=agg, deg=deg, delta=delta,
+        max_depth=max_depth, root_bounds=index.root_bounds, tree=tree,
+        keep_exact=keep_exact, sx=sx, sy=sy, sw=sw, floor=floor)
+    stats = {"n_leaves": int(len(leaf_nodes)), "refit": n_refit,
+             "split": n_split, "shifted": n_shift, "rebuild": False}
+    return new_index, stats
+
+
+def _node_depths(children: np.ndarray) -> np.ndarray:
+    """Per-node depth from the topology (root = node 0 at depth 0)."""
+    depth = np.zeros(len(children), np.int64)
+    stack = [0]
+    while stack:
+        node = stack.pop()
+        for c in children[node]:
+            if c >= 0:
+                depth[c] = depth[node] + 1
+                stack.append(int(c))
+    return depth
+
+
+# ---------------------------------------------------------------------------
+# core-level query helpers (the engine's fused executors mirror these)
+# ---------------------------------------------------------------------------
 
 def query_count_2d(index: PolyFitIndex2D, lx, ux, ly, uy,
                    eps_rel: float | None = None):
@@ -450,4 +881,57 @@ def query_count_2d(index: PolyFitIndex2D, lx, ux, ly, uy,
     truth = (index.exact.cf(ux, uy) - index.exact.cf(lx, uy)
              - index.exact.cf(ux, ly) + index.exact.cf(lx, ly)).astype(approx.dtype)
     ans = jnp.where(ok, approx, truth)
+    return QueryResult(ans, approx, ~ok)
+
+
+def query_sum_2d(index: PolyFitIndex2D, lx, ux, ly, uy,
+                 eps_rel: float | None = None):
+    """Approximate 2-key range SUM over (lx, ux] x (ly, uy]: the 4-corner
+    inclusion-exclusion of CF_sum, |A - R| <= 4*delta (the Lemma 6.3
+    argument applied to the weighted CF)."""
+    from .queries import QueryResult
+
+    assert index.agg == "sum2d", index.agg
+    lx = jnp.asarray(lx, jnp.float64)
+    ux = jnp.asarray(ux, jnp.float64)
+    ly = jnp.asarray(ly, jnp.float64)
+    uy = jnp.asarray(uy, jnp.float64)
+    approx = (index.eval_cf(ux, uy) - index.eval_cf(lx, uy)
+              - index.eval_cf(ux, ly) + index.eval_cf(lx, ly))
+    if eps_rel is None:
+        return QueryResult(approx, approx, jnp.zeros_like(approx, bool))
+    ok = approx >= 4.0 * index.delta * (1.0 + 1.0 / eps_rel)   # Lemma 6.4
+    if index.exact is None:
+        raise ValueError("Q_rel refinement requires keep_exact=True")
+    ex = index.exact
+    truth = (ex.cf_sum(ux, uy) - ex.cf_sum(lx, uy)
+             - ex.cf_sum(ux, ly) + ex.cf_sum(lx, ly)).astype(approx.dtype)
+    ans = jnp.where(ok, approx, truth)
+    return QueryResult(ans, approx, ~ok)
+
+
+def query_dommax_2d(index: PolyFitIndex2D, u, v,
+                    eps_rel: float | None = None):
+    """Approximate dominance MAX/MIN: the extremal measure over
+    {x <= u, y <= v}, |A - R| <= delta wherever the true dominance max
+    reaches the frozen floor (every corner dominating a build-time point).
+    MIN trees run on negated measures end to end."""
+    from .queries import QueryResult
+
+    assert index.agg in ("max2d", "min2d"), index.agg
+    u = jnp.asarray(u, jnp.float64)
+    v = jnp.asarray(v, jnp.float64)
+    approx = index.eval_cf(u, v)
+    neg = index.agg == "min2d"
+    if eps_rel is None:
+        out = -approx if neg else approx
+        return QueryResult(out, out, jnp.zeros_like(out, bool))
+    # Lemma 5.4 shape, in MAX space
+    ok = approx >= index.delta * (1.0 + 1.0 / eps_rel)
+    if index.exact is None:
+        raise ValueError("Q_rel refinement requires keep_exact=True")
+    truth = index.exact.dommax(u, v).astype(approx.dtype)
+    ans = jnp.where(ok, approx, truth)
+    if neg:
+        ans, approx = -ans, -approx
     return QueryResult(ans, approx, ~ok)

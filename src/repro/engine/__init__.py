@@ -17,22 +17,31 @@ it replaced — kept for A/B benchmarking, DESIGN.md §10):
 ``shard_plan`` + ``ShardedEngine`` (engine/sharded.py) partition a 1-D
 plan's segment tables across devices and answer through a ``shard_map``
 executor with psum/pmax combination — bit-identical to the single-device
-path.  This module is the execution layer behind the declarative
+path; ``shard_plan_2d`` + ``ShardedEngine2D`` do the same for 2-D plans by
+contiguous Morton z-ranges (DESIGN.md §12).  2-D plans carry measures:
+``execute_sum2d`` answers rectangle SUM via the 4-corner decomposition and
+``execute_extremum2d`` dominance MAX/MIN at a corner, with
+``DynamicEngine2D`` buffering updates and merging through the selective
+leaf refit.  This module is the execution layer behind the declarative
 ``repro.api.PolyFit`` facade, which new code should prefer; the Pallas
 kernels and their jnp oracles are implementation details below it.
 """
 from .dynamic import (DeltaBuffer, DeltaBuffer2D, DynamicEngine,
                       DynamicEngine2D)
 from .engine import (BACKENDS, Engine, execute, execute_count2d,
-                     execute_extremum, execute_sum)
+                     execute_extremum, execute_extremum2d, execute_sum,
+                     execute_sum2d)
 from .plan import (IndexPlan, IndexPlan2D, big_sentinel, build_plan,
                    build_plan_2d, pad_to_multiple)
-from .sharded import (ShardedDelta, ShardedEngine, ShardedPlan,
-                      make_shard_mesh, shard_buffer, shard_plan)
+from .sharded import (ShardedDelta, ShardedEngine, ShardedEngine2D,
+                      ShardedPlan, ShardedPlan2D, make_shard_mesh,
+                      shard_buffer, shard_plan, shard_plan_2d)
 
 __all__ = ["Engine", "BACKENDS", "IndexPlan", "IndexPlan2D", "build_plan",
            "build_plan_2d", "big_sentinel", "pad_to_multiple",
            "DynamicEngine", "DynamicEngine2D", "DeltaBuffer",
            "DeltaBuffer2D", "execute", "execute_sum", "execute_extremum",
-           "execute_count2d", "ShardedEngine", "ShardedPlan", "ShardedDelta",
-           "shard_plan", "shard_buffer", "make_shard_mesh"]
+           "execute_count2d", "execute_sum2d", "execute_extremum2d",
+           "ShardedEngine", "ShardedEngine2D", "ShardedPlan",
+           "ShardedPlan2D", "ShardedDelta", "shard_plan", "shard_plan_2d",
+           "shard_buffer", "make_shard_mesh"]

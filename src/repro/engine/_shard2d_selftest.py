@@ -1,0 +1,123 @@
+"""2-D sharded-plan self-test: forces an 8-device host topology (scoped to
+this module, like ``_shard_selftest``) and verifies that the z-range
+shard_map executors are bit-identical to the single-device path.
+
+    PYTHONPATH=src python -m repro.engine._shard2d_selftest
+
+Checks, across count2d/sum2d/max2d/min2d:
+
+* static answers (Q_abs and fused Q_rel refinement, including the refined
+  mask) equal the unsharded XLA executor bit for bit at S in {2, 8}
+  (S = 1 routes through the single-device executors by construction);
+* rectangle corners centred inside the leaves that straddle the z-range
+  cuts (the 2-D analogue of the 1-D boundary-straddling check);
+* post-insert/delete dynamic state: a live ``DynamicEngine2D`` snapshot
+  served through ``ShardedEngine2D`` with the replicated buffer yields
+  bit-identical corrected answers, before and after a selective-refit
+  merge.
+
+Prints ``ALL_SHARD2D_OK`` on success (the marker tests/test_sharded.py
+asserts on).
+"""
+from __future__ import annotations
+
+import os
+
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=8")
+
+import numpy as np  # noqa: E402
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", True)
+
+SHARDS = (2, 8)
+
+
+def _check(name, ref, got):
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(got),
+                                  err_msg=name)
+    print(f"[shard2d-selftest] {name}: OK")
+
+
+def run() -> None:
+    from repro.core import build_index_2d
+    from repro.engine import (DynamicEngine2D, Engine, ShardedEngine2D,
+                              build_plan_2d, shard_plan_2d)
+
+    assert jax.device_count() >= 8, jax.device_count()
+    rng = np.random.default_rng(11)
+    n = 1500
+    px, py = rng.uniform(0, 100, n), rng.uniform(0, 100, n)
+    w = 50 + 10 * np.sin(px / 9) + 10 * np.cos(py / 13)
+    nq = 64
+    lx = rng.uniform(0, 80, nq)
+    ux = lx + rng.uniform(5, 25, nq)
+    ly = rng.uniform(0, 80, nq)
+    uy = ly + rng.uniform(5, 25, nq)
+    cu = px[rng.integers(0, n, nq)]
+    cv = py[rng.integers(0, n, nq)]
+    eng = Engine(backend="xla")
+
+    for agg, delta in (("count2d", 25.0), ("sum2d", 400.0),
+                       ("max2d", 5.0), ("min2d", 5.0)):
+        meas = None if agg == "count2d" else w
+        idx = build_index_2d(px, py, measures=meas, agg=agg, deg=2,
+                             delta=delta, max_depth=6)
+        plan = build_plan_2d(idx)
+        rect = agg in ("count2d", "sum2d")
+        ranges = (lx, ux, ly, uy) if rect else (cu, cv)
+        ref = eng.query(plan, *ranges)
+        refr = eng.query(plan, *ranges, eps_rel=0.05)
+        for s in SHARDS:
+            se = ShardedEngine2D(s)
+            _check(f"{agg}.S{s}.qabs", ref.answer,
+                   se.query(plan, *ranges).answer)
+            got = se.query(plan, *ranges, eps_rel=0.05)
+            _check(f"{agg}.S{s}.qrel", refr.answer, got.answer)
+            _check(f"{agg}.S{s}.refined", refr.refined, got.refined)
+        # corners inside the leaves straddling the z-range cuts
+        sp = shard_plan_2d(plan, SHARDS[0])
+        rows = np.searchsorted(np.asarray(plan.leaf_z)[: plan.n_leaves],
+                               list(sp.zbounds[1:-1]))
+        eb = np.asarray(plan.leaf_bounds)[rows]
+        ex = 0.5 * (eb[:, 0] + eb[:, 1])
+        ey = 0.5 * (eb[:, 2] + eb[:, 3])
+        eranges = ((ex - 3.0, ex + 3.0, ey - 3.0, ey + 3.0) if rect
+                   else (ex, ey))
+        _check(f"{agg}.zedge", eng.query(plan, *eranges).answer,
+               ShardedEngine2D(SHARDS[0]).query(plan, *eranges).answer)
+
+    # dynamic state: the replicated delta buffer folds in exactly, before
+    # and after a selective-refit merge
+    for agg in ("sum2d", "max2d"):
+        delta = 400.0 if agg == "sum2d" else 5.0
+        idx = build_index_2d(px, py, measures=w, agg=agg, deg=2,
+                             delta=delta, max_depth=6)
+        dyn = DynamicEngine2D(idx, backend="xla", capacity=128,
+                              auto_refit=False)
+        dyn.insert(rng.uniform(5, 95, 24), rng.uniform(5, 95, 24),
+                   rng.uniform(30, 70, 24))
+        if agg == "sum2d":
+            dyn.delete(px[40:48], py[40:48])
+        ranges = (lx, ux, ly, uy) if agg == "sum2d" else (cu, cv)
+        ref = dyn.query(*ranges, eps_rel=0.05)
+        plan, buf = dyn.snapshot()
+        for s in SHARDS:
+            got = ShardedEngine2D(s).query(plan, *ranges, eps_rel=0.05,
+                                           buf=buf)
+            _check(f"dyn.{agg}.S{s}", ref.answer, got.answer)
+        dyn.flush()
+        assert dyn.last_refit_stats is not None
+        assert not dyn.last_refit_stats["rebuild"]
+        ref2 = dyn.query(*ranges)
+        plan2, buf2 = dyn.snapshot()
+        _check(f"dyn.{agg}.postmerge.S{SHARDS[0]}", ref2.answer,
+               ShardedEngine2D(SHARDS[0]).query(plan2, *ranges,
+                                                buf=buf2).answer)
+
+    print("ALL_SHARD2D_OK")
+
+
+if __name__ == "__main__":
+    run()

@@ -49,18 +49,22 @@ import numpy as np
 
 from ..core.fitting import PolyModel, fit_minimax_lp
 from ..core.index import PolyFitIndex1D, _continuum_post, assemble_index_1d
-from ..core.index2d import PolyFitIndex2D, build_index_2d
+from ..core.index2d import PolyFitIndex2D, selective_refit_2d
 from ..core.queries import QueryResult
 from ..core.segmentation import FastAcceptFitter, greedy_segmentation
 from ..kernels import ref as _ref
 from ..kernels.delta_scan import (delta_count2d_gather_pallas,
                                   delta_count2d_pallas,
+                                  delta_dommax2d_gather_pallas,
+                                  delta_dommax2d_pallas,
                                   delta_max_gather_pallas, delta_max_pallas,
+                                  delta_sum2d_gather_pallas,
+                                  delta_sum2d_pallas,
                                   delta_sum_gather_pallas, delta_sum_pallas)
 from ..kernels.poly_eval import DEFAULT_BQ
 from .engine import (_bucket_size, _pad_bucket, check_pow2, raw_count2d,
-                     raw_extremum, raw_sum, truth_count2d, truth_extremum,
-                     truth_sum)
+                     raw_eval2d, raw_extremum, raw_sum, truth_count2d,
+                     truth_dommax2d, truth_extremum, truth_sum, truth_sum2d)
 from .plan import (IndexPlan, IndexPlan2D, big_sentinel, build_plan,
                    build_plan_2d)
 
@@ -119,12 +123,20 @@ jax.tree_util.register_dataclass(
 
 @dataclasses.dataclass(frozen=True)
 class DeltaBuffer2D:
-    """Insert/delete point logs for a 2-key COUNT plan (x-sorted).
+    """Insert/delete point logs for a 2-key plan (x-sorted).
 
     ``*_ylv`` are merge-sort-tree level arrays (level l = y values sorted
     within blocks of 2^l of the x-order), rebuilt on append, so the
     locate->gather correction answers each corner's dominance count in
     O(log^2 cap) instead of scanning the log.
+
+    Measure-carrying plans (sum2d/max2d/min2d) additionally log each
+    point's measure (``*_w``, internal space — negated for min2d, 0 on
+    sentinel padding) and, for the locate->gather backend, the weighted
+    merge-sort-tree companions: per-block inclusive prefix sums
+    (``*_wcum``) for the SUM correction and prefix maxima (``ins_wpmax``)
+    for the dominance-MAX correction (extremal deletes merge eagerly, so
+    the delete log needs no max structure).
     """
 
     ins_x: jnp.ndarray
@@ -134,18 +146,32 @@ class DeltaBuffer2D:
     del_y: jnp.ndarray
     del_ylv: jnp.ndarray    # (L, cap)
     cap: int
+    # -- measure-carrying extension (sum2d/max2d/min2d plans) ------------
+    ins_w: Optional[jnp.ndarray] = None      # (cap,) measures; 0 on padding
+    del_w: Optional[jnp.ndarray] = None
+    ins_wcum: Optional[jnp.ndarray] = None   # (L, cap) block prefix sums
+    del_wcum: Optional[jnp.ndarray] = None
+    ins_wpmax: Optional[jnp.ndarray] = None  # (L, cap) block prefix maxima
 
     @staticmethod
-    def empty(cap: int, dtype=jnp.float64) -> "DeltaBuffer2D":
+    def empty(cap: int, dtype=jnp.float64,
+              weighted: bool = False) -> "DeltaBuffer2D":
         big = big_sentinel(dtype)
         s = jnp.full((cap,), big, dtype)
         lv = jnp.full((max(1, cap.bit_length()), cap), big, dtype)
-        return DeltaBuffer2D(s, s, lv, s, s, lv, cap)
+        if not weighted:
+            return DeltaBuffer2D(s, s, lv, s, s, lv, cap)
+        z = jnp.zeros((cap,), dtype)
+        zlv = jnp.zeros((max(1, cap.bit_length()), cap), dtype)
+        return DeltaBuffer2D(s, s, lv, s, s, lv, cap,
+                             ins_w=z, del_w=z, ins_wcum=zlv, del_wcum=zlv,
+                             ins_wpmax=zlv)
 
 
 jax.tree_util.register_dataclass(
     DeltaBuffer2D,
-    data_fields=["ins_x", "ins_y", "ins_ylv", "del_x", "del_y", "del_ylv"],
+    data_fields=["ins_x", "ins_y", "ins_ylv", "del_x", "del_y", "del_ylv",
+                 "ins_w", "del_w", "ins_wcum", "del_wcum", "ins_wpmax"],
     meta_fields=["cap"],
 )
 
@@ -192,6 +218,38 @@ def _mst_levels_jnp(ys, *, cap: int):
         b = 1 << l
         rows.append(jnp.sort(ys.reshape(cap // b, b), axis=1).reshape(-1))
     return jnp.stack(rows)
+
+
+@partial(jax.jit, static_argnames=("cap",))
+def _append_sorted3(kx, ky, kw, nx, ny, nw, *, cap: int):
+    """Merge a (sentinel-padded) point batch with measures into the
+    x-sorted log, keeping shape (the 3-array twin of ``_append_sorted``)."""
+    x = jnp.concatenate([kx, nx])
+    y = jnp.concatenate([ky, ny])
+    w = jnp.concatenate([kw, nw])
+    order = jnp.argsort(x)   # stable: existing entries first on ties
+    return x[order][:cap], y[order][:cap], w[order][:cap]
+
+
+@partial(jax.jit, static_argnames=("cap",))
+def _mst_levels_w_jnp(ys, ws, *, cap: int):
+    """Weighted merge-sort-tree levels of the x-sorted log: per-level
+    block-sorted y arrays plus per-block inclusive weight prefix sums and
+    prefix maxima (the structures ``mst_weighted_prefix`` consumes).
+    Returns (ylv, wcum, wpmax), each (L, cap)."""
+    ylv, wcum, wpmax = [ys], [ws], [ws]
+    y, w = ys, ws
+    for l in range(1, max(1, cap.bit_length())):
+        b = 1 << l
+        y2 = y.reshape(cap // b, b)
+        perm = jnp.argsort(y2, axis=1)   # jax sorts are stable
+        y2 = jnp.take_along_axis(y2, perm, axis=1)
+        w2 = jnp.take_along_axis(w.reshape(cap // b, b), perm, axis=1)
+        y, w = y2.reshape(-1), w2.reshape(-1)
+        ylv.append(y)
+        wcum.append(jnp.cumsum(w2, axis=1).reshape(-1))
+        wpmax.append(jax.lax.cummax(w2, axis=1).reshape(-1))
+    return jnp.stack(ylv), jnp.stack(wcum), jnp.stack(wpmax)
 
 
 def _pad_batch(arr: np.ndarray, fill, dtype) -> jnp.ndarray:
@@ -243,6 +301,29 @@ def _delta_count2d(lx, ux, ly, uy, kx, ky, ylv, *, backend, interpret, bq,
         return delta_count2d_pallas(lx, ux, ly, uy, kx, ky, bq=bq,
                                     interpret=interpret, dtype=dtype)
     return _ref.delta_count2d_ref(lx, ux, ly, uy, kx, ky, dtype=dtype)
+
+
+def _delta_sum2d(lx, ux, ly, uy, kx, ky, wv, ylv, wcum, *, backend,
+                 interpret, bq):
+    if backend == "pallas":
+        # locate->gather: weighted merge-sort-tree sums, O(log^2 D)
+        return delta_sum2d_gather_pallas(lx, ux, ly, uy, kx, ylv, wcum,
+                                         bq=bq, interpret=interpret)
+    if backend == "pallas_scan":
+        return delta_sum2d_pallas(lx, ux, ly, uy, kx, ky, wv, bq=bq,
+                                  interpret=interpret)
+    return _ref.delta_sum2d_ref(lx, ux, ly, uy, kx, ky, wv)
+
+
+def _delta_dommax2d(u, v, kx, ky, wv, ylv, wpmax, *, backend, interpret, bq):
+    if backend == "pallas":
+        # locate->gather: weighted merge-sort-tree maxima, O(log^2 D)
+        return delta_dommax2d_gather_pallas(u, v, kx, ylv, wpmax, bq=bq,
+                                            interpret=interpret)
+    if backend == "pallas_scan":
+        return delta_dommax2d_pallas(u, v, kx, ky, wv, bq=bq,
+                                     interpret=interpret)
+    return _ref.delta_dommax2d_ref(u, v, kx, ky, wv)
 
 
 # ---------------------------------------------------------------------------
@@ -328,6 +409,62 @@ def _exec_dyn_count2d(plan: IndexPlan2D, buf: DeltaBuffer2D, lx, ux, ly, uy,
     ok = approx >= 4.0 * plan.delta * (1.0 + 1.0 / eps_rel)   # Lemma 6.4
     truth = truth_count2d(plan, lxr, uxr, lyr, uyr) + corr
     return jnp.where(ok, approx, truth), approx, ~ok
+
+
+@partial(jax.jit, static_argnames=("backend", "eps_rel", "interpret", "bq"))
+def _exec_dyn_sum2d(plan: IndexPlan2D, buf: DeltaBuffer2D, lx, ux, ly, uy,
+                    *, backend: str, eps_rel: Optional[float],
+                    interpret: bool, bq: int):
+    dt = plan.dtype
+    x0, x1, y0, y1 = plan.root
+    lxr, uxr, lyr, uyr = (q.astype(dt) for q in (lx, ux, ly, uy))
+    lxc, uxc = (jnp.clip(q, x0, x1) for q in (lxr, uxr))
+    lyc, uyc = (jnp.clip(q, y0, y1) for q in (lyr, uyr))
+    static = raw_count2d(plan, lxc, uxc, lyc, uyc, backend=backend,
+                         interpret=interpret, bq=bq)
+    # exact weighted correction — unclamped: buffered points may lie
+    # outside the static root rectangle
+    corr = (_delta_sum2d(lxr, uxr, lyr, uyr, buf.ins_x, buf.ins_y,
+                         buf.ins_w, buf.ins_ylv, buf.ins_wcum,
+                         backend=backend, interpret=interpret, bq=bq)
+            - _delta_sum2d(lxr, uxr, lyr, uyr, buf.del_x, buf.del_y,
+                           buf.del_w, buf.del_ylv, buf.del_wcum,
+                           backend=backend, interpret=interpret, bq=bq))
+    approx = static + corr
+    if eps_rel is None:
+        return approx, approx, jnp.zeros(approx.shape, bool)
+    ok = approx >= 4.0 * plan.delta * (1.0 + 1.0 / eps_rel)   # Lemma 6.4
+    truth = truth_sum2d(plan, lxr, uxr, lyr, uyr) + corr
+    return jnp.where(ok, approx, truth), approx, ~ok
+
+
+@partial(jax.jit, static_argnames=("backend", "eps_rel", "interpret", "bq"))
+def _exec_dyn_dommax2d(plan: IndexPlan2D, buf: DeltaBuffer2D, u, v, *,
+                       backend: str, eps_rel: Optional[float],
+                       interpret: bool, bq: int):
+    """MAX space throughout; the delete log is empty by construction
+    (extremal deletes trigger an eager merge in DynamicEngine2D.delete)."""
+    dt = plan.dtype
+    x0, x1, y0, y1 = plan.root
+    ur, vr = u.astype(dt), v.astype(dt)
+    uc = jnp.clip(ur, x0, x1)
+    vc = jnp.clip(vr, y0, y1)
+    static = raw_eval2d(plan, uc, vc, backend=backend, interpret=interpret,
+                        bq=bq)
+    ins = _delta_dommax2d(ur, vr, buf.ins_x, buf.ins_y, buf.ins_w,
+                          buf.ins_ylv, buf.ins_wpmax, backend=backend,
+                          interpret=interpret, bq=bq)
+    approx = jnp.maximum(static, ins)
+    neg = plan.agg == "min2d"
+    if eps_rel is None:
+        out = -approx if neg else approx
+        return out, out, jnp.zeros(out.shape, bool)
+    ok = approx >= plan.delta * (1.0 + 1.0 / eps_rel)
+    truth = jnp.maximum(truth_dommax2d(plan, ur, vr), ins)
+    ans = jnp.where(ok, approx, truth)
+    if neg:
+        ans, approx = -ans, -approx
+    return ans, approx, ~ok
 
 
 # ---------------------------------------------------------------------------
@@ -792,9 +929,11 @@ class DynamicEngine(_DeltaBufferedEngine):
 
 
 class DynamicEngine2D(_DeltaBufferedEngine):
-    """Updatable 2-key COUNT plan: buffered point inserts/deletes with the
-    fused exact correction; the merge pass rebuilds the quadtree (selective
-    leaf refit is a ROADMAP open item)."""
+    """Updatable 2-key plan (COUNT/SUM/dominance MAX/MIN): buffered point
+    inserts/deletes with the fused exact correction; the merge pass runs
+    ``core.index2d.selective_refit_2d``, touching only the leaves whose
+    regions the changed points' dominance boundaries cross (stats of the
+    last merge in ``last_refit_stats``)."""
 
     def __init__(self, index: PolyFitIndex2D, *, backend: str = "xla",
                  capacity: int = 1024, interpret: bool = True,
@@ -806,27 +945,46 @@ class DynamicEngine2D(_DeltaBufferedEngine):
                            interpret=interpret, bq=bq,
                            min_bucket=min_bucket, auto_refit=auto_refit,
                            background=background)
+        self._agg = index.agg
+        self.last_refit_stats: Optional[dict] = None
         px = np.asarray(index.exact.xs)
         py = np.asarray(index.exact.ys_levels[0])
-        self._install(index, px, py)
+        if self._weighted:
+            if index.measures_sorted is None:
+                raise ValueError(f"a {self._agg} DynamicEngine2D needs an "
+                                 "index built with measures")
+            pw = np.asarray(index.measures_sorted)
+        else:
+            pw = np.ones_like(px)
+        self._install(index, px, py, pw)
+
+    @property
+    def _weighted(self) -> bool:
+        return self._agg != "count2d"
+
+    @property
+    def agg(self) -> str:
+        return self._agg
 
     def _install(self, index: PolyFitIndex2D, px: np.ndarray, py: np.ndarray,
-                 residual_ins: Optional[list] = None,
+                 pw: np.ndarray, residual_ins: Optional[list] = None,
                  residual_del: Optional[list] = None) -> None:
         with self._lock:
             self._index = index
             self._px = px
             self._py = py
-            self._ins_log: List[Tuple[np.ndarray, np.ndarray]] = []
-            self._del_log: List[Tuple[np.ndarray, np.ndarray]] = []
+            self._pw = pw
+            self._ins_log: List[Tuple[np.ndarray, np.ndarray, np.ndarray]] = []
+            self._del_log: List[Tuple[np.ndarray, np.ndarray, np.ndarray]] = []
             self._n_pending = 0
             plan = build_plan_2d(index)
-            buf = DeltaBuffer2D.empty(self.capacity, plan.dtype)
+            buf = DeltaBuffer2D.empty(self.capacity, plan.dtype,
+                                      weighted=self._weighted)
             self._state = (plan, buf)
-            for x, y in (residual_ins or []):
-                self._log_ops(x, y, delete=False)
-            for x, y in (residual_del or []):
-                self._log_ops(x, y, delete=True)
+            for x, y, w in (residual_ins or []):
+                self._log_ops(x, y, w, delete=False)
+            for x, y, w in (residual_del or []):
+                self._log_ops(x, y, w, delete=True)
 
     @property
     def plan(self) -> IndexPlan2D:
@@ -836,7 +994,8 @@ class DynamicEngine2D(_DeltaBufferedEngine):
     def index(self) -> PolyFitIndex2D:
         return self._index
 
-    def _log_ops(self, xs: np.ndarray, ys: np.ndarray, delete: bool) -> None:
+    def _log_ops(self, xs: np.ndarray, ys: np.ndarray, ws: np.ndarray,
+                 delete: bool) -> None:
         if self._n_pending + len(xs) > self.capacity:
             raise RuntimeError("delta buffer overflow: concurrent writers "
                                "bypassed _ensure_room")
@@ -845,103 +1004,172 @@ class DynamicEngine2D(_DeltaBufferedEngine):
         big = big_sentinel(dt)
         pkx = _pad_batch(xs, big, dt)
         pky = _pad_batch(ys, big, dt)
+        pkw = _pad_batch(ws, 0.0, dt)
         # merge-sort-tree levels are only read by the locate->gather
         # correction, so only that backend pays the per-append block sorts
         lv = self.backend == "pallas"
-        if delete:
-            dx, dy = _append_sorted(buf.del_x, buf.del_y, pkx, pky,
-                                    cap=buf.cap)
-            buf = dataclasses.replace(
-                buf, del_x=dx, del_y=dy,
-                del_ylv=_mst_levels_jnp(dy, cap=buf.cap) if lv
-                else buf.del_ylv)
-            self._del_log.append((xs, ys))
+        if not self._weighted:
+            if delete:
+                dx, dy = _append_sorted(buf.del_x, buf.del_y, pkx, pky,
+                                        cap=buf.cap)
+                buf = dataclasses.replace(
+                    buf, del_x=dx, del_y=dy,
+                    del_ylv=_mst_levels_jnp(dy, cap=buf.cap) if lv
+                    else buf.del_ylv)
+            else:
+                ix, iy = _append_sorted(buf.ins_x, buf.ins_y, pkx, pky,
+                                        cap=buf.cap)
+                buf = dataclasses.replace(
+                    buf, ins_x=ix, ins_y=iy,
+                    ins_ylv=_mst_levels_jnp(iy, cap=buf.cap) if lv
+                    else buf.ins_ylv)
+        elif delete:
+            dx, dy, dw = _append_sorted3(buf.del_x, buf.del_y, buf.del_w,
+                                         pkx, pky, pkw, cap=buf.cap)
+            if lv:
+                ylv, wcum, _ = _mst_levels_w_jnp(dy, dw, cap=buf.cap)
+            else:
+                ylv, wcum = buf.del_ylv, buf.del_wcum
+            buf = dataclasses.replace(buf, del_x=dx, del_y=dy, del_w=dw,
+                                      del_ylv=ylv, del_wcum=wcum)
         else:
-            ix, iy = _append_sorted(buf.ins_x, buf.ins_y, pkx, pky,
-                                    cap=buf.cap)
-            buf = dataclasses.replace(
-                buf, ins_x=ix, ins_y=iy,
-                ins_ylv=_mst_levels_jnp(iy, cap=buf.cap) if lv
-                else buf.ins_ylv)
-            self._ins_log.append((xs, ys))
+            ix, iy, iw = _append_sorted3(buf.ins_x, buf.ins_y, buf.ins_w,
+                                         pkx, pky, pkw, cap=buf.cap)
+            if lv:
+                ylv, wcum, wpmax = _mst_levels_w_jnp(iy, iw, cap=buf.cap)
+            else:
+                ylv, wcum, wpmax = buf.ins_ylv, buf.ins_wcum, buf.ins_wpmax
+            buf = dataclasses.replace(buf, ins_x=ix, ins_y=iy, ins_w=iw,
+                                      ins_ylv=ylv, ins_wcum=wcum,
+                                      ins_wpmax=wpmax)
+        (self._del_log if delete else self._ins_log).append((xs, ys, ws))
         self._state = (plan, buf)
         self._n_pending += len(xs)
 
-    def insert(self, xs, ys) -> None:
+    def insert(self, xs, ys, ws=None) -> None:
+        """Buffer new points; ``ws`` are the measures for sum2d/max2d/min2d
+        tables (count2d counts records, measures must be omitted)."""
         xs = np.atleast_1d(np.asarray(xs, np.float64))
         ys = np.atleast_1d(np.asarray(ys, np.float64))
+        if not self._weighted:
+            if ws is not None:
+                raise ValueError("measures only apply to sum2d/max2d/min2d")
+            ws = np.ones_like(xs)
+        else:
+            if ws is None:
+                raise ValueError(f"measures required for agg={self._agg!r}")
+            ws = np.broadcast_to(
+                np.asarray(ws, np.float64), xs.shape).copy()
+            if self._agg == "min2d":
+                ws = -ws
         self._ensure_room(len(xs))
         with self._lock:
-            self._log_ops(xs, ys, delete=False)
+            self._log_ops(xs, ys, ws, delete=False)
             trigger = self.auto_refit and self._n_pending >= self.capacity
         if trigger:
             self.refit(wait=not self.background)
 
     def delete(self, xs, ys) -> None:
+        """Buffer delete tombstones for existing points (KeyError if a
+        point has no live occurrence).  Dominance MAX/MIN deletes merge
+        eagerly: a removed point may carry the maximum, so no monotone
+        correction exists (the 1-D rule, DESIGN.md §9)."""
         xs = np.atleast_1d(np.asarray(xs, np.float64))
         ys = np.atleast_1d(np.asarray(ys, np.float64))
         self._ensure_room(len(xs))
         with self._lock:
+            ws = []
             batch_tomb: dict = {}   # duplicates within this batch count too
             for x, y in zip(xs, ys):
                 pt = (float(x), float(y))
-                self._check_live(*pt, extra_tomb=batch_tomb.get(pt, 0))
+                ws.append(self._find_victim(*pt,
+                                            extra_tomb=batch_tomb.get(pt, 0)))
                 batch_tomb[pt] = batch_tomb.get(pt, 0) + 1
-            self._log_ops(xs, ys, delete=True)
+            self._log_ops(xs, ys, np.asarray(ws), delete=True)
             trigger = self.auto_refit and self._n_pending >= self.capacity
-        if trigger:
+        if self._agg in ("max2d", "min2d"):
+            self.refit(wait=True)
+        elif trigger:
             self.refit(wait=not self.background)
 
-    def _count_point(self, log, x: float, y: float) -> int:
-        return sum(int(np.sum((lx == x) & (ly == y))) for lx, ly in log)
-
-    def _check_live(self, x: float, y: float, extra_tomb: int = 0) -> None:
+    def _point_pool(self, x: float, y: float) -> list:
+        """Measures (internal space) of the live-or-tombstoned occurrences
+        of (x, y): base occurrences first (x-order), then pending inserts."""
         i0 = np.searchsorted(self._px, x, side="left")
         i1 = np.searchsorted(self._px, x, side="right")
-        base = int(np.sum(self._py[i0:i1] == y))
-        live = (base + self._count_point(self._ins_log, x, y)
-                - self._count_point(self._del_log, x, y) - extra_tomb)
-        if live <= 0:
+        pool = list(self._pw[i0:i1][self._py[i0:i1] == y])
+        for lx, ly, lw in self._ins_log:
+            pool.extend(lw[(lx == x) & (ly == y)])
+        return pool
+
+    def _find_victim(self, x: float, y: float, extra_tomb: int = 0) -> float:
+        """Measure of the occurrence this tombstone removes (KeyError when
+        every occurrence is already tombstoned)."""
+        tomb = extra_tomb + sum(int(np.sum((lx == x) & (ly == y)))
+                                for lx, ly, _ in self._del_log)
+        pool = self._point_pool(x, y)
+        if tomb >= len(pool):
             raise KeyError(f"delete of point ({x!r}, {y!r}): not present")
+        return float(pool[tomb])
 
     # -- merge / refit (lifecycle in _DeltaBufferedEngine) ----------------
 
     def _snapshot(self):
-        return (self._index, self._px, self._py,
+        return (self._index, self._px, self._py, self._pw,
                 list(self._ins_log), list(self._del_log))
 
+    @staticmethod
+    def _flatten3(log):
+        if not log:
+            z = np.zeros((0,))
+            return z, z, z
+        return tuple(np.concatenate([e[i] for e in log]) for i in range(3))
+
     def _merge(self, snap, mark) -> None:
-        index, px, py, ins_log, del_log = snap
-        ix, iy = self._flatten(ins_log)
-        dx, dy = self._flatten(del_log)
+        index, px, py, pw, ins_log, del_log = snap
+        ix, iy, iw = (np.array(a) for a in self._flatten3(ins_log))
+        dx, dy, dw = self._flatten3(del_log)
         keep = np.ones(len(px), bool)
-        for x, y in zip(dx, dy):
-            cand = np.where(keep & (px == x) & (py == y))[0]
-            if len(cand):
-                keep[cand[0]] = False
+        for x, y, w in zip(dx, dy, dw):
+            # a tombstone cancels a matching pending insert first, then the
+            # base occurrence carrying the victim's measure
+            m = np.where((ix == x) & (iy == y) & (iw == w)
+                         & ~np.isnan(ix))[0]
+            if len(m):
+                ix[m[0]] = iy[m[0]] = iw[m[0]] = np.nan
                 continue
-            m = np.where((ix == x) & (iy == y) & ~np.isnan(ix))[0]
-            if not len(m):
+            cand = np.where(keep & (px == x) & (py == y) & (pw == w))[0]
+            if not len(cand):
+                cand = np.where(keep & (px == x) & (py == y))[0]
+            if not len(cand):
                 raise KeyError(f"delete of point ({x!r}, {y!r})")
-            ix[m[0]] = iy[m[0]] = np.nan
+            keep[cand[0]] = False
         alive = ~np.isnan(ix) if len(ix) else np.zeros(0, bool)
         new_px = np.concatenate([px[keep], ix[alive]])
         new_py = np.concatenate([py[keep], iy[alive]])
+        new_pw = np.concatenate([pw[keep], iw[alive]])
         if len(new_px) == 0:
             raise ValueError("merge would empty the dataset")
-        new_index = build_index_2d(new_px, new_py, deg=index.deg,
-                                   delta=index.delta,
-                                   max_depth=index.max_depth)
+        # net changes only: an insert+delete pair that cancelled inside the
+        # buffer never touched the fitted function
+        removed = ~keep
+        cx = np.concatenate([ix[alive], px[removed]])
+        cy = np.concatenate([iy[alive], py[removed]])
+        cw = np.concatenate([iw[alive], -pw[removed]])
+        new_index, stats = selective_refit_2d(index, new_px, new_py, new_pw,
+                                              cx, cy, cw)
         order = np.argsort(new_px, kind="stable")
         with self._lock:
             residual_ins = self._ins_log[mark[0]:]
             residual_del = self._del_log[mark[1]:]
             self._install(new_index, new_px[order], new_py[order],
-                          residual_ins, residual_del)
+                          new_pw[order], residual_ins, residual_del)
+            self.last_refit_stats = stats
             self.refit_count += 1
 
-    def count2d(self, lx, ux, ly, uy,
-                eps_rel: Optional[float] = None) -> QueryResult:
+    # -- queries ---------------------------------------------------------
+
+    def _run_rect(self, executor, lx, ux, ly, uy, eps_rel):
         plan, buf = self._state
         if eps_rel is not None and plan.ref_xs is None:
             raise ValueError("Q_rel refinement requires exact arrays")
@@ -952,9 +1180,41 @@ class DynamicEngine2D(_DeltaBufferedEngine):
         x0, _, y0, _ = plan.root
         fills = (x0, x0, y0, y0)
         padded = [_pad_bucket(q, size, f) for q, f in zip(qs, fills)]
-        ans, approx, refined = _exec_dyn_count2d(
+        ans, approx, refined = executor(
             plan, buf, *padded, backend=self.backend, eps_rel=eps_rel,
             interpret=self.interpret, bq=bq)
         return QueryResult(ans[:n], approx[:n], refined[:n])
 
-    query = count2d
+    def count2d(self, lx, ux, ly, uy,
+                eps_rel: Optional[float] = None) -> QueryResult:
+        assert self._agg == "count2d", self._agg
+        return self._run_rect(_exec_dyn_count2d, lx, ux, ly, uy, eps_rel)
+
+    def sum2d(self, lx, ux, ly, uy,
+              eps_rel: Optional[float] = None) -> QueryResult:
+        assert self._agg == "sum2d", self._agg
+        return self._run_rect(_exec_dyn_sum2d, lx, ux, ly, uy, eps_rel)
+
+    def extremum2d(self, u, v,
+                   eps_rel: Optional[float] = None) -> QueryResult:
+        assert self._agg in ("max2d", "min2d"), self._agg
+        plan, buf = self._state
+        if eps_rel is not None and plan.ref_wpmax is None:
+            raise ValueError("Q_rel refinement requires exact arrays")
+        u, v = jnp.asarray(u), jnp.asarray(v)
+        n = u.shape[0]
+        size = _bucket_size(n, self.min_bucket)
+        bq = min(self.bq, size)
+        x0, _, y0, _ = plan.root
+        ans, approx, refined = _exec_dyn_dommax2d(
+            plan, buf, _pad_bucket(u, size, x0), _pad_bucket(v, size, y0),
+            backend=self.backend, eps_rel=eps_rel, interpret=self.interpret,
+            bq=bq)
+        return QueryResult(ans[:n], approx[:n], refined[:n])
+
+    def query(self, *ranges, eps_rel: Optional[float] = None) -> QueryResult:
+        if self._agg == "count2d":
+            return self.count2d(*ranges, eps_rel=eps_rel)
+        if self._agg == "sum2d":
+            return self.sum2d(*ranges, eps_rel=eps_rel)
+        return self.extremum2d(*ranges, eps_rel=eps_rel)

@@ -38,20 +38,24 @@ import jax
 import jax.numpy as jnp
 
 from ..core.exact import sparse_table_range_max
-from ..core.index2d import mst_cf, quadtree_eval_cf
+from ..core.index2d import mst_cf, mst_cf_sum, mst_dommax, quadtree_eval_cf
 from ..core.poly import eval_segments
 from ..core.queries import QueryResult, max_eval_segments
 from ..kernels import ref as _ref
 from ..kernels.leaf_eval2d import (corner_count2d_gather_pallas,
-                                   corner_count2d_pallas)
+                                   corner_count2d_pallas,
+                                   corner_eval2d_gather_pallas,
+                                   corner_eval2d_pallas)
 from ..kernels.poly_eval import DEFAULT_BQ
 from ..kernels.range_max import range_max_gather_pallas, range_max_pallas
 from ..kernels.range_sum import range_sum_gather_pallas, range_sum_pallas
 from .plan import IndexPlan, IndexPlan2D
 
 __all__ = ["Engine", "BACKENDS", "raw_sum", "raw_extremum", "raw_count2d",
-           "truth_sum", "truth_extremum", "truth_count2d", "check_pow2",
-           "execute_sum", "execute_extremum", "execute_count2d", "execute"]
+           "raw_eval2d", "truth_sum", "truth_extremum", "truth_count2d",
+           "truth_sum2d", "truth_dommax2d", "check_pow2", "execute_sum",
+           "execute_extremum", "execute_count2d", "execute_sum2d",
+           "execute_extremum2d", "execute"]
 
 BACKENDS = ("xla", "pallas", "pallas_scan", "ref")
 
@@ -150,6 +154,31 @@ def raw_count2d(plan: IndexPlan2D, lxc, uxc, lyc, uyc, *, backend: str,
     return ev(uxc, uyc) - ev(lxc, uyc) - ev(uxc, lyc) + ev(lxc, lyc)
 
 
+def raw_eval2d(plan: IndexPlan2D, uc, vc, *, backend: str, interpret: bool,
+               bq: int):
+    """Backend-dispatched single-corner evaluation P_{leaf(u,v)}(u, v) —
+    the dominance MAX/MIN query path (clamped corners).  Dominance queries
+    touch exactly one leaf, so there is no inclusion-exclusion step."""
+    if backend == "pallas" and plan.leaf_z is not None:
+        return corner_eval2d_gather_pallas(
+            uc, vc, plan.xcuts, plan.ycuts, plan.leaf_z, plan.leaf_bounds,
+            plan.leaf_coeffs, deg=plan.deg, depth=plan.max_depth, bq=bq,
+            interpret=interpret)
+    if backend in ("pallas", "pallas_scan"):
+        # scan fallback: plans whose depth exceeds the Morton int32 range
+        return corner_eval2d_pallas(
+            uc, vc, plan.leaf_mx0, plan.leaf_mx1, plan.leaf_my0,
+            plan.leaf_my1, plan.leaf_bounds, plan.leaf_coeffs,
+            deg=plan.deg, bq=bq, bh=plan.bh, interpret=interpret)
+    if backend == "ref":
+        return _ref.leaf_eval2d_ref(
+            uc, vc, plan.leaf_mx0, plan.leaf_mx1, plan.leaf_my0,
+            plan.leaf_my1, plan.leaf_bounds, plan.leaf_coeffs, plan.deg)
+    return quadtree_eval_cf(plan.children, plan.leaf_of, plan.bounds,
+                            plan.qt_coeffs, plan.leaf_nodes, plan.max_depth,
+                            plan.deg, uc, vc)
+
+
 def truth_sum(plan: IndexPlan, lq, uq):
     """Exact static SUM/COUNT over (lq, uq] from the plan's refinement CF."""
     return _cf_at(plan.ref_keys, plan.ref_cf, uq) - _cf_at(
@@ -168,6 +197,21 @@ def truth_count2d(plan: IndexPlan2D, lx, ux, ly, uy):
     cf = lambda u, v: mst_cf(plan.ref_xs, plan.ref_ys_levels, u, v)
     return (cf(ux, uy) - cf(lx, uy) - cf(ux, ly) + cf(lx, ly)).astype(
         plan.dtype)
+
+
+def truth_sum2d(plan: IndexPlan2D, lx, ux, ly, uy):
+    """Exact static 2-key SUM over (lx, ux] x (ly, uy] (weighted tree)."""
+    cf = lambda u, v: mst_cf_sum(plan.ref_xs, plan.ref_ys_levels,
+                                 plan.ref_wcum, u, v)
+    return (cf(ux, uy) - cf(lx, uy) - cf(ux, ly) + cf(lx, ly)).astype(
+        plan.dtype)
+
+
+def truth_dommax2d(plan: IndexPlan2D, u, v):
+    """Exact static dominance MAX over {x <= u, y <= v}, in MAX space
+    (-inf when the dominated set is empty)."""
+    return mst_dommax(plan.ref_xs, plan.ref_ys_levels, plan.ref_wpmax,
+                      u, v).astype(plan.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -215,8 +259,11 @@ def _exec_extremum(plan: IndexPlan, lq, uq, *, backend: str,
 
 
 @partial(jax.jit, static_argnames=("backend", "eps_rel", "interpret", "bq"))
-def _exec_count2d(plan: IndexPlan2D, lx, ux, ly, uy, *, backend: str,
-                  eps_rel: Optional[float], interpret: bool, bq: int):
+def _exec_rect2d(plan: IndexPlan2D, lx, ux, ly, uy, *, backend: str,
+                 eps_rel: Optional[float], interpret: bool, bq: int):
+    """Shared 4-corner rectangle executor for 2-key COUNT and SUM (the raw
+    path is identical — only the exact-refinement truth differs, selected
+    at trace time from the plan's static ``agg``)."""
     dt = plan.dtype
     x0, x1, y0, y1 = plan.root
     lxc, uxc = (jnp.clip(q.astype(dt), x0, x1) for q in (lx, ux))
@@ -227,8 +274,33 @@ def _exec_count2d(plan: IndexPlan2D, lx, ux, ly, uy, *, backend: str,
         return approx, approx, jnp.zeros(approx.shape, bool)
     # Lemma 6.4 test: A >= 4*delta*(1 + 1/eps_rel)
     ok = approx >= 4.0 * plan.delta * (1.0 + 1.0 / eps_rel)
-    truth = truth_count2d(plan, lx, ux, ly, uy)
+    truth = (truth_sum2d(plan, lx, ux, ly, uy) if plan.agg == "sum2d"
+             else truth_count2d(plan, lx, ux, ly, uy))
     return jnp.where(ok, approx, truth), approx, ~ok
+
+
+@partial(jax.jit, static_argnames=("backend", "eps_rel", "interpret", "bq"))
+def _exec_extremum2d(plan: IndexPlan2D, u, v, *, backend: str,
+                     eps_rel: Optional[float], interpret: bool, bq: int):
+    """Dominance MAX/MIN: one fitted-surface evaluation per corner, in MAX
+    space throughout (min2d plans are built on negated measures)."""
+    dt = plan.dtype
+    x0, x1, y0, y1 = plan.root
+    uc = jnp.clip(u.astype(dt), x0, x1)
+    vc = jnp.clip(v.astype(dt), y0, y1)
+    approx = raw_eval2d(plan, uc, vc, backend=backend, interpret=interpret,
+                        bq=bq)
+    neg = plan.agg == "min2d"
+    if eps_rel is None:
+        out = -approx if neg else approx
+        return out, out, jnp.zeros(out.shape, bool)
+    # Lemma 5.4 shape: A >= delta * (1 + 1/eps_rel), in MAX space
+    ok = approx >= plan.delta * (1.0 + 1.0 / eps_rel)
+    truth = truth_dommax2d(plan, u.astype(dt), v.astype(dt))
+    ans = jnp.where(ok, approx, truth)
+    if neg:
+        ans, approx = -ans, -approx
+    return ans, approx, ~ok
 
 
 # ---------------------------------------------------------------------------
@@ -295,11 +367,8 @@ def execute_extremum(plan: IndexPlan, lq, uq, *, backend: str = "xla",
     return QueryResult(ans[:n], approx[:n], refined[:n])
 
 
-def execute_count2d(plan: IndexPlan2D, lx, ux, ly, uy, *,
-                    backend: str = "xla", eps_rel: Optional[float] = None,
-                    interpret: bool = True, bq: int = DEFAULT_BQ,
-                    min_bucket: int = 64) -> QueryResult:
-    """2-key COUNT over (lx, ux] x (ly, uy] via 4-corner inclusion-exclusion."""
+def _execute_rect2d(plan: IndexPlan2D, lx, ux, ly, uy, *, backend, eps_rel,
+                    interpret, bq, min_bucket) -> QueryResult:
     _check_backend(backend)
     if eps_rel is not None:
         _require_exact(plan.ref_xs is not None)
@@ -308,9 +377,51 @@ def execute_count2d(plan: IndexPlan2D, lx, ux, ly, uy, *,
     x0, _, y0, _ = plan.root
     args = (_pad_bucket(lx, size, x0), _pad_bucket(ux, size, x0),
             _pad_bucket(ly, size, y0), _pad_bucket(uy, size, y0))
-    ans, approx, refined = _exec_count2d(
+    ans, approx, refined = _exec_rect2d(
         plan, *args, backend=backend, eps_rel=eps_rel, interpret=interpret,
         bq=bq)
+    return QueryResult(ans[:n], approx[:n], refined[:n])
+
+
+def execute_count2d(plan: IndexPlan2D, lx, ux, ly, uy, *,
+                    backend: str = "xla", eps_rel: Optional[float] = None,
+                    interpret: bool = True, bq: int = DEFAULT_BQ,
+                    min_bucket: int = 64) -> QueryResult:
+    """2-key COUNT over (lx, ux] x (ly, uy] via 4-corner inclusion-exclusion."""
+    assert plan.agg == "count2d", plan.agg
+    return _execute_rect2d(plan, lx, ux, ly, uy, backend=backend,
+                           eps_rel=eps_rel, interpret=interpret, bq=bq,
+                           min_bucket=min_bucket)
+
+
+def execute_sum2d(plan: IndexPlan2D, lx, ux, ly, uy, *,
+                  backend: str = "xla", eps_rel: Optional[float] = None,
+                  interpret: bool = True, bq: int = DEFAULT_BQ,
+                  min_bucket: int = 64) -> QueryResult:
+    """2-key SUM over (lx, ux] x (ly, uy]: the same 4-corner path over a
+    CF_sum-fitted plan, |A - R| <= 4*delta (DESIGN.md §12)."""
+    assert plan.agg == "sum2d", plan.agg
+    return _execute_rect2d(plan, lx, ux, ly, uy, backend=backend,
+                           eps_rel=eps_rel, interpret=interpret, bq=bq,
+                           min_bucket=min_bucket)
+
+
+def execute_extremum2d(plan: IndexPlan2D, u, v, *, backend: str = "xla",
+                       eps_rel: Optional[float] = None,
+                       interpret: bool = True, bq: int = DEFAULT_BQ,
+                       min_bucket: int = 64) -> QueryResult:
+    """Dominance MAX/MIN at (u, v): the extremal measure over
+    {x <= u, y <= v}, |A - R| <= delta (min2d plans run on negated
+    measures end to end)."""
+    assert plan.agg in ("max2d", "min2d"), plan.agg
+    _check_backend(backend)
+    if eps_rel is not None:
+        _require_exact(plan.ref_wpmax is not None)
+    (u, v), n, size, bq = _prepare(u, v, min_bucket=min_bucket, bq=bq)
+    x0, _, y0, _ = plan.root
+    ans, approx, refined = _exec_extremum2d(
+        plan, _pad_bucket(u, size, x0), _pad_bucket(v, size, y0),
+        backend=backend, eps_rel=eps_rel, interpret=interpret, bq=bq)
     return QueryResult(ans[:n], approx[:n], refined[:n])
 
 
@@ -318,11 +429,16 @@ def execute(plan: Union[IndexPlan, IndexPlan2D], ranges, *,
             backend: str = "xla", eps_rel: Optional[float] = None,
             interpret: bool = True, bq: int = DEFAULT_BQ,
             min_bucket: int = 64) -> QueryResult:
-    """Dispatch on the plan: (lq, uq) for 1-D, (lx, ux, ly, uy) for 2-D."""
+    """Dispatch on the plan: (lq, uq) for 1-D, (lx, ux, ly, uy) for 2-D
+    rectangles, (u, v) for 2-D dominance MAX/MIN."""
     kw = dict(backend=backend, eps_rel=eps_rel, interpret=interpret, bq=bq,
               min_bucket=min_bucket)
     if isinstance(plan, IndexPlan2D):
-        return execute_count2d(plan, *ranges, **kw)
+        if plan.agg == "count2d":
+            return execute_count2d(plan, *ranges, **kw)
+        if plan.agg == "sum2d":
+            return execute_sum2d(plan, *ranges, **kw)
+        return execute_extremum2d(plan, *ranges, **kw)
     if plan.agg in ("sum", "count"):
         return execute_sum(plan, *ranges, **kw)
     return execute_extremum(plan, *ranges, **kw)
@@ -374,6 +490,14 @@ class Engine:
     def count2d(self, plan: IndexPlan2D, lx, ux, ly, uy,
                 eps_rel: Optional[float] = None) -> QueryResult:
         return execute_count2d(plan, lx, ux, ly, uy, **self._kw(eps_rel))
+
+    def sum2d(self, plan: IndexPlan2D, lx, ux, ly, uy,
+              eps_rel: Optional[float] = None) -> QueryResult:
+        return execute_sum2d(plan, lx, ux, ly, uy, **self._kw(eps_rel))
+
+    def extremum2d(self, plan: IndexPlan2D, u, v,
+                   eps_rel: Optional[float] = None) -> QueryResult:
+        return execute_extremum2d(plan, u, v, **self._kw(eps_rel))
 
     def query(self, plan: Union[IndexPlan, IndexPlan2D], *ranges,
               eps_rel: Optional[float] = None) -> QueryResult:

@@ -182,6 +182,11 @@ class IndexPlan2D:
     # -- exact refinement (merge-sort tree) ------------------------------
     ref_xs: Optional[jnp.ndarray]         # (n,)
     ref_ys_levels: Optional[jnp.ndarray]  # (L, n)
+    # -- measure-carrying extension (DESIGN.md §12) ----------------------
+    agg: str = "count2d"                  # 'count2d'|'sum2d'|'max2d'|'min2d'
+    leaf_agg: Optional[jnp.ndarray] = None   # (Lp,) exact per-leaf measure
+    ref_wcum: Optional[jnp.ndarray] = None   # (L, n) block prefix sums
+    ref_wpmax: Optional[jnp.ndarray] = None  # (L, n) block prefix maxima
 
     @property
     def dtype(self):
@@ -189,8 +194,11 @@ class IndexPlan2D:
 
     def size_bytes(self) -> int:
         """Learned-structure size: topology + per-leaf fits (unpadded)."""
-        return int(self.children.nbytes + self.bounds.nbytes +
-                   self.qt_coeffs.nbytes)
+        total = (self.children.nbytes + self.bounds.nbytes +
+                 self.qt_coeffs.nbytes)
+        if self.leaf_agg is not None:
+            total += self.n_leaves * self.leaf_agg.dtype.itemsize
+        return int(total)
 
 
 jax.tree_util.register_dataclass(
@@ -198,8 +206,10 @@ jax.tree_util.register_dataclass(
     data_fields=["children", "leaf_of", "bounds", "leaf_nodes", "qt_coeffs",
                  "leaf_mx0", "leaf_mx1", "leaf_my0", "leaf_my1",
                  "leaf_bounds", "leaf_coeffs", "leaf_z", "xcuts", "ycuts",
-                 "ref_xs", "ref_ys_levels"],
-    meta_fields=["deg", "delta", "n", "n_leaves", "max_depth", "bh", "root"],
+                 "ref_xs", "ref_ys_levels", "leaf_agg", "ref_wcum",
+                 "ref_wpmax"],
+    meta_fields=["deg", "delta", "n", "n_leaves", "max_depth", "bh", "root",
+                 "agg"],
 )
 
 
@@ -218,6 +228,8 @@ def build_plan_2d(index: PolyFitIndex2D, dtype=jnp.float64,
     x0r, x1r, y0r, y1r = (float(b) for b in index.root_bounds)
     lb = np.asarray(index.bounds)[np.asarray(index.leaf_nodes)]  # (L, 4) f64
     coeffs = np.asarray(index.coeffs)
+    leaf_agg = (None if index.leaf_agg is None
+                else np.asarray(index.leaf_agg))
 
     # locate->gather precomputation: exact dyadic split grids + Morton
     # z-interval starts, the whole leaf table reordered by z so the scan
@@ -233,6 +245,8 @@ def build_plan_2d(index: PolyFitIndex2D, dtype=jnp.float64,
             order = np.argsort(z)
             lb = lb[order]
             coeffs = coeffs[order]
+            if leaf_agg is not None:
+                leaf_agg = leaf_agg[order]
             leaf_z = pad_to_multiple(jnp.asarray(z[order], jnp.int32), bh,
                                      INT_SENTINEL)
             # empty cut grids (depth 0) keep a sentinel entry so the kernel
@@ -245,10 +259,12 @@ def build_plan_2d(index: PolyFitIndex2D, dtype=jnp.float64,
     my0 = lb[:, 2]
     my1 = np.where(lb[:, 3] >= y1r, big, lb[:, 3])
 
-    ref_xs = ref_ys = None
+    ref_xs = ref_ys = ref_wcum = ref_wpmax = None
     if with_exact and index.exact is not None:
         ref_xs = index.exact.xs
         ref_ys = index.exact.ys_levels
+        ref_wcum = index.exact.wcum_levels
+        ref_wpmax = index.exact.wpmax_levels
 
     to = lambda a: jnp.asarray(a, dtype)
     return IndexPlan2D(
@@ -266,4 +282,8 @@ def build_plan_2d(index: PolyFitIndex2D, dtype=jnp.float64,
         leaf_coeffs=pad_to_multiple(to(coeffs), bh, 0.0),
         leaf_z=leaf_z, xcuts=xcuts, ycuts=ycuts,
         ref_xs=ref_xs, ref_ys_levels=ref_ys,
+        agg=index.agg,
+        leaf_agg=(None if leaf_agg is None
+                  else pad_to_multiple(to(leaf_agg), bh, 0.0)),
+        ref_wcum=ref_wcum, ref_wpmax=ref_wpmax,
     )

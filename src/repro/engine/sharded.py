@@ -49,14 +49,21 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 from ..core.exact import build_sparse_table, sparse_table_range_max
+from ..core.index2d import mst_count_prefix, mst_weighted_prefix
 from ..core.poly import eval_segments, locate, scale_unit
 from ..core.queries import QueryResult, poly_max_on_interval
-from .dynamic import DeltaBuffer
-from .engine import _bucket_size, _pad_bucket, check_pow2
-from .plan import IndexPlan, big_sentinel
+from ..kernels import ref as _ref
+from ..kernels.leaf_eval2d import _bivariate_horner
+from ..kernels.locate import INT_SENTINEL, bsearch_count, interleave2
+from .dynamic import (DeltaBuffer, DeltaBuffer2D, _exec_dyn_count2d,
+                      _exec_dyn_dommax2d, _exec_dyn_sum2d)
+from .engine import (_bucket_size, _exec_extremum2d, _exec_rect2d,
+                     _pad_bucket, check_pow2)
+from .plan import IndexPlan, IndexPlan2D, big_sentinel
 
 __all__ = ["ShardedPlan", "ShardedDelta", "ShardedEngine", "shard_plan",
-           "shard_buffer", "make_shard_mesh"]
+           "shard_buffer", "make_shard_mesh", "ShardedPlan2D",
+           "ShardedEngine2D", "shard_plan_2d"]
 
 _AXIS = "shards"
 
@@ -554,3 +561,420 @@ class ShardedEngine:
         if plan.agg in ("sum", "count"):
             return self.sum(plan, lq, uq, eps_rel, buf)
         return self.extremum(plan, lq, uq, eps_rel, buf)
+
+
+# ---------------------------------------------------------------------------
+# 2-D: the Morton-ordered leaf table partitioned by contiguous z-ranges
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardedPlan2D:
+    """Per-shard z-range slices of an ``IndexPlan2D``'s Morton leaf table.
+
+    Shard ``s`` owns the leaves whose z-interval starts fall in
+    ``[zbounds[s], zbounds[s+1])`` — quadtree leaves are disjoint intervals
+    in Z-order, so a (clamped) query corner's Morton code names exactly one
+    owner shard.  The dyadic cut grids are replicated (they are
+    O(2^depth) scalars and every shard needs them to code corners), as are
+    the exact-refinement merge-sort-tree arrays and, in the dynamic
+    executors, the (capacity-bounded) delta buffer: the refinement/buffer
+    arithmetic runs identically on every shard with no collective, which
+    keeps those answers trivially bit-identical; only the leaf-table
+    evaluation is sharded and psum/pmax-combined.  Sharding the refinement
+    arrays themselves stays on the ROADMAP (the BIT block structure does
+    not split at arbitrary x cuts).
+    """
+
+    # -- static metadata ------------------------------------------------
+    agg: str
+    deg: int
+    delta: float
+    n: int
+    n_leaves: int
+    nshards: int
+    max_depth: int
+    root: Tuple[float, float, float, float]
+    zbounds: Tuple[int, ...]     # S+1 owning z-range edges (host copy)
+    # -- per-shard ownership + stacked leaf tables (S, ...) ---------------
+    zlo: jnp.ndarray             # (S,) int32
+    zhi: jnp.ndarray             # (S,) int32
+    leaf_z: jnp.ndarray          # (S, Ls) int32 sentinel-padded
+    leaf_bounds: jnp.ndarray     # (S, Ls, 4)
+    leaf_coeffs: jnp.ndarray     # (S, Ls, (deg+1)^2)
+    # -- replicated arrays ------------------------------------------------
+    xcuts: jnp.ndarray           # (2^depth - 1,)
+    ycuts: jnp.ndarray
+    ref_xs: Optional[jnp.ndarray]
+    ref_ys_levels: Optional[jnp.ndarray]
+    ref_wcum: Optional[jnp.ndarray]
+    ref_wpmax: Optional[jnp.ndarray]
+
+    @property
+    def dtype(self):
+        return self.leaf_coeffs.dtype
+
+
+jax.tree_util.register_dataclass(
+    ShardedPlan2D,
+    data_fields=["zlo", "zhi", "leaf_z", "leaf_bounds", "leaf_coeffs",
+                 "xcuts", "ycuts", "ref_xs", "ref_ys_levels", "ref_wcum",
+                 "ref_wpmax"],
+    meta_fields=["agg", "deg", "delta", "n", "n_leaves", "nshards",
+                 "max_depth", "root", "zbounds"],
+)
+
+
+def shard_plan_2d(plan: IndexPlan2D, nshards: int) -> ShardedPlan2D:
+    """Partition a 2-D plan's Morton-ordered leaf table into ``nshards``
+    contiguous z-ranges (balanced by leaf count).  Plans with fewer leaves
+    than shards leave the surplus shards empty (they own the degenerate
+    range [sentinel, sentinel) and contribute the psum/pmax identity)."""
+    if nshards < 1:
+        raise ValueError(f"nshards must be >= 1, got {nshards}")
+    if plan.leaf_z is None:
+        raise ValueError(
+            "2-D sharding requires the Morton leaf layout (max_depth <= "
+            "MAX_MORTON_DEPTH and strictly increasing cut grids)")
+    nl = plan.n_leaves
+    leaf_z = np.asarray(plan.leaf_z)[:nl]
+    bounds = np.asarray(plan.leaf_bounds)[:nl]
+    coeffs = np.asarray(plan.leaf_coeffs)[:nl]
+    cuts = np.round(np.linspace(0, nl, nshards + 1)).astype(np.int64)
+    inner = np.where(cuts[1:-1] < nl,
+                     leaf_z[np.minimum(cuts[1:-1], nl - 1)], INT_SENTINEL)
+    zb = np.concatenate([[0], inner, [INT_SENTINEL]]).astype(np.int64)
+
+    z_rows = [leaf_z[a:b] for a, b in zip(cuts[:-1], cuts[1:])]
+    b_rows = [bounds[a:b] for a, b in zip(cuts[:-1], cuts[1:])]
+    c_rows = [coeffs[a:b] for a, b in zip(cuts[:-1], cuts[1:])]
+    ls = max(int(b - a) for a, b in zip(cuts[:-1], cuts[1:]))
+
+    return ShardedPlan2D(
+        agg=plan.agg, deg=plan.deg, delta=plan.delta, n=plan.n,
+        n_leaves=nl, nshards=nshards, max_depth=plan.max_depth,
+        root=plan.root, zbounds=tuple(int(z) for z in zb),
+        zlo=jnp.asarray(zb[:-1], jnp.int32),
+        zhi=jnp.asarray(zb[1:], jnp.int32),
+        leaf_z=_pad2(z_rows, ls, INT_SENTINEL),
+        leaf_bounds=_pad2(b_rows, ls, 0.0),
+        leaf_coeffs=_pad2(c_rows, ls, 0.0),
+        xcuts=plan.xcuts, ycuts=plan.ycuts,
+        ref_xs=plan.ref_xs, ref_ys_levels=plan.ref_ys_levels,
+        ref_wcum=plan.ref_wcum, ref_wpmax=plan.ref_wpmax,
+    )
+
+
+def _plan2d_inspec(sp: ShardedPlan2D) -> ShardedPlan2D:
+    """The shard_map in_spec pytree for a ShardedPlan2D: leaf tables and
+    ownership ranges partitioned on their leading S axis, cut grids and
+    refinement arrays replicated."""
+    kw = dict(zlo=P(_AXIS), zhi=P(_AXIS), leaf_z=P(_AXIS),
+              leaf_bounds=P(_AXIS), leaf_coeffs=P(_AXIS),
+              xcuts=P(), ycuts=P())
+    for f in ("ref_xs", "ref_ys_levels", "ref_wcum", "ref_wpmax"):
+        if getattr(sp, f) is not None:
+            kw[f] = P()
+    return dataclasses.replace(sp, **kw)
+
+
+def _corner_eval2d_shard(sp: ShardedPlan2D, qx, qy):
+    """Single-corner evaluation: the owner shard gathers the corner's leaf
+    row, a psum replicates it, and the bivariate Horner runs on the
+    replicated row.
+
+    The z-locate (three binary searches, kernels/locate.py) and the gather
+    are integer/selection ops — exact by construction — and the psum of
+    one owner row plus zeros reproduces the owner's bits.  Deferring the
+    *float* evaluation until after the collective keeps its compilation
+    context independent of the mesh size and of each shard's local table
+    length, so answers stay bit-identical across shard counts; fusing the
+    Horner into the per-shard body instead lets XLA's FP-contraction
+    choices vary with the surrounding program, costing a final ulp on
+    some corners.
+    """
+    k = (sp.deg + 1) * (sp.deg + 1)
+    ix = bsearch_count(sp.xcuts, qx, side="right")
+    iy = bsearch_count(sp.ycuts, qy, side="right")
+    z = interleave2(ix, iy, sp.max_depth)
+    own = (z >= sp.zlo[0]) & (z < sp.zhi[0])
+    row = jnp.maximum(bsearch_count(sp.leaf_z[0], z, side="right") - 1, 0)
+    c = jnp.take(sp.leaf_coeffs[0], row, axis=0)
+    b = jnp.take(sp.leaf_bounds[0], row, axis=0)
+    cb = jnp.concatenate([c, b], axis=1)
+    cb = jax.lax.psum(jnp.where(own[:, None], cb, 0.0), _AXIS)
+    return _bivariate_horner(qx, qy, cb[:, :k], cb[:, k:], sp.deg)
+
+
+def _rect2d_raw(sp: ShardedPlan2D, lxc, uxc, lyc, uyc):
+    """4-corner inclusion-exclusion: each corner's leaf row gathered by
+    its owner shard, psum-replicated, evaluated, combined with signs —
+    the single-device op sequence, so bit-identical."""
+    vals = [_corner_eval2d_shard(sp, qx, qy)
+            for qx, qy in ((uxc, uyc), (lxc, uyc), (uxc, lyc), (lxc, lyc))]
+    return vals[0] - vals[1] - vals[2] + vals[3]
+
+
+def _truth_rect2d(sp: ShardedPlan2D, lx, ux, ly, uy):
+    """Exact rectangle COUNT/SUM from the replicated refinement arrays
+    (identical computation on every shard — no collective needed).
+
+    The x-prefix rank comes from ``bsearch_count`` rather than
+    ``jnp.searchsorted``: searchsorted's default scan lowering trips
+    shard_map's replication checker on replicated operands, and the
+    unrolled binary search returns the same exact integers.
+    """
+    if sp.agg == "sum2d":
+        def cf(u, v):
+            i = bsearch_count(sp.ref_xs, u, side="right")
+            return mst_weighted_prefix(sp.ref_xs, sp.ref_ys_levels,
+                                       sp.ref_wcum, i, v, mode="sum")
+    else:
+        def cf(u, v):
+            i = bsearch_count(sp.ref_xs, u, side="right")
+            return mst_count_prefix(sp.ref_xs, sp.ref_ys_levels, i, v)
+    return (cf(ux, uy) - cf(lx, uy) - cf(ux, ly) + cf(lx, ly)).astype(
+        sp.dtype)
+
+
+def _truth_dommax2d(sp: ShardedPlan2D, u, v):
+    """Exact dominance MAX from the replicated refinement arrays (same
+    searchsorted-avoidance as ``_truth_rect2d``)."""
+    i = bsearch_count(sp.ref_xs, u, side="right")
+    return mst_weighted_prefix(sp.ref_xs, sp.ref_ys_levels, sp.ref_wpmax,
+                               i, v, mode="max").astype(sp.dtype)
+
+
+def _clamp2d(sp: ShardedPlan2D, qs):
+    dt = sp.dtype
+    x0, x1, y0, y1 = sp.root
+    lx, ux, ly, uy = (q.astype(dt) for q in qs)
+    return ((lx, ux, ly, uy),
+            (jnp.clip(lx, x0, x1), jnp.clip(ux, x0, x1),
+             jnp.clip(ly, y0, y1), jnp.clip(uy, y0, y1)))
+
+
+@partial(jax.jit, static_argnames=("mesh", "eps_rel"))
+def _exec_shard_rect2d(sp: ShardedPlan2D, lx, ux, ly, uy, *, mesh: Mesh,
+                       eps_rel: Optional[float]):
+    def body(sp, lx, ux, ly, uy):
+        (lxr, uxr, lyr, uyr), clamped = _clamp2d(sp, (lx, ux, ly, uy))
+        approx = _rect2d_raw(sp, *clamped)
+        if eps_rel is None:
+            return approx, approx, jnp.zeros(approx.shape, bool)
+        ok = approx >= 4.0 * sp.delta * (1.0 + 1.0 / eps_rel)   # Lemma 6.4
+        truth = _truth_rect2d(sp, lxr, uxr, lyr, uyr)
+        return jnp.where(ok, approx, truth), approx, ~ok
+
+    return shard_map(body, mesh=mesh,
+                     in_specs=(_plan2d_inspec(sp),) + (P(),) * 4,
+                     out_specs=(P(), P(), P()))(sp, lx, ux, ly, uy)
+
+
+@partial(jax.jit, static_argnames=("mesh", "eps_rel"))
+def _exec_shard_dyn_rect2d(sp: ShardedPlan2D, buf: DeltaBuffer2D,
+                           lx, ux, ly, uy, *, mesh: Mesh,
+                           eps_rel: Optional[float]):
+    def body(sp, buf, lx, ux, ly, uy):
+        (lxr, uxr, lyr, uyr), clamped = _clamp2d(sp, (lx, ux, ly, uy))
+        static = _rect2d_raw(sp, *clamped)
+        # replicated exact correction — the dense (xla-backend) arithmetic
+        # of the single-device dynamic executor, unclamped
+        if sp.agg == "sum2d":
+            corr = (_ref.delta_sum2d_ref(lxr, uxr, lyr, uyr, buf.ins_x,
+                                         buf.ins_y, buf.ins_w)
+                    - _ref.delta_sum2d_ref(lxr, uxr, lyr, uyr, buf.del_x,
+                                           buf.del_y, buf.del_w))
+        else:
+            corr = (_ref.delta_count2d_ref(lxr, uxr, lyr, uyr, buf.ins_x,
+                                           buf.ins_y, dtype=sp.dtype)
+                    - _ref.delta_count2d_ref(lxr, uxr, lyr, uyr, buf.del_x,
+                                             buf.del_y, dtype=sp.dtype))
+        approx = static + corr
+        if eps_rel is None:
+            return approx, approx, jnp.zeros(approx.shape, bool)
+        ok = approx >= 4.0 * sp.delta * (1.0 + 1.0 / eps_rel)
+        truth = _truth_rect2d(sp, lxr, uxr, lyr, uyr) + corr
+        return jnp.where(ok, approx, truth), approx, ~ok
+
+    return shard_map(body, mesh=mesh,
+                     in_specs=(_plan2d_inspec(sp), P()) + (P(),) * 4,
+                     out_specs=(P(), P(), P()))(sp, buf, lx, ux, ly, uy)
+
+
+@partial(jax.jit, static_argnames=("mesh", "eps_rel"))
+def _exec_shard_dommax2d(sp: ShardedPlan2D, u, v, *, mesh: Mesh,
+                         eps_rel: Optional[float]):
+    def body(sp, u, v):
+        dt = sp.dtype
+        x0, x1, y0, y1 = sp.root
+        ur, vr = u.astype(dt), v.astype(dt)
+        uc = jnp.clip(ur, x0, x1)
+        vc = jnp.clip(vr, y0, y1)
+        approx = _corner_eval2d_shard(sp, uc, vc)
+        neg = sp.agg == "min2d"
+        if eps_rel is None:
+            out = -approx if neg else approx
+            return out, out, jnp.zeros(out.shape, bool)
+        ok = approx >= sp.delta * (1.0 + 1.0 / eps_rel)
+        truth = _truth_dommax2d(sp, ur, vr)
+        ans = jnp.where(ok, approx, truth)
+        if neg:
+            ans, approx = -ans, -approx
+        return ans, approx, ~ok
+
+    return shard_map(body, mesh=mesh,
+                     in_specs=(_plan2d_inspec(sp), P(), P()),
+                     out_specs=(P(), P(), P()))(sp, u, v)
+
+
+@partial(jax.jit, static_argnames=("mesh", "eps_rel"))
+def _exec_shard_dyn_dommax2d(sp: ShardedPlan2D, buf: DeltaBuffer2D, u, v,
+                             *, mesh: Mesh, eps_rel: Optional[float]):
+    def body(sp, buf, u, v):
+        dt = sp.dtype
+        x0, x1, y0, y1 = sp.root
+        ur, vr = u.astype(dt), v.astype(dt)
+        uc = jnp.clip(ur, x0, x1)
+        vc = jnp.clip(vr, y0, y1)
+        static = _corner_eval2d_shard(sp, uc, vc)
+        ins = _ref.delta_dommax2d_ref(ur, vr, buf.ins_x, buf.ins_y,
+                                      buf.ins_w)
+        approx = jnp.maximum(static, ins)
+        neg = sp.agg == "min2d"
+        if eps_rel is None:
+            out = -approx if neg else approx
+            return out, out, jnp.zeros(out.shape, bool)
+        ok = approx >= sp.delta * (1.0 + 1.0 / eps_rel)
+        truth = jnp.maximum(_truth_dommax2d(sp, ur, vr), ins)
+        ans = jnp.where(ok, approx, truth)
+        if neg:
+            ans, approx = -ans, -approx
+        return ans, approx, ~ok
+
+    return shard_map(body, mesh=mesh,
+                     in_specs=(_plan2d_inspec(sp), P(), P(), P()),
+                     out_specs=(P(), P(), P()))(sp, buf, u, v)
+
+
+class ShardedEngine2D:
+    """Executes 2-key queries against z-range-partitioned leaf tables.
+
+    ``shard(plan)`` partitions (and caches) an ``IndexPlan2D``; at
+    ``nshards >= 2`` the query methods accept either the raw plan or a
+    prepared ``ShardedPlan2D``; ``nshards=1`` routes through the
+    single-device executors (that is what keeps S=1 bit-identical to the
+    engine), so it requires the unsharded plan.  Passing ``buf=`` a live ``DeltaBuffer2D``
+    (e.g. a ``DynamicEngine2D`` snapshot's buffer) folds buffered updates
+    in exactly — the buffer is replicated, so dynamic answers stay
+    bit-identical to the single-device xla path.
+    """
+
+    def __init__(self, nshards: int, *, mesh: Optional[Mesh] = None,
+                 min_bucket: int = 64):
+        check_pow2("nshards", nshards)
+        check_pow2("min_bucket", min_bucket)
+        self.nshards = nshards
+        self.mesh = mesh if mesh is not None else make_shard_mesh(nshards)
+        self.min_bucket = min_bucket
+        self._plan_cache: dict = {}
+
+    def shard(self, plan) -> ShardedPlan2D:
+        if isinstance(plan, ShardedPlan2D):
+            return plan
+        hit = self._plan_cache.get(id(plan))
+        if hit is None or hit[0] is not plan:
+            self._plan_cache = {
+                id(plan): (plan, shard_plan_2d(plan, self.nshards))}
+            hit = self._plan_cache[id(plan)]
+        return hit[1]
+
+    def _prepare(self, qs, fills):
+        qs = [jnp.asarray(q) for q in qs]
+        n = qs[0].shape[0]
+        size = _bucket_size(n, self.min_bucket)
+        return [_pad_bucket(q, size, f) for q, f in zip(qs, fills)], n
+
+    @staticmethod
+    def _require_unsharded(plan) -> None:
+        if not isinstance(plan, IndexPlan2D):
+            raise ValueError(
+                "nshards=1 runs the single-device executors (that is what "
+                "keeps S=1 bit-identical) and needs the unsharded "
+                "IndexPlan2D, not a pre-partitioned ShardedPlan2D")
+
+    def _rect(self, plan, lx, ux, ly, uy, eps_rel, buf, want_agg):
+        sp = self.shard(plan)
+        assert sp.agg in want_agg, sp.agg
+        if eps_rel is not None and sp.ref_xs is None:
+            raise ValueError("Q_rel refinement requires a plan built with "
+                             "with_exact=True")
+        x0, _, y0, _ = sp.root
+        args, n = self._prepare((lx, ux, ly, uy), (x0, x0, y0, y0))
+        if self.nshards == 1:
+            # S = 1 *is* the single-device path: run its executor directly
+            # (inside shard_map, XLA elides the psum and fuses the body
+            # differently, costing a final ulp of bit-identity)
+            self._require_unsharded(plan)
+            bq = min(64, args[0].shape[0])
+            if buf is None:
+                out = _exec_rect2d(plan, *args, backend="xla",
+                                   eps_rel=eps_rel, interpret=True, bq=bq)
+            else:
+                dyn_exec = (_exec_dyn_sum2d if sp.agg == "sum2d"
+                            else _exec_dyn_count2d)
+                out = dyn_exec(plan, buf, *args, backend="xla",
+                               eps_rel=eps_rel, interpret=True, bq=bq)
+        elif buf is None:
+            out = _exec_shard_rect2d(sp, *args, mesh=self.mesh,
+                                     eps_rel=eps_rel)
+        else:
+            out = _exec_shard_dyn_rect2d(sp, buf, *args, mesh=self.mesh,
+                                         eps_rel=eps_rel)
+        return QueryResult(out[0][:n], out[1][:n], out[2][:n])
+
+    def count2d(self, plan, lx, ux, ly, uy,
+                eps_rel: Optional[float] = None,
+                buf: Optional[DeltaBuffer2D] = None) -> QueryResult:
+        return self._rect(plan, lx, ux, ly, uy, eps_rel, buf, ("count2d",))
+
+    def sum2d(self, plan, lx, ux, ly, uy,
+              eps_rel: Optional[float] = None,
+              buf: Optional[DeltaBuffer2D] = None) -> QueryResult:
+        return self._rect(plan, lx, ux, ly, uy, eps_rel, buf, ("sum2d",))
+
+    def extremum2d(self, plan, u, v, eps_rel: Optional[float] = None,
+                   buf: Optional[DeltaBuffer2D] = None) -> QueryResult:
+        sp = self.shard(plan)
+        assert sp.agg in ("max2d", "min2d"), sp.agg
+        if eps_rel is not None and sp.ref_wpmax is None:
+            raise ValueError("Q_rel refinement requires a plan built with "
+                             "with_exact=True")
+        x0, _, y0, _ = sp.root
+        args, n = self._prepare((u, v), (x0, y0))
+        if self.nshards == 1:
+            self._require_unsharded(plan)
+            bq = min(64, args[0].shape[0])
+            if buf is None:
+                out = _exec_extremum2d(plan, *args, backend="xla",
+                                       eps_rel=eps_rel, interpret=True,
+                                       bq=bq)
+            else:
+                out = _exec_dyn_dommax2d(plan, buf, *args, backend="xla",
+                                         eps_rel=eps_rel, interpret=True,
+                                         bq=bq)
+        elif buf is None:
+            out = _exec_shard_dommax2d(sp, *args, mesh=self.mesh,
+                                       eps_rel=eps_rel)
+        else:
+            out = _exec_shard_dyn_dommax2d(sp, buf, *args, mesh=self.mesh,
+                                           eps_rel=eps_rel)
+        return QueryResult(out[0][:n], out[1][:n], out[2][:n])
+
+    def query(self, plan, *ranges, eps_rel: Optional[float] = None,
+              buf: Optional[DeltaBuffer2D] = None) -> QueryResult:
+        agg = plan.agg
+        if agg == "count2d":
+            return self.count2d(plan, *ranges, eps_rel=eps_rel, buf=buf)
+        if agg == "sum2d":
+            return self.sum2d(plan, *ranges, eps_rel=eps_rel, buf=buf)
+        return self.extremum2d(plan, *ranges, eps_rel=eps_rel, buf=buf)

@@ -44,13 +44,15 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from ..core.index2d import mst_count_prefix
+from ..core.index2d import mst_count_prefix, mst_weighted_prefix
 from .locate import bsearch_count, rmq_gather
 from .poly_eval import DEFAULT_BH, DEFAULT_BQ
 
 __all__ = ["delta_sum_pallas", "delta_max_pallas", "delta_count2d_pallas",
            "delta_sum_gather_pallas", "delta_max_gather_pallas",
-           "delta_count2d_gather_pallas"]
+           "delta_count2d_gather_pallas", "delta_sum2d_pallas",
+           "delta_sum2d_gather_pallas", "delta_dommax2d_pallas",
+           "delta_dommax2d_gather_pallas"]
 
 
 def _delta_sum_kernel(lq_ref, uq_ref, k_ref, v_ref, out_ref, acc,
@@ -303,3 +305,179 @@ def delta_count2d_gather_pallas(lx, ux, ly, uy, keys_x, ys_levels,
         out_shape=jax.ShapeDtypeStruct((Q,), dtype),
         interpret=interpret,
     )(lx, ux, ly, uy, keys_x, ys_levels)
+
+
+def _delta_sum2d_kernel(lx_ref, ux_ref, ly_ref, uy_ref, kx_ref, ky_ref,
+                        w_ref, out_ref, acc, *, n_tiles: int):
+    d = pl.program_id(1)
+
+    @pl.when(d == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    lx = lx_ref[...]
+    ux = ux_ref[...]
+    ly = ly_ref[...]
+    uy = uy_ref[...]
+    kx = kx_ref[...]
+    ky = ky_ref[...]
+    w = w_ref[...]
+    member = ((lx[:, None] < kx[None, :]) & (kx[None, :] <= ux[:, None]) &
+              (ly[:, None] < ky[None, :]) & (ky[None, :] <= uy[:, None])
+              ).astype(w.dtype)
+    acc[...] += jnp.dot(member, w, preferred_element_type=w.dtype)
+
+    @pl.when(d == n_tiles - 1)
+    def _finalize():
+        out_ref[...] = acc[...]
+
+
+def delta_sum2d_pallas(lx, ux, ly, uy, keys_x, keys_y, wv,
+                       bq: int = DEFAULT_BQ, bd: int = DEFAULT_BH,
+                       interpret: bool = True):
+    """Exact sum of buffered measures over points in (lx, ux] x (ly, uy]
+    per query (the weighted twin of ``delta_count2d_pallas``)."""
+    Q, D = lx.shape[0], keys_x.shape[0]
+    bd = min(bd, D)
+    assert Q % bq == 0 and D % bd == 0, (Q, D, bq, bd)
+    n_tiles = D // bd
+    kernel = functools.partial(_delta_sum2d_kernel, n_tiles=n_tiles)
+    return pl.pallas_call(
+        kernel,
+        grid=(Q // bq, n_tiles),
+        in_specs=[
+            pl.BlockSpec((bq,), lambda i, j: (i,)),
+            pl.BlockSpec((bq,), lambda i, j: (i,)),
+            pl.BlockSpec((bq,), lambda i, j: (i,)),
+            pl.BlockSpec((bq,), lambda i, j: (i,)),
+            pl.BlockSpec((bd,), lambda i, j: (j,)),
+            pl.BlockSpec((bd,), lambda i, j: (j,)),
+            pl.BlockSpec((bd,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bq,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((Q,), wv.dtype),
+        scratch_shapes=[pltpu.VMEM((bq,), wv.dtype)],
+        interpret=interpret,
+    )(lx, ux, ly, uy, keys_x, keys_y, wv)
+
+
+def _delta_sum2d_gather_kernel(lx_ref, ux_ref, ly_ref, uy_ref,
+                               kx_ref, ylv_ref, wcum_ref, out_ref):
+    kx = kx_ref[...]
+    ylv = ylv_ref[...]
+    wcum = wcum_ref[...]
+
+    def cf(x, y):
+        i = bsearch_count(kx, x, side="right")
+        return mst_weighted_prefix(kx, ylv, wcum, i, y, mode="sum")
+
+    lx, ux, ly, uy = lx_ref[...], ux_ref[...], ly_ref[...], uy_ref[...]
+    out_ref[...] = cf(ux, uy) - cf(lx, uy) - cf(ux, ly) + cf(lx, ly)
+
+
+def delta_sum2d_gather_pallas(lx, ux, ly, uy, keys_x, ys_levels, wcum_levels,
+                              bq: int = DEFAULT_BQ, interpret: bool = True):
+    """Exact sum of buffered measures over (lx, ux] x (ly, uy] in
+    O(log^2 D): the weighted merge-sort-tree correction — per-level
+    block-sorted y arrays plus per-block inclusive weight prefix sums,
+    both rebuilt on append (engine/dynamic.py)."""
+    Q, D = lx.shape[0], keys_x.shape[0]
+    assert Q % bq == 0 and ys_levels.shape[1] == D, (Q, bq, ys_levels.shape)
+    levels = ys_levels.shape[0]
+    return pl.pallas_call(
+        _delta_sum2d_gather_kernel,
+        grid=(Q // bq,),
+        in_specs=[
+            pl.BlockSpec((bq,), lambda i: (i,)),
+            pl.BlockSpec((bq,), lambda i: (i,)),
+            pl.BlockSpec((bq,), lambda i: (i,)),
+            pl.BlockSpec((bq,), lambda i: (i,)),
+            pl.BlockSpec((D,), lambda i: (0,)),
+            pl.BlockSpec((levels, D), lambda i: (0, 0)),
+            pl.BlockSpec((levels, D), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((Q,), wcum_levels.dtype),
+        interpret=interpret,
+    )(lx, ux, ly, uy, keys_x, ys_levels, wcum_levels)
+
+
+def _delta_dommax2d_kernel(u_ref, v_ref, kx_ref, ky_ref, w_ref, out_ref,
+                           acc, *, n_tiles: int):
+    d = pl.program_id(1)
+
+    @pl.when(d == 0)
+    def _init():
+        acc[...] = jnp.full_like(acc, -jnp.inf)
+
+    u = u_ref[...]
+    v = v_ref[...]
+    kx = kx_ref[...]
+    ky = ky_ref[...]
+    w = w_ref[...]
+    member = (kx[None, :] <= u[:, None]) & (ky[None, :] <= v[:, None])
+    tile_max = jnp.max(jnp.where(member, w[None, :], -jnp.inf), axis=1)
+    acc[...] = jnp.maximum(acc[...], tile_max)
+
+    @pl.when(d == n_tiles - 1)
+    def _finalize():
+        out_ref[...] = acc[...]
+
+
+def delta_dommax2d_pallas(u, v, keys_x, keys_y, wv, bq: int = DEFAULT_BQ,
+                          bd: int = DEFAULT_BH, interpret: bool = True):
+    """Exact dominance max of buffered measures over {x <= u, y <= v} per
+    query corner (-inf if none dominated)."""
+    Q, D = u.shape[0], keys_x.shape[0]
+    bd = min(bd, D)
+    assert Q % bq == 0 and D % bd == 0, (Q, D, bq, bd)
+    n_tiles = D // bd
+    kernel = functools.partial(_delta_dommax2d_kernel, n_tiles=n_tiles)
+    return pl.pallas_call(
+        kernel,
+        grid=(Q // bq, n_tiles),
+        in_specs=[
+            pl.BlockSpec((bq,), lambda i, j: (i,)),
+            pl.BlockSpec((bq,), lambda i, j: (i,)),
+            pl.BlockSpec((bd,), lambda i, j: (j,)),
+            pl.BlockSpec((bd,), lambda i, j: (j,)),
+            pl.BlockSpec((bd,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bq,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((Q,), wv.dtype),
+        scratch_shapes=[pltpu.VMEM((bq,), wv.dtype)],
+        interpret=interpret,
+    )(u, v, keys_x, keys_y, wv)
+
+
+def _delta_dommax2d_gather_kernel(u_ref, v_ref, kx_ref, ylv_ref, wpmax_ref,
+                                  out_ref):
+    kx = kx_ref[...]
+    i = bsearch_count(kx, u_ref[...], side="right")
+    out_ref[...] = mst_weighted_prefix(kx, ylv_ref[...], wpmax_ref[...], i,
+                                       v_ref[...], mode="max")
+
+
+def delta_dommax2d_gather_pallas(u, v, keys_x, ys_levels, wpmax_levels,
+                                 bq: int = DEFAULT_BQ,
+                                 interpret: bool = True):
+    """Exact dominance max over {x <= u, y <= v} in O(log^2 D): the
+    merge-sort-tree decomposition with per-block inclusive prefix *maxima*
+    instead of prefix sums."""
+    Q, D = u.shape[0], keys_x.shape[0]
+    assert Q % bq == 0 and ys_levels.shape[1] == D, (Q, bq, ys_levels.shape)
+    levels = ys_levels.shape[0]
+    return pl.pallas_call(
+        _delta_dommax2d_gather_kernel,
+        grid=(Q // bq,),
+        in_specs=[
+            pl.BlockSpec((bq,), lambda i: (i,)),
+            pl.BlockSpec((bq,), lambda i: (i,)),
+            pl.BlockSpec((D,), lambda i: (0,)),
+            pl.BlockSpec((levels, D), lambda i: (0, 0)),
+            pl.BlockSpec((levels, D), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((Q,), wpmax_levels.dtype),
+        interpret=interpret,
+    )(u, v, keys_x, ys_levels, wpmax_levels)

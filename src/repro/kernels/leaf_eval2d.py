@@ -41,7 +41,8 @@ from jax.experimental.pallas import tpu as pltpu
 from .locate import locate_leaf2d
 from .poly_eval import DEFAULT_BH, DEFAULT_BQ
 
-__all__ = ["corner_count2d_pallas", "corner_count2d_gather_pallas"]
+__all__ = ["corner_count2d_pallas", "corner_count2d_gather_pallas",
+           "corner_eval2d_pallas", "corner_eval2d_gather_pallas"]
 
 
 def _bivariate_horner(qx, qy, c, b, deg: int):
@@ -116,6 +117,111 @@ def corner_count2d_gather_pallas(lx, ux, ly, uy, xcuts, ycuts, leaf_z,
         out_shape=jax.ShapeDtypeStruct((Q,), coeffs.dtype),
         interpret=interpret,
     )(lx, ux, ly, uy, xcuts, ycuts, leaf_z, bounds, coeffs)
+
+
+def _corner_eval2d_gather_kernel(u_ref, v_ref, xcuts_ref, ycuts_ref, z_ref,
+                                 bounds_ref, coef_ref, out_ref,
+                                 *, deg: int, depth: int):
+    u = u_ref[...]
+    v = v_ref[...]
+    leaf = locate_leaf2d(u, v, xcuts_ref[...], ycuts_ref[...], z_ref[...],
+                         depth)
+    c = jnp.take(coef_ref[...], leaf, axis=0)
+    b = jnp.take(bounds_ref[...], leaf, axis=0)
+    out_ref[...] = _bivariate_horner(u, v, c, b, deg)
+
+
+def corner_eval2d_gather_pallas(u, v, xcuts, ycuts, leaf_z, bounds, coeffs,
+                                deg: int, depth: int, bq: int = DEFAULT_BQ,
+                                interpret: bool = True):
+    """Single-corner leaf evaluation P_{leaf(u,v)}(u, v) via locate->gather
+    (DESIGN.md §12): three binary searches resolve the corner's leaf in the
+    z-sorted table, one gathered bivariate Horner evaluates it.  This is
+    the dominance MAX/MIN query kernel — dominance queries touch exactly
+    one leaf, so there is no inclusion-exclusion combination step.
+    Corners must be pre-clamped into the root region."""
+    Q, L = u.shape[0], leaf_z.shape[0]
+    assert Q % bq == 0, (Q, bq)
+    k = (deg + 1) * (deg + 1)
+    assert coeffs.shape[1] == k, coeffs.shape
+    nx, ny = xcuts.shape[0], ycuts.shape[0]
+    kernel = functools.partial(_corner_eval2d_gather_kernel, deg=deg,
+                               depth=depth)
+    return pl.pallas_call(
+        kernel,
+        grid=(Q // bq,),
+        in_specs=[
+            pl.BlockSpec((bq,), lambda i: (i,)),
+            pl.BlockSpec((bq,), lambda i: (i,)),
+            pl.BlockSpec((nx,), lambda i: (0,)),
+            pl.BlockSpec((ny,), lambda i: (0,)),
+            pl.BlockSpec((L,), lambda i: (0,)),
+            pl.BlockSpec((L, 4), lambda i: (0, 0)),
+            pl.BlockSpec((L, k), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((Q,), coeffs.dtype),
+        interpret=interpret,
+    )(u, v, xcuts, ycuts, leaf_z, bounds, coeffs)
+
+
+def _corner_eval2d_kernel(u_ref, v_ref, mx0_ref, mx1_ref, my0_ref, my1_ref,
+                          bounds_ref, coef_ref, out_ref, acc,
+                          *, n_tiles: int, deg: int):
+    h = pl.program_id(1)
+    k = (deg + 1) * (deg + 1)
+
+    @pl.when(h == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    qx = u_ref[...]
+    qy = v_ref[...]
+    coef = coef_ref[...]                                   # (BH, K)
+    table = jnp.concatenate([coef, bounds_ref[...]], axis=1)  # (BH, K+4)
+    one_hot = ((mx0_ref[...][None, :] <= qx[:, None]) &
+               (qx[:, None] < mx1_ref[...][None, :]) &
+               (my0_ref[...][None, :] <= qy[:, None]) &
+               (qy[:, None] < my1_ref[...][None, :])).astype(coef.dtype)
+    acc[...] += jnp.dot(one_hot, table, preferred_element_type=coef.dtype)
+
+    @pl.when(h == n_tiles - 1)
+    def _finalize():
+        out_ref[...] = _bivariate_horner(qx, qy, acc[:, :k], acc[:, k:], deg)
+
+
+def corner_eval2d_pallas(u, v, mx0, mx1, my0, my1, bounds, coeffs,
+                         deg: int, bq: int = DEFAULT_BQ,
+                         bh: int = DEFAULT_BH, interpret: bool = True):
+    """Single-corner leaf evaluation over the flat leaf table — the one-hot
+    membership twin of ``corner_eval2d_gather_pallas`` (the engine's
+    ``pallas_scan`` backend and the deep-tree fallback).  Shapes pre-padded
+    and corners pre-clamped by the caller."""
+    Q, L = u.shape[0], mx0.shape[0]
+    assert Q % bq == 0 and L % bh == 0, (Q, L, bq, bh)
+    k = (deg + 1) * (deg + 1)
+    assert coeffs.shape[1] == k, coeffs.shape
+    n_tiles = L // bh
+    kernel = functools.partial(_corner_eval2d_kernel, n_tiles=n_tiles,
+                               deg=deg)
+    return pl.pallas_call(
+        kernel,
+        grid=(Q // bq, n_tiles),
+        in_specs=[
+            pl.BlockSpec((bq,), lambda i, j: (i,)),
+            pl.BlockSpec((bq,), lambda i, j: (i,)),
+            pl.BlockSpec((bh,), lambda i, j: (j,)),
+            pl.BlockSpec((bh,), lambda i, j: (j,)),
+            pl.BlockSpec((bh,), lambda i, j: (j,)),
+            pl.BlockSpec((bh,), lambda i, j: (j,)),
+            pl.BlockSpec((bh, 4), lambda i, j: (j, 0)),
+            pl.BlockSpec((bh, k), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((Q,), coeffs.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, k + 4), coeffs.dtype)],
+        interpret=interpret,
+    )(u, v, mx0, mx1, my0, my1, bounds, coeffs)
 
 
 def _corner_count2d_kernel(lx_ref, ux_ref, ly_ref, uy_ref,

@@ -17,8 +17,9 @@ import jax.numpy as jnp
 from ..core.poly import clipped_poly_max, eval_segments, locate
 
 __all__ = ["poly_eval_ref", "range_sum_ref", "range_max_ref",
-           "corner_count2d_ref", "delta_sum_ref", "delta_max_ref",
-           "delta_count2d_ref"]
+           "corner_count2d_ref", "leaf_eval2d_ref", "delta_sum_ref",
+           "delta_max_ref", "delta_count2d_ref", "delta_sum2d_ref",
+           "delta_dommax2d_ref"]
 
 
 def poly_eval_ref(q, seg_lo, seg_next, seg_hi, coeffs):
@@ -73,7 +74,24 @@ def delta_count2d_ref(lx, ux, ly, uy, keys_x, keys_y, dtype=None):
     return jnp.sum(member.astype(dtype), axis=1)
 
 
-def _leaf_cf_eval(qx, qy, mx0, mx1, my0, my1, bounds, coeffs, deg):
+def delta_sum2d_ref(lx, ux, ly, uy, keys_x, keys_y, wv):
+    """Exact sum of buffered measures over points in (lx, ux] x (ly, uy];
+    sentinel-padded slots carry weight 0 and never satisfy membership."""
+    member = ((lx[:, None] < keys_x[None, :]) & (keys_x[None, :] <= ux[:, None]) &
+              (ly[:, None] < keys_y[None, :]) & (keys_y[None, :] <= uy[:, None])
+              ).astype(wv.dtype)
+    return member @ wv
+
+
+def delta_dommax2d_ref(u, v, keys_x, keys_y, wv):
+    """Exact dominance max of buffered measures over {x <= u, y <= v};
+    -inf if no buffered point is dominated."""
+    member = ((keys_x[None, :] <= u[:, None]) &
+              (keys_y[None, :] <= v[:, None]))
+    return jnp.max(jnp.where(member, wv[None, :], -jnp.inf), axis=1)
+
+
+def leaf_eval2d_ref(qx, qy, mx0, mx1, my0, my1, bounds, coeffs, deg):
     """CF at (qx, qy) via the flat-leaf one-hot membership rule.
 
     one_hot[q, j] = (mx0[j] <= qx < mx1[j]) & (my0[j] <= qy < my1[j]) —
@@ -107,6 +125,6 @@ def corner_count2d_ref(lx, ux, ly, uy, mx0, mx1, my0, my1, bounds, coeffs,
     Caller must pre-clamp the corner coordinates into the root region (the
     engine's count2d executor does this).
     """
-    ev = lambda qx, qy: _leaf_cf_eval(qx, qy, mx0, mx1, my0, my1, bounds,
-                                      coeffs, deg)
+    ev = lambda qx, qy: leaf_eval2d_ref(qx, qy, mx0, mx1, my0, my1, bounds,
+                                        coeffs, deg)
     return ev(ux, uy) - ev(lx, uy) - ev(ux, ly) + ev(lx, ly)

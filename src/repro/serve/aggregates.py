@@ -20,6 +20,7 @@ from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..api import ErrorBudget, PolyFit, QuerySpec, TableSpec
 from ..data import hki_series, osm_points, tweet_latitudes
@@ -32,15 +33,19 @@ class AggregateService:
     requests through the ``PolyFit`` session.
 
     Request kinds: 'count' (1-D COUNT over TWEET latitudes), 'max' (1-D MAX
-    over the HKI series), 'count2d' (2-key COUNT over OSM points).
+    over the HKI series), 'count2d' (2-key COUNT over OSM points), 'sum2d'
+    (2-key SUM over OSM points with synthetic per-node weights) and
+    'max2d' (2-key dominance MAX over the same weighted points —
+    DESIGN.md §12).
 
     ``dynamic=True`` fits every table with delta-buffered updates
     (engine/dynamic.py) and opens the ``insert``/``delete``/``flush``
     endpoints: updates are absorbed without a rebuild, queries keep their
-    certified bounds, and merges refit only affected segments on a
-    background-installable plan swap.  ``shards=N`` serves the 1-D tables
-    from device-partitioned plans through the shard_map executor
-    (engine/sharded.py; needs N local devices).
+    certified bounds, and merges refit only affected segments (1-D) or
+    leaves (2-D selective refit) on a background-installable plan swap.
+    ``shards=N`` serves every table from device-partitioned plans through
+    the shard_map executors (engine/sharded.py; 1-D key ranges, 2-D Morton
+    z-ranges; needs N local devices).
     """
 
     def __init__(self, backend: str = "xla", eps_abs: float = 100.0,
@@ -58,21 +63,40 @@ class AggregateService:
         lat = tweet_latitudes(n1)
         ts, vals = hki_series(n1)
         px, py = osm_points(n2)
+        # synthetic per-node weights for the 2-D measure tables
+        pw = 50.0 + 20.0 * np.sin(px / 7.0) + 15.0 * np.cos(py / 11.0)
 
         budget = ErrorBudget(abs=eps_abs, rel=eps_rel)
+        # weighted sums run ~mean(w) larger than counts at the same shape,
+        # so the SUM2D budget scales the COUNT one to matching *relative*
+        # tightness (the absolute bound is still certified, just in
+        # measure units); dominance MAX answers live on the measure
+        # *spread*, so its budget is a fraction of that — reusing the
+        # count-unit eps_abs would exceed the whole spread and certify a
+        # trivial one-leaf fit
+        wbudget = ErrorBudget(abs=eps_abs * float(pw.mean()), rel=eps_rel)
+        mbudget = ErrorBudget(abs=0.1 * float(pw.max() - pw.min()),
+                              rel=eps_rel)
         kw = dict(dynamic=dynamic, capacity=capacity, background=True)
         self.session = PolyFit.fit(
-            {"count": lat, "max": (ts, vals), "count2d": (px, py)},
+            {"count": lat, "max": (ts, vals), "count2d": (px, py),
+             "sum2d": (px, py, pw), "max2d": (px, py, pw)},
             {"count": TableSpec("count", budget, deg=2, shards=shards, **kw),
              "max": TableSpec("max", budget, deg=3, shards=shards, **kw),
-             "count2d": TableSpec("count2d", budget, deg=3, **kw)},
+             "count2d": TableSpec("count2d", budget, deg=3, shards=shards,
+                                  **kw),
+             "sum2d": TableSpec("sum2d", wbudget, deg=3, shards=shards,
+                                **kw),
+             "max2d": TableSpec("max2d", mbudget, deg=3, shards=shards,
+                                **kw)},
             backend=backend, interpret=interpret)
 
+        dom2 = (float(px.min()), float(px.max()),
+                float(py.min()), float(py.max()))
         self.domains: Dict[str, Tuple[float, ...]] = {
             "count": (float(lat.min()), float(lat.max())),
             "max": (float(ts.min()), float(ts.max())),
-            "count2d": (float(px.min()), float(px.max()),
-                        float(py.min()), float(py.max())),
+            "count2d": dom2, "sum2d": dom2, "max2d": dom2[1::2],
         }
         say(f"[server] ready in {time.time() - t0:.1f}s — sizes: " +
             " ".join(f"{k}={b}B" for k, b in self.session.size_bytes().items()))
@@ -97,7 +121,8 @@ class AggregateService:
 
     def insert(self, kind: str, *args) -> None:
         """Buffer new records: (keys[, measures]) for 1-D, (xs, ys) for
-        'count2d'.  Subsequent queries fold them in exactly."""
+        'count2d', (xs, ys, measures) for 'sum2d'/'max2d'.  Subsequent
+        queries fold them in exactly."""
         self._require_dynamic()
         self.session.insert(kind, *args)
 
@@ -123,4 +148,10 @@ class AggregateService:
         self.serve("count2d", jnp.full((batch_size,), x0),
                    jnp.full((batch_size,), x1),
                    jnp.full((batch_size,), y0),
+                   jnp.full((batch_size,), y1))
+        self.serve("sum2d", jnp.full((batch_size,), x0),
+                   jnp.full((batch_size,), x1),
+                   jnp.full((batch_size,), y0),
+                   jnp.full((batch_size,), y1))
+        self.serve("max2d", jnp.full((batch_size,), x1),
                    jnp.full((batch_size,), y1))

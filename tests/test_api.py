@@ -90,8 +90,11 @@ def test_spec_validation(data):
         QuerySpec("cnt", (np.zeros(3), np.zeros(4)))
     with pytest.raises(ValueError, match="1-D"):
         QuerySpec("cnt", (1.0, 2.0, 3.0))
-    with pytest.raises(ValueError, match="sharded"):
-        TableSpec("count2d", ErrorBudget(abs=1.0), shards=2)
+    with pytest.raises(ValueError, match="unknown aggregate"):
+        TableSpec("median2d", ErrorBudget(abs=1.0))
+    # 2-D sharding landed (engine/sharded.py z-range partitioning): the
+    # old "1-D only" rejection is gone
+    assert TableSpec("count2d", ErrorBudget(abs=1.0), shards=2).shards == 2
 
 
 # ---------------------------------------------------------------------------
@@ -256,3 +259,77 @@ def _exact_sum(keys, meas, lq, uq):
     p = np.concatenate([[0.0], cf])
     return (p[np.searchsorted(keys, uq, side="right")]
             - p[np.searchsorted(keys, lq, side="right")])
+
+
+# ---------------------------------------------------------------------------
+# 2-D measure aggregates through the facade (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("agg,frac", [("sum2d", 0.25), ("max2d", 1.0),
+                                      ("min2d", 1.0)])
+def test_budget_delta_derivation_2d_measures(agg, frac):
+    b = ErrorBudget(abs=100.0, rel=0.01)
+    assert b.delta(agg) == pytest.approx(100.0 * frac)
+    assert b.bound(agg) == pytest.approx(100.0)
+
+
+def test_session_2d_measures_mixed_batch(data):
+    """A batch mixing 1-D COUNT, 2-D SUM rectangles and dominance MAX/MIN
+    corners: answers preserve request order, hold certified bounds, and
+    updates flow through insert/delete/flush."""
+    keys, meas, px, py = data
+    w = 50 + 10 * np.sin(px / 10) + 10 * np.cos(py / 15)
+    session = PolyFit.fit(
+        {"cnt": keys, "spend": (px, py, w), "peak": (px, py, w),
+         "low": (px, py, w)},
+        {"cnt": TableSpec("count", ErrorBudget(abs=2 * DELTA)),
+         "spend": TableSpec("sum2d", ErrorBudget(abs=1600.0), deg=2,
+                            dynamic=True, background=False, capacity=64),
+         "peak": TableSpec("max2d", ErrorBudget(abs=4.0), deg=2),
+         "low": TableSpec("min2d", ErrorBudget(abs=4.0), deg=2)})
+    assert session.spec("spend").degree == 2
+
+    rng = np.random.default_rng(19)
+    lx = rng.uniform(0, 95, 48)
+    ux = lx + rng.uniform(2, 25, 48)
+    ly = rng.uniform(0, 95, 48)
+    uy = ly + rng.uniform(2, 25, 48)
+    ci = rng.integers(0, len(px), 48)
+    cu, cv = px[ci], py[ci]
+    out = session.query(QueryBatch.of(
+        QuerySpec.corner("peak", cu, cv),
+        QuerySpec.rect("spend", lx, ux, ly, uy),
+        QuerySpec.corner("low", cu, cv),
+        QuerySpec.range("cnt", keys[10], keys[-10])))
+    assert len(out) == 4
+
+    dom = (px[None, :] <= cu[:, None]) & (py[None, :] <= cv[:, None])
+    truth_max = np.array([w[d].max() for d in dom])
+    truth_min = np.array([w[d].min() for d in dom])
+    truth_sum = np.array([
+        w[(px > a) & (px <= b) & (py > c) & (py <= d)].sum()
+        for a, b, c, d in zip(lx, ux, ly, uy)])
+    assert np.abs(np.asarray(out[0].answer) - truth_max).max() <= 4.0 + 1e-6
+    assert np.abs(np.asarray(out[1].answer) - truth_sum).max() \
+        <= 1600.0 + 1e-6
+    assert np.abs(np.asarray(out[2].answer) - truth_min).max() <= 4.0 + 1e-6
+
+    # dynamic updates on the sum2d table flow through the facade
+    session.insert("spend", [50.0], [50.0], [25.0])
+    rect1 = (np.array([40.0]), np.array([60.0]),
+             np.array([40.0]), np.array([60.0]))
+    before = float(np.asarray(
+        session.query(QuerySpec.rect("spend", *rect1)).answer)[0])
+    session.delete("spend", [50.0], [50.0])
+    after = float(np.asarray(
+        session.query(QuerySpec.rect("spend", *rect1)).answer)[0])
+    assert before - after == pytest.approx(25.0)
+    session.flush("spend")
+    assert session._table("spend").dyn.refit_count >= 1
+
+
+def test_session_2d_measure_data_validation(data):
+    keys, meas, px, py = data
+    with pytest.raises(ValueError, match="must be"):
+        PolyFit.fit({"s": (px, py)},
+                    {"s": TableSpec("sum2d", ErrorBudget(abs=100.0))})

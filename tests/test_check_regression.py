@@ -1,0 +1,122 @@
+"""benchmarks/check_regression.py gates every PR's bench-smoke job but had
+no tests of its own: MATCH_META pairing, the multi-record max envelope, the
+2x threshold, --require-prefix missing-family failures, and the exit-code
+contract (0 ok / 1 regression / 2 config error)."""
+import json
+
+import pytest
+
+from benchmarks.check_regression import MATCH_META, compare
+
+
+def _record(meta, results):
+    return {"meta": meta,
+            "results": [{"name": n, "us_per_query": v, "derived": ""}
+                        for n, v in results.items()]}
+
+
+def _write(path, records):
+    path.write_text(json.dumps(records))
+    return str(path)
+
+
+META = {"n": 1000, "nq": 64, "device": "cpu"}
+
+
+@pytest.fixture()
+def files(tmp_path):
+    def make(baseline_records, candidate_records):
+        return (_write(tmp_path / "base.json", baseline_records),
+                _write(tmp_path / "cand.json", candidate_records))
+    return make
+
+
+def test_ok_within_threshold(files):
+    base, cand = files([_record(META, {"a.x": 1.0, "a.y": 2.0})],
+                       [_record(META, {"a.x": 1.5, "a.y": 2.5})])
+    assert compare(base, cand, 2.0) == 0
+
+
+def test_regression_beyond_threshold(files):
+    base, cand = files([_record(META, {"a.x": 1.0})],
+                       [_record(META, {"a.x": 2.5})])
+    assert compare(base, cand, 2.0) == 1
+
+
+def test_envelope_is_max_over_matching_records(files):
+    """Two committed baseline samples widen the envelope: 2.5us regresses
+    against a 1.0us sample but not against the 1.5us one (2.5/1.5 < 2x)."""
+    base, cand = files([_record(META, {"a.x": 1.0}),
+                        _record(META, {"a.x": 1.5})],
+                       [_record(META, {"a.x": 2.5})])
+    assert compare(base, cand, 2.0) == 0
+
+
+def test_meta_mismatch_is_config_error(files):
+    """A candidate whose meta shape matches no baseline must exit 2 (the
+    gate cannot compare across shapes), for every MATCH_META key."""
+    other = dict(META, n=2000)
+    base, cand = files([_record(other, {"a.x": 1.0})],
+                       [_record(META, {"a.x": 1.0})])
+    assert compare(base, cand, 2.0) == 2
+
+
+def test_meta_key_absent_on_both_sides_still_pairs(files):
+    """Records missing a MATCH_META key on *both* sides pair (None == None)
+    — old baselines keep gating candidates that never grew the key."""
+    assert "dim" in MATCH_META   # the bench_updates 2-D mode key
+    meta = {"n": 5, "device": "cpu"}
+    base, cand = files([_record(meta, {"a.x": 1.0})],
+                       [_record(meta, {"a.x": 1.2})])
+    assert compare(base, cand, 2.0) == 0
+
+
+def test_dim_key_separates_update_families(files):
+    """A dim=2 candidate must not pair with dim-less 1-D baselines."""
+    base, cand = files([_record(META, {"updates.insert.xla": 1.0})],
+                       [_record(dict(META, dim=2),
+                                {"updates2d.insert.xla": 1.0})])
+    assert compare(base, cand, 2.0) == 2
+
+
+def test_new_metric_without_baseline_is_ignored(files):
+    base, cand = files([_record(META, {"a.x": 1.0})],
+                       [_record(META, {"a.x": 1.0, "b.new": 99.0})])
+    assert compare(base, cand, 2.0) == 0
+
+
+def test_require_prefix_missing_family_fails(files):
+    base, cand = files([_record(META, {"a.x": 1.0})],
+                       [_record(META, {"a.x": 1.0})])
+    assert compare(base, cand, 2.0, require_prefixes=("a.",)) == 0
+    assert compare(base, cand, 2.0,
+                   require_prefixes=("a.", "hsweep.sum2d.")) == 2
+
+
+def test_no_shared_metrics_is_config_error(files):
+    base, cand = files([_record(META, {"a.x": 1.0})],
+                       [_record(META, {"b.y": 1.0})])
+    assert compare(base, cand, 2.0) == 2
+
+
+def test_latest_candidate_record_wins(files):
+    """Only the candidate history's last record is gated (earlier appends
+    are prior runs)."""
+    base, cand = files([_record(META, {"a.x": 1.0})],
+                       [_record(META, {"a.x": 9.0}),
+                        _record(META, {"a.x": 1.1})])
+    assert compare(base, cand, 2.0) == 0
+
+
+def test_malformed_inputs_are_config_errors(tmp_path):
+    """Unreadable/empty histories exit(2) straight from the loader — the
+    same code the CLI surfaces for any non-comparable configuration."""
+    good = _write(tmp_path / "g.json", [_record(META, {"a.x": 1.0})])
+    empty = _write(tmp_path / "e.json", [])
+    missing = str(tmp_path / "nope.json")
+    with pytest.raises(SystemExit) as e:
+        compare(empty, good, 2.0)
+    assert e.value.code == 2
+    with pytest.raises(SystemExit) as e:
+        compare(good, missing, 2.0)
+    assert e.value.code == 2

@@ -366,3 +366,194 @@ def test_serve_dynamic_endpoints():
     svc.flush("count")
     post = float(np.asarray(svc.serve("count", lq, uq).answer)[0])
     assert abs(post - upd) <= 50.0 + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# 2-D measure aggregates (DESIGN.md §12): buffered updates + selective refit
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def dyn2dw_setup():
+    rng = np.random.default_rng(0x2DD)
+    n = 3000
+    px = rng.uniform(0, 100, n)
+    py = rng.uniform(0, 100, n)
+    w = 50 + 10 * np.sin(px / 10) + 10 * np.cos(py / 15)
+    ins = (rng.uniform(5, 95, 40), rng.uniform(5, 95, 40),
+           rng.uniform(30, 70, 40))
+    del_i = rng.integers(0, n, 12)
+    rect = (rng.uniform(0, 75, 96), None, rng.uniform(0, 75, 96), None)
+    rect = (rect[0], rect[0] + rng.uniform(5, 25, 96),
+            rect[2], rect[2] + rng.uniform(5, 25, 96))
+    ci = rng.integers(0, n, 96)   # anchored at data points, so every
+    corners = (px[ci], py[ci])    # corner dominates at least one record
+    keep = np.ones(n, bool)
+    keep[del_i] = False
+    merged = (np.concatenate([px[keep], ins[0]]),
+              np.concatenate([py[keep], ins[1]]),
+              np.concatenate([w[keep], ins[2]]))
+    return px, py, w, ins, del_i, rect, corners, merged
+
+
+def _sum2d_truth(merged, rect):
+    mx, my, mw = merged
+    la, ua, lb, ub = rect
+    return np.array([
+        mw[(mx > a) & (mx <= b) & (my > c) & (my <= d)].sum()
+        for a, b, c, d in zip(la, ua, lb, ub)])
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_2d_sum_bounds_after_updates(dyn2dw_setup, backend):
+    """4*delta holds over the updated dataset while the ops sit in the
+    buffer (the weighted correction is exact)."""
+    px, py, w, ins, del_i, rect, _, merged = dyn2dw_setup
+    idx = build_index_2d(px, py, measures=w, agg="sum2d", deg=2,
+                         delta=400.0, max_depth=7)
+    dyn = DynamicEngine2D(idx, backend=backend, capacity=128,
+                          auto_refit=False)
+    dyn.insert(*ins)
+    dyn.delete(px[del_i], py[del_i])
+    res = dyn.sum2d(*rect)
+    truth = _sum2d_truth(merged, rect)
+    assert np.abs(np.asarray(res.answer) - truth).max() \
+        <= 4 * idx.certified_delta + 1e-6
+
+
+@pytest.mark.parametrize("agg", ["max2d", "min2d"])
+def test_2d_extremum_bounds_after_inserts(dyn2dw_setup, agg):
+    px, py, w, ins, _, _, corners, _ = dyn2dw_setup
+    idx = build_index_2d(px, py, measures=w, agg=agg, deg=2, delta=4.0,
+                         max_depth=7)
+    dyn = DynamicEngine2D(idx, backend="xla", capacity=128,
+                          auto_refit=False)
+    dyn.insert(*ins)
+    u, v = corners
+    res = dyn.extremum2d(u, v)
+    mx = np.concatenate([px, ins[0]])
+    my = np.concatenate([py, ins[1]])
+    mw = np.concatenate([w, ins[2]])
+    dom = (mx[None, :] <= u[:, None]) & (my[None, :] <= v[:, None])
+    red = np.max if agg == "max2d" else np.min
+    truth = np.array([red(mw[d]) for d in dom])
+    assert np.abs(np.asarray(res.answer) - truth).max() \
+        <= idx.certified_delta + 1e-6
+
+
+def test_2d_sum_cross_backend_and_flush(dyn2dw_setup):
+    px, py, w, ins, del_i, rect, _, merged = dyn2dw_setup
+    idx = build_index_2d(px, py, measures=w, agg="sum2d", deg=2,
+                         delta=400.0, max_depth=7)
+    outs = {}
+    for b in BACKENDS:
+        dyn = DynamicEngine2D(idx, backend=b, capacity=128,
+                              auto_refit=False)
+        dyn.insert(*ins)
+        dyn.delete(px[del_i], py[del_i])
+        outs[b] = np.asarray(dyn.sum2d(*rect).answer)
+    for b in BACKENDS[1:]:
+        np.testing.assert_allclose(outs[b], outs["xla"], rtol=1e-9,
+                                   atol=1e-9)
+    dyn.flush()
+    assert dyn.refit_count == 1 and dyn.n_pending == 0
+    stats = dyn.last_refit_stats
+    assert stats is not None and not stats["rebuild"]
+    assert 0 < stats["refit"] < stats["n_leaves"]
+    truth = _sum2d_truth(merged, rect)
+    res = np.asarray(dyn.sum2d(*rect).answer)
+    assert np.abs(res - truth).max() <= 4 * dyn.index.certified_delta + 1e-6
+
+
+def test_2d_selective_refit_leaves_far_leaves_alone(dyn2dw_setup):
+    """Post-merge, leaves outside every changed point's dominance boundary
+    keep identical coefficient rows; wholly dominated ones shift only in
+    the constant term."""
+    px, py, w, _, _, _, _, _ = dyn2dw_setup
+    idx = build_index_2d(px, py, measures=w, agg="sum2d", deg=2,
+                         delta=400.0, max_depth=7)
+    dyn = DynamicEngine2D(idx, backend="xla", capacity=64,
+                          auto_refit=False)
+    x0, y0, wv = 70.0, 65.0, 55.0
+    dyn.insert([x0], [y0], [wv])
+    dyn.flush()
+    stats = dyn.last_refit_stats
+    assert not stats["rebuild"]
+    assert stats["refit"] < stats["n_leaves"] // 4   # selectivity
+    lb = np.asarray(idx.bounds)[np.asarray(idx.leaf_nodes)]
+    old_c = np.asarray(idx.coeffs)
+    new_idx = dyn.index
+    new_lb = np.asarray(new_idx.bounds)[np.asarray(new_idx.leaf_nodes)]
+    new_c = np.asarray(new_idx.coeffs)
+    n_same = n_shift = 0
+    for i, b in enumerate(lb):
+        untouched = b[1] < x0 or b[3] < y0
+        dominated = b[0] >= x0 and b[2] >= y0
+        if not (untouched or dominated):
+            continue   # ray-crossed: re-fitted (and possibly re-split)
+        j = int(np.where((new_lb == b).all(axis=1))[0][0])
+        if untouched:
+            np.testing.assert_array_equal(old_c[i], new_c[j])
+            n_same += 1
+        else:                                       # constant bump only
+            assert new_c[j][0] == old_c[i][0] + wv
+            np.testing.assert_array_equal(old_c[i][1:], new_c[j][1:])
+            n_shift += 1
+    assert n_same > 0 and n_shift > 0
+
+
+def test_2d_extremum_delete_merges_eagerly(dyn2dw_setup):
+    """A dominance-MAX delete cannot ride the buffer (the victim may be
+    the maximum): the engine merges synchronously and stays exact."""
+    px, py, w, _, _, _, corners, _ = dyn2dw_setup
+    idx = build_index_2d(px, py, measures=w, agg="max2d", deg=2,
+                         delta=4.0, max_depth=7)
+    dyn = DynamicEngine2D(idx, backend="xla", capacity=64,
+                          auto_refit=False)
+    victim = int(np.argmax(w))
+    dyn.delete(px[victim], py[victim])
+    assert dyn.n_pending == 0 and dyn.refit_count == 1
+    u, v = corners
+    res = dyn.extremum2d(u, v)
+    keep = np.ones(len(px), bool)
+    keep[victim] = False
+    dom = ((px[keep][None, :] <= u[:, None])
+           & (py[keep][None, :] <= v[:, None]))
+    truth = np.array([w[keep][d].max() for d in dom])
+    assert np.abs(np.asarray(res.answer) - truth).max() \
+        <= dyn.index.certified_delta + 1e-6
+
+
+def test_2d_weighted_delete_victims(dyn2dw_setup):
+    """Duplicate (x, y) points with distinct measures: tombstones remove
+    base occurrences first, with a cursor across the batch."""
+    px, py, w, _, _, _, _, _ = dyn2dw_setup
+    px2 = np.concatenate([px, [50.0, 50.0]])
+    py2 = np.concatenate([py, [50.0, 50.0]])
+    w2 = np.concatenate([w, [11.0, 13.0]])
+    idx = build_index_2d(px2, py2, measures=w2, agg="sum2d", deg=2,
+                         delta=400.0, max_depth=6)
+    dyn = DynamicEngine2D(idx, backend="xla", capacity=64,
+                          auto_refit=False)
+    dyn.delete([50.0, 50.0], [50.0, 50.0])   # removes both occurrences
+    with pytest.raises(KeyError, match="not present"):
+        dyn.delete([50.0], [50.0])
+    rect = (np.array([45.0]), np.array([55.0]),
+            np.array([45.0]), np.array([55.0]))
+    res = float(np.asarray(dyn.sum2d(*rect).answer)[0])
+    m = (px > 45) & (px <= 55) & (py > 45) & (py <= 55)
+    assert abs(res - w[m].sum()) <= 4 * idx.certified_delta + 1e-6
+
+
+def test_2d_insert_measure_validation(dyn2dw_setup):
+    px, py, w, _, _, _, _, _ = dyn2dw_setup
+    idx = build_index_2d(px, py, measures=w, agg="sum2d", deg=2,
+                         delta=800.0, max_depth=5)
+    dyn = DynamicEngine2D(idx, backend="xla", capacity=64,
+                          auto_refit=False)
+    with pytest.raises(ValueError, match="measures required"):
+        dyn.insert([1.0], [2.0])
+    idxc = build_index_2d(px, py, deg=2, delta=50.0, max_depth=5)
+    dync = DynamicEngine2D(idxc, backend="xla", capacity=64,
+                           auto_refit=False)
+    with pytest.raises(ValueError, match="only apply"):
+        dync.insert([1.0], [2.0], [3.0])

@@ -192,3 +192,108 @@ def test_serve_step_routes_through_engine(plans, queries):
     res = step(lq, uq)
     assert res.answer.shape == (NQ,)
     assert np.asarray(res.refined).mean() < 1.0
+
+
+# ---------------------------------------------------------------------------
+# 2-D measure aggregates (DESIGN.md §12): SUM over rectangles, dominance
+# MAX/MIN — every backend agrees and stays within the certified bound
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def plans2d_measure():
+    rng = np.random.default_rng(17)
+    px = rng.uniform(0, 120, 4000)
+    py = rng.uniform(0, 120, 4000)
+    w = 50 + 10 * np.sin(px / 10) + 10 * np.cos(py / 15)
+    out = {}
+    for agg, delta in (("sum2d", 400.0), ("max2d", 4.0), ("min2d", 4.0)):
+        idx = build_index_2d(px, py, measures=w, agg=agg, deg=2,
+                             delta=delta, max_depth=7)
+        out[agg] = (idx, build_plan_2d(idx))
+    rect = (rng.uniform(0, 95, 256), None, rng.uniform(0, 95, 256), None)
+    rect = (rect[0], rect[0] + rng.uniform(2, 25, 256),
+            rect[2], rect[2] + rng.uniform(2, 25, 256))
+    ci = rng.integers(0, 4000, 256)   # anchored at data points, so every
+    corners = (px[ci], py[ci])        # corner dominates at least one record
+    return px, py, w, out, rect, corners
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_certified_bounds_sum2d(plans2d_measure, backend):
+    px, py, w, plans, rect, _ = plans2d_measure
+    idx, plan = plans["sum2d"]
+    res = Engine(backend=backend).sum2d(plan, *rect)
+    la, ua, lb, ub = rect
+    truth = np.array([
+        w[(px > a) & (px <= b) & (py > c) & (py <= d)].sum()
+        for a, b, c, d in zip(la, ua, lb, ub)])
+    assert np.abs(np.asarray(res.answer) - truth).max() \
+        <= 4 * idx.certified_delta + 1e-6
+
+
+@pytest.mark.parametrize("agg", ["max2d", "min2d"])
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_certified_bounds_dommax2d(plans2d_measure, agg, backend):
+    px, py, w, plans, _, corners = plans2d_measure
+    idx, plan = plans[agg]
+    u, v = corners
+    res = Engine(backend=backend).extremum2d(plan, u, v)
+    dom = (px[None, :] <= u[:, None]) & (py[None, :] <= v[:, None])
+    red = np.max if agg == "max2d" else np.min
+    truth = np.array([red(w[d]) for d in dom])
+    assert np.abs(np.asarray(res.answer) - truth).max() \
+        <= idx.certified_delta + 1e-6
+
+
+@pytest.mark.parametrize("agg", ["sum2d", "max2d", "min2d"])
+def test_cross_backend_equivalence_2d_measures(plans2d_measure, agg):
+    """All four backends agree bitwise on the 2-D measure aggregates (the
+    locate->gather, one-hot scan, jnp oracle and descent paths share one
+    leaf rule and one Horner sequence)."""
+    px, py, w, plans, rect, corners = plans2d_measure
+    _, plan = plans[agg]
+    ranges = rect if agg == "sum2d" else corners
+    outs = {b: np.asarray(Engine(backend=b).query(plan, *ranges).answer)
+            for b in BACKENDS}
+    for b in BACKENDS[1:]:
+        np.testing.assert_array_equal(outs[b], outs["xla"], err_msg=b)
+
+
+@pytest.mark.parametrize("agg", ["sum2d", "max2d"])
+def test_qrel_2d_measures_fused(plans2d_measure, agg):
+    px, py, w, plans, rect, corners = plans2d_measure
+    idx, plan = plans[agg]
+    eps_rel = 0.05
+    if agg == "sum2d":
+        la, ua, lb, ub = rect
+        res = Engine(backend="ref").sum2d(plan, *rect, eps_rel=eps_rel)
+        truth = np.array([
+            w[(px > a) & (px <= b) & (py > c) & (py <= d)].sum()
+            for a, b, c, d in zip(la, ua, lb, ub)])
+    else:
+        u, v = corners
+        res = Engine(backend="pallas").extremum2d(plan, u, v,
+                                                  eps_rel=eps_rel)
+        dom = (px[None, :] <= u[:, None]) & (py[None, :] <= v[:, None])
+        truth = np.array([w[d].max() for d in dom])
+    ans = np.asarray(res.answer)
+    pos = np.abs(truth) > 0
+    rel = np.abs(ans[pos] - truth[pos]) / np.abs(truth[pos])
+    assert rel.max() <= eps_rel + 1e-9
+
+
+def test_execute_dispatch_2d_aggs(plans2d_measure):
+    """`execute` routes IndexPlan2D by its agg; mismatched executors
+    refuse the plan."""
+    from repro.engine import execute, execute_count2d, execute_sum2d
+    _, _, _, plans, rect, corners = plans2d_measure
+    _, plan_s = plans["sum2d"]
+    _, plan_m = plans["max2d"]
+    r1 = execute(plan_s, rect, backend="ref")
+    r2 = execute_sum2d(plan_s, *rect, backend="ref")
+    np.testing.assert_array_equal(np.asarray(r1.answer),
+                                  np.asarray(r2.answer))
+    r3 = execute(plan_m, corners, backend="ref")
+    assert r3.answer.shape == corners[0].shape
+    with pytest.raises(AssertionError):
+        execute_count2d(plan_s, *rect)

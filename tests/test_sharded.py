@@ -178,3 +178,148 @@ def test_sharded_plan_fewer_segments_than_shards():
     got = ShardedEngine(8).query(plan, lq, uq)
     np.testing.assert_array_equal(np.asarray(ref.answer),
                                   np.asarray(got.answer))
+
+
+# ---------------------------------------------------------------------------
+# 2-D: the Morton leaf table partitioned by contiguous z-ranges
+# ---------------------------------------------------------------------------
+
+def test_shard2d_selftest_subprocess():
+    """Full 2-D z-range bit-identity sweep in a subprocess with 8 forced
+    host devices (single-device hosts get coverage this way)."""
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.engine._shard2d_selftest"],
+        env=ENV, cwd=ROOT, capture_output=True, text=True, timeout=900)
+    assert "ALL_SHARD2D_OK" in r.stdout, r.stdout[-3000:] + r.stderr[-3000:]
+
+
+@pytest.fixture(scope="module")
+def data2d():
+    from repro.core import build_index_2d
+    from repro.engine import build_plan_2d
+    rng = np.random.default_rng(0x2D5)
+    n = 2000
+    px, py = rng.uniform(0, 100, n), rng.uniform(0, 100, n)
+    w = 50 + 10 * np.sin(px / 9) + 10 * np.cos(py / 13)
+    plans = {}
+    for agg, delta in (("count2d", 25.0), ("sum2d", 400.0),
+                       ("max2d", 5.0), ("min2d", 5.0)):
+        meas = None if agg == "count2d" else w
+        idx = build_index_2d(px, py, measures=meas, agg=agg, deg=2,
+                             delta=delta, max_depth=6)
+        plans[agg] = build_plan_2d(idx)
+    nq = 96
+    lx = rng.uniform(0, 75, nq)
+    ux = lx + rng.uniform(5, 25, nq)
+    ly = rng.uniform(0, 75, nq)
+    uy = ly + rng.uniform(5, 25, nq)
+    ci = rng.integers(0, n, nq)
+    return px, py, w, plans, (lx, ux, ly, uy), (px[ci], py[ci])
+
+
+@multidevice
+@pytest.mark.parametrize("nshards", (1,) + SHARDS)
+@pytest.mark.parametrize("agg", ["count2d", "sum2d", "max2d", "min2d"])
+def test_sharded2d_bit_identical(data2d, agg, nshards):
+    """z-range sharded answers == single-device engine, bit for bit, at
+    S in {1, 2, 4, 8} (Q_abs and fused Q_rel, refined mask included)."""
+    from repro.engine import Engine, ShardedEngine2D
+    _, _, _, plans, rect, corners = data2d
+    plan = plans[agg]
+    ranges = rect if agg in ("count2d", "sum2d") else corners
+    ref = Engine(backend="xla").query(plan, *ranges)
+    refr = Engine(backend="xla").query(plan, *ranges, eps_rel=0.05)
+    se = ShardedEngine2D(nshards)
+    got = se.query(plan, *ranges)
+    np.testing.assert_array_equal(np.asarray(ref.answer),
+                                  np.asarray(got.answer))
+    gr = se.query(plan, *ranges, eps_rel=0.05)
+    np.testing.assert_array_equal(np.asarray(refr.answer),
+                                  np.asarray(gr.answer))
+    np.testing.assert_array_equal(np.asarray(refr.refined),
+                                  np.asarray(gr.refined))
+
+
+@multidevice
+@pytest.mark.parametrize("agg", ["count2d", "sum2d", "max2d"])
+def test_sharded2d_dynamic_state(data2d, agg):
+    """Live DynamicEngine2D snapshots (replicated buffers) fold buffered
+    updates in exactly through the sharded executors."""
+    from repro.core import build_index_2d
+    from repro.engine import DynamicEngine2D, ShardedEngine2D
+    px, py, w, _, rect, corners = data2d
+    rng = np.random.default_rng(23)
+    meas = None if agg == "count2d" else w
+    delta = {"count2d": 25.0, "sum2d": 400.0, "max2d": 5.0}[agg]
+    idx = build_index_2d(px, py, measures=meas, agg=agg, deg=2,
+                         delta=delta, max_depth=6)
+    dyn = DynamicEngine2D(idx, backend="xla", capacity=128,
+                          auto_refit=False)
+    ins = (rng.uniform(5, 95, 24), rng.uniform(5, 95, 24))
+    if agg == "count2d":
+        dyn.insert(*ins)
+        dyn.delete(px[30:38], py[30:38])
+    else:
+        dyn.insert(*ins, rng.uniform(30, 70, 24))
+        if agg == "sum2d":
+            dyn.delete(px[30:38], py[30:38])
+    ranges = rect if agg != "max2d" else corners
+    ref = dyn.query(*ranges, eps_rel=0.05)
+    plan, buf = dyn.snapshot()
+    for s in SHARDS:
+        got = ShardedEngine2D(s).query(plan, *ranges, eps_rel=0.05,
+                                       buf=buf)
+        np.testing.assert_array_equal(np.asarray(ref.answer),
+                                      np.asarray(got.answer))
+
+
+@multidevice
+def test_shard_plan_2d_partition(data2d):
+    """Every leaf lands on exactly one shard; z-ranges tile [0, sentinel)."""
+    from repro.engine import shard_plan_2d
+    from repro.kernels.locate import INT_SENTINEL
+    _, _, _, plans, _, _ = data2d
+    plan = plans["sum2d"]
+    sp = shard_plan_2d(plan, 4)
+    assert sp.zbounds[0] == 0 and sp.zbounds[-1] == INT_SENTINEL
+    assert list(sp.zbounds) == sorted(sp.zbounds)
+    z = np.asarray(plan.leaf_z)[: plan.n_leaves]
+    total = 0
+    for s in range(4):
+        local = np.asarray(sp.leaf_z[s])
+        real = local[local < INT_SENTINEL]
+        total += len(real)
+        assert np.all(real >= sp.zbounds[s])
+        assert np.all(real < sp.zbounds[s + 1])
+    assert total == len(z)
+
+
+def test_shard_plan_2d_requires_morton_layout():
+    from repro.core import build_index_2d
+    from repro.engine import build_plan_2d, shard_plan_2d
+    rng = np.random.default_rng(0)
+    px, py = rng.uniform(0, 50, 800), rng.uniform(0, 50, 800)
+    plan = build_plan_2d(build_index_2d(px, py, deg=2, delta=1000.0,
+                                        max_depth=16))
+    assert plan.leaf_z is None   # beyond the int32 Morton range
+    with pytest.raises(ValueError, match="Morton"):
+        shard_plan_2d(plan, 2)
+
+
+def test_sharded2d_s1_requires_unsharded_plan():
+    """nshards=1 is the single-device path by construction; a
+    pre-partitioned ShardedPlan2D would silently take the shard_map body
+    (and its last-ulp fusion variance), so it is refused."""
+    from repro.core import build_index_2d
+    from repro.engine import ShardedEngine2D, build_plan_2d, shard_plan_2d
+    rng = np.random.default_rng(1)
+    px, py = rng.uniform(0, 50, 600), rng.uniform(0, 50, 600)
+    plan = build_plan_2d(build_index_2d(px, py, deg=2, delta=200.0,
+                                        max_depth=4))
+    sp = shard_plan_2d(plan, 1)
+    se = ShardedEngine2D(1)
+    q = (np.array([5.0]), np.array([25.0]), np.array([5.0]),
+         np.array([25.0]))
+    with pytest.raises(ValueError, match="unsharded"):
+        se.count2d(sp, *q)
+    assert se.count2d(plan, *q).answer.shape == (1,)
