@@ -53,17 +53,34 @@ def run(n=100_000, nq=2048, capacity=2048, backends=("xla", "pallas", "ref"),
     batch = 256
     lo, hi = float(keys.min()), float(keys.max())
 
-    # warm the append-op compile cache (and every process-level one-time
-    # cost) on a throwaway engine, so the first backend in the loop is not
-    # charged for them — COUNT inserts run identical append code on every
-    # backend (max/min on pallas would also rebuild backend-gated buffer
-    # structures; warm per backend if this bench ever sweeps those)
-    warm = DynamicEngine(idx, capacity=capacity, auto_refit=False)
-    for _ in range(4):
-        warm.insert(rng.uniform(lo, hi, batch))
+    for backend in backends:
+        # warm the append-op compile cache per backend on a throwaway
+        # engine: backend-gated buffer structures (sparse table, merge-sort
+        # tree) trace on the backend's first insert, and those one-off
+        # compiles must not land on the timed batches below
+        warm = DynamicEngine(idx, backend=backend, capacity=capacity,
+                             auto_refit=False)
+        for _ in range(2):
+            warm.insert(rng.uniform(lo, hi, batch))
+            warm.insert(rng.uniform(lo, hi, capacity - batch))
+            warm.flush()
         jax.block_until_ready(warm._state[1].ins_keys)
 
-    for backend in backends:
+        # -- chunked insert throughput: one fused jitted append for a
+        # full-capacity chunk — the serving engine's drain granularity ----
+        times = []
+        for _ in range(5):
+            chunked = DynamicEngine(idx, backend=backend, capacity=capacity,
+                                    auto_refit=False)
+            big = rng.uniform(lo, hi, capacity)
+            t0 = time.perf_counter()
+            chunked.insert(big)
+            jax.block_until_ready(chunked._state[1].ins_keys)
+            times.append(time.perf_counter() - t0)
+        dt = float(np.median(times))
+        record(f"updates.insert_chunked.{backend}", dt / capacity * 1e6,
+               f"recs_per_s={capacity / dt:.0f}")
+
         dyn = DynamicEngine(idx, backend=backend, capacity=capacity,
                             auto_refit=False)
         # -- buffered insert throughput (records/s): median per-batch time,
@@ -142,13 +159,39 @@ def run2d(n=40_000, nq=1024, capacity=1024,
     x0, x1 = float(px.min()), float(px.max())
     y0, y1 = float(py.min()), float(py.max())
 
-    warm = DynamicEngine2D(idx, capacity=capacity, auto_refit=False)
-    for _ in range(4):
-        warm.insert(rng.uniform(x0, x1, batch), rng.uniform(y0, y1, batch),
-                    rng.uniform(0, 100, batch))
+    for backend in backends:
+        # per-backend warmup: the pallas buffer maintains merge-sort-tree
+        # levels the xla path never traces, so a shared warm engine would
+        # leave the pallas append compile on the first timed batch (the
+        # source of the old ~480x updates2d.insert.pallas artifact)
+        warm = DynamicEngine2D(idx, backend=backend, capacity=capacity,
+                               auto_refit=False)
+        for _ in range(2):
+            warm.insert(rng.uniform(x0, x1, batch),
+                        rng.uniform(y0, y1, batch),
+                        rng.uniform(0, 100, batch))
+            warm.insert(rng.uniform(x0, x1, capacity - batch),
+                        rng.uniform(y0, y1, capacity - batch),
+                        rng.uniform(0, 100, capacity - batch))
+            warm.flush()
         jax.block_until_ready(warm._state[1].ins_x)
 
-    for backend in backends:
+        # -- chunked insert throughput (one fused append per chunk) -------
+        times = []
+        for _ in range(5):
+            chunked = DynamicEngine2D(idx, backend=backend,
+                                      capacity=capacity, auto_refit=False)
+            big = (rng.uniform(x0, x1, capacity),
+                   rng.uniform(y0, y1, capacity),
+                   rng.uniform(0, 100, capacity))
+            t0 = time.perf_counter()
+            chunked.insert(*big)
+            jax.block_until_ready(chunked._state[1].ins_x)
+            times.append(time.perf_counter() - t0)
+        dt = float(np.median(times))
+        record(f"updates2d.insert_chunked.{backend}", dt / capacity * 1e6,
+               f"recs_per_s={capacity / dt:.0f}")
+
         dyn = DynamicEngine2D(idx, backend=backend, capacity=capacity,
                               auto_refit=False)
         n_batches = capacity // batch

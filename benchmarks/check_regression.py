@@ -28,10 +28,12 @@ import sys
 
 # capacity pairs bench_updates records; hs/hs2/nqh pair the H-sweep shape;
 # shard_* pair the sharded-plan sweep; dim separates bench_updates' 2-D
-# mode from the 1-D records (records missing a key on both sides still
-# pair — .get(None) == .get(None))
+# mode from the 1-D records; n1/n2/nreq/rate/backend pair the bench_serve
+# open-loop shape (records missing a key on both sides still pair —
+# .get(None) == .get(None))
 MATCH_META = ("n", "nq", "n2", "nq2", "capacity", "hs", "hs2", "nqh",
-              "shard_h", "shard_nq", "shard_s", "dim", "device")
+              "shard_h", "shard_nq", "shard_s", "dim", "n1", "nreq",
+              "rate", "backend", "device")
 
 
 def _load_history(path: str):

@@ -35,7 +35,8 @@ import numpy as np
 from ..core import AGGS_2D, build_index_1d, build_index_2d
 from ..core.queries import QueryResult
 from ..engine import (DynamicEngine, DynamicEngine2D, ShardedEngine,
-                      ShardedEngine2D, build_plan, build_plan_2d, execute)
+                      ShardedEngine2D, build_plan, build_plan_2d, execute,
+                      fused_executor)
 from ..kernels.poly_eval import DEFAULT_BQ
 from .budget import ErrorBudget
 from .spec import DEFAULT_REL, QueryBatch, QuerySpec, TableSpec
@@ -99,6 +100,12 @@ class _Table:
     @property
     def plan(self):
         return self.dyn.plan if self.dyn is not None else self._static_plan
+
+    def snapshot(self):
+        """Immutable (plan, delta-buffer) pair; ``()`` buffer when static."""
+        if self.dyn is not None:
+            return self.dyn.snapshot()
+        return self._static_plan, ()
 
     def resolve_rel(self, rel) -> Optional[float]:
         return self.spec.budget.rel if rel is DEFAULT_REL else rel
@@ -182,6 +189,41 @@ class PolyFit:
             raise KeyError(f"unknown table {name!r}; fitted tables: "
                            f"{sorted(self._tables)}")
         return t
+
+    # -- serving hooks (repro.serve.engine) -------------------------------
+
+    def snapshot(self, table: str):
+        """The table's current immutable (plan, delta-buffer) pair.
+
+        Static tables return ``()`` for the buffer so callers can pass the
+        pair straight into a :func:`~repro.engine.fused_executor` callable
+        regardless of dynamism.  The pair never mutates — merges install a
+        *new* plan object — so it is safe to hold across a dispatch.
+        """
+        return self._table(table).snapshot()
+
+    def resolve_rel(self, table: str,
+                    rel=DEFAULT_REL) -> Optional[float]:
+        """Concrete eps_rel for ``table``: the budget's default unless a
+        per-request override is given."""
+        return self._table(table).resolve_rel(rel)
+
+    def is_sharded(self, table: str) -> bool:
+        return self._table(table).sharded is not None
+
+    def serving_executor(self, table: str, eps_rel: Optional[float], *,
+                         bq: Optional[int] = None):
+        """An un-jitted ``fn(plan, buf, *padded_ranges)`` for ``table``
+        with this session's backend statics closed over — the unit the
+        serving engine AOT-lowers per bucket size.  ``bq`` overrides the
+        session block size (callers pass ``min(session.bq, bucket)`` to
+        match the in-session executors bit for bit)."""
+        t = self._table(table)
+        return fused_executor(t.spec.agg, t.dyn is not None,
+                              backend=self.backend, eps_rel=eps_rel,
+                              interpret=self.interpret,
+                              bq=self.bq if bq is None else bq,
+                              deg=t.spec.degree)
 
     # -- queries ---------------------------------------------------------
 

@@ -27,10 +27,10 @@ leaf refit.  This module is the execution layer behind the declarative
 kernels and their jnp oracles are implementation details below it.
 """
 from .dynamic import (DeltaBuffer, DeltaBuffer2D, DynamicEngine,
-                      DynamicEngine2D)
+                      DynamicEngine2D, fused_executor)
 from .engine import (BACKENDS, Engine, execute, execute_count2d,
                      execute_extremum, execute_extremum2d, execute_sum,
-                     execute_sum2d)
+                     execute_sum2d, pad_fills)
 from .plan import (IndexPlan, IndexPlan2D, big_sentinel, build_plan,
                    build_plan_2d, pad_to_multiple)
 from .sharded import (ShardedDelta, ShardedEngine, ShardedEngine2D,
@@ -40,7 +40,8 @@ from .sharded import (ShardedDelta, ShardedEngine, ShardedEngine2D,
 __all__ = ["Engine", "BACKENDS", "IndexPlan", "IndexPlan2D", "build_plan",
            "build_plan_2d", "big_sentinel", "pad_to_multiple",
            "DynamicEngine", "DynamicEngine2D", "DeltaBuffer",
-           "DeltaBuffer2D", "execute", "execute_sum", "execute_extremum",
+           "DeltaBuffer2D", "fused_executor", "pad_fills",
+           "execute", "execute_sum", "execute_extremum",
            "execute_count2d", "execute_sum2d", "execute_extremum2d",
            "ShardedEngine", "ShardedEngine2D", "ShardedPlan",
            "ShardedPlan2D", "ShardedDelta", "shard_plan", "shard_plan_2d",

@@ -176,8 +176,7 @@ jax.tree_util.register_dataclass(
 )
 
 
-@partial(jax.jit, static_argnames=("cap",))
-def _append_sorted(keys, vals, new_k, new_v, *, cap: int):
+def _merge_sorted(cap: int, keys, vals, new_k, new_v):
     """Merge a (sentinel-padded) batch into the sorted log, keeping shape.
 
     Valid entries sort before the sentinels, so slicing back to ``cap``
@@ -189,13 +188,11 @@ def _append_sorted(keys, vals, new_k, new_v, *, cap: int):
     return k[order][:cap], v[order][:cap]
 
 
-@jax.jit
 def _prefix_sum_jnp(vals):
     """Exclusive prefix-sum array ((cap+1,)) over the sorted log's values."""
     return jnp.concatenate([jnp.zeros((1,), vals.dtype), jnp.cumsum(vals)])
 
 
-@partial(jax.jit, static_argnames=("cap",))
 def _sparse_table_jnp(vals, *, cap: int):
     """(L, cap) sparse table over the sorted log (``build_sparse_table``
     semantics: st[j, i] = max(vals[i : i+2^j]), -inf past the end)."""
@@ -209,7 +206,6 @@ def _sparse_table_jnp(vals, *, cap: int):
     return jnp.stack(rows)
 
 
-@partial(jax.jit, static_argnames=("cap",))
 def _mst_levels_jnp(ys, *, cap: int):
     """(L, cap) merge-sort-tree levels of the x-sorted log's y values
     (level l = per-block sort with block size 2^l; level 0 = x order)."""
@@ -220,18 +216,6 @@ def _mst_levels_jnp(ys, *, cap: int):
     return jnp.stack(rows)
 
 
-@partial(jax.jit, static_argnames=("cap",))
-def _append_sorted3(kx, ky, kw, nx, ny, nw, *, cap: int):
-    """Merge a (sentinel-padded) point batch with measures into the
-    x-sorted log, keeping shape (the 3-array twin of ``_append_sorted``)."""
-    x = jnp.concatenate([kx, nx])
-    y = jnp.concatenate([ky, ny])
-    w = jnp.concatenate([kw, nw])
-    order = jnp.argsort(x)   # stable: existing entries first on ties
-    return x[order][:cap], y[order][:cap], w[order][:cap]
-
-
-@partial(jax.jit, static_argnames=("cap",))
 def _mst_levels_w_jnp(ys, ws, *, cap: int):
     """Weighted merge-sort-tree levels of the x-sorted log: per-level
     block-sorted y arrays plus per-block inclusive weight prefix sums and
@@ -250,6 +234,50 @@ def _mst_levels_w_jnp(ys, ws, *, cap: int):
         wcum.append(jnp.cumsum(w2, axis=1).reshape(-1))
         wpmax.append(jax.lax.cummax(w2, axis=1).reshape(-1))
     return jnp.stack(ylv), jnp.stack(wcum), jnp.stack(wpmax)
+
+
+# The fused append executors: ONE jitted device dispatch per insert/delete
+# chunk, rebuilding the sorted log and every derived correction structure
+# (prefix sums, sparse table, merge-sort-tree levels) inside a single
+# compilation.  The previous shape — one jitted call per structure, per
+# batch — dispatched (and, on first use per backend, *compiled*) each helper
+# separately; the measured ~480x `updates2d.insert.pallas` gap in
+# BENCH_updates.json was exactly those un-warmed per-structure compilations
+# landing on the timed path.  One fused executable per (cap, structure
+# flags) also means chunked inserts amortize: appending a 1024-record chunk
+# costs one dispatch, not eight 128-record ones.
+
+@partial(jax.jit, static_argnames=("cap", "with_st"))
+def _append_1d(keys, vals, new_k, new_v, *, cap: int, with_st: bool):
+    """Fused 1-D append: merged sorted log + exclusive prefix sums and,
+    for the locate->gather MAX/MIN correction, the insert-log sparse
+    table.  Returns (keys, vals, cf, st-or-None)."""
+    k, v = _merge_sorted(cap, keys, vals, new_k, new_v)
+    cf = _prefix_sum_jnp(v)
+    st = _sparse_table_jnp(v, cap=cap) if with_st else None
+    return k, v, cf, st
+
+
+@partial(jax.jit, static_argnames=("cap", "levels", "weighted"))
+def _append_2d(bx, by, bw, nx, ny, nw, *, cap: int, levels: bool,
+               weighted: bool):
+    """Fused 2-D append: x-sorted point log plus (when the locate->gather
+    correction reads them) the merge-sort-tree level arrays — weighted
+    variants also rebuild the per-block prefix sums/maxima.  Returns
+    (x, y, w, ylv, wcum, wpmax) with None for structures not requested
+    (``bw``/``nw`` are ignored when ``weighted`` is False)."""
+    x = jnp.concatenate([bx, nx])
+    y = jnp.concatenate([by, ny])
+    order = jnp.argsort(x)   # stable: existing entries first on ties
+    x, y = x[order][:cap], y[order][:cap]
+    w = ylv = wcum = wpmax = None
+    if weighted:
+        w = jnp.concatenate([bw, nw])[order][:cap]
+        if levels:
+            ylv, wcum, wpmax = _mst_levels_w_jnp(y, w, cap=cap)
+    elif levels:
+        ylv = _mst_levels_jnp(y, cap=cap)
+    return x, y, w, ylv, wcum, wpmax
 
 
 def _pad_batch(arr: np.ndarray, fill, dtype) -> jnp.ndarray:
@@ -465,6 +493,53 @@ def _exec_dyn_dommax2d(plan: IndexPlan2D, buf: DeltaBuffer2D, u, v, *,
     if neg:
         ans, approx = -ans, -approx
     return ans, approx, ~ok
+
+
+# ---------------------------------------------------------------------------
+# serving-executor factory: the AOT-lowerable unit behind serve/engine.py
+# ---------------------------------------------------------------------------
+
+def fused_executor(agg: str, dynamic: bool, *, backend: str,
+                   eps_rel: Optional[float], interpret: bool, bq: int,
+                   deg: int):
+    """A plain callable ``fn(plan, buf, *padded_ranges)`` with every static
+    argument closed over — the unit the serving engine AOT-lowers
+    (``jax.jit(fn).lower(...).compile()``) and caches per (table, bucket).
+
+    ``buf`` is the table's ``DeltaBuffer``/``DeltaBuffer2D`` for dynamic
+    tables and an empty tuple for static ones (the argument slot is kept so
+    one executable-cache shape serves both).  The function returns the raw
+    executor triple ``(ans, approx, refined)`` over the padded bucket; the
+    caller slices real rows back out.  Dispatch mirrors ``execute_*``
+    exactly — including the deg>3 extremum backend downgrade — so answers
+    are bit-identical to the session path.
+    """
+    from .engine import (_exec_extremum, _exec_extremum2d, _exec_rect2d,
+                         _exec_sum)
+    if agg in ("max", "min") and deg > 3 and backend in (
+            "pallas", "pallas_scan", "ref"):
+        backend = "xla"   # no in-kernel closed form past deg 3
+    statics = dict(backend=backend, eps_rel=eps_rel, interpret=interpret,
+                   bq=bq)
+    if dynamic:
+        ex = {"sum": _exec_dyn_sum, "count": _exec_dyn_sum,
+              "max": _exec_dyn_extremum, "min": _exec_dyn_extremum,
+              "count2d": _exec_dyn_count2d, "sum2d": _exec_dyn_sum2d,
+              "max2d": _exec_dyn_dommax2d,
+              "min2d": _exec_dyn_dommax2d}[agg]
+
+        def fn(plan, buf, *qs):
+            return ex(plan, buf, *qs, **statics)
+    else:
+        ex = {"sum": _exec_sum, "count": _exec_sum,
+              "max": _exec_extremum, "min": _exec_extremum,
+              "count2d": _exec_rect2d, "sum2d": _exec_rect2d,
+              "max2d": _exec_extremum2d, "min2d": _exec_extremum2d}[agg]
+
+        def fn(plan, buf, *qs):
+            del buf
+            return ex(plan, *qs, **statics)
+    return fn
 
 
 # ---------------------------------------------------------------------------
@@ -785,19 +860,19 @@ class DynamicEngine(_DeltaBufferedEngine):
         big = big_sentinel(dt)
         pk = _pad_batch(keys, big, dt)
         pv = _pad_batch(vals, 0.0, dt)
+        # one fused jitted dispatch per chunk (log + every derived structure)
         if delete:
-            dk, dv = _append_sorted(buf.del_keys, buf.del_vals, pk, pv,
-                                    cap=buf.cap)
+            dk, dv, dcf, _ = _append_1d(buf.del_keys, buf.del_vals, pk, pv,
+                                        cap=buf.cap, with_st=False)
             buf = dataclasses.replace(buf, del_keys=dk, del_vals=dv,
-                                      del_cf=_prefix_sum_jnp(dv))
+                                      del_cf=dcf)
             self._del_log.append((keys, vals))
         else:
-            ik, iv = _append_sorted(buf.ins_keys, buf.ins_vals, pk, pv,
-                                    cap=buf.cap)
-            st = (buf.ins_st if buf.ins_st is None
-                  else _sparse_table_jnp(iv, cap=buf.cap))
+            ik, iv, icf, st = _append_1d(buf.ins_keys, buf.ins_vals, pk, pv,
+                                         cap=buf.cap,
+                                         with_st=buf.ins_st is not None)
             buf = dataclasses.replace(buf, ins_keys=ik, ins_vals=iv,
-                                      ins_cf=_prefix_sum_jnp(iv), ins_st=st)
+                                      ins_cf=icf, ins_st=st)
             self._ins_log.append((keys, vals))
         self._state = (plan, buf)
         self._n_pending += len(keys)
@@ -1006,42 +1081,30 @@ class DynamicEngine2D(_DeltaBufferedEngine):
         pky = _pad_batch(ys, big, dt)
         pkw = _pad_batch(ws, 0.0, dt)
         # merge-sort-tree levels are only read by the locate->gather
-        # correction, so only that backend pays the per-append block sorts
+        # correction, so only that backend pays the per-append block sorts;
+        # either way the whole append is ONE fused jitted dispatch
         lv = self.backend == "pallas"
-        if not self._weighted:
-            if delete:
-                dx, dy = _append_sorted(buf.del_x, buf.del_y, pkx, pky,
-                                        cap=buf.cap)
-                buf = dataclasses.replace(
-                    buf, del_x=dx, del_y=dy,
-                    del_ylv=_mst_levels_jnp(dy, cap=buf.cap) if lv
-                    else buf.del_ylv)
-            else:
-                ix, iy = _append_sorted(buf.ins_x, buf.ins_y, pkx, pky,
-                                        cap=buf.cap)
-                buf = dataclasses.replace(
-                    buf, ins_x=ix, ins_y=iy,
-                    ins_ylv=_mst_levels_jnp(iy, cap=buf.cap) if lv
-                    else buf.ins_ylv)
-        elif delete:
-            dx, dy, dw = _append_sorted3(buf.del_x, buf.del_y, buf.del_w,
-                                         pkx, pky, pkw, cap=buf.cap)
-            if lv:
-                ylv, wcum, _ = _mst_levels_w_jnp(dy, dw, cap=buf.cap)
-            else:
-                ylv, wcum = buf.del_ylv, buf.del_wcum
-            buf = dataclasses.replace(buf, del_x=dx, del_y=dy, del_w=dw,
-                                      del_ylv=ylv, del_wcum=wcum)
+        if delete:
+            bx, by, bw = buf.del_x, buf.del_y, buf.del_w
         else:
-            ix, iy, iw = _append_sorted3(buf.ins_x, buf.ins_y, buf.ins_w,
-                                         pkx, pky, pkw, cap=buf.cap)
-            if lv:
-                ylv, wcum, wpmax = _mst_levels_w_jnp(iy, iw, cap=buf.cap)
-            else:
-                ylv, wcum, wpmax = buf.ins_ylv, buf.ins_wcum, buf.ins_wpmax
-            buf = dataclasses.replace(buf, ins_x=ix, ins_y=iy, ins_w=iw,
-                                      ins_ylv=ylv, ins_wcum=wcum,
-                                      ins_wpmax=wpmax)
+            bx, by, bw = buf.ins_x, buf.ins_y, buf.ins_w
+        x, y, w, ylv, wcum, wpmax = _append_2d(
+            bx, by, bw if self._weighted else bx, pkx, pky, pkw,
+            cap=buf.cap, levels=lv, weighted=self._weighted)
+        if delete:
+            buf = dataclasses.replace(
+                buf, del_x=x, del_y=y,
+                del_w=w if self._weighted else None,
+                del_ylv=ylv if lv else buf.del_ylv,
+                del_wcum=wcum if (lv and self._weighted) else buf.del_wcum)
+        else:
+            buf = dataclasses.replace(
+                buf, ins_x=x, ins_y=y,
+                ins_w=w if self._weighted else None,
+                ins_ylv=ylv if lv else buf.ins_ylv,
+                ins_wcum=wcum if (lv and self._weighted) else buf.ins_wcum,
+                ins_wpmax=(wpmax if (lv and self._weighted)
+                           else buf.ins_wpmax))
         (self._del_log if delete else self._ins_log).append((xs, ys, ws))
         self._state = (plan, buf)
         self._n_pending += len(xs)

@@ -55,7 +55,7 @@ __all__ = ["Engine", "BACKENDS", "raw_sum", "raw_extremum", "raw_count2d",
            "raw_eval2d", "truth_sum", "truth_extremum", "truth_count2d",
            "truth_sum2d", "truth_dommax2d", "check_pow2", "execute_sum",
            "execute_extremum", "execute_count2d", "execute_sum2d",
-           "execute_extremum2d", "execute"]
+           "execute_extremum2d", "execute", "pad_fills"]
 
 BACKENDS = ("xla", "pallas", "pallas_scan", "ref")
 
@@ -79,6 +79,19 @@ def _pad_bucket(q: jnp.ndarray, size: int, fill) -> jnp.ndarray:
     if p == 0:
         return q
     return jnp.concatenate([q, jnp.full((p,), fill, q.dtype)])
+
+
+def pad_fills(plan: Union[IndexPlan, IndexPlan2D]):
+    """Per-range-coordinate padding fills for bucketed batches — the same
+    values the ``execute_*`` entry points pad with, exposed so external
+    batchers (the serving engine's admission path) produce bit-identical
+    padded batches."""
+    if isinstance(plan, IndexPlan2D):
+        x0, _, y0, _ = plan.root
+        if plan.agg in ("max2d", "min2d"):
+            return (x0, y0)
+        return (x0, x0, y0, y0)
+    return (plan.domain_lo, plan.domain_lo)
 
 
 def _cf_at(keys, cf, q):

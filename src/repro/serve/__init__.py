@@ -1,5 +1,6 @@
 from .aggregates import AggregateService
+from .engine import EngineStats, QueueFull, ServingEngine
 from .step import make_aggregate_step, make_prefill, make_serve_step
 
 __all__ = ["make_serve_step", "make_prefill", "make_aggregate_step",
-           "AggregateService"]
+           "AggregateService", "ServingEngine", "QueueFull", "EngineStats"]

@@ -1,58 +1,69 @@
 """Aggregate-query serving on the declarative PolyFit session (DESIGN.md
-§7, §11).
+§7, §11, §13).
 
 ``AggregateService`` is the deployment-shaped wrapper around
 ``repro.api.PolyFit``: it declares one ``TableSpec`` per (dataset,
 aggregate) with a shared ``ErrorBudget`` — the budget, not the service,
-owns the Lemma 5.1/5.3/6.3 delta derivations — fits them into one session,
-and serves batched requests by handing each one to ``session.query`` as a
-``QuerySpec``.  The request endpoints (``serve``/``insert``/``delete``/
-``flush``/``warmup``) are unchanged from the pre-session service; only the
-machinery below them moved behind the facade.  The backend ('xla' |
-'pallas' | 'pallas_scan' | 'ref') is a constructor argument, so the same
-service code runs the XLA reference path on CPU hosts and the Pallas
-locate->gather kernels (or the one-hot scan variant, DESIGN.md §10) on TPU.
+owns the Lemma 5.1/5.3/6.3 delta derivations — fits them into one
+session, and serves requests through a ``ServingEngine``
+(``serve/engine.py``): a bounded request queue with admission batching,
+a per-(table, guarantee, bucket) AOT-compiled executable cache, and an
+async staged update pipeline.  The request endpoints
+(``serve``/``insert``/``delete``/``flush``/``warmup``) keep their
+pre-engine signatures — ``serve`` still blocks on the answer and
+``insert`` is still read-your-writes by default — plus ``submit`` for
+callers that want the future.  The backend ('xla' | 'pallas' |
+'pallas_scan' | 'ref') is a constructor argument, so the same service
+code runs the XLA reference path on CPU hosts and the Pallas
+locate->gather kernels (or the one-hot scan variant, DESIGN.md §10) on
+TPU.
 """
 from __future__ import annotations
 
 import time
 from typing import Dict, Optional, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..api import ErrorBudget, PolyFit, QuerySpec, TableSpec
 from ..data import hki_series, osm_points, tweet_latitudes
+from .engine import ServingEngine
 
 __all__ = ["AggregateService"]
 
 
 class AggregateService:
     """Holds one fitted table per (dataset, aggregate); serves batched
-    requests through the ``PolyFit`` session.
+    requests through a continuous-batching ``ServingEngine`` over the
+    ``PolyFit`` session.
 
-    Request kinds: 'count' (1-D COUNT over TWEET latitudes), 'max' (1-D MAX
-    over the HKI series), 'count2d' (2-key COUNT over OSM points), 'sum2d'
-    (2-key SUM over OSM points with synthetic per-node weights) and
-    'max2d' (2-key dominance MAX over the same weighted points —
-    DESIGN.md §12).
+    Request kinds: 1-D 'count' (TWEET latitudes), 'sum' / 'max' / 'min'
+    (HKI series values over timestamps), and 2-key 'count2d' (OSM
+    points), 'sum2d' / 'max2d' / 'min2d' (OSM points with synthetic
+    per-node weights — DESIGN.md §12).
 
     ``dynamic=True`` fits every table with delta-buffered updates
     (engine/dynamic.py) and opens the ``insert``/``delete``/``flush``
-    endpoints: updates are absorbed without a rebuild, queries keep their
-    certified bounds, and merges refit only affected segments (1-D) or
-    leaves (2-D selective refit) on a background-installable plan swap.
-    ``shards=N`` serves every table from device-partitioned plans through
-    the shard_map executors (engine/sharded.py; 1-D key ranges, 2-D Morton
-    z-ranges; needs N local devices).
+    endpoints: updates stage on the host, drain in fused chunks off the
+    query path, and merges refit only affected segments (1-D) or leaves
+    (2-D selective refit) on a background-installable plan swap —
+    readers never block on writers.  ``shards=N`` serves every table
+    from device-partitioned plans through the shard_map executors
+    (engine/sharded.py; 1-D key ranges, 2-D Morton z-ranges; needs N
+    local devices).
     """
+
+    KINDS_1D = ("count", "sum", "max", "min")
+    KINDS_2D = ("count2d", "sum2d", "max2d", "min2d")
 
     def __init__(self, backend: str = "xla", eps_abs: float = 100.0,
                  eps_rel: Optional[float] = 0.01, n1: int = 150_000,
                  n2: int = 60_000, interpret: bool = True,
                  verbose: bool = True, dynamic: bool = False,
-                 capacity: int = 1024, shards: Optional[int] = None):
+                 capacity: int = 1024, shards: Optional[int] = None,
+                 max_queue: int = 1024, workers: int = 1,
+                 admission: str = "block", start: bool = True):
         self.backend = backend
         self.eps_rel = eps_rel
         self.dynamic = dynamic
@@ -68,49 +79,75 @@ class AggregateService:
 
         budget = ErrorBudget(abs=eps_abs, rel=eps_rel)
         # weighted sums run ~mean(w) larger than counts at the same shape,
-        # so the SUM2D budget scales the COUNT one to matching *relative*
-        # tightness (the absolute bound is still certified, just in
-        # measure units); dominance MAX answers live on the measure
-        # *spread*, so its budget is a fraction of that — reusing the
+        # so the SUM/SUM2D budgets scale the COUNT one to matching
+        # *relative* tightness (the absolute bound is still certified,
+        # just in measure units); extremum answers live on the measure
+        # *spread*, so their budgets are a fraction of that — reusing the
         # count-unit eps_abs would exceed the whole spread and certify a
         # trivial one-leaf fit
+        sbudget = ErrorBudget(abs=eps_abs * float(np.abs(vals).mean()),
+                              rel=eps_rel)
+        vbudget = ErrorBudget(abs=0.1 * float(vals.max() - vals.min()),
+                              rel=eps_rel)
         wbudget = ErrorBudget(abs=eps_abs * float(pw.mean()), rel=eps_rel)
         mbudget = ErrorBudget(abs=0.1 * float(pw.max() - pw.min()),
                               rel=eps_rel)
-        kw = dict(dynamic=dynamic, capacity=capacity, background=True)
+        kw = dict(dynamic=dynamic, capacity=capacity, background=True,
+                  shards=shards)
         self.session = PolyFit.fit(
-            {"count": lat, "max": (ts, vals), "count2d": (px, py),
-             "sum2d": (px, py, pw), "max2d": (px, py, pw)},
-            {"count": TableSpec("count", budget, deg=2, shards=shards, **kw),
-             "max": TableSpec("max", budget, deg=3, shards=shards, **kw),
-             "count2d": TableSpec("count2d", budget, deg=3, shards=shards,
-                                  **kw),
-             "sum2d": TableSpec("sum2d", wbudget, deg=3, shards=shards,
-                                **kw),
-             "max2d": TableSpec("max2d", mbudget, deg=3, shards=shards,
-                                **kw)},
+            {"count": lat, "sum": (ts, vals), "max": (ts, vals),
+             "min": (ts, vals), "count2d": (px, py),
+             "sum2d": (px, py, pw), "max2d": (px, py, pw),
+             "min2d": (px, py, pw)},
+            {"count": TableSpec("count", budget, deg=2, **kw),
+             "sum": TableSpec("sum", sbudget, deg=2, **kw),
+             "max": TableSpec("max", vbudget, deg=3, **kw),
+             "min": TableSpec("min", vbudget, deg=3, **kw),
+             "count2d": TableSpec("count2d", budget, deg=3, **kw),
+             "sum2d": TableSpec("sum2d", wbudget, deg=3, **kw),
+             "max2d": TableSpec("max2d", mbudget, deg=3, **kw),
+             "min2d": TableSpec("min2d", mbudget, deg=3, **kw)},
             backend=backend, interpret=interpret)
 
+        dom1 = (float(ts.min()), float(ts.max()))
         dom2 = (float(px.min()), float(px.max()),
                 float(py.min()), float(py.max()))
         self.domains: Dict[str, Tuple[float, ...]] = {
             "count": (float(lat.min()), float(lat.max())),
-            "max": (float(ts.min()), float(ts.max())),
-            "count2d": dom2, "sum2d": dom2, "max2d": dom2[1::2],
+            "sum": dom1, "max": dom1, "min": dom1,
+            "count2d": dom2, "sum2d": dom2,
+            "max2d": dom2[1::2], "min2d": dom2[1::2],
         }
+        self.engine = ServingEngine(self.session, max_queue=max_queue,
+                                    workers=workers, admission=admission,
+                                    start=start)
         say(f"[server] ready in {time.time() - t0:.1f}s — sizes: " +
-            " ".join(f"{k}={b}B" for k, b in self.session.size_bytes().items()))
+            " ".join(f"{k}={b}B"
+                     for k, b in self.session.size_bytes().items()))
 
     @property
     def plans(self):
         """Current device plans (fresh after dynamic merges)."""
         return {k: self.session.plan(k) for k in self.session.tables}
 
+    @property
+    def stats(self):
+        """The serving engine's monotonic counters."""
+        return self.engine.stats
+
     def serve(self, kind: str, *ranges):
-        """Answer one batched request; blocks until the device is done."""
-        res = self.session.query(QuerySpec(kind, ranges))
-        jax.block_until_ready(res.answer)
-        return res
+        """Answer one batched request; blocks until the device is done.
+        The request rides the engine queue, so concurrent callers
+        coalesce into shared dispatches."""
+        return self.engine.serve(kind, *ranges)
+
+    def submit(self, kind: str, *ranges):
+        """Non-blocking variant: a future resolving to the QueryResult."""
+        return self.engine.submit(QuerySpec(kind, ranges))
+
+    def shutdown(self, drain: bool = True) -> None:
+        """Stop the serving engine (answers queued work when draining)."""
+        self.engine.shutdown(drain=drain)
 
     # -- update endpoints (dynamic mode) ---------------------------------
 
@@ -119,39 +156,41 @@ class AggregateService:
             raise RuntimeError("updates require AggregateService("
                                "dynamic=True)")
 
-    def insert(self, kind: str, *args) -> None:
+    def insert(self, kind: str, *args, wait: bool = True) -> None:
         """Buffer new records: (keys[, measures]) for 1-D, (xs, ys) for
-        'count2d', (xs, ys, measures) for 'sum2d'/'max2d'.  Subsequent
-        queries fold them in exactly."""
+        'count2d', (xs, ys, measures) for the other 2-D kinds.
+        ``wait=True`` (default) blocks until the records are
+        query-visible; ``wait=False`` stages and returns immediately —
+        the async pipeline folds them in off the query path."""
         self._require_dynamic()
-        self.session.insert(kind, *args)
+        self.engine.insert(kind, *args, wait=wait)
 
-    def delete(self, kind: str, *args) -> None:
+    def delete(self, kind: str, *args, wait: bool = True) -> None:
         """Buffer delete tombstones for existing records."""
         self._require_dynamic()
-        self.session.delete(kind, *args)
+        self.engine.delete(kind, *args, wait=wait)
 
     def flush(self, kind: Optional[str] = None) -> None:
-        """Merge buffered updates into fresh plans (all kinds by default)."""
+        """Drain staged updates and merge them into fresh plans (all
+        kinds by default)."""
         self._require_dynamic()
-        self.session.flush(kind)
+        self.engine.flush(kind)
 
     def warmup(self, batch_size: int = 1024) -> None:
-        """Pre-compile the per-request-type executables for one bucket."""
-        c0, c1 = self.domains["count"]
-        self.serve("count", jnp.full((batch_size,), c0),
-                   jnp.full((batch_size,), c1))
-        m0, m1 = self.domains["max"]
-        self.serve("max", jnp.full((batch_size,), m0),
-                   jnp.full((batch_size,), m1))
+        """Pre-compile the serving executables: the full power-of-two AOT
+        bucket ladder up to ``batch_size`` for every kind, then one
+        device execution per kind to warm allocator/runtime paths."""
+        self.engine.warmup(max_bucket=batch_size)
+        for kind in self.KINDS_1D:
+            a, b = self.domains[kind]
+            self.serve(kind, jnp.full((batch_size,), a),
+                       jnp.full((batch_size,), b))
         x0, x1, y0, y1 = self.domains["count2d"]
-        self.serve("count2d", jnp.full((batch_size,), x0),
-                   jnp.full((batch_size,), x1),
-                   jnp.full((batch_size,), y0),
-                   jnp.full((batch_size,), y1))
-        self.serve("sum2d", jnp.full((batch_size,), x0),
-                   jnp.full((batch_size,), x1),
-                   jnp.full((batch_size,), y0),
-                   jnp.full((batch_size,), y1))
-        self.serve("max2d", jnp.full((batch_size,), x1),
-                   jnp.full((batch_size,), y1))
+        for kind in ("count2d", "sum2d"):
+            self.serve(kind, jnp.full((batch_size,), x0),
+                       jnp.full((batch_size,), x1),
+                       jnp.full((batch_size,), y0),
+                       jnp.full((batch_size,), y1))
+        for kind in ("max2d", "min2d"):
+            self.serve(kind, jnp.full((batch_size,), x1),
+                       jnp.full((batch_size,), y1))

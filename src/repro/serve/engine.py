@@ -1,0 +1,535 @@
+"""Continuous-batching serving engine over a ``PolyFit`` session
+(DESIGN.md §13).
+
+``ServingEngine`` turns the synchronous session facade into a traffic
+engine with three moving parts:
+
+* **Bounded request queue + admission batching.**  ``submit`` enqueues a
+  read and returns a future; background worker threads drain the queue,
+  coalesce whatever is waiting (up to ``max_batch`` queries) into groups
+  keyed on (table, guarantee), pad each group to its power-of-two bucket,
+  and answer every caller's future from one device dispatch.  The
+  executors are elementwise per query, so coalesced answers are
+  bit-identical to serial execution of the same requests.  Admission is
+  ``'block'`` (default: ``submit`` waits for room) or ``'reject'``
+  (``QueueFull`` when the queue is at capacity — load shedding).
+
+* **AOT executable cache.**  Each (table, guarantee, bucket) is served by
+  a ``jax.jit(fn).lower(plan, buf, *qs).compile()`` executable, so the
+  steady state never re-traces: admission batching maps every batch shape
+  onto the cached bucket ladder.  Compiled objects pin the plan's static
+  metadata (``delta``/``h``/``n`` change on every merge), so entries are
+  keyed by plan identity and recompiled on plan swap — the plan-swap
+  protocol is simply "readers snapshot, the cache invalidates on
+  mismatch".  ``warmup`` eagerly compiles the full bucket ladder per
+  table instead of a single shape.
+
+* **Async insert pipeline.**  ``insert``/``delete`` append to a host-side
+  staging log and return immediately (``wait=False``); a background
+  updater thread drains the log, coalescing consecutive same-(table, op)
+  runs into few engine calls — one fused jitted append per
+  capacity-sized chunk, not one dispatch per caller — and the dynamic
+  engines' background merges install fresh plans atomically, so readers
+  are never blocked by writers.  Per-table submission order is preserved
+  (delete victim resolution and read-your-writes depend on it);
+  ``wait=True`` blocks until the caller's records are query-visible.
+
+Sharded tables (``TableSpec(shards=N)``) fall back to the session's
+shard_map executors, which carry their own cache; everything else goes
+through the AOT path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from concurrent.futures import Future
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..api.spec import DEFAULT_REL, QueryBatch, QuerySpec
+from ..core.queries import QueryResult
+from ..engine import pad_fills
+from ..engine.engine import _bucket_size, _pad_bucket
+
+__all__ = ["ServingEngine", "QueueFull", "EngineStats"]
+
+
+class QueueFull(RuntimeError):
+    """``admission='reject'`` and the bounded request queue is at capacity."""
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Monotonic counters; read a consistent copy via ``engine.stats``."""
+
+    submitted: int = 0        # read requests accepted into the queue
+    rejected: int = 0         # read requests shed by admission='reject'
+    answered: int = 0         # read requests resolved (ok or error)
+    dispatches: int = 0       # device dispatches serving reads
+    coalesced: int = 0        # requests that shared a dispatch with others
+    aot_compiles: int = 0     # executables lowered+compiled
+    aot_hits: int = 0         # dispatches served from the cache
+    aot_invalidations: int = 0  # cache entries dropped on plan swap
+    staged_records: int = 0   # update records accepted into staging
+    drains: int = 0           # updater wake-ups that applied work
+    fused_applies: int = 0    # engine insert/delete calls made by drains
+
+
+class _ReadRequest:
+    __slots__ = ("table", "rel", "ranges", "n", "future")
+
+    def __init__(self, table: str, rel, ranges: Tuple, n: int):
+        self.table = table
+        self.rel = rel
+        self.ranges = ranges
+        self.n = n
+        self.future: Future = Future()
+
+
+class _WriteItem:
+    __slots__ = ("table", "kind", "args", "n", "future")
+
+    def __init__(self, table: Optional[str], kind: str, args: Tuple,
+                 n: int):
+        self.table = table
+        self.kind = kind            # 'insert' | 'delete' | 'barrier'
+        self.args = args
+        self.n = n
+        self.future: Future = Future()
+
+
+class _ExecEntry:
+    __slots__ = ("plan_ref", "compiled")
+
+    def __init__(self, plan_ref, compiled):
+        self.plan_ref = plan_ref    # identity-keyed: meta changes per swap
+        self.compiled = compiled
+
+
+class ServingEngine:
+    """Queue -> admission batcher -> AOT executable cache over one session.
+
+    ``max_queue`` bounds the read queue (backpressure), ``max_batch`` caps
+    the queries coalesced into one dispatch, ``workers`` is the number of
+    drain threads (1 keeps dispatch order deterministic).  ``start=False``
+    builds the engine without threads — ``submit`` still queues, nothing
+    drains — which makes backpressure deterministic to test; call
+    ``start()`` to begin serving.
+    """
+
+    def __init__(self, session, *, max_queue: int = 1024,
+                 max_batch: int = 4096, workers: int = 1,
+                 admission: str = "block", start: bool = True):
+        if admission not in ("block", "reject"):
+            raise ValueError(f"admission must be 'block' or 'reject', "
+                             f"got {admission!r}")
+        if workers < 1:
+            raise ValueError("workers must be >= 1")
+        self.session = session
+        self.max_batch = int(max_batch)
+        self.admission = admission
+        self._queue: "queue.Queue[_ReadRequest]" = queue.Queue(max_queue)
+        self._cache: Dict[Tuple, _ExecEntry] = {}
+        self._compile_lock = threading.Lock()
+        self._staging: List[_WriteItem] = []
+        self._staging_cv = threading.Condition()
+        self._stats = EngineStats()
+        self._stats_lock = threading.Lock()
+        self._update_error: Optional[BaseException] = None
+        self._stop = threading.Event()
+        self._shut_down = False
+        self._n_workers = int(workers)
+        self._threads: List[threading.Thread] = []
+        if start:
+            self.start()
+
+    # -- lifecycle --------------------------------------------------------
+
+    def start(self) -> None:
+        """Spawn the worker + updater threads (idempotent)."""
+        if self._shut_down:
+            raise RuntimeError("engine was shut down")
+        if self._threads:
+            return
+        for i in range(self._n_workers):
+            t = threading.Thread(target=self._worker_loop, daemon=True,
+                                 name=f"polyfit-serve-{i}")
+            t.start()
+            self._threads.append(t)
+        t = threading.Thread(target=self._updater_loop, daemon=True,
+                             name="polyfit-update")
+        t.start()
+        self._threads.append(t)
+
+    @property
+    def running(self) -> bool:
+        return bool(self._threads) and not self._shut_down
+
+    def shutdown(self, drain: bool = True, timeout: Optional[float] = None
+                 ) -> None:
+        """Stop the engine.  ``drain=True`` answers everything already
+        queued (reads) and applies everything staged (writes) first;
+        ``drain=False`` cancels queued reads with a ``RuntimeError`` and
+        drops staged writes.  Idempotent."""
+        if self._shut_down:
+            return
+        if drain and self._threads:
+            self._queue.join()
+            self.drain_updates()
+        self._shut_down = True
+        self._stop.set()
+        with self._staging_cv:
+            self._staging_cv.notify_all()
+        if not drain:
+            self._cancel_queued("serving engine shut down")
+        for t in self._threads:
+            t.join(timeout)
+        self._threads = []
+        if not drain:
+            # workers may have exited between queue drains; sweep again
+            self._cancel_queued("serving engine shut down")
+
+    def _cancel_queued(self, msg: str) -> None:
+        while True:
+            try:
+                req = self._queue.get_nowait()
+            except queue.Empty:
+                return
+            if not req.future.done():
+                req.future.set_exception(RuntimeError(msg))
+            self._queue.task_done()
+
+    # -- reads ------------------------------------------------------------
+
+    def submit(self, spec: QuerySpec, *, timeout: Optional[float] = None
+               ) -> Future:
+        """Enqueue one read; the future resolves to its ``QueryResult``.
+
+        ``admission='block'`` waits up to ``timeout`` for queue room (then
+        raises ``QueueFull``); ``'reject'`` raises immediately when full.
+        """
+        if self._shut_down:
+            raise RuntimeError("serving engine shut down")
+        rel = self.session.resolve_rel(spec.table, spec.rel)
+        req = _ReadRequest(spec.table, rel, spec.ranges, len(spec))
+        try:
+            if self.admission == "reject":
+                self._queue.put_nowait(req)
+            else:
+                self._queue.put(req, timeout=timeout)
+        except queue.Full:
+            with self._stats_lock:
+                self._stats.rejected += 1
+            raise QueueFull(f"request queue at capacity "
+                            f"({self._queue.maxsize})") from None
+        with self._stats_lock:
+            self._stats.submitted += 1
+        return req.future
+
+    def query(self, request: Union[QuerySpec, QueryBatch,
+                                   Sequence[QuerySpec]],
+              *, timeout: Optional[float] = None):
+        """Blocking convenience mirroring ``session.query``: one spec
+        returns its ``QueryResult``, a batch returns the aligned list."""
+        if isinstance(request, QuerySpec):
+            return self.submit(request).result(timeout)
+        specs = list(request.specs if isinstance(request, QueryBatch)
+                     else request)
+        futures = [self.submit(s) for s in specs]
+        return [f.result(timeout) for f in futures]
+
+    def serve(self, table: str, *ranges, rel=DEFAULT_REL,
+              timeout: Optional[float] = None) -> QueryResult:
+        """Blocking single-request endpoint: ``serve('count', lq, uq)``."""
+        res = self.submit(QuerySpec(table, ranges, rel)).result(timeout)
+        jax.block_until_ready(res.answer)
+        return res
+
+    # -- worker: drain, coalesce, dispatch --------------------------------
+
+    def _worker_loop(self) -> None:
+        q = self._queue
+        while True:
+            try:
+                req = q.get(timeout=0.05)
+            except queue.Empty:
+                if self._stop.is_set():
+                    return
+                continue
+            batch = [req]
+            budget = self.max_batch - req.n
+            while budget > 0:
+                # peek so the admission batch never overshoots max_batch —
+                # overshoot would hit a bucket above the warmed ladder
+                with q.mutex:
+                    if not q.queue or q.queue[0].n > budget:
+                        break
+                try:
+                    nxt = q.get_nowait()
+                except queue.Empty:
+                    break
+                batch.append(nxt)
+                budget -= nxt.n
+            groups: Dict[Tuple, List[_ReadRequest]] = {}
+            for r in batch:
+                groups.setdefault((r.table, r.rel), []).append(r)
+            for (table, rel), grp in groups.items():
+                # count before resolving: a caller that saw its future
+                # complete must also see it reflected in ``stats``
+                with self._stats_lock:
+                    self._stats.dispatches += 1
+                    self._stats.answered += len(grp)
+                    if len(grp) > 1:
+                        self._stats.coalesced += len(grp)
+                try:
+                    self._dispatch(table, rel, grp)
+                except BaseException as e:   # surface on the callers
+                    for r in grp:
+                        if not r.future.done():
+                            r.future.set_exception(e)
+            for _ in batch:
+                q.task_done()
+
+    def _dispatch(self, table: str, rel, grp: List[_ReadRequest]) -> None:
+        sess = self.session
+        if sess.is_sharded(table):
+            # shard_map executors keep their own cache; no AOT ladder here
+            ranges = self._concat_ranges(grp)
+            res = sess.query(QuerySpec(table, ranges, rel))
+            jax.block_until_ready(res.answer)
+            self._scatter(grp, res)
+            return
+        plan, buf = sess.snapshot(table)
+        nq = sum(r.n for r in grp)
+        size = _bucket_size(nq, sess.min_bucket)
+        compiled = self._executable(table, rel, size, plan, buf)
+        fills = pad_fills(plan)
+        dt = plan.dtype
+        qs = tuple(
+            _pad_bucket(jnp.asarray(c, dt), size,
+                        jnp.asarray(fills[j], dt))
+            for j, c in enumerate(self._concat_ranges(grp)))
+        ans, approx, refined = compiled(plan, buf, *qs)
+        jax.block_until_ready(ans)   # futures resolve device-ready
+        self._scatter(grp, QueryResult(ans, approx, refined))
+
+    @staticmethod
+    def _concat_ranges(grp: List[_ReadRequest]) -> Tuple:
+        if len(grp) == 1:
+            return tuple(grp[0].ranges)
+        return tuple(
+            jnp.concatenate([jnp.asarray(r.ranges[j]) for r in grp])
+            for j in range(len(grp[0].ranges)))
+
+    @staticmethod
+    def _scatter(grp: List[_ReadRequest], res: QueryResult) -> None:
+        off = 0
+        for r in grp:
+            m = r.n
+            r.future.set_result(QueryResult(res.answer[off:off + m],
+                                            res.approx[off:off + m],
+                                            res.refined[off:off + m]))
+            off += m
+
+    # -- AOT executable cache ---------------------------------------------
+
+    def _executable(self, table: str, rel, size: int, plan, buf):
+        key = (table, rel, size)
+        entry = self._cache.get(key)
+        if entry is not None and entry.plan_ref is plan:
+            with self._stats_lock:
+                self._stats.aot_hits += 1
+            return entry.compiled
+        with self._compile_lock:
+            entry = self._cache.get(key)
+            if entry is not None and entry.plan_ref is plan:
+                with self._stats_lock:
+                    self._stats.aot_hits += 1
+                return entry.compiled
+            if entry is not None:
+                with self._stats_lock:
+                    self._stats.aot_invalidations += 1
+            sess = self.session
+            fn = sess.serving_executor(table, rel, bq=min(sess.bq, size))
+            k = sess.spec(table).n_ranges
+            qs = [jax.ShapeDtypeStruct((size,), plan.dtype)] * k
+            compiled = jax.jit(fn).lower(plan, buf, *qs).compile()
+            self._cache[key] = _ExecEntry(plan, compiled)
+            with self._stats_lock:
+                self._stats.aot_compiles += 1
+            return compiled
+
+    def warmup(self, max_bucket: int = 1024,
+               tables: Optional[Sequence[str]] = None) -> int:
+        """Eagerly AOT-compile the full power-of-two bucket ladder
+        (``min_bucket`` .. ``max_bucket``) for every (table, default
+        guarantee); returns the number of executables compiled.  After
+        this, any admitted batch up to ``max_bucket`` queries serves
+        without tracing or compiling."""
+        sess = self.session
+        before = self.stats.aot_compiles
+        for table in (tables if tables is not None else sess.tables):
+            if sess.is_sharded(table):
+                continue
+            rel = sess.resolve_rel(table)
+            plan, buf = sess.snapshot(table)
+            size = sess.min_bucket
+            while size <= max_bucket:
+                self._executable(table, rel, size, plan, buf)
+                size *= 2
+        return self.stats.aot_compiles - before
+
+    # -- writes: staging + background drain -------------------------------
+
+    def insert(self, table: str, *args, wait: bool = False) -> None:
+        """Stage new records; ``wait=True`` blocks until they are
+        query-visible (folded into the table's delta buffer)."""
+        self._stage(table, "insert", args, wait)
+
+    def delete(self, table: str, *args, wait: bool = True) -> None:
+        """Stage delete tombstones.  Default ``wait=True`` so a bad key
+        (``KeyError``: no live occurrence) surfaces to the caller;
+        ``wait=False`` defers the error to the next ``flush``."""
+        self._stage(table, "delete", args, wait)
+
+    def _stage(self, table: str, kind: str, args: Tuple, wait: bool) -> None:
+        if self._shut_down:
+            raise RuntimeError("serving engine shut down")
+        cols = self._norm_update(table, kind, args)
+        item = _WriteItem(table, kind, cols, len(cols[0]))
+        with self._staging_cv:
+            self._staging.append(item)
+            self._staging_cv.notify()
+        with self._stats_lock:
+            self._stats.staged_records += item.n
+        if wait:
+            if not self._threads:   # no updater running: apply inline
+                self._drain_once()
+            item.future.result()
+
+    def _norm_update(self, table: str, kind: str, args: Tuple) -> Tuple:
+        """Host-normalize update args so same-(table, op) runs concat
+        columnwise: every column rank-1 float64 of equal length."""
+        spec = self.session.spec(table)
+        if not spec.dynamic:
+            raise RuntimeError(f"table {table!r} is static; fit it with "
+                               "TableSpec(dynamic=True) to take updates")
+        want = (1 if spec.agg in ("sum", "count", "max", "min")
+                else 2) if kind == "delete" else (
+            1 if spec.agg == "count" else
+            2 if spec.agg in ("sum", "max", "min", "count2d") else 3)
+        arrs = [np.atleast_1d(np.asarray(a, np.float64)) for a in args]
+        if spec.agg == "count" and kind == "insert" and len(arrs) == 2:
+            arrs = arrs[:1]          # engine forces unit measures anyway
+        if len(arrs) != want:
+            raise ValueError(f"{kind} on {table!r} ({spec.agg}) takes "
+                             f"{want} array argument(s), got {len(args)}")
+        base = arrs[0].shape
+        return tuple(np.broadcast_to(a, base).astype(np.float64, copy=True)
+                     for a in arrs)
+
+    def drain_updates(self) -> None:
+        """Block until every staged update is applied, then surface any
+        deferred write error."""
+        barrier = _WriteItem(None, "barrier", (), 0)
+        with self._staging_cv:
+            self._staging.append(barrier)
+            self._staging_cv.notify()
+        if not self._threads:
+            self._drain_once()
+        barrier.future.result()
+        self._raise_update_error()
+
+    def flush(self, table: Optional[str] = None) -> None:
+        """Drain staging, then merge the tables' delta buffers into fresh
+        plans (the AOT cache invalidates itself on the swap)."""
+        self.drain_updates()
+        self.session.flush(table)
+
+    def _raise_update_error(self) -> None:
+        if self._update_error is not None:
+            err, self._update_error = self._update_error, None
+            raise err
+
+    def _updater_loop(self) -> None:
+        while True:
+            with self._staging_cv:
+                while not self._staging and not self._stop.is_set():
+                    self._staging_cv.wait(timeout=0.1)
+            if not self._drain_once() and self._stop.is_set():
+                return
+
+    def _drain_once(self) -> bool:
+        """Apply one swapped-out chunk of the staging log; True if any."""
+        with self._staging_cv:
+            items, self._staging = self._staging, []
+        if not items:
+            return False
+        # coalesce consecutive same-(table, op) runs; per-table order is
+        # global order restricted to the table, so victim resolution and
+        # read-your-writes see writes in submission order
+        runs: List[List[_WriteItem]] = []
+        for it in items:
+            if (runs and it.kind != "barrier"
+                    and runs[-1][0].kind == it.kind
+                    and runs[-1][0].table == it.table):
+                runs[-1].append(it)
+            else:
+                runs.append([it])
+        applies = 0
+        for run in runs:
+            head = run[0]
+            if head.kind == "barrier":
+                head.future.set_result(None)
+                continue
+            try:
+                applies += self._apply_run(head.table, head.kind, run)
+            except BaseException as e:
+                self._update_error = e
+                for it in run:
+                    if not it.future.done():
+                        it.future.set_exception(e)
+                continue
+            for it in run:
+                it.future.set_result(None)
+        with self._stats_lock:
+            self._stats.drains += 1
+            self._stats.fused_applies += applies
+        return True
+
+    def _apply_run(self, table: str, kind: str,
+                   run: List[_WriteItem]) -> int:
+        cols = (run[0].args if len(run) == 1 else
+                tuple(np.concatenate([it.args[j] for it in run])
+                      for j in range(len(run[0].args))))
+        cap = self.session.spec(table).capacity
+        op = self.session.insert if kind == "insert" else self.session.delete
+        n = len(cols[0])
+        applies = 0
+        for lo in range(0, n, cap):
+            op(table, *(c[lo:lo + cap] for c in cols))
+            applies += 1
+        return applies
+
+    # -- introspection ----------------------------------------------------
+
+    @property
+    def stats(self) -> EngineStats:
+        with self._stats_lock:
+            return dataclasses.replace(self._stats)
+
+    @property
+    def queue_depth(self) -> int:
+        return self._queue.qsize()
+
+    @property
+    def staged_depth(self) -> int:
+        with self._staging_cv:
+            return sum(it.n for it in self._staging)
+
+    def cache_keys(self) -> Tuple[Tuple, ...]:
+        return tuple(sorted(self._cache, key=repr))
