@@ -211,6 +211,13 @@ class PolyFit:
     def is_sharded(self, table: str) -> bool:
         return self._table(table).sharded is not None
 
+    def admission_class(self, table: str) -> Tuple[Optional[float], int]:
+        """The table's serving guarantee class ``(deadline, priority)``
+        (``TableSpec.deadline``/``priority``) — the serving engine's
+        per-request defaults for admission deadlines and load shedding."""
+        spec = self._table(table).spec
+        return spec.deadline, spec.priority
+
     def serving_executor(self, table: str, eps_rel: Optional[float], *,
                          bq: Optional[int] = None):
         """An un-jitted ``fn(plan, buf, *padded_ranges)`` for ``table``

@@ -152,6 +152,14 @@ class TableSpec:
     ``shards`` partitions the plan's tables across that many devices and
     serves it through the shard_map executors (``engine/sharded.py`` —
     1-D key ranges, 2-D Morton z-ranges).
+
+    ``deadline``/``priority`` declare the table's serving guarantee class
+    (DESIGN.md §14): ``deadline`` is the default admission deadline in
+    seconds for reads on this table (a request still queued when it
+    expires fails with ``DeadlineExceeded`` instead of dispatching;
+    ``None`` = no deadline), and ``priority`` picks the table's rung on
+    the engine's load-shedding ladder (higher sheds later).  Both can be
+    overridden per request at ``ServingEngine.submit``.
     """
 
     agg: str
@@ -162,12 +170,18 @@ class TableSpec:
     background: bool = True
     auto_refit: bool = True
     shards: Optional[int] = None
+    deadline: Optional[float] = None
+    priority: int = 0
 
     def __post_init__(self):
         if self.agg not in _NRANGES:
             raise ValueError(f"unknown aggregate {self.agg!r}; expected one "
                              f"of {sorted(_NRANGES)}")
         assert self.agg in DELTA_FRACTION
+        if self.deadline is not None and self.deadline <= 0:
+            raise ValueError("deadline must be positive seconds (or None)")
+        if self.priority < 0:
+            raise ValueError("priority must be >= 0")
 
     @property
     def degree(self) -> int:

@@ -741,12 +741,17 @@ def selective_refit_2d(
 
     For dominance-MAX trees the change is max-composition, not additive, so
     every leaf intersecting the dominance region is re-fitted (the rest are
-    untouched).  Points outside the frozen root rectangle cannot be covered
-    by the existing topology: the function falls back to a full rebuild and
-    reports it in the stats.
+    untouched).  The extremal floor is re-frozen at the merged dataset's
+    minimum; when it moves (a below-floor insert, or a delete of the old
+    minimum), every leaf whose raw dominance-max dips below the higher of
+    the two floors is additionally re-fitted — those leaves' polynomials
+    were certified against the stale clamp.  Points outside the frozen
+    root rectangle cannot be covered by the existing topology: the
+    function falls back to a full rebuild and reports it in the stats.
 
     Returns ``(new_index, stats)`` with stats keys ``n_leaves`` (before),
-    ``refit``, ``split`` (leaves that re-split), ``shifted``, ``rebuild``.
+    ``refit``, ``split`` (leaves that re-split), ``shifted``, ``rebuild``,
+    ``floor_refit`` (clean leaves re-fitted only because the floor moved).
     """
     agg, deg, delta = index.agg, index.deg, index.delta
     max_depth = index.max_depth
@@ -771,7 +776,10 @@ def selective_refit_2d(
     tree = MergeSortTree.build(px, py, ws=None if agg == "count2d" else w)
     xo = np.argsort(px, kind="stable")
     sx, sy, sw = px[xo], py[xo], w[xo]
-    floor = index.extremal_floor if extremal else None
+    # re-freeze the floor at the *merged* dataset's minimum: reusing the
+    # build-time floor after a below-floor insert (or a delete of the old
+    # minimum) would leave refit leaves certified against a stale clamp
+    floor = float(sw.min()) if extremal else None
     cf_exact = _oracle_2d(tree, agg, floor)
 
     builder = _QuadtreeBuilder(sx, sy, cf_exact, deg=deg, delta=delta,
@@ -794,8 +802,20 @@ def selective_refit_2d(
     cw = np.asarray(changed_w, np.float64)
     # (L, C) classification against each changed point's dominance region
     untouched = (lb[:, 1:2] < cx) | (lb[:, 3:4] < cy)
+    n_floor = 0
     if extremal:
         dirty = (~untouched).any(axis=1)
+        old_floor = index.extremal_floor
+        if old_floor is not None and floor != old_floor:
+            # the frozen clamp moved: any leaf whose raw dominance-max
+            # dips below the higher of the two floors was answering with
+            # the old clamp value somewhere in its region (by bimonotone
+            # F, the region minimum sits at the lower-left corner) —
+            # force a targeted refit of exactly those leaves
+            raw = tree.dommax_np(lb[:, 0], lb[:, 2])
+            floor_dirty = raw < max(old_floor, floor)
+            n_floor = int((floor_dirty & ~dirty).sum())
+            dirty |= floor_dirty
         shift = np.zeros(len(lb))
     else:
         dominated = (lb[:, 0:1] >= cx) & (lb[:, 2:3] >= cy)
@@ -836,7 +856,8 @@ def selective_refit_2d(
         max_depth=max_depth, root_bounds=index.root_bounds, tree=tree,
         keep_exact=keep_exact, sx=sx, sy=sy, sw=sw, floor=floor)
     stats = {"n_leaves": int(len(leaf_nodes)), "refit": n_refit,
-             "split": n_split, "shifted": n_shift, "rebuild": False}
+             "split": n_split, "shifted": n_shift, "rebuild": False,
+             "floor_refit": n_floor}
     return new_index, stats
 
 

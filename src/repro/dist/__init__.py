@@ -4,5 +4,9 @@ Kept dependency-light: modules here are imported inside jitted train/serve
 paths and must not pull the heavy core/engine stacks.
 """
 from .compression import dequantize_int8, quantize_int8
+from .fault_tolerance import (FailureInjector, HeartbeatMonitor, RetryPolicy,
+                              SimulatedPodFailure, elastic_remesh)
 
-__all__ = ["quantize_int8", "dequantize_int8"]
+__all__ = ["quantize_int8", "dequantize_int8", "FailureInjector",
+           "HeartbeatMonitor", "RetryPolicy", "SimulatedPodFailure",
+           "elastic_remesh"]

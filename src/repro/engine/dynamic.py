@@ -1111,7 +1111,13 @@ class DynamicEngine2D(_DeltaBufferedEngine):
 
     def insert(self, xs, ys, ws=None) -> None:
         """Buffer new points; ``ws`` are the measures for sum2d/max2d/min2d
-        tables (count2d counts records, measures must be omitted)."""
+        tables (count2d counts records, measures must be omitted).
+
+        A dominance MAX/MIN insert *below the frozen extremal floor*
+        merges eagerly: the plan's clamp over-reports every query that
+        dominates only the new point, and no monotone correction covers
+        it — ``selective_refit_2d`` re-freezes the floor and refits
+        exactly the leaves the old clamp touched."""
         xs = np.atleast_1d(np.asarray(xs, np.float64))
         ys = np.atleast_1d(np.asarray(ys, np.float64))
         if not self._weighted:
@@ -1129,7 +1135,12 @@ class DynamicEngine2D(_DeltaBufferedEngine):
         with self._lock:
             self._log_ops(xs, ys, ws, delete=False)
             trigger = self.auto_refit and self._n_pending >= self.capacity
-        if trigger:
+            floor = (self._index.extremal_floor
+                     if self._agg in ("max2d", "min2d") else None)
+            below_floor = floor is not None and bool((ws < floor).any())
+        if below_floor:
+            self.refit(wait=True)
+        elif trigger:
             self.refit(wait=not self.background)
 
     def delete(self, xs, ys) -> None:

@@ -24,8 +24,8 @@ import numpy as np  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 from ..configs import ARCHS, SHAPES  # noqa: E402
-from ..dist.sharding import (batch_specs, cache_specs, named, param_specs,  # noqa: E402
-                             state_specs)
+from ..dist.sharding import (batch_specs, cache_specs, mesh_context, named,  # noqa: E402
+                             param_specs, state_specs)
 from ..launch.mesh import dp_axes, make_production_mesh  # noqa: E402
 from ..models import init_cache, init_model  # noqa: E402
 from ..optim import adamw_init  # noqa: E402
@@ -159,12 +159,18 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     n_chips = int(np.prod(list(mesh.shape.values())))
     t0 = time.time()
     try:
+      # the PolyFit core turns global x64 on, which leaks s64 *index*
+      # dtypes into the model stack's scans (the layer k/v stacking);
+      # the SPMD partitioner rejects the resulting s64/s32 index compares
+      # on 512-way meshes.  The model stack is dtype-explicit, so lowering
+      # with x64 off is value-identical.
+      with jax.experimental.disable_x64():
         params_abs = jax.eval_shape(
             lambda: init_model(jax.random.PRNGKey(0), cfg))
         pspecs = param_specs(params_abs, mesh)
         bspecs = batch_specs(cfg, shape, mesh)
 
-        with jax.sharding.set_mesh(mesh):
+        with mesh_context(mesh):
             if shape.kind == "train":
                 state_abs = jax.eval_shape(adamw_init, params_abs)
                 sspecs = state_specs(params_abs, mesh)

@@ -20,7 +20,8 @@ from ..configs import ARCHS, SHAPES
 from ..data.pipeline import SyntheticTokens
 from ..dist.fault_tolerance import (FailureInjector, HeartbeatMonitor,
                                     SimulatedPodFailure, elastic_remesh)
-from ..dist.sharding import batch_specs, param_specs, state_specs
+from ..dist.sharding import (batch_specs, mesh_context, param_specs,
+                             state_specs)
 from ..models import init_model
 from ..optim import adamw_init
 from ..train import make_train_step
@@ -55,8 +56,6 @@ def main(argv=None):
 
     mesh = build_mesh()
     rng = jax.random.PRNGKey(0)
-    with jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh:
-        pass
     params = init_model(rng, cfg)
     pspecs = param_specs(params, mesh)
     params = jax.tree.map(
@@ -89,7 +88,7 @@ def main(argv=None):
     while step < args.steps:
         try:
             injector.check(step)
-            with jax.sharding.set_mesh(mesh):
+            with mesh_context(mesh):
                 batch = pipe.sharded_batch(step, bshard)
                 state, metrics = train_step(state, batch)
             msg = monitor.beat()
@@ -112,6 +111,8 @@ def main(argv=None):
                 step = ckpt.latest_step() + 1
             else:
                 state, mesh = elastic_remesh(state, sspecs, build_mesh)
+            # input shardings are mesh-bound; rebind to the rebuilt mesh
+            bshard = {k: NamedSharding(mesh, s) for k, s in bspecs.items()}
     if ckpt:
         ckpt.wait()
     print(f"[train] done at step {step}")

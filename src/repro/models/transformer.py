@@ -519,8 +519,17 @@ def prefill(params, cfg, batch, max_seq: Optional[int] = None,
             return h + y2, (k.astype(cache_dtype), v.astype(cache_dtype))
 
         x, (ks, vs) = jax.lax.scan(body, x, (params["blocks"], windows))
-        cache["k"] = jax.lax.dynamic_update_slice_in_dim(cache["k"], ks, 0, axis=2)
-        cache["v"] = jax.lax.dynamic_update_slice_in_dim(cache["v"], vs, 0, axis=2)
+        # static prefix write (start is always 0): a dynamic-update-slice
+        # here lowers to an s64-indexed in-place update under x64, which
+        # the SPMD partitioner rejects (mixed s64/s32 compare) on sharded
+        # caches — concat of the written prefix with the untouched tail is
+        # the same value and partitions cleanly
+        sx = ks.shape[2]
+        if sx == cache["k"].shape[2]:
+            cache["k"], cache["v"] = ks, vs
+        else:
+            cache["k"] = jnp.concatenate([ks, cache["k"][:, :, sx:]], axis=2)
+            cache["v"] = jnp.concatenate([vs, cache["v"][:, :, sx:]], axis=2)
     elif fam == "ssm":
         def body(h, blk):
             y, st, tail = ssm_mod.mamba2_train(blk["mixer"],

@@ -1,6 +1,8 @@
 from .aggregates import AggregateService
-from .engine import EngineStats, QueueFull, ServingEngine
+from .engine import (DeadlineExceeded, EngineStats, Overloaded, QueueFull,
+                     ServingEngine)
 from .step import make_aggregate_step, make_prefill, make_serve_step
 
 __all__ = ["make_serve_step", "make_prefill", "make_aggregate_step",
-           "AggregateService", "ServingEngine", "QueueFull", "EngineStats"]
+           "AggregateService", "ServingEngine", "QueueFull", "Overloaded",
+           "DeadlineExceeded", "EngineStats"]

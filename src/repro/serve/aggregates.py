@@ -63,7 +63,11 @@ class AggregateService:
                  verbose: bool = True, dynamic: bool = False,
                  capacity: int = 1024, shards: Optional[int] = None,
                  max_queue: int = 1024, workers: int = 1,
-                 admission: str = "block", start: bool = True):
+                 admission: str = "block", start: bool = True,
+                 guarantees: Optional[Dict[str, Tuple]] = None,
+                 injector=None, retry=None, supervise: bool = True,
+                 shed_watermark: Optional[float] = None,
+                 default_deadline: Optional[float] = None):
         self.backend = backend
         self.eps_rel = eps_rel
         self.dynamic = dynamic
@@ -94,19 +98,30 @@ class AggregateService:
                               rel=eps_rel)
         kw = dict(dynamic=dynamic, capacity=capacity, background=True,
                   shards=shards)
+
+        # per-kind serving guarantee classes: {kind: (deadline_s, priority)}
+        # become the engine's admission-deadline / shed-ladder defaults
+        def klass(kind):
+            d, p = (guarantees or {}).get(kind, (None, 0))
+            return dict(deadline=d, priority=p)
         self.session = PolyFit.fit(
             {"count": lat, "sum": (ts, vals), "max": (ts, vals),
              "min": (ts, vals), "count2d": (px, py),
              "sum2d": (px, py, pw), "max2d": (px, py, pw),
              "min2d": (px, py, pw)},
-            {"count": TableSpec("count", budget, deg=2, **kw),
-             "sum": TableSpec("sum", sbudget, deg=2, **kw),
-             "max": TableSpec("max", vbudget, deg=3, **kw),
-             "min": TableSpec("min", vbudget, deg=3, **kw),
-             "count2d": TableSpec("count2d", budget, deg=3, **kw),
-             "sum2d": TableSpec("sum2d", wbudget, deg=3, **kw),
-             "max2d": TableSpec("max2d", mbudget, deg=3, **kw),
-             "min2d": TableSpec("min2d", mbudget, deg=3, **kw)},
+            {"count": TableSpec("count", budget, deg=2, **kw,
+                                **klass("count")),
+             "sum": TableSpec("sum", sbudget, deg=2, **kw, **klass("sum")),
+             "max": TableSpec("max", vbudget, deg=3, **kw, **klass("max")),
+             "min": TableSpec("min", vbudget, deg=3, **kw, **klass("min")),
+             "count2d": TableSpec("count2d", budget, deg=3, **kw,
+                                  **klass("count2d")),
+             "sum2d": TableSpec("sum2d", wbudget, deg=3, **kw,
+                                **klass("sum2d")),
+             "max2d": TableSpec("max2d", mbudget, deg=3, **kw,
+                                **klass("max2d")),
+             "min2d": TableSpec("min2d", mbudget, deg=3, **kw,
+                                **klass("min2d"))},
             backend=backend, interpret=interpret)
 
         dom1 = (float(ts.min()), float(ts.max()))
@@ -120,7 +135,10 @@ class AggregateService:
         }
         self.engine = ServingEngine(self.session, max_queue=max_queue,
                                     workers=workers, admission=admission,
-                                    start=start)
+                                    start=start, injector=injector,
+                                    retry=retry, supervise=supervise,
+                                    shed_watermark=shed_watermark,
+                                    default_deadline=default_deadline)
         say(f"[server] ready in {time.time() - t0:.1f}s — sizes: " +
             " ".join(f"{k}={b}B"
                      for k, b in self.session.size_bytes().items()))
@@ -141,9 +159,19 @@ class AggregateService:
         coalesce into shared dispatches."""
         return self.engine.serve(kind, *ranges)
 
-    def submit(self, kind: str, *ranges):
-        """Non-blocking variant: a future resolving to the QueryResult."""
-        return self.engine.submit(QuerySpec(kind, ranges))
+    def submit(self, kind: str, *ranges, deadline: Optional[float] = None,
+               priority: Optional[int] = None):
+        """Non-blocking variant: a future resolving to the QueryResult
+        (carrying ``.staleness``).  ``deadline``/``priority`` override the
+        kind's guarantee class for this request."""
+        return self.engine.submit(QuerySpec(kind, ranges),
+                                  deadline=deadline, priority=priority)
+
+    def health(self) -> Dict:
+        """The engine's liveness snapshot (thread states, stall list,
+        crash counters, journal depth) — for operators and the chaos
+        harness."""
+        return self.engine.health()
 
     def shutdown(self, drain: bool = True) -> None:
         """Stop the serving engine (answers queued work when draining)."""

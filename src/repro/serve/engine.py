@@ -1,5 +1,5 @@
 """Continuous-batching serving engine over a ``PolyFit`` session
-(DESIGN.md §13).
+(DESIGN.md §13, fault model §14).
 
 ``ServingEngine`` turns the synchronous session facade into a traffic
 engine with three moving parts:
@@ -7,12 +7,12 @@ engine with three moving parts:
 * **Bounded request queue + admission batching.**  ``submit`` enqueues a
   read and returns a future; background worker threads drain the queue,
   coalesce whatever is waiting (up to ``max_batch`` queries) into groups
-  keyed on (table, guarantee), pad each group to its power-of-two bucket,
-  and answer every caller's future from one device dispatch.  The
-  executors are elementwise per query, so coalesced answers are
-  bit-identical to serial execution of the same requests.  Admission is
-  ``'block'`` (default: ``submit`` waits for room) or ``'reject'``
-  (``QueueFull`` when the queue is at capacity — load shedding).
+  keyed on (table, guarantee, deadline class), pad each group to its
+  power-of-two bucket, and answer every caller's future from one device
+  dispatch.  The executors are elementwise per query, so coalesced
+  answers are bit-identical to serial execution of the same requests.
+  Admission is ``'block'`` (default: ``submit`` waits for room) or
+  ``'reject'`` (``QueueFull`` when the queue is at capacity).
 
 * **AOT executable cache.**  Each (table, guarantee, bucket) is served by
   a ``jax.jit(fn).lower(plan, buf, *qs).compile()`` executable, so the
@@ -24,15 +24,47 @@ engine with three moving parts:
   mismatch".  ``warmup`` eagerly compiles the full bucket ladder per
   table instead of a single shape.
 
-* **Async insert pipeline.**  ``insert``/``delete`` append to a host-side
-  staging log and return immediately (``wait=False``); a background
-  updater thread drains the log, coalescing consecutive same-(table, op)
-  runs into few engine calls — one fused jitted append per
-  capacity-sized chunk, not one dispatch per caller — and the dynamic
-  engines' background merges install fresh plans atomically, so readers
-  are never blocked by writers.  Per-table submission order is preserved
-  (delete victim resolution and read-your-writes depend on it);
-  ``wait=True`` blocks until the caller's records are query-visible.
+* **Async insert pipeline with a write-ahead journal.**  ``insert``/
+  ``delete`` append to a host-side journal and return immediately
+  (``wait=False``); a background updater thread drains the *un-applied
+  suffix*, coalescing consecutive same-(table, op) runs into few engine
+  calls — one fused jitted append per capacity-sized, item-aligned chunk
+  — and marks each item applied only after its chunk lands.  A crashed
+  updater therefore replays exactly the un-applied suffix on restart,
+  preserving the whole-chunk-prefix visibility order readers rely on.
+  Per-table submission order is preserved; ``wait=True`` blocks until
+  the caller's records are query-visible.
+
+Fault-tolerance hardening (``repro.dist.fault_tolerance``):
+
+* **Deadlines.**  ``submit(spec, deadline=...)`` (or a per-table default
+  from ``TableSpec.deadline``) rejects requests whose deadline expires
+  while queued with ``DeadlineExceeded`` *before* wasting a dispatch;
+  the deadline class joins the coalescing key, so a tight-deadline
+  request is never padded into — or dispatched behind — a slack batch
+  (groups dispatch earliest-deadline-first).
+
+* **Supervised threads.**  Workers and the updater heartbeat into a
+  ``HeartbeatMonitor``; a supervisor thread restarts crashed threads, a
+  crash fails only the in-flight group's futures (never the whole
+  queue), and crash/restart counts surface in ``EngineStats``.
+
+* **Graceful degradation.**  ``shed_watermark`` arms a load-shedding
+  ladder: the queue capacity beyond the watermark is reserved for
+  higher-priority guarantee classes (class p may fill a
+  ``w + (1-w)(1 - 2^-p)`` fraction), so the lowest class sheds first
+  (``Overloaded``).  While the updater is down, reads keep serving from
+  the last installed plan snapshot; each answered future carries
+  ``.staleness`` — the acknowledged-but-unapplied record count for its
+  table at dispatch time.  An optional ``RetryPolicy`` retries transient
+  dispatch failures with backoff before failing the group.
+
+* **Failure injection.**  An optional ``FailureInjector`` is consulted at
+  three sites — ``serve.worker`` (thread crash with requests in flight),
+  ``serve.dispatch`` (transient dispatch failure, retried), and
+  ``serve.updater`` (updater crash between fused applies) — which is how
+  the chaos harness (tests/chaos_serve.py, bench_serve --chaos) drives
+  crash storms through the real code paths.
 
 Sharded tables (``TableSpec(shards=N)``) fall back to the session's
 shard_map executors, which carry their own cache; everything else goes
@@ -41,8 +73,11 @@ through the AOT path.
 from __future__ import annotations
 
 import dataclasses
+import math
 import queue
 import threading
+import time
+from collections import deque
 from concurrent.futures import Future
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
@@ -52,14 +87,25 @@ import numpy as np
 
 from ..api.spec import DEFAULT_REL, QueryBatch, QuerySpec
 from ..core.queries import QueryResult
+from ..dist.fault_tolerance import HeartbeatMonitor
 from ..engine import pad_fills
 from ..engine.engine import _bucket_size, _pad_bucket
 
-__all__ = ["ServingEngine", "QueueFull", "EngineStats"]
+__all__ = ["ServingEngine", "QueueFull", "Overloaded", "DeadlineExceeded",
+           "EngineStats"]
 
 
 class QueueFull(RuntimeError):
     """``admission='reject'`` and the bounded request queue is at capacity."""
+
+
+class Overloaded(QueueFull):
+    """Shed by the degradation ladder: the queue is past the watermark and
+    this request's priority class has no reserved headroom left."""
+
+
+class DeadlineExceeded(TimeoutError):
+    """The request's admission deadline expired while it was queued."""
 
 
 @dataclasses.dataclass
@@ -67,31 +113,44 @@ class EngineStats:
     """Monotonic counters; read a consistent copy via ``engine.stats``."""
 
     submitted: int = 0        # read requests accepted into the queue
-    rejected: int = 0         # read requests shed by admission='reject'
-    answered: int = 0         # read requests resolved (ok or error)
+    rejected: int = 0         # read requests refused by admission='reject'
+    shed: int = 0             # read requests shed by the priority ladder
+    answered: int = 0         # read requests resolved by a dispatch
+    deadline_expired: int = 0  # queued requests expired before dispatch
     dispatches: int = 0       # device dispatches serving reads
     coalesced: int = 0        # requests that shared a dispatch with others
+    stale_reads: int = 0      # answers served with unapplied updates pending
     aot_compiles: int = 0     # executables lowered+compiled
     aot_hits: int = 0         # dispatches served from the cache
     aot_invalidations: int = 0  # cache entries dropped on plan swap
-    staged_records: int = 0   # update records accepted into staging
+    staged_records: int = 0   # update records accepted into the journal
     drains: int = 0           # updater wake-ups that applied work
     fused_applies: int = 0    # engine insert/delete calls made by drains
+    worker_crashes: int = 0   # worker threads that died mid-batch
+    updater_crashes: int = 0  # updater threads that died mid-drain
+    restarts: int = 0         # threads respawned by the supervisor
+    journal_replayed: int = 0  # items a restarted updater found un-applied
 
 
 class _ReadRequest:
-    __slots__ = ("table", "rel", "ranges", "n", "future")
+    __slots__ = ("table", "rel", "ranges", "n", "future", "deadline",
+                 "dclass", "priority")
 
-    def __init__(self, table: str, rel, ranges: Tuple, n: int):
+    def __init__(self, table: str, rel, ranges: Tuple, n: int,
+                 deadline: Optional[float] = None,
+                 dclass: Optional[int] = None, priority: int = 0):
         self.table = table
         self.rel = rel
         self.ranges = ranges
         self.n = n
+        self.deadline = deadline    # absolute monotonic, or None
+        self.dclass = dclass        # pow-2 bucket of the deadline duration
+        self.priority = priority
         self.future: Future = Future()
 
 
 class _WriteItem:
-    __slots__ = ("table", "kind", "args", "n", "future")
+    __slots__ = ("table", "kind", "args", "n", "future", "seq")
 
     def __init__(self, table: Optional[str], kind: str, args: Tuple,
                  n: int):
@@ -99,7 +158,46 @@ class _WriteItem:
         self.kind = kind            # 'insert' | 'delete' | 'barrier'
         self.args = args
         self.n = n
+        self.seq = -1               # assigned by the journal
         self.future: Future = Future()
+
+
+class _UpdateJournal:
+    """Write-ahead staging log with an applied watermark.
+
+    ``append`` assigns a monotone sequence number; ``pending`` returns the
+    un-applied suffix (items above the watermark, in order); the updater
+    calls ``mark_applied`` only after an item's fused chunk has landed on
+    the engine, so whatever the updater was holding when it crashed is
+    exactly what ``pending`` hands its replacement.  All methods run under
+    the engine's staging condition variable.
+    """
+
+    __slots__ = ("_items", "_next_seq", "_applied")
+
+    def __init__(self):
+        self._items: deque = deque()
+        self._next_seq = 0
+        self._applied = -1          # every seq <= this has been applied
+
+    def append(self, item: _WriteItem) -> int:
+        item.seq = self._next_seq
+        self._next_seq += 1
+        self._items.append(item)
+        return item.seq
+
+    def pending(self) -> List[_WriteItem]:
+        return [it for it in self._items if it.seq > self._applied]
+
+    def mark_applied(self, seq: int) -> None:
+        self._applied = max(self._applied, seq)
+        while self._items and self._items[0].seq <= self._applied:
+            self._items.popleft()
+
+    def depth(self, table: Optional[str] = None) -> int:
+        return sum(it.n for it in self._items
+                   if it.seq > self._applied
+                   and (table is None or it.table == table))
 
 
 class _ExecEntry:
@@ -119,51 +217,101 @@ class ServingEngine:
     builds the engine without threads — ``submit`` still queues, nothing
     drains — which makes backpressure deterministic to test; call
     ``start()`` to begin serving.
+
+    Fault-tolerance knobs: ``injector`` (a ``FailureInjector`` consulted
+    at the serve.worker / serve.dispatch / serve.updater sites),
+    ``retry`` (a ``RetryPolicy`` wrapped around dispatches — filter its
+    ``retry_on`` to the transient exception classes), ``supervise``
+    (restart crashed worker/updater threads; on by default),
+    ``heartbeat_deadline`` (seconds without a beat before a thread counts
+    as stalled), ``shed_watermark`` (queue fraction where the priority
+    ladder starts shedding; ``None`` disables shedding), and
+    ``default_deadline`` (admission deadline for requests whose table
+    declares none).
     """
 
     def __init__(self, session, *, max_queue: int = 1024,
                  max_batch: int = 4096, workers: int = 1,
-                 admission: str = "block", start: bool = True):
+                 admission: str = "block", start: bool = True,
+                 injector=None, retry=None, supervise: bool = True,
+                 heartbeat_deadline: float = 5.0,
+                 shed_watermark: Optional[float] = None,
+                 default_deadline: Optional[float] = None):
         if admission not in ("block", "reject"):
             raise ValueError(f"admission must be 'block' or 'reject', "
                              f"got {admission!r}")
         if workers < 1:
             raise ValueError("workers must be >= 1")
+        if shed_watermark is not None and not 0.0 < shed_watermark <= 1.0:
+            raise ValueError("shed_watermark must be in (0, 1]")
         self.session = session
         self.max_batch = int(max_batch)
         self.admission = admission
+        self.supervise = bool(supervise)
+        self.shed_watermark = shed_watermark
+        self.default_deadline = default_deadline
+        self._injector = injector
+        self._retry = retry
+        self._crash_exc = injector.exc if injector is not None else ()
+        self.monitor = HeartbeatMonitor(deadline=heartbeat_deadline)
         self._queue: "queue.Queue[_ReadRequest]" = queue.Queue(max_queue)
         self._cache: Dict[Tuple, _ExecEntry] = {}
         self._compile_lock = threading.Lock()
-        self._staging: List[_WriteItem] = []
+        self._journal = _UpdateJournal()
         self._staging_cv = threading.Condition()
+        self._drain_lock = threading.Lock()
         self._stats = EngineStats()
         self._stats_lock = threading.Lock()
-        self._update_error: Optional[BaseException] = None
+        self._update_errors: List[BaseException] = []
         self._stop = threading.Event()
         self._shut_down = False
         self._n_workers = int(workers)
-        self._threads: List[threading.Thread] = []
+        self._thread_lock = threading.Lock()
+        self._workers: List[Optional[threading.Thread]] = []
+        self._updater: Optional[threading.Thread] = None
+        self._supervisor: Optional[threading.Thread] = None
         if start:
             self.start()
 
     # -- lifecycle --------------------------------------------------------
 
+    def _spawn_worker(self, i: int) -> threading.Thread:
+        t = threading.Thread(target=self._worker_run, args=(i,),
+                             daemon=True, name=f"polyfit-serve-{i}")
+        t.start()
+        return t
+
+    def _spawn_updater(self, replaying: bool) -> threading.Thread:
+        t = threading.Thread(target=self._updater_run, args=(replaying,),
+                             daemon=True, name="polyfit-update")
+        t.start()
+        return t
+
     def start(self) -> None:
-        """Spawn the worker + updater threads (idempotent)."""
+        """Spawn the worker + updater (+ supervisor) threads (idempotent)."""
         if self._shut_down:
             raise RuntimeError("engine was shut down")
-        if self._threads:
-            return
-        for i in range(self._n_workers):
-            t = threading.Thread(target=self._worker_loop, daemon=True,
-                                 name=f"polyfit-serve-{i}")
-            t.start()
-            self._threads.append(t)
-        t = threading.Thread(target=self._updater_loop, daemon=True,
-                             name="polyfit-update")
-        t.start()
-        self._threads.append(t)
+        with self._thread_lock:
+            if self._workers:
+                return
+            self._workers = [self._spawn_worker(i)
+                             for i in range(self._n_workers)]
+            self._updater = self._spawn_updater(replaying=False)
+            if self.supervise:
+                self._supervisor = threading.Thread(
+                    target=self._supervisor_loop, daemon=True,
+                    name="polyfit-supervise")
+                self._supervisor.start()
+
+    @property
+    def _threads(self) -> List[threading.Thread]:
+        with self._thread_lock:
+            out = [t for t in self._workers if t is not None]
+            if self._updater is not None:
+                out.append(self._updater)
+            if self._supervisor is not None:
+                out.append(self._supervisor)
+            return out
 
     @property
     def running(self) -> bool:
@@ -173,25 +321,35 @@ class ServingEngine:
                  ) -> None:
         """Stop the engine.  ``drain=True`` answers everything already
         queued (reads) and applies everything staged (writes) first;
-        ``drain=False`` cancels queued reads with a ``RuntimeError`` and
-        drops staged writes.  Idempotent."""
+        ``drain=False`` cancels queued reads and staged writes with a
+        ``RuntimeError``.  Idempotent; a ``submit`` racing shutdown either
+        gets served (drain) or resolves with the same error — never
+        hangs."""
         if self._shut_down:
             return
-        if drain and self._threads:
+        threads = self._threads
+        if drain and threads:
             self._queue.join()
-            self.drain_updates()
+            # apply staged writes but never raise deferred errors out of a
+            # cleanup path — they stay queued for explicit drain_updates()
+            self._drain_updates(raise_errors=False)
         self._shut_down = True
         self._stop.set()
         with self._staging_cv:
             self._staging_cv.notify_all()
         if not drain:
             self._cancel_queued("serving engine shut down")
-        for t in self._threads:
+            self._cancel_staged("serving engine shut down")
+        for t in threads:
             t.join(timeout)
-        self._threads = []
-        if not drain:
-            # workers may have exited between queue drains; sweep again
-            self._cancel_queued("serving engine shut down")
+        with self._thread_lock:
+            self._workers = []
+            self._updater = None
+            self._supervisor = None
+        # a submit may have slipped in between the drain/cancel above and
+        # the _shut_down flag landing; nothing serves it now, so sweep —
+        # submit() re-checks the flag after its put for the same reason
+        self._cancel_queued("serving engine shut down")
 
     def _cancel_queued(self, msg: str) -> None:
         while True:
@@ -203,19 +361,120 @@ class ServingEngine:
                 req.future.set_exception(RuntimeError(msg))
             self._queue.task_done()
 
+    def _cancel_staged(self, msg: str) -> None:
+        with self._staging_cv:
+            items = self._journal.pending()
+            for it in items:
+                self._journal.mark_applied(it.seq)
+        for it in items:
+            if not it.future.done():
+                if it.kind == "barrier":
+                    it.future.set_result(None)
+                else:
+                    it.future.set_exception(RuntimeError(msg))
+
+    # -- supervision ------------------------------------------------------
+
+    def _supervisor_loop(self) -> None:
+        """Restart crashed worker/updater threads until shutdown."""
+        while not self._stop.wait(0.02):
+            with self._thread_lock:
+                if self._stop.is_set() or not self._workers:
+                    continue
+                restarted = 0
+                for i, t in enumerate(self._workers):
+                    if t is not None and not t.is_alive():
+                        self._workers[i] = self._spawn_worker(i)
+                        restarted += 1
+                if self._updater is not None and not self._updater.is_alive():
+                    self._updater = self._spawn_updater(replaying=True)
+                    restarted += 1
+            if restarted:
+                with self._stats_lock:
+                    self._stats.restarts += restarted
+
+    def health(self) -> Dict:
+        """Liveness snapshot: thread states, stall list, crash counters,
+        journal depth — the supervisor's view, for operators."""
+        with self._thread_lock:
+            workers_alive = sum(1 for t in self._workers
+                                if t is not None and t.is_alive())
+            updater_alive = (self._updater is not None
+                             and self._updater.is_alive())
+        st = self.stats
+        out = {
+            "running": self.running,
+            "workers_alive": workers_alive,
+            "updater_alive": updater_alive,
+            "stalled": self.monitor.stalled(),
+            "queue_depth": self.queue_depth,
+            "staged_depth": self.staged_depth,
+            "worker_crashes": st.worker_crashes,
+            "updater_crashes": st.updater_crashes,
+            "restarts": st.restarts,
+        }
+        if self._retry is not None:
+            out["retry"] = {"retries": self._retry.retries,
+                            "giveups": self._retry.giveups,
+                            "slept": self._retry.slept}
+        return out
+
+    def _maybe_fail(self, site: str) -> None:
+        if self._injector is not None:
+            self._injector.maybe_fail(site)
+
     # -- reads ------------------------------------------------------------
 
-    def submit(self, spec: QuerySpec, *, timeout: Optional[float] = None
-               ) -> Future:
-        """Enqueue one read; the future resolves to its ``QueryResult``.
+    def _admission_class(self, table: str) -> Tuple[Optional[float], int]:
+        deadline, priority = self.session.admission_class(table)
+        if deadline is None:
+            deadline = self.default_deadline
+        return deadline, int(priority)
 
+    def _shed(self, priority: int) -> bool:
+        w = self.shed_watermark
+        cap = self._queue.maxsize
+        if w is None or cap <= 0:
+            return False
+        # the (1-w) tail of the queue is reserved in geometric slices for
+        # higher priority classes: class p may fill w + (1-w)(1 - 2^-p)
+        limit = cap * (w + (1.0 - w) * (1.0 - 2.0 ** (-max(priority, 0))))
+        return self._queue.qsize() >= limit
+
+    def submit(self, spec: QuerySpec, *, deadline: Optional[float] = None,
+               priority: Optional[int] = None,
+               timeout: Optional[float] = None) -> Future:
+        """Enqueue one read; the future resolves to its ``QueryResult``
+        (carrying ``.staleness`` — unapplied update records for the table
+        at dispatch time — as a future attribute).
+
+        ``deadline`` (seconds from now; default the table's class) bounds
+        the *queue wait*: a request still queued when it expires resolves
+        with ``DeadlineExceeded`` instead of dispatching.  ``priority``
+        picks the shedding rung when the ladder is armed.
         ``admission='block'`` waits up to ``timeout`` for queue room (then
         raises ``QueueFull``); ``'reject'`` raises immediately when full.
         """
         if self._shut_down:
             raise RuntimeError("serving engine shut down")
         rel = self.session.resolve_rel(spec.table, spec.rel)
-        req = _ReadRequest(spec.table, rel, spec.ranges, len(spec))
+        d_default, p_default = self._admission_class(spec.table)
+        if deadline is None:
+            deadline = d_default
+        if priority is None:
+            priority = p_default
+        if self._shed(priority):
+            with self._stats_lock:
+                self._stats.shed += 1
+            raise Overloaded(
+                f"load shed: queue past watermark "
+                f"{self.shed_watermark:.2f} for priority {priority}")
+        dclass = (None if deadline is None
+                  else max(math.ceil(math.log2(max(deadline, 1e-3))), -10))
+        abs_deadline = (None if deadline is None
+                        else time.monotonic() + deadline)
+        req = _ReadRequest(spec.table, rel, spec.ranges, len(spec),
+                           abs_deadline, dclass, priority)
         try:
             if self.admission == "reject":
                 self._queue.put_nowait(req)
@@ -228,6 +487,9 @@ class ServingEngine:
                             f"({self._queue.maxsize})") from None
         with self._stats_lock:
             self._stats.submitted += 1
+        if self._shut_down:
+            # raced shutdown's final sweep: make sure this future resolves
+            self._cancel_queued("serving engine shut down")
         return req.future
 
     def query(self, request: Union[QuerySpec, QueryBatch,
@@ -251,9 +513,23 @@ class ServingEngine:
 
     # -- worker: drain, coalesce, dispatch --------------------------------
 
-    def _worker_loop(self) -> None:
+    def _worker_run(self, wid: int) -> None:
+        """Thread body: loop until stop; on crash, die quietly (the
+        supervisor restarts; the crash already failed only the in-flight
+        batch inside ``_worker_loop``)."""
+        name = f"worker-{wid}"
+        try:
+            self._worker_loop(name)
+        except BaseException:
+            with self._stats_lock:
+                self._stats.worker_crashes += 1
+        finally:
+            self.monitor.forget(name)
+
+    def _worker_loop(self, name: str) -> None:
         q = self._queue
         while True:
+            self.monitor.beat(name)
             try:
                 req = q.get(timeout=0.05)
             except queue.Empty:
@@ -261,47 +537,93 @@ class ServingEngine:
                     return
                 continue
             batch = [req]
-            budget = self.max_batch - req.n
-            while budget > 0:
-                # peek so the admission batch never overshoots max_batch —
-                # overshoot would hit a bucket above the warmed ladder
-                with q.mutex:
-                    if not q.queue or q.queue[0].n > budget:
+            try:
+                # chaos site: a crash here has requests in flight — fail
+                # exactly those futures, account the queue, then die
+                self._maybe_fail("serve.worker")
+                budget = self.max_batch - req.n
+                while budget > 0:
+                    # peek so the admission batch never overshoots
+                    # max_batch — overshoot would hit a bucket above the
+                    # warmed ladder
+                    with q.mutex:
+                        if not q.queue or q.queue[0].n > budget:
+                            break
+                    try:
+                        nxt = q.get_nowait()
+                    except queue.Empty:
                         break
-                try:
-                    nxt = q.get_nowait()
-                except queue.Empty:
-                    break
-                batch.append(nxt)
-                budget -= nxt.n
-            groups: Dict[Tuple, List[_ReadRequest]] = {}
-            for r in batch:
-                groups.setdefault((r.table, r.rel), []).append(r)
-            for (table, rel), grp in groups.items():
-                # count before resolving: a caller that saw its future
-                # complete must also see it reflected in ``stats``
-                with self._stats_lock:
-                    self._stats.dispatches += 1
-                    self._stats.answered += len(grp)
-                    if len(grp) > 1:
-                        self._stats.coalesced += len(grp)
-                try:
+                    batch.append(nxt)
+                    budget -= nxt.n
+                self._process_batch(batch)
+            except BaseException as e:
+                for r in batch:
+                    if not r.future.done():
+                        r.future.set_exception(e)
+                raise
+            finally:
+                for _ in batch:
+                    q.task_done()
+
+    def _process_batch(self, batch: List[_ReadRequest]) -> None:
+        # admission deadlines: expire pre-dispatch, never waste the device
+        now = time.monotonic()
+        live: List[_ReadRequest] = []
+        expired = 0
+        for r in batch:
+            if r.deadline is not None and now > r.deadline:
+                if not r.future.done():
+                    r.future.set_exception(DeadlineExceeded(
+                        f"deadline expired after "
+                        f"{now - r.deadline:.3f}s in queue"))
+                expired += 1
+            else:
+                live.append(r)
+        if expired:
+            with self._stats_lock:
+                self._stats.deadline_expired += expired
+        groups: Dict[Tuple, List[_ReadRequest]] = {}
+        for r in live:
+            # the deadline class keys the group: tight requests are never
+            # padded into (or billed for) a slack batch's bucket
+            groups.setdefault((r.table, r.rel, r.dclass), []).append(r)
+        # earliest-deadline-first across the batch's groups
+        ordered = sorted(
+            groups.items(),
+            key=lambda kv: min((r.deadline for r in kv[1]
+                                if r.deadline is not None),
+                               default=float("inf")))
+        for (table, rel, _), grp in ordered:
+            # count before resolving: a caller that saw its future
+            # complete must also see it reflected in ``stats``
+            with self._stats_lock:
+                self._stats.dispatches += 1
+                self._stats.answered += len(grp)
+                if len(grp) > 1:
+                    self._stats.coalesced += len(grp)
+            try:
+                if self._retry is not None:
+                    self._retry.call(self._dispatch, table, rel, grp)
+                else:
                     self._dispatch(table, rel, grp)
-                except BaseException as e:   # surface on the callers
-                    for r in grp:
-                        if not r.future.done():
-                            r.future.set_exception(e)
-            for _ in batch:
-                q.task_done()
+            except BaseException as e:   # surface on the callers
+                for r in grp:
+                    if not r.future.done():
+                        r.future.set_exception(e)
 
     def _dispatch(self, table: str, rel, grp: List[_ReadRequest]) -> None:
+        self._maybe_fail("serve.dispatch")
         sess = self.session
+        staleness = self.staleness(table)
+        if staleness:
+            with self._stats_lock:
+                self._stats.stale_reads += len(grp)
         if sess.is_sharded(table):
             # shard_map executors keep their own cache; no AOT ladder here
             ranges = self._concat_ranges(grp)
             res = sess.query(QuerySpec(table, ranges, rel))
             jax.block_until_ready(res.answer)
-            self._scatter(grp, res)
+            self._scatter(grp, res, staleness)
             return
         plan, buf = sess.snapshot(table)
         nq = sum(r.n for r in grp)
@@ -315,7 +637,7 @@ class ServingEngine:
             for j, c in enumerate(self._concat_ranges(grp)))
         ans, approx, refined = compiled(plan, buf, *qs)
         jax.block_until_ready(ans)   # futures resolve device-ready
-        self._scatter(grp, QueryResult(ans, approx, refined))
+        self._scatter(grp, QueryResult(ans, approx, refined), staleness)
 
     @staticmethod
     def _concat_ranges(grp: List[_ReadRequest]) -> Tuple:
@@ -326,13 +648,18 @@ class ServingEngine:
             for j in range(len(grp[0].ranges)))
 
     @staticmethod
-    def _scatter(grp: List[_ReadRequest], res: QueryResult) -> None:
+    def _scatter(grp: List[_ReadRequest], res: QueryResult,
+                 staleness: int = 0) -> None:
         off = 0
         for r in grp:
             m = r.n
-            r.future.set_result(QueryResult(res.answer[off:off + m],
-                                            res.approx[off:off + m],
-                                            res.refined[off:off + m]))
+            # per-answer degradation signal: how many acknowledged update
+            # records were not yet applied when this answer was computed
+            r.future.staleness = staleness
+            if not r.future.done():
+                r.future.set_result(QueryResult(res.answer[off:off + m],
+                                                res.approx[off:off + m],
+                                                res.refined[off:off + m]))
             off += m
 
     # -- AOT executable cache ---------------------------------------------
@@ -383,7 +710,7 @@ class ServingEngine:
                 size *= 2
         return self.stats.aot_compiles - before
 
-    # -- writes: staging + background drain -------------------------------
+    # -- writes: journal + background drain -------------------------------
 
     def insert(self, table: str, *args, wait: bool = False) -> None:
         """Stage new records; ``wait=True`` blocks until they are
@@ -402,12 +729,12 @@ class ServingEngine:
         cols = self._norm_update(table, kind, args)
         item = _WriteItem(table, kind, cols, len(cols[0]))
         with self._staging_cv:
-            self._staging.append(item)
+            self._journal.append(item)
             self._staging_cv.notify()
         with self._stats_lock:
             self._stats.staged_records += item.n
         if wait:
-            if not self._threads:   # no updater running: apply inline
+            if self._updater is None:   # no updater running: apply inline
                 self._drain_once()
             item.future.result()
 
@@ -433,16 +760,26 @@ class ServingEngine:
                      for a in arrs)
 
     def drain_updates(self) -> None:
-        """Block until every staged update is applied, then surface any
-        deferred write error."""
+        """Block until every staged update is applied, then surface the
+        oldest deferred write error (one per call, submission order).
+        After shutdown this only surfaces deferred errors."""
+        self._drain_updates(raise_errors=True)
+
+    def _drain_updates(self, *, raise_errors: bool) -> None:
+        if self._shut_down:
+            if raise_errors:
+                self._raise_update_error()
+            return
         barrier = _WriteItem(None, "barrier", (), 0)
         with self._staging_cv:
-            self._staging.append(barrier)
+            self._journal.append(barrier)
             self._staging_cv.notify()
-        if not self._threads:
+        if self._updater is None or (not self._updater.is_alive()
+                                     and self._supervisor is None):
             self._drain_once()
         barrier.future.result()
-        self._raise_update_error()
+        if raise_errors:
+            self._raise_update_error()
 
     def flush(self, table: Optional[str] = None) -> None:
         """Drain staging, then merge the tables' delta buffers into fresh
@@ -451,68 +788,136 @@ class ServingEngine:
         self.session.flush(table)
 
     def _raise_update_error(self) -> None:
-        if self._update_error is not None:
-            err, self._update_error = self._update_error, None
-            raise err
+        if self._update_errors:
+            raise self._update_errors.pop(0)
+
+    def _updater_run(self, replaying: bool) -> None:
+        if replaying:
+            with self._staging_cv:
+                n = len([it for it in self._journal.pending()
+                         if it.kind != "barrier"])
+            if n:
+                with self._stats_lock:
+                    self._stats.journal_replayed += n
+        try:
+            self._updater_loop()
+        except BaseException:
+            # un-applied suffix stays in the journal; the supervisor's
+            # replacement updater replays exactly that
+            with self._stats_lock:
+                self._stats.updater_crashes += 1
+        finally:
+            self.monitor.forget("updater")
 
     def _updater_loop(self) -> None:
         while True:
+            self.monitor.beat("updater")
             with self._staging_cv:
-                while not self._staging and not self._stop.is_set():
+                while not self._journal.pending() and not self._stop.is_set():
                     self._staging_cv.wait(timeout=0.1)
             if not self._drain_once() and self._stop.is_set():
                 return
 
     def _drain_once(self) -> bool:
-        """Apply one swapped-out chunk of the staging log; True if any."""
-        with self._staging_cv:
-            items, self._staging = self._staging, []
-        if not items:
-            return False
-        # coalesce consecutive same-(table, op) runs; per-table order is
-        # global order restricted to the table, so victim resolution and
-        # read-your-writes see writes in submission order
-        runs: List[List[_WriteItem]] = []
-        for it in items:
-            if (runs and it.kind != "barrier"
-                    and runs[-1][0].kind == it.kind
-                    and runs[-1][0].table == it.table):
-                runs[-1].append(it)
-            else:
-                runs.append([it])
-        applies = 0
-        for run in runs:
-            head = run[0]
-            if head.kind == "barrier":
-                head.future.set_result(None)
-                continue
-            try:
-                applies += self._apply_run(head.table, head.kind, run)
-            except BaseException as e:
-                self._update_error = e
-                for it in run:
-                    if not it.future.done():
-                        it.future.set_exception(e)
-                continue
-            for it in run:
-                it.future.set_result(None)
-        with self._stats_lock:
-            self._stats.drains += 1
-            self._stats.fused_applies += applies
-        return True
+        """Apply the journal's current un-applied suffix; True if any.
+
+        Serialized by ``_drain_lock`` (an inline drain must not race a
+        restarting updater into double-applying).  Items are applied in
+        sequence order and marked applied chunk by chunk, so an injected
+        crash between fused applies leaves exactly the un-applied suffix
+        for replay.
+        """
+        with self._drain_lock:
+            with self._staging_cv:
+                items = self._journal.pending()
+            if not items:
+                return False
+            # coalesce consecutive same-(table, op) runs; per-table order
+            # is global order restricted to the table, so victim
+            # resolution and read-your-writes see writes in submission
+            # order
+            runs: List[List[_WriteItem]] = []
+            for it in items:
+                if (runs and it.kind != "barrier"
+                        and runs[-1][0].kind == it.kind
+                        and runs[-1][0].table == it.table):
+                    runs[-1].append(it)
+                else:
+                    runs.append([it])
+            applies = 0
+            for run in runs:
+                head = run[0]
+                if head.kind == "barrier":
+                    with self._staging_cv:
+                        self._journal.mark_applied(head.seq)
+                    head.future.set_result(None)
+                    continue
+                try:
+                    applies += self._apply_run(head.table, head.kind, run)
+                except self._crash_exc:
+                    # injected crash: leave the un-applied suffix in the
+                    # journal and die through _updater_run
+                    with self._stats_lock:
+                        self._stats.drains += 1
+                        self._stats.fused_applies += applies
+                    raise
+                except BaseException as e:
+                    # permanent engine error: consume the run, defer the
+                    # error (submission order) and fail its futures
+                    self._update_errors.append(e)
+                    with self._staging_cv:
+                        for it in run:
+                            self._journal.mark_applied(it.seq)
+                    for it in run:
+                        if not it.future.done():
+                            it.future.set_exception(e)
+                    continue
+            with self._stats_lock:
+                self._stats.drains += 1
+                self._stats.fused_applies += applies
+            return True
 
     def _apply_run(self, table: str, kind: str,
                    run: List[_WriteItem]) -> int:
-        cols = (run[0].args if len(run) == 1 else
-                tuple(np.concatenate([it.args[j] for it in run])
-                      for j in range(len(run[0].args))))
+        """Apply one same-(table, op) run in capacity-sized, item-aligned
+        chunks; each item is marked applied (and its future resolved)
+        only after the fused call covering it lands."""
         cap = self.session.spec(table).capacity
         op = self.session.insert if kind == "insert" else self.session.delete
-        n = len(cols[0])
         applies = 0
-        for lo in range(0, n, cap):
-            op(table, *(c[lo:lo + cap] for c in cols))
-            applies += 1
+        pack: List[_WriteItem] = []
+        pack_n = 0
+
+        def flush_pack() -> int:
+            nonlocal pack, pack_n
+            if not pack:
+                return 0
+            # chaos site: a crash here is *between* fused applies — the
+            # journal watermark sits exactly at the last applied item
+            self._maybe_fail("serve.updater")
+            cols = (pack[0].args if len(pack) == 1 else
+                    tuple(np.concatenate([it.args[j] for it in pack])
+                          for j in range(len(pack[0].args))))
+            n = len(cols[0])
+            calls = 0
+            for lo in range(0, n, cap):
+                op(table, *(c[lo:lo + cap] for c in cols))
+                calls += 1
+            with self._staging_cv:
+                for it in pack:
+                    self._journal.mark_applied(it.seq)
+            for it in pack:
+                if not it.future.done():
+                    it.future.set_result(None)
+            pack, pack_n = [], 0
+            return calls
+
+        for it in run:
+            if pack and pack_n + it.n > cap:
+                applies += flush_pack()
+            pack.append(it)
+            pack_n += it.n
+        applies += flush_pack()
         return applies
 
     # -- introspection ----------------------------------------------------
@@ -529,7 +934,13 @@ class ServingEngine:
     @property
     def staged_depth(self) -> int:
         with self._staging_cv:
-            return sum(it.n for it in self._staging)
+            return self._journal.depth()
+
+    def staleness(self, table: str) -> int:
+        """Acknowledged-but-unapplied update records for ``table`` —
+        the per-answer degradation signal while the updater is down."""
+        with self._staging_cv:
+            return self._journal.depth(table)
 
     def cache_keys(self) -> Tuple[Tuple, ...]:
         return tuple(sorted(self._cache, key=repr))

@@ -1,0 +1,185 @@
+"""Chaos soak driver for the serving engine (nightly CI; not a pytest
+module — run it directly):
+
+    PYTHONPATH=src python tests/chaos_serve.py --duration 60
+
+Drives a mixed read/write load against a ``ServingEngine`` while a
+``FailureInjector`` crashes workers every ~40 admission batches, fails
+1 in 200 dispatches transiently (retried in-engine), and kills the
+updater every 7th fused apply — *recurring*, so the supervisor restarts
+and the journal replays many times over the run.  Invariants held for
+the whole soak:
+
+* every read future resolves (answer or failure) — zero stranded;
+* availability within one client retry stays >= 99%;
+* the supervisor keeps worker/updater capacity at full strength;
+* **exactly-once updates**: after the final drain, the whole-domain SUM
+  equals the base sum plus everything inserted, within the certified
+  bound — a lost journal suffix or a double-applied chunk (one 32-record
+  chunk is worth ~6x the certified bound here) fails the run.
+
+Exits non-zero (AssertionError) on any violation; prints a summary line
+per ~5s plus a final report.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import threading
+import time
+
+import numpy as np
+
+
+def run_soak(duration: float = 20.0, seed: int = 0x50AC,
+             verbose: bool = True) -> dict:
+    from repro.api import ErrorBudget, PolyFit, QuerySpec, TableSpec
+    from repro.dist.fault_tolerance import (FailureInjector, RetryPolicy,
+                                            SimulatedPodFailure)
+    from repro.serve import ServingEngine
+
+    say = print if verbose else (lambda *a, **k: None)
+    rng = np.random.default_rng(seed)
+    n = 20_000
+    keys = np.sort(rng.uniform(0.0, 100.0, n))
+    vals = rng.uniform(0.0, 10.0, n)
+    base_sum = float(vals.sum())
+    # rel=0.001 keeps the certified bound well under one insert chunk
+    # (32 x 1000 = 32000), so the exactly-once check has teeth
+    # capacity holds a short soak's full insert volume: applies stay
+    # cheap (no synchronous merge per pack), so the updater drains — and
+    # hits the serve.updater crash site — once per staged pack; longer
+    # soaks overflow into merges, which is fine once crashes are rolling
+    session = PolyFit.fit(
+        {"sum": (keys, vals)},
+        {"sum": TableSpec("sum", ErrorBudget(abs=50.0, rel=0.001),
+                          dynamic=True, capacity=16384)},
+        backend="ref")
+
+    inj = (FailureInjector(seed=seed)
+           .arm("serve.worker", nth=40)
+           .arm("serve.dispatch", p=0.005)
+           .arm("serve.updater", nth=5))
+    pol = RetryPolicy(max_attempts=4, base=0.002, cap=0.02,
+                      retry_on=(SimulatedPodFailure,))
+    eng = ServingEngine(session, max_queue=512, workers=2, injector=inj,
+                        retry=pol)
+    eng.warmup(max_bucket=64)
+    spec = QuerySpec.range("sum", 0.0, 100.0)
+
+    counts = {"reads": 0, "ok": 0, "retried": 0, "failed": 0,
+              "stranded": 0, "inserted": 0}
+    lock = threading.Lock()
+    stop = threading.Event()
+    insert_total = [0.0]
+
+    def writer():
+        wrng = np.random.default_rng(seed + 1)
+        while not stop.is_set():
+            ks = wrng.uniform(0.0, 100.0, 32)
+            try:
+                eng.insert("sum", ks, np.full(32, 1000.0), wait=False)
+            except RuntimeError:
+                return
+            with lock:
+                insert_total[0] += 32 * 1000.0
+                counts["inserted"] += 32
+            stop.wait(0.03)
+
+    def reader():
+        while not stop.is_set():
+            try:
+                fut = eng.submit(spec, timeout=5.0)
+            except RuntimeError:
+                return
+            with lock:
+                counts["reads"] += 1
+            try:
+                fut.result(timeout=30.0)
+            except SimulatedPodFailure:
+                # client-side retry, as a deployment's client would
+                with lock:
+                    counts["retried"] += 1
+                try:
+                    eng.submit(spec, timeout=5.0).result(timeout=30.0)
+                except SimulatedPodFailure:
+                    with lock:
+                        counts["failed"] += 1
+                except TimeoutError:
+                    with lock:
+                        counts["stranded"] += 1
+                else:
+                    with lock:
+                        counts["ok"] += 1
+                continue
+            except TimeoutError:
+                with lock:
+                    counts["stranded"] += 1
+                continue
+            with lock:
+                counts["ok"] += 1
+            time.sleep(0.002)
+
+    threads = [threading.Thread(target=writer)] + [
+        threading.Thread(target=reader) for _ in range(3)]
+    t0 = time.monotonic()
+    for t in threads:
+        t.start()
+    last = t0
+    while time.monotonic() - t0 < duration:
+        time.sleep(0.25)
+        if time.monotonic() - last >= 5.0:
+            last = time.monotonic()
+            h = eng.health()
+            with lock:
+                snap = dict(counts)
+            say(f"[soak t={last - t0:5.1f}s] reads={snap['reads']} "
+                f"ok={snap['ok']} retried={snap['retried']} "
+                f"failed={snap['failed']} "
+                f"crashes={h['worker_crashes']}+{h['updater_crashes']} "
+                f"restarts={h['restarts']} staged={h['staged_depth']}")
+    stop.set()
+    for t in threads:
+        t.join(60)
+
+    # final settle: disarm, replay whatever is left, verify exactly-once
+    inj.disarm("serve.updater")
+    inj.disarm("serve.worker")
+    inj.disarm("serve.dispatch")
+    eng.drain_updates()
+    final = float(eng.query(spec, timeout=120.0).answer[0])
+    expect = base_sum + insert_total[0]
+    tol = 50.0 + 0.002 * abs(expect)
+    st = eng.stats
+    health = eng.health()
+    eng.shutdown()
+
+    avail = counts["ok"] / max(counts["reads"], 1)
+    report = {**counts, "availability": avail,
+              "worker_crashes": st.worker_crashes,
+              "updater_crashes": st.updater_crashes,
+              "restarts": st.restarts,
+              "journal_replayed": st.journal_replayed,
+              "sum_error": final - expect, "sum_tol": tol}
+    say(f"[soak] done: {report}")
+    assert counts["stranded"] == 0, report
+    assert avail >= 0.99, report
+    assert st.worker_crashes >= 1 and st.updater_crashes >= 1, report
+    assert st.journal_replayed >= 1, report
+    assert st.restarts >= st.worker_crashes + st.updater_crashes - 2, report
+    assert health["workers_alive"] == 2, report
+    assert abs(final - expect) <= tol, report
+    return report
+
+
+def main():
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--duration", type=float, default=20.0,
+                   help="soak length in seconds (nightly uses 60+)")
+    p.add_argument("--seed", type=int, default=0x50AC)
+    args = p.parse_args()
+    run_soak(duration=args.duration, seed=args.seed)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -523,6 +523,38 @@ def test_2d_extremum_delete_merges_eagerly(dyn2dw_setup):
         <= dyn.index.certified_delta + 1e-6
 
 
+@pytest.mark.parametrize("agg,meas", [("max2d", 5.0), ("min2d", 150.0)])
+def test_2d_below_floor_insert_refits_eagerly(dyn2dw_setup, agg, meas):
+    """An insert below the frozen dominance floor (above the max, for MIN)
+    cannot ride the buffer: the plan's clamp over-reports every query
+    dominating only the new point.  The engine merges eagerly through the
+    targeted refit path, the floor re-freezes at the merged minimum, and
+    a query dominating only the new point certifies against its measure
+    (the pre-fix behavior answered with the stale build-time floor)."""
+    px, py, w, _, _, _, _, _ = dyn2dw_setup
+    idx = build_index_2d(px, py, measures=w, agg=agg, deg=2, delta=4.0,
+                         max_depth=7)
+    old_floor = idx.extremal_floor
+    dyn = DynamicEngine2D(idx, backend="xla", capacity=64,
+                          auto_refit=False)
+    x0 = y0 = 0.5    # below-left of (almost) all data
+    dyn.insert([x0], [y0], [meas])
+    assert dyn.n_pending == 0 and dyn.refit_count == 1   # eager merge
+    stats = dyn.last_refit_stats
+    assert not stats["rebuild"] and "floor_refit" in stats
+    assert dyn.index.extremal_floor != old_floor         # re-frozen
+    red = np.max if agg == "max2d" else np.min
+    u = np.array([x0 + 1e-6, 90.0])
+    v = np.array([y0 + 1e-6, 90.0])
+    res = dyn.extremum2d(u, v)
+    mx, my = np.append(px, x0), np.append(py, y0)
+    mw = np.append(w, meas)
+    dom = (mx[None, :] <= u[:, None]) & (my[None, :] <= v[:, None])
+    truth = np.array([red(mw[d]) for d in dom])
+    assert np.abs(np.asarray(res.answer) - truth).max() \
+        <= dyn.index.certified_delta + 1e-6
+
+
 def test_2d_weighted_delete_victims(dyn2dw_setup):
     """Duplicate (x, y) points with distinct measures: tombstones remove
     base occurrences first, with a cursor across the batch."""
