@@ -239,6 +239,144 @@ def run2d(n=40_000, nq=1024, capacity=1024,
     return rows
 
 
+def run_lsm(n=100_000, nq=2048, capacity=2048, dim=1, backends=("xla",),
+            out_path=None):
+    """LSM ladder sweep (``--lsm``): **worst-case** (max, not median)
+    per-op latencies — the logarithmic method's whole point is the
+    guarantee on the worst single update, so these metrics aggregate with
+    ``max`` and check_regression gates them against the max envelope.
+
+    Per backend: worst insert op (buffered append, possibly carrying a
+    synchronous bounded level-compaction), worst tombstone delete op,
+    worst compaction-carrying op alone, worst extremal (victim-shadow)
+    delete — which must never compact — and the fused multi-level query
+    latency over the final ladder.  Metric names carry the
+    ``updates.lsm.`` / ``updates2d.lsm.`` prefix; the record's meta
+    carries ``lsm=1`` and the final deterministic ``levels`` count so
+    check_regression pairs it only with LSM baselines of the same ladder
+    shape."""
+    from repro.data import make_queries_1d, make_queries_2d
+    from repro.engine import LsmEngine, LsmEngine2D
+
+    rows = []
+    results = []
+
+    def record(name, value, derived=""):
+        rows.append(row(name, value, derived))
+        results.append({"name": name, "us_per_query": value,
+                        "derived": derived})
+
+    rng = np.random.default_rng(0x15B)
+    batch = capacity // 4
+    n_batches = 10
+    prefix = "updates.lsm" if dim == 1 else "updates2d.lsm"
+
+    if dim == 1:
+        keys, _ = dataset("tweet", n)
+        q = tuple(map(jnp.asarray, make_queries_1d(keys, nq)))
+        lo, hi = float(keys.min()), float(keys.max())
+
+        def make(backend):
+            return LsmEngine(keys, agg="count", delta=50.0, backend=backend,
+                             capacity=capacity, background=False)
+
+        def ins_batch(m):
+            return (rng.uniform(lo, hi, m),)
+
+        del_batches = [(keys[i * batch: i * batch + batch // 2].copy(),)
+                       for i in (1, 3, 5)]
+    else:
+        px, py = dataset("osm", n)
+        w = 50.0 + 20.0 * np.sin(px / 7.0) + 15.0 * np.cos(py / 11.0)
+        q = tuple(map(jnp.asarray, make_queries_2d(px, py, nq)))
+        delta = 0.01 * float(np.abs(w).sum())
+        x0, x1 = float(px.min()), float(px.max())
+        y0, y1 = float(py.min()), float(py.max())
+
+        def make(backend):
+            return LsmEngine2D(px, py, w, agg="sum2d", delta=delta,
+                               backend=backend, capacity=capacity,
+                               max_depth=8, background=False)
+
+        def ins_batch(m):
+            return (rng.uniform(x0, x1, m), rng.uniform(y0, y1, m),
+                    rng.uniform(0, 100, m))
+
+        del_batches = [(px[i * batch: i * batch + batch // 2].copy(),
+                        py[i * batch: i * batch + batch // 2].copy())
+                       for i in (1, 3, 5)]
+
+    levels = None
+    for backend in backends:
+        # warm the per-shape append/delete/query compiles on a throwaway
+        # engine so one-off traces never land on the timed worst case
+        warm = make(backend)
+        warm.insert(*ins_batch(batch))
+        warm.delete(*tuple(c[: batch // 2] for c in del_batches[0]))
+        jax.block_until_ready(warm.query(*q).answer)
+
+        eng = make(backend)
+        ins_worst = comp_worst = 0.0
+        compactions = 0
+        for _ in range(n_batches):
+            c0 = eng.compaction_count
+            cols = ins_batch(batch)
+            t0 = time.perf_counter()
+            eng.insert(*cols)
+            dt = (time.perf_counter() - t0) * 1e6
+            ins_worst = max(ins_worst, dt)
+            if eng.compaction_count > c0:   # op carried a level-compaction
+                comp_worst = max(comp_worst, dt)
+                compactions += 1
+        record(f"{prefix}.insert_worst.{backend}", ins_worst,
+               f"batch={batch};levels={eng.n_levels}")
+        record(f"{prefix}.compact_worst.{backend}", comp_worst,
+               f"compactions={compactions}")
+
+        del_worst = 0.0
+        for cols in del_batches:
+            t0 = time.perf_counter()
+            eng.delete(*cols)
+            del_worst = max(del_worst, (time.perf_counter() - t0) * 1e6)
+        record(f"{prefix}.delete_worst.{backend}", del_worst,
+               f"batch={batch // 2}")
+
+        t, _ = time_fn(lambda *r: eng.query(*r), *q)
+        record(f"{prefix}.query_multilevel.{backend}", t / nq * 1e6,
+               f"levels={eng.n_levels}")
+        levels = eng.n_levels
+
+        if dim == 1:
+            # extremal victim-shadow deletes: the headline guarantee —
+            # deleting a maximum NEVER triggers a merge on the write path
+            vals = 50.0 + 20.0 * np.sin(np.asarray(keys) / 3.0)
+            meng = LsmEngine(keys, vals, agg="max", delta=50.0,
+                             backend=backend, capacity=capacity,
+                             background=False)
+            meng.delete(keys[:1].copy())          # warm the shadow rebuild
+            ext_worst = 0.0
+            for i in range(1, 9):
+                t0 = time.perf_counter()
+                meng.delete(keys[i * 17: i * 17 + 1].copy())
+                ext_worst = max(ext_worst,
+                                (time.perf_counter() - t0) * 1e6)
+            assert meng.compaction_count == 0, "extremal delete compacted"
+            record(f"{prefix}.extremal_delete_worst.{backend}", ext_worst,
+                   "no_merge=1")
+
+    meta = {
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "n": n, "nq": nq, "capacity": capacity, "lsm": 1,
+        "levels": levels,
+        "device": jax.devices()[0].platform,
+        "machine": platform.machine(),
+    }
+    if dim == 2:
+        meta["dim"] = 2
+    _emit_json(results, meta, out_path)
+    return rows
+
+
 def main():
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--tiny", action="store_true",
@@ -246,11 +384,24 @@ def main():
     p.add_argument("--dim", type=int, default=1, choices=(1, 2),
                    help="1: DynamicEngine on TWEET (default); 2: "
                         "DynamicEngine2D sum2d on OSM (selective refit)")
+    p.add_argument("--lsm", action="store_true",
+                   help="bench the LSM level ladder instead of the flat "
+                        "delta-buffered engine: worst-case (max) per-op "
+                        "insert/delete/compaction latency + multi-level "
+                        "query latency (updates*.lsm.* metric families)")
     p.add_argument("--out", default=None,
                    help="write the JSON record here instead of the "
                         "committed BENCH_updates.json")
     args = p.parse_args()
-    if args.dim == 2:
+    if args.lsm:
+        if args.tiny:
+            shapes = (dict(n=30_000, nq=1024, capacity=1024) if args.dim == 1
+                      else dict(n=8_000, nq=512, capacity=512))
+        else:
+            shapes = (dict() if args.dim == 1
+                      else dict(n=40_000, nq=1024, capacity=1024))
+        run_lsm(dim=args.dim, out_path=args.out, **shapes)
+    elif args.dim == 2:
         if args.tiny:
             run2d(n=8_000, nq=512, capacity=512, out_path=args.out)
         else:

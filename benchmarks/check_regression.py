@@ -28,12 +28,14 @@ import sys
 
 # capacity pairs bench_updates records; hs/hs2/nqh pair the H-sweep shape;
 # shard_* pair the sharded-plan sweep; dim separates bench_updates' 2-D
-# mode from the 1-D records; n1/n2/nreq/rate/backend pair the bench_serve
-# open-loop shape (records missing a key on both sides still pair —
-# .get(None) == .get(None))
+# mode from the 1-D records; lsm/levels pair the LSM worst-case records
+# (updates*.lsm.* metrics are already max-aggregated per op, so they ride
+# the same max envelope as every other family); n1/n2/nreq/rate/backend
+# pair the bench_serve open-loop shape (records missing a key on both
+# sides still pair — .get(None) == .get(None))
 MATCH_META = ("n", "nq", "n2", "nq2", "capacity", "hs", "hs2", "nqh",
-              "shard_h", "shard_nq", "shard_s", "dim", "n1", "nreq",
-              "rate", "backend", "device")
+              "shard_h", "shard_nq", "shard_s", "dim", "lsm", "levels",
+              "n1", "nreq", "rate", "backend", "device")
 
 
 def _load_history(path: str):

@@ -18,8 +18,11 @@ derives (Lemma 5.1/5.3/6.3 — see ``budget.py``), lowers each to a canonical
 device plan, and wires the execution stack the ``TableSpec`` asks for:
 static plans dispatch straight through ``engine.execute_*``, ``dynamic``
 tables get a delta-buffered ``DynamicEngine`` (inserts/deletes without
-rebuild), ``shards=N`` partitions the plan across N devices behind the
-``shard_map`` executor (``engine/sharded.py``).  ``query`` groups a mixed
+rebuild), ``lsm=True`` tables an ``LsmEngine`` geometric level ladder
+(worst-case bounded compactions, never a full refit — DESIGN.md §15),
+``shards=N`` partitions the plan across N devices behind the
+``shard_map`` executor (``engine/sharded.py``; LSM ladders shard per
+level, Q_abs only).  ``query`` groups a mixed
 batch by (plan, guarantee), pads each group to its power-of-two bucket,
 runs one fused jitted executor per group, and scatters the answers back in
 request order — so callers never touch ``Engine``/``DynamicEngine``, which
@@ -34,9 +37,9 @@ import numpy as np
 
 from ..core import AGGS_2D, build_index_1d, build_index_2d
 from ..core.queries import QueryResult
-from ..engine import (DynamicEngine, DynamicEngine2D, ShardedEngine,
-                      ShardedEngine2D, build_plan, build_plan_2d, execute,
-                      fused_executor)
+from ..engine import (DynamicEngine, DynamicEngine2D, LsmEngine,
+                      LsmEngine2D, ShardedEngine, ShardedEngine2D,
+                      build_plan, build_plan_2d, execute, fused_executor)
 from ..kernels.poly_eval import DEFAULT_BQ
 from .budget import ErrorBudget
 from .spec import DEFAULT_REL, QueryBatch, QuerySpec, TableSpec
@@ -63,16 +66,27 @@ class _Table:
                 ws = None
             else:
                 xs, ys, ws = (np.asarray(a, np.float64) for a in data)
-            idx = build_index_2d(xs, ys, measures=ws, agg=agg,
-                                 deg=spec.degree,
-                                 delta=spec.budget.delta(agg))
-            if spec.dynamic:
+            if spec.lsm:
+                self.dyn = LsmEngine2D(
+                    xs, ys, ws, agg=agg, deg=spec.degree,
+                    delta=spec.budget.delta(agg), backend=backend,
+                    interpret=interpret, capacity=spec.capacity,
+                    growth=spec.growth, background=spec.background,
+                    auto_refit=spec.auto_refit, bq=bq,
+                    min_bucket=min_bucket)
+            elif spec.dynamic:
+                idx = build_index_2d(xs, ys, measures=ws, agg=agg,
+                                     deg=spec.degree,
+                                     delta=spec.budget.delta(agg))
                 self.dyn = DynamicEngine2D(
                     idx, backend=backend, interpret=interpret,
                     capacity=spec.capacity, background=spec.background,
                     auto_refit=spec.auto_refit, bq=bq,
                     min_bucket=min_bucket)
             else:
+                idx = build_index_2d(xs, ys, measures=ws, agg=agg,
+                                     deg=spec.degree,
+                                     delta=spec.budget.delta(agg))
                 self._static_plan = build_plan_2d(idx)
             if spec.shards is not None:
                 self.sharded = ShardedEngine2D(spec.shards,
@@ -82,15 +96,25 @@ class _Table:
             keys, meas = data
             keys = np.asarray(keys, np.float64)
             meas = None if meas is None else np.asarray(meas, np.float64)
-            idx = build_index_1d(keys, meas, agg, deg=spec.degree,
-                                 delta=spec.budget.delta(agg))
-            if spec.dynamic:
+            if spec.lsm:
+                self.dyn = LsmEngine(
+                    keys, meas, agg=agg, deg=spec.degree,
+                    delta=spec.budget.delta(agg), backend=backend,
+                    interpret=interpret, capacity=spec.capacity,
+                    growth=spec.growth, background=spec.background,
+                    auto_refit=spec.auto_refit, bq=bq,
+                    min_bucket=min_bucket)
+            elif spec.dynamic:
+                idx = build_index_1d(keys, meas, agg, deg=spec.degree,
+                                     delta=spec.budget.delta(agg))
                 self.dyn = DynamicEngine(
                     idx, backend=backend, interpret=interpret,
                     capacity=spec.capacity, background=spec.background,
                     auto_refit=spec.auto_refit, bq=bq,
                     min_bucket=min_bucket)
             else:
+                idx = build_index_1d(keys, meas, agg, deg=spec.degree,
+                                     delta=spec.budget.delta(agg))
                 self._static_plan = build_plan(idx)
             if spec.shards is not None:
                 self.sharded = ShardedEngine(spec.shards,
@@ -210,6 +234,19 @@ class PolyFit:
 
     def is_sharded(self, table: str) -> bool:
         return self._table(table).sharded is not None
+
+    def is_lsm(self, table: str) -> bool:
+        """True when the table is a tiered level ladder (``lsm=True``)."""
+        return self._table(table).spec.lsm
+
+    def on_plan_swap(self, table: str, fn) -> None:
+        """Register ``fn(incoming_plan)`` to run on the merge/compaction
+        thread immediately *before* a refit installs the new plan (or
+        ladder).  The serving engine uses this to AOT-lower the incoming
+        plan's warmed bucket sizes so post-swap dispatches never pay a
+        relower; a listener exception aborts the install and surfaces as
+        the table's refit error."""
+        self._dyn(table).add_install_listener(fn)
 
     def admission_class(self, table: str) -> Tuple[Optional[float], int]:
         """The table's serving guarantee class ``(deadline, priority)``

@@ -149,9 +149,13 @@ class TableSpec:
     delta comes from.  ``deg`` defaults to 2 for SUM/COUNT and 3 for
     MAX/MIN/2-D (the paper's recommendations).  ``dynamic`` wraps the plan
     in a delta-buffered engine (inserts/deletes without rebuild);
-    ``shards`` partitions the plan's tables across that many devices and
-    serves it through the shard_map executors (``engine/sharded.py`` —
-    1-D key ranges, 2-D Morton z-ranges).
+    ``lsm`` (requires ``dynamic``) tiers the table into a geometric
+    ladder of immutable plans (``engine/lsm.py`` — worst-case bounded
+    compactions instead of full refits, ``growth`` is the ladder's
+    geometric factor); ``shards`` partitions the plan's tables across
+    that many devices and serves it through the shard_map executors
+    (``engine/sharded.py`` — 1-D key ranges, 2-D Morton z-ranges; LSM
+    ladders shard per level and serve Q_abs only).
 
     ``deadline``/``priority`` declare the table's serving guarantee class
     (DESIGN.md §14): ``deadline`` is the default admission deadline in
@@ -166,6 +170,8 @@ class TableSpec:
     budget: ErrorBudget
     deg: Optional[int] = None
     dynamic: bool = False
+    lsm: bool = False
+    growth: int = 4
     capacity: int = 1024
     background: bool = True
     auto_refit: bool = True
@@ -178,6 +184,11 @@ class TableSpec:
             raise ValueError(f"unknown aggregate {self.agg!r}; expected one "
                              f"of {sorted(_NRANGES)}")
         assert self.agg in DELTA_FRACTION
+        if self.lsm and not self.dynamic:
+            raise ValueError("lsm=True tiers the *update* path into a level "
+                             "ladder; it requires dynamic=True")
+        if self.growth < 2:
+            raise ValueError("growth must be >= 2")
         if self.deadline is not None and self.deadline <= 0:
             raise ValueError("deadline must be positive seconds (or None)")
         if self.priority < 0:

@@ -460,6 +460,25 @@ def quadtree_locate(children, leaf_of, bounds, max_depth: int, u, v):
     return leaf_of[node]
 
 
+def _quadtree_locate_np(children, leaf_of, bounds, max_depth: int, u, v):
+    """Host twin of ``quadtree_locate`` (same descent rule in numpy).
+
+    Used at construction/assembly time where the point and topology shapes
+    differ on every call and the eager JAX descent would pay a fresh
+    per-shape compile for each of its primitives — a constant ~350 ms that
+    dominated small (LSM-compaction-sized) builds.
+    """
+    node = np.zeros(np.shape(u), np.int32)
+    for _ in range(max_depth):
+        b = bounds[node]
+        xmid = 0.5 * (b[..., 0] + b[..., 1])
+        ymid = 0.5 * (b[..., 2] + b[..., 3])
+        q = (v >= ymid).astype(np.int32) * 2 + (u >= xmid).astype(np.int32)
+        child = children[node, q]
+        node = np.where(child >= 0, child, node)
+    return leaf_of[node]
+
+
 def quadtree_eval_cf(children, leaf_of, bounds, coeffs, leaf_nodes,
                      max_depth: int, deg: int, u, v):
     """P_{leaf(u,v)}(u, v): the fitted surface over flat quadtree arrays."""
@@ -620,9 +639,9 @@ def _assemble_index_2d(children, bounds, depths, node_coef, *, agg, deg,
     bounds_j = jnp.asarray(bounds_a)
 
     # exact per-leaf measure aggregate over the descent's own partition
-    leaf = np.asarray(quadtree_locate(children_j, leaf_of_j, bounds_j,
-                                      max_depth, jnp.asarray(sx),
-                                      jnp.asarray(sy)))
+    # (host descent: shapes vary per build, see _quadtree_locate_np)
+    leaf = _quadtree_locate_np(children, leaf_of, bounds_a, max_depth,
+                               sx, sy)
     nl = len(leaf_nodes)
     if agg in ("max2d", "min2d"):
         la = np.full(nl, -np.inf)

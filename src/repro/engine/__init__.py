@@ -22,20 +22,29 @@ contiguous Morton z-ranges (DESIGN.md §12).  2-D plans carry measures:
 ``execute_sum2d`` answers rectangle SUM via the 4-corner decomposition and
 ``execute_extremum2d`` dominance MAX/MIN at a corner, with
 ``DynamicEngine2D`` buffering updates and merging through the selective
-leaf refit.  This module is the execution layer behind the declarative
-``repro.api.PolyFit`` facade, which new code should prefer; the Pallas
-kernels and their jnp oracles are implementation details below it.
+leaf refit.  ``engine.lsm`` stacks immutable plans into a geometric level
+ladder (``LsmEngine``/``LsmEngine2D``) with worst-case update guarantees:
+queries fuse O(log n) per-level evaluations exactly and merges become
+bounded level-compactions (DESIGN.md §15).  This module is the execution
+layer behind the declarative ``repro.api.PolyFit`` facade, which new code
+should prefer; the Pallas kernels and their jnp oracles are implementation
+details below it.
 """
 from .dynamic import (DeltaBuffer, DeltaBuffer2D, DynamicEngine,
                       DynamicEngine2D, fused_executor)
 from .engine import (BACKENDS, Engine, execute, execute_count2d,
                      execute_extremum, execute_extremum2d, execute_sum,
                      execute_sum2d, pad_fills)
+from .lsm import (CompactionPolicy, LsmEngine, LsmEngine2D, LsmLevel,
+                  LsmLevel2D, LsmPlan, LsmPlan2D, composed_bound,
+                  execute_lsm, level_executor)
 from .plan import (IndexPlan, IndexPlan2D, big_sentinel, build_plan,
                    build_plan_2d, pad_to_multiple)
 from .sharded import (ShardedDelta, ShardedEngine, ShardedEngine2D,
-                      ShardedPlan, ShardedPlan2D, make_shard_mesh,
-                      shard_buffer, shard_plan, shard_plan_2d)
+                      ShardedLsmPlan, ShardedLsmPlan2D, ShardedPlan,
+                      ShardedPlan2D, execute_lsm_sharded, make_shard_mesh,
+                      shard_buffer, shard_lsm_plan, shard_lsm_plan_2d,
+                      shard_plan, shard_plan_2d)
 
 __all__ = ["Engine", "BACKENDS", "IndexPlan", "IndexPlan2D", "build_plan",
            "build_plan_2d", "big_sentinel", "pad_to_multiple",
@@ -43,6 +52,11 @@ __all__ = ["Engine", "BACKENDS", "IndexPlan", "IndexPlan2D", "build_plan",
            "DeltaBuffer2D", "fused_executor", "pad_fills",
            "execute", "execute_sum", "execute_extremum",
            "execute_count2d", "execute_sum2d", "execute_extremum2d",
+           "LsmEngine", "LsmEngine2D", "LsmPlan", "LsmPlan2D", "LsmLevel",
+           "LsmLevel2D", "CompactionPolicy", "composed_bound",
+           "execute_lsm", "level_executor",
            "ShardedEngine", "ShardedEngine2D", "ShardedPlan",
            "ShardedPlan2D", "ShardedDelta", "shard_plan", "shard_plan_2d",
-           "shard_buffer", "make_shard_mesh"]
+           "shard_buffer", "make_shard_mesh", "ShardedLsmPlan",
+           "ShardedLsmPlan2D", "shard_lsm_plan", "shard_lsm_plan_2d",
+           "execute_lsm_sharded"]

@@ -29,12 +29,17 @@ updatable while keeping every certified bound:
   final pointer swap takes the lock.
 
 MAX/MIN deletes cannot be folded into a monotone max correction (the
-deleted point may *be* the maximum), so they trigger an eager synchronous
-merge; SUM/COUNT deletes ride the tombstone buffer like inserts.
+deleted point may *be* the maximum), so they shadow their victim instead:
+the buffer carries the victim keys plus a victim-masked exact sparse
+table (``vic_keys``/``live_st``), queries whose range covers a victim
+refine to the exact live answer, and the actual removal waits for the
+next capacity-triggered merge — no delete ever forces an eager refit
+(``engine.lsm`` applies the same scheme per level).  SUM/COUNT deletes
+ride the tombstone buffer like inserts.
 
-``DynamicEngine2D`` applies the same buffering + fused-correction scheme to
-2-key COUNT plans; its merge currently rebuilds the quadtree (selective
-leaf refit is a ROADMAP open item).
+``DynamicEngine2D`` applies the same buffering + fused-correction scheme
+to 2-key COUNT/SUM/dominance-MAX/MIN plans; its merge runs
+``core.index2d.selective_refit_2d`` over the touched leaves only.
 """
 from __future__ import annotations
 
@@ -47,9 +52,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.exact import build_sparse_table, sparse_table_range_max
 from ..core.fitting import PolyModel, fit_minimax_lp
 from ..core.index import PolyFitIndex1D, _continuum_post, assemble_index_1d
-from ..core.index2d import PolyFitIndex2D, selective_refit_2d
+from ..core.index2d import (MergeSortTree, PolyFitIndex2D, mst_dommax,
+                            selective_refit_2d)
 from ..core.queries import QueryResult
 from ..core.segmentation import FastAcceptFitter, greedy_segmentation
 from ..kernels import ref as _ref
@@ -90,6 +97,15 @@ class DeltaBuffer:
     for MAX/MIN plans, a sparse table over the insert log (the located span
     answers in O(1)).  Sentinel slots carry value 0, so the prefix sums are
     flat across the tail and the structures are fill-level oblivious too.
+
+    Extremal deletes shadow their victim instead of merging eagerly:
+    ``vic_keys`` holds the (sentinel-padded, sorted) keys of deleted base
+    rows and ``live_st`` a victim-masked exact sparse table over the base
+    measures.  A query whose range covers a victim cannot trust the fitted
+    approximation (the victim may *be* the maximum) and refines against
+    ``live_st`` instead — exact, and no merge on the write path.  Both are
+    ``None`` until the first extremal delete, keeping the no-victim trace
+    bit-identical to the victim-free executor.
     """
 
     ins_keys: jnp.ndarray   # (cap,) sorted, sentinel-padded
@@ -100,6 +116,8 @@ class DeltaBuffer:
     del_cf: jnp.ndarray     # (cap+1,) exclusive prefix sum of del_vals
     ins_st: Optional[jnp.ndarray]   # (L, cap) sparse table (max/min only)
     cap: int
+    vic_keys: Optional[jnp.ndarray] = None   # (vcap,) deleted base keys
+    live_st: Optional[jnp.ndarray] = None    # (L, n) victim-masked exact ST
 
     @staticmethod
     def empty(cap: int, dtype=jnp.float64,
@@ -116,7 +134,7 @@ class DeltaBuffer:
 jax.tree_util.register_dataclass(
     DeltaBuffer,
     data_fields=["ins_keys", "ins_vals", "ins_cf", "del_keys", "del_vals",
-                 "del_cf", "ins_st"],
+                 "del_cf", "ins_st", "vic_keys", "live_st"],
     meta_fields=["cap"],
 )
 
@@ -135,8 +153,10 @@ class DeltaBuffer2D:
     sentinel padding) and, for the locate->gather backend, the weighted
     merge-sort-tree companions: per-block inclusive prefix sums
     (``*_wcum``) for the SUM correction and prefix maxima (``ins_wpmax``)
-    for the dominance-MAX correction (extremal deletes merge eagerly, so
-    the delete log needs no max structure).
+    for the dominance-MAX correction.  Extremal deletes never populate the
+    delete log: they shadow base victims via ``vic_x``/``vic_y`` and the
+    victim-masked exact tree ``live_wpmax`` (see ``DeltaBuffer``), so the
+    delete log needs no max structure.
     """
 
     ins_x: jnp.ndarray
@@ -152,6 +172,9 @@ class DeltaBuffer2D:
     ins_wcum: Optional[jnp.ndarray] = None   # (L, cap) block prefix sums
     del_wcum: Optional[jnp.ndarray] = None
     ins_wpmax: Optional[jnp.ndarray] = None  # (L, cap) block prefix maxima
+    vic_x: Optional[jnp.ndarray] = None      # (vcap,) deleted base points
+    vic_y: Optional[jnp.ndarray] = None
+    live_wpmax: Optional[jnp.ndarray] = None  # (L, n) victim-masked tree
 
     @staticmethod
     def empty(cap: int, dtype=jnp.float64,
@@ -171,7 +194,8 @@ class DeltaBuffer2D:
 jax.tree_util.register_dataclass(
     DeltaBuffer2D,
     data_fields=["ins_x", "ins_y", "ins_ylv", "del_x", "del_y", "del_ylv",
-                 "ins_w", "del_w", "ins_wcum", "del_wcum", "ins_wpmax"],
+                 "ins_w", "del_w", "ins_wcum", "del_wcum", "ins_wpmax",
+                 "vic_x", "vic_y", "live_wpmax"],
     meta_fields=["cap"],
 )
 
@@ -391,7 +415,8 @@ def _exec_dyn_extremum(plan: IndexPlan, buf: DeltaBuffer, lq, uq, *,
                        backend: str, eps_rel: Optional[float],
                        interpret: bool, bq: int):
     """MAX space throughout; the delete log is empty by construction
-    (extremal deletes trigger an eager merge in DynamicEngine.delete)."""
+    (extremal deletes shadow a victim — ``buf.vic_keys``/``buf.live_st`` —
+    instead of populating the device delete log; see DeltaBuffer)."""
     dt = plan.dtype
     lqr, uqr = lq.astype(dt), uq.astype(dt)
     lqc = jnp.maximum(lqr, plan.domain_lo)
@@ -402,6 +427,27 @@ def _exec_dyn_extremum(plan: IndexPlan, buf: DeltaBuffer, lq, uq, *,
                      backend=backend, interpret=interpret, bq=bq)
     approx = jnp.maximum(static, ins)
     neg = plan.agg == "min"
+    if buf.vic_keys is not None:
+        # victim-shadowed path: a range covering a deleted base row cannot
+        # trust the fitted approximation (the victim may be the maximum) —
+        # refine against the victim-masked exact sparse table instead
+        i0 = jnp.searchsorted(plan.ref_keys, lqr, side="left")
+        i1 = jnp.searchsorted(plan.ref_keys, uqr, side="right")
+        base_exact = sparse_table_range_max(buf.live_st, i0, i1)
+        exact = jnp.maximum(base_exact, ins)
+        vk = buf.vic_keys
+        threat = jnp.any((lqr[:, None] <= vk[None, :]) &
+                         (vk[None, :] <= uqr[:, None]), axis=1)
+        if eps_rel is None:
+            ans = jnp.where(threat, exact, approx)
+            if neg:
+                ans = -ans
+            return ans, ans, threat
+        ok = (~threat) & (approx >= plan.delta * (1.0 + 1.0 / eps_rel))
+        ans = jnp.where(ok, approx, exact)
+        if neg:
+            ans, approx = -ans, -approx
+        return ans, approx, ~ok
     if eps_rel is None:
         out = -approx if neg else approx
         return out, out, jnp.zeros(out.shape, bool)
@@ -471,7 +517,8 @@ def _exec_dyn_dommax2d(plan: IndexPlan2D, buf: DeltaBuffer2D, u, v, *,
                        backend: str, eps_rel: Optional[float],
                        interpret: bool, bq: int):
     """MAX space throughout; the delete log is empty by construction
-    (extremal deletes trigger an eager merge in DynamicEngine2D.delete)."""
+    (extremal deletes shadow a victim — ``buf.vic_x``/``buf.vic_y``/
+    ``buf.live_wpmax`` — instead of populating the device delete log)."""
     dt = plan.dtype
     x0, x1, y0, y1 = plan.root
     ur, vr = u.astype(dt), v.astype(dt)
@@ -484,6 +531,24 @@ def _exec_dyn_dommax2d(plan: IndexPlan2D, buf: DeltaBuffer2D, u, v, *,
                           interpret=interpret, bq=bq)
     approx = jnp.maximum(static, ins)
     neg = plan.agg == "min2d"
+    if buf.vic_x is not None:
+        # victim-shadowed path: refine dominance corners that cover a
+        # deleted base point against the victim-masked merge-sort tree
+        base_exact = mst_dommax(plan.ref_xs, plan.ref_ys_levels,
+                                buf.live_wpmax, ur, vr)
+        exact = jnp.maximum(base_exact.astype(dt), ins)
+        threat = jnp.any((buf.vic_x[None, :] <= ur[:, None]) &
+                         (buf.vic_y[None, :] <= vr[:, None]), axis=1)
+        if eps_rel is None:
+            ans = jnp.where(threat, exact, approx)
+            if neg:
+                ans = -ans
+            return ans, ans, threat
+        ok = (~threat) & (approx >= plan.delta * (1.0 + 1.0 / eps_rel))
+        ans = jnp.where(ok, approx, exact)
+        if neg:
+            ans, approx = -ans, -approx
+        return ans, approx, ~ok
     if eps_rel is None:
         out = -approx if neg else approx
         return out, out, jnp.zeros(out.shape, bool)
@@ -690,6 +755,24 @@ class _DeltaBufferedEngine:
         self.refit_count = 0
         self._lock = threading.RLock()
         self._thread: Optional[threading.Thread] = None
+        self._install_listeners: List = []
+        # (ins, del) log lengths captured by the in-flight merge snapshot;
+        # None when no merge is running.  Extremal deletes that NaN-cancel
+        # a pending insert the snapshot already copied must be replayed at
+        # install (the merge bakes the un-cancelled copy into the new base).
+        self._merge_mark: Optional[Tuple[int, int]] = None
+
+    def add_install_listener(self, fn) -> None:
+        """Register ``fn(preview)`` to run on the merge thread with the
+        about-to-be-installed state *before* the atomic install.  The
+        serving engine uses this to pre-lower the incoming plan's bucket
+        ladder so post-swap dispatches never pay a relower; listener
+        errors propagate as refit errors (the install does not happen)."""
+        self._install_listeners.append(fn)
+
+    def _notify_install_listeners(self, preview) -> None:
+        for fn in list(self._install_listeners):
+            fn(preview)
 
     @property
     def n_pending(self) -> int:
@@ -805,8 +888,14 @@ class DynamicEngine(_DeltaBufferedEngine):
 
     def _install(self, index: PolyFitIndex1D, keys: np.ndarray,
                  meas: np.ndarray, residual_ins: Optional[list] = None,
-                 residual_del: Optional[list] = None) -> None:
-        """Swap in a fresh (index, plan, empty-or-replayed buffer)."""
+                 residual_del: Optional[list] = None,
+                 residual_vic: Optional[list] = None,
+                 plan: Optional[IndexPlan] = None) -> None:
+        """Swap in a fresh (index, plan, empty-or-replayed buffer).
+
+        ``plan`` lets the merge thread pass the plan it already built (and
+        pre-lowered via the install listeners) so the installed object is
+        the *same* identity the serving AOT cache was warmed against."""
         with self._lock:
             self._index = index
             self._keys = keys
@@ -820,7 +909,11 @@ class DynamicEngine(_DeltaBufferedEngine):
             self._ins_log: List[Tuple[np.ndarray, np.ndarray]] = []
             self._del_log: List[Tuple[np.ndarray, np.ndarray]] = []
             self._n_pending = 0
-            plan = build_plan(index)
+            self._vic: List[int] = []
+            self._residual_vic: List[Tuple[float, float]] = []
+            self._merge_mark = None
+            if plan is None:
+                plan = build_plan(index)
             # the insert-log sparse table is only read by the locate->gather
             # MAX correction, so only that backend pays its upkeep
             buf = DeltaBuffer.empty(
@@ -829,9 +922,26 @@ class DynamicEngine(_DeltaBufferedEngine):
                          and self.backend == "pallas"))
             self._state = (plan, buf)
             for k, v in (residual_ins or []):
-                self._log_ops(k, v, delete=False)
-            for k, v in (residual_del or []):
-                self._log_ops(k, v, delete=True)
+                if len(k):
+                    self._log_ops(k, v, delete=False)
+            if self._agg in ("max", "min"):
+                # extremal residuals re-resolve through the victim path so
+                # the fresh buffer's shadow mask covers them immediately
+                nan_dirty = False
+                for karr, varr in (residual_del or []):
+                    for k, v in zip(karr, varr):
+                        nan_dirty |= self._delete_extremal_resolved(
+                            float(k), float(v))
+                for k, v in (residual_vic or []):
+                    nan_dirty |= self._delete_extremal_resolved(k, v)
+                if nan_dirty:
+                    self._rebuild_ins_buf()
+                if self._vic:
+                    self._refresh_vic_buf()
+            else:
+                for k, v in (residual_del or []):
+                    if len(k):
+                        self._log_ops(k, v, delete=True)
 
     @property
     def plan(self) -> IndexPlan:
@@ -876,13 +986,20 @@ class DynamicEngine(_DeltaBufferedEngine):
             self._ins_log.append((keys, vals))
         self._state = (plan, buf)
         self._n_pending += len(keys)
+        if delete and self._agg in ("max", "min"):
+            # extremal tombstones leave the fitted function and its
+            # certificate untouched (the victim shadow answers exactly),
+            # so they ride the capacity trigger only, never drift
+            return
         seg = np.clip(np.searchsorted(self._seg_lo_host, keys, side="right")
                       - 1, 0, len(self._seg_lo_host) - 1)
         np.add.at(self._drift, seg, np.abs(vals))
 
     def insert(self, keys, measures=None) -> None:
         """Buffer a batch of new (key, measure) records."""
-        keys = np.atleast_1d(np.asarray(keys, np.float64))
+        # always copy: the host log owns these arrays (extremal deletes
+        # NaN-cancel pending inserts in place)
+        keys = np.atleast_1d(np.array(keys, np.float64))
         if measures is None:
             if self._agg != "count":
                 raise ValueError("measures required unless agg='count'")
@@ -902,10 +1019,25 @@ class DynamicEngine(_DeltaBufferedEngine):
 
     def delete(self, keys) -> None:
         """Buffer delete tombstones for existing records (KeyError if a key
-        has no live occurrence).  MAX/MIN deletes merge eagerly: a removed
-        point may be the maximum, so no monotone correction exists."""
+        has no live occurrence).  MAX/MIN deletes shadow their victim (the
+        buffer's ``vic_keys``/``live_st`` mask) instead of merging eagerly:
+        queries covering the victim refine against the victim-masked exact
+        sparse table, and the physical removal rides the next ordinary
+        merge — no delete pays a refit on the write path."""
         keys = np.atleast_1d(np.asarray(keys, np.float64))
         self._ensure_room(len(keys))
+        if self._agg in ("max", "min"):
+            with self._lock:
+                nan_dirty = False
+                for k in keys:
+                    nan_dirty |= self._delete_extremal_one(float(k))
+                if nan_dirty:
+                    self._rebuild_ins_buf()
+                self._refresh_vic_buf()
+                trigger = self._should_refit()
+            if trigger:
+                self.refit(wait=not self.background)
+            return
         with self._lock:
             vals = []
             batch_tomb: dict = {}   # duplicates within this batch advance
@@ -915,10 +1047,109 @@ class DynamicEngine(_DeltaBufferedEngine):
                 batch_tomb[float(k)] = off + 1
             self._log_ops(keys, np.array(vals), delete=True)
             trigger = self._should_refit()
-        if self._agg in ("max", "min"):
-            self.refit(wait=True)
-        elif trigger:
+        if trigger:
             self.refit(wait=not self.background)
+
+    def _delete_extremal_one(self, key: float) -> bool:
+        """Resolve one extremal delete: shadow the leftmost unshadowed base
+        occurrence (victim mask + ordinary tombstone for the next merge),
+        else NaN-cancel a pending insert.  Returns True when a pending
+        insert was cancelled (the device insert arrays need a rebuild)."""
+        i0 = np.searchsorted(self._keys, key, side="left")
+        i1 = np.searchsorted(self._keys, key, side="right")
+        vic_set = set(self._vic)
+        for pos in range(i0, i1):
+            if pos not in vic_set:
+                self._vic.append(pos)
+                self._log_ops(np.array([key]),
+                              np.array([float(self._meas[pos])]),
+                              delete=True)
+                return False
+        for e, (karr, varr) in enumerate(self._ins_log):
+            hit = np.where((karr == key) & ~np.isnan(karr))[0]
+            if len(hit):
+                j = int(hit[0])
+                val = float(varr[j])
+                karr[j] = varr[j] = np.nan
+                self._n_pending -= 1
+                if (self._merge_mark is not None
+                        and e < self._merge_mark[0]):
+                    # the in-flight merge copied this entry before the mark
+                    # and will bake it into the new base — replay there
+                    self._residual_vic.append((key, val))
+                return True
+        raise KeyError(f"delete of key {key!r}: no live occurrence")
+
+    def _delete_extremal_resolved(self, key: float, val: float) -> bool:
+        """Replay a residual extremal delete against the freshly installed
+        base (value-matched victim preferred, then a pending insert, then
+        any live occurrence).  Locked; returns True on a NaN-cancel."""
+        i0 = np.searchsorted(self._keys, key, side="left")
+        i1 = np.searchsorted(self._keys, key, side="right")
+        vic_set = set(self._vic)
+        cand = [p for p in range(i0, i1) if p not in vic_set]
+        pos = next((p for p in cand if self._meas[p] == val),
+                   cand[0] if cand else None)
+        if pos is not None:
+            self._vic.append(pos)
+            self._log_ops(np.array([key]),
+                          np.array([float(self._meas[pos])]), delete=True)
+            return False
+        for karr, varr in self._ins_log:
+            hit = np.where((karr == key) & (varr == val)
+                           & ~np.isnan(karr))[0]
+            if len(hit):
+                j = int(hit[0])
+                karr[j] = varr[j] = np.nan
+                self._n_pending -= 1
+                return True
+        raise KeyError(f"delete of key {key!r}: no live occurrence")
+
+    def _refresh_vic_buf(self) -> None:
+        """Rebuild the buffer's victim mask (sorted shadow keys + the
+        victim-masked exact sparse table) and swap it in atomically."""
+        plan, buf = self._state
+        dt = plan.dtype
+        if not self._vic:
+            if buf.vic_keys is not None:
+                buf = dataclasses.replace(buf, vic_keys=None, live_st=None)
+                self._state = (plan, buf)
+            return
+        nv = len(self._vic)
+        vcap = self.capacity
+        while vcap < nv:
+            vcap *= 2
+        vk = np.full((vcap,), big_sentinel(np.float64))
+        vk[:nv] = np.sort(self._keys[np.asarray(self._vic)])
+        m = np.array(self._meas, np.float64, copy=True)
+        m[np.asarray(self._vic)] = -np.inf
+        buf = dataclasses.replace(
+            buf, vic_keys=jnp.asarray(vk, dt),
+            live_st=jnp.asarray(build_sparse_table(m), dt))
+        self._state = (plan, buf)
+
+    def _rebuild_ins_buf(self) -> None:
+        """Rebuild the device insert log from the non-NaN host entries
+        (one fused append), after a pending insert was cancelled."""
+        plan, buf = self._state
+        dt = plan.dtype
+        with_st = buf.ins_st is not None
+        fresh = DeltaBuffer.empty(self.capacity, dt, with_st=with_st)
+        ik, iv = self._flatten(self._ins_log)
+        if len(ik):
+            alive = ~np.isnan(ik)
+            ik, iv = ik[alive], iv[alive]
+        if len(ik):
+            big = big_sentinel(dt)
+            nk, nv_, ncf, nst = _append_1d(
+                fresh.ins_keys, fresh.ins_vals, _pad_batch(ik, big, dt),
+                _pad_batch(iv, 0.0, dt), cap=self.capacity, with_st=with_st)
+        else:
+            nk, nv_, ncf, nst = (fresh.ins_keys, fresh.ins_vals,
+                                 fresh.ins_cf, fresh.ins_st)
+        buf = dataclasses.replace(buf, ins_keys=nk, ins_vals=nv_,
+                                  ins_cf=ncf, ins_st=nst)
+        self._state = (plan, buf)
 
     def _find_victim(self, key: float, extra_tomb: int = 0) -> float:
         """Measure (internal space) of the occurrence a tombstone removes:
@@ -943,19 +1174,35 @@ class DynamicEngine(_DeltaBufferedEngine):
     # -- merge / refit (lifecycle in _DeltaBufferedEngine) ----------------
 
     def _snapshot(self):
+        # deep-copy the log arrays: extremal deletes NaN-cancel pending
+        # inserts *in place* on the host log, which must not race the merge
+        # thread's reads of this snapshot
+        self._merge_mark = (len(self._ins_log), len(self._del_log))
+        self._residual_vic = []
         return (self._index, self._keys, self._meas,
-                list(self._ins_log), list(self._del_log))
+                [(k.copy(), v.copy()) for k, v in self._ins_log],
+                [(k.copy(), v.copy()) for k, v in self._del_log])
 
     def _merge(self, snap, mark) -> None:
         index, keys, meas, ins_log, del_log = snap
         ik, iv = self._flatten(ins_log)
+        if len(ik):
+            alive = ~np.isnan(ik)   # NaN-cancelled pending inserts
+            ik, iv = ik[alive], iv[alive]
         dk, dv = self._flatten(del_log)
         new_index, new_k, new_m = _merge_1d(index, keys, meas, ik, iv, dk, dv)
+        # build the plan OFF the lock and hand the pre-lowered identity to
+        # _install: the install listeners (serving AOT pre-compilation) see
+        # the exact object queries will dispatch against after the swap
+        new_plan = build_plan(new_index)
+        self._notify_install_listeners(new_plan)
         with self._lock:
-            residual_ins = self._ins_log[mark[0]:]
+            residual_ins = [(k[~np.isnan(k)], v[~np.isnan(k)])
+                            for k, v in self._ins_log[mark[0]:]]
             residual_del = self._del_log[mark[1]:]
-            self._install(new_index, new_k, new_m,
-                          residual_ins, residual_del)
+            residual_vic = list(self._residual_vic)
+            self._install(new_index, new_k, new_m, residual_ins,
+                          residual_del, residual_vic, plan=new_plan)
             self.refit_count += 1
 
     # -- queries ---------------------------------------------------------
@@ -1043,7 +1290,9 @@ class DynamicEngine2D(_DeltaBufferedEngine):
 
     def _install(self, index: PolyFitIndex2D, px: np.ndarray, py: np.ndarray,
                  pw: np.ndarray, residual_ins: Optional[list] = None,
-                 residual_del: Optional[list] = None) -> None:
+                 residual_del: Optional[list] = None,
+                 residual_vic: Optional[list] = None,
+                 plan: Optional[IndexPlan2D] = None) -> None:
         with self._lock:
             self._index = index
             self._px = px
@@ -1052,14 +1301,33 @@ class DynamicEngine2D(_DeltaBufferedEngine):
             self._ins_log: List[Tuple[np.ndarray, np.ndarray, np.ndarray]] = []
             self._del_log: List[Tuple[np.ndarray, np.ndarray, np.ndarray]] = []
             self._n_pending = 0
-            plan = build_plan_2d(index)
+            self._vic: List[int] = []
+            self._residual_vic: List[Tuple[float, float, float]] = []
+            self._merge_mark = None
+            if plan is None:
+                plan = build_plan_2d(index)
             buf = DeltaBuffer2D.empty(self.capacity, plan.dtype,
                                       weighted=self._weighted)
             self._state = (plan, buf)
             for x, y, w in (residual_ins or []):
-                self._log_ops(x, y, w, delete=False)
-            for x, y, w in (residual_del or []):
-                self._log_ops(x, y, w, delete=True)
+                if len(x):
+                    self._log_ops(x, y, w, delete=False)
+            if self._agg in ("max2d", "min2d"):
+                nan_dirty = False
+                for xa, ya, wa in (residual_del or []):
+                    for x, y, w in zip(xa, ya, wa):
+                        nan_dirty |= self._delete_extremal_resolved(
+                            float(x), float(y), float(w))
+                for x, y, w in (residual_vic or []):
+                    nan_dirty |= self._delete_extremal_resolved(x, y, w)
+                if nan_dirty:
+                    self._rebuild_ins_buf()
+                if self._vic:
+                    self._refresh_vic_buf()
+            else:
+                for x, y, w in (residual_del or []):
+                    if len(x):
+                        self._log_ops(x, y, w, delete=True)
 
     @property
     def plan(self) -> IndexPlan2D:
@@ -1118,8 +1386,10 @@ class DynamicEngine2D(_DeltaBufferedEngine):
         dominates only the new point, and no monotone correction covers
         it — ``selective_refit_2d`` re-freezes the floor and refits
         exactly the leaves the old clamp touched."""
-        xs = np.atleast_1d(np.asarray(xs, np.float64))
-        ys = np.atleast_1d(np.asarray(ys, np.float64))
+        # always copy: the host log owns these arrays (extremal deletes
+        # NaN-cancel pending inserts in place)
+        xs = np.atleast_1d(np.array(xs, np.float64))
+        ys = np.atleast_1d(np.array(ys, np.float64))
         if not self._weighted:
             if ws is not None:
                 raise ValueError("measures only apply to sum2d/max2d/min2d")
@@ -1145,12 +1415,28 @@ class DynamicEngine2D(_DeltaBufferedEngine):
 
     def delete(self, xs, ys) -> None:
         """Buffer delete tombstones for existing points (KeyError if a
-        point has no live occurrence).  Dominance MAX/MIN deletes merge
-        eagerly: a removed point may carry the maximum, so no monotone
-        correction exists (the 1-D rule, DESIGN.md §9)."""
+        point has no live occurrence).  Dominance MAX/MIN deletes shadow
+        their victim (``vic_x``/``vic_y``/``live_wpmax`` in the buffer)
+        instead of merging eagerly: corners dominating the victim refine
+        against the victim-masked merge-sort tree, and the physical
+        removal rides the next ordinary merge (the 1-D rule, DESIGN.md
+        §9/§15)."""
         xs = np.atleast_1d(np.asarray(xs, np.float64))
         ys = np.atleast_1d(np.asarray(ys, np.float64))
         self._ensure_room(len(xs))
+        if self._agg in ("max2d", "min2d"):
+            with self._lock:
+                nan_dirty = False
+                for x, y in zip(xs, ys):
+                    nan_dirty |= self._delete_extremal_one(float(x),
+                                                           float(y))
+                if nan_dirty:
+                    self._rebuild_ins_buf()
+                self._refresh_vic_buf()
+                trigger = self.auto_refit and self._n_pending >= self.capacity
+            if trigger:
+                self.refit(wait=not self.background)
+            return
         with self._lock:
             ws = []
             batch_tomb: dict = {}   # duplicates within this batch count too
@@ -1161,10 +1447,127 @@ class DynamicEngine2D(_DeltaBufferedEngine):
                 batch_tomb[pt] = batch_tomb.get(pt, 0) + 1
             self._log_ops(xs, ys, np.asarray(ws), delete=True)
             trigger = self.auto_refit and self._n_pending >= self.capacity
-        if self._agg in ("max2d", "min2d"):
-            self.refit(wait=True)
-        elif trigger:
+        if trigger:
             self.refit(wait=not self.background)
+
+    def _delete_extremal_one(self, x: float, y: float) -> bool:
+        """Resolve one dominance MAX/MIN delete: shadow the leftmost
+        unshadowed base occurrence of (x, y), else NaN-cancel a pending
+        insert.  Returns True on a NaN-cancel (device rebuild needed)."""
+        i0 = np.searchsorted(self._px, x, side="left")
+        i1 = np.searchsorted(self._px, x, side="right")
+        vic_set = set(self._vic)
+        for pos in range(i0, i1):
+            if self._py[pos] == y and pos not in vic_set:
+                self._vic.append(pos)
+                self._log_ops(np.array([x]), np.array([y]),
+                              np.array([float(self._pw[pos])]), delete=True)
+                return False
+        for e, (xa, ya, wa) in enumerate(self._ins_log):
+            hit = np.where((xa == x) & (ya == y) & ~np.isnan(xa))[0]
+            if len(hit):
+                j = int(hit[0])
+                w = float(wa[j])
+                xa[j] = ya[j] = wa[j] = np.nan
+                self._n_pending -= 1
+                if (self._merge_mark is not None
+                        and e < self._merge_mark[0]):
+                    self._residual_vic.append((x, y, w))
+                return True
+        raise KeyError(f"delete of point ({x!r}, {y!r}): not present")
+
+    def _delete_extremal_resolved(self, x: float, y: float,
+                                  w: float) -> bool:
+        """Replay a residual dominance delete against the fresh base
+        (measure-matched victim preferred, then a pending insert, then any
+        live occurrence).  Locked; returns True on a NaN-cancel."""
+        i0 = np.searchsorted(self._px, x, side="left")
+        i1 = np.searchsorted(self._px, x, side="right")
+        vic_set = set(self._vic)
+        cand = [p for p in range(i0, i1)
+                if self._py[p] == y and p not in vic_set]
+        pos = next((p for p in cand if self._pw[p] == w),
+                   cand[0] if cand else None)
+        if pos is not None:
+            self._vic.append(pos)
+            self._log_ops(np.array([x]), np.array([y]),
+                          np.array([float(self._pw[pos])]), delete=True)
+            return False
+        for xa, ya, wa in self._ins_log:
+            hit = np.where((xa == x) & (ya == y) & (wa == w)
+                           & ~np.isnan(xa))[0]
+            if len(hit):
+                j = int(hit[0])
+                xa[j] = ya[j] = wa[j] = np.nan
+                self._n_pending -= 1
+                return True
+        raise KeyError(f"delete of point ({x!r}, {y!r}): not present")
+
+    def _refresh_vic_buf(self) -> None:
+        """Rebuild the buffer's victim mask (shadow points + the
+        victim-masked weighted merge-sort tree) and swap it in."""
+        plan, buf = self._state
+        dt = plan.dtype
+        if not self._vic:
+            if buf.vic_x is not None:
+                buf = dataclasses.replace(buf, vic_x=None, vic_y=None,
+                                          live_wpmax=None)
+                self._state = (plan, buf)
+            return
+        nv = len(self._vic)
+        vcap = self.capacity
+        while vcap < nv:
+            vcap *= 2
+        vic = np.asarray(self._vic)
+        big = big_sentinel(np.float64)
+        vx = np.full((vcap,), big)
+        vy = np.full((vcap,), big)
+        vx[:nv] = self._px[vic]
+        vy[:nv] = self._py[vic]
+        ws = np.array(self._pw, np.float64, copy=True)
+        ws[vic] = -np.inf
+        # self._px is x-sorted, so MergeSortTree.build's stable argsort is
+        # the identity and the tree's positions align with plan.ref_*
+        t = MergeSortTree.build(self._px, self._py, ws=ws)
+        buf = dataclasses.replace(
+            buf, vic_x=jnp.asarray(vx, dt), vic_y=jnp.asarray(vy, dt),
+            live_wpmax=jnp.asarray(t.wpmax_levels, dt))
+        self._state = (plan, buf)
+
+    def _rebuild_ins_buf(self) -> None:
+        """Rebuild the device insert log from the non-NaN host entries
+        (one fused append), after a pending insert was cancelled."""
+        plan, buf = self._state
+        dt = plan.dtype
+        fresh = DeltaBuffer2D.empty(self.capacity, dt,
+                                    weighted=self._weighted)
+        ix, iy, iw = self._flatten3(self._ins_log)
+        if len(ix):
+            alive = ~np.isnan(ix)
+            ix, iy, iw = ix[alive], iy[alive], iw[alive]
+        if len(ix):
+            big = big_sentinel(dt)
+            lv = self.backend == "pallas"
+            x, y, w, ylv, wcum, wpmax = _append_2d(
+                fresh.ins_x, fresh.ins_y,
+                fresh.ins_w if self._weighted else fresh.ins_x,
+                _pad_batch(ix, big, dt), _pad_batch(iy, big, dt),
+                _pad_batch(iw, 0.0, dt), cap=self.capacity, levels=lv,
+                weighted=self._weighted)
+            buf = dataclasses.replace(
+                buf, ins_x=x, ins_y=y,
+                ins_w=w if self._weighted else None,
+                ins_ylv=ylv if lv else fresh.ins_ylv,
+                ins_wcum=(wcum if (lv and self._weighted)
+                          else fresh.ins_wcum),
+                ins_wpmax=(wpmax if (lv and self._weighted)
+                           else fresh.ins_wpmax))
+        else:
+            buf = dataclasses.replace(
+                buf, ins_x=fresh.ins_x, ins_y=fresh.ins_y,
+                ins_w=fresh.ins_w, ins_ylv=fresh.ins_ylv,
+                ins_wcum=fresh.ins_wcum, ins_wpmax=fresh.ins_wpmax)
+        self._state = (plan, buf)
 
     def _point_pool(self, x: float, y: float) -> list:
         """Measures (internal space) of the live-or-tombstoned occurrences
@@ -1189,8 +1592,13 @@ class DynamicEngine2D(_DeltaBufferedEngine):
     # -- merge / refit (lifecycle in _DeltaBufferedEngine) ----------------
 
     def _snapshot(self):
+        # deep-copy the log arrays: extremal deletes NaN-cancel pending
+        # inserts in place on the host log (see DynamicEngine._snapshot)
+        self._merge_mark = (len(self._ins_log), len(self._del_log))
+        self._residual_vic = []
         return (self._index, self._px, self._py, self._pw,
-                list(self._ins_log), list(self._del_log))
+                [tuple(a.copy() for a in e) for e in self._ins_log],
+                [tuple(a.copy() for a in e) for e in self._del_log])
 
     @staticmethod
     def _flatten3(log):
@@ -1233,11 +1641,18 @@ class DynamicEngine2D(_DeltaBufferedEngine):
         new_index, stats = selective_refit_2d(index, new_px, new_py, new_pw,
                                               cx, cy, cw)
         order = np.argsort(new_px, kind="stable")
+        # plan built off-lock; listeners (serving AOT pre-compilation) warm
+        # against the exact object that will be installed
+        new_plan = build_plan_2d(new_index)
+        self._notify_install_listeners(new_plan)
         with self._lock:
-            residual_ins = self._ins_log[mark[0]:]
+            residual_ins = [tuple(a[~np.isnan(e[0])] for a in e)
+                            for e in self._ins_log[mark[0]:]]
             residual_del = self._del_log[mark[1]:]
+            residual_vic = list(self._residual_vic)
             self._install(new_index, new_px[order], new_py[order],
-                          new_pw[order], residual_ins, residual_del)
+                          new_pw[order], residual_ins, residual_del,
+                          residual_vic, plan=new_plan)
             self.last_refit_stats = stats
             self.refit_count += 1
 

@@ -86,6 +86,8 @@ def pad_fills(plan: Union[IndexPlan, IndexPlan2D]):
     values the ``execute_*`` entry points pad with, exposed so external
     batchers (the serving engine's admission path) produce bit-identical
     padded batches."""
+    if hasattr(plan, "levels"):   # LSM ladder: every level shares the fills
+        plan = plan.levels[0].plan
     if isinstance(plan, IndexPlan2D):
         x0, _, y0, _ = plan.root
         if plan.agg in ("max2d", "min2d"):
@@ -446,6 +448,9 @@ def execute(plan: Union[IndexPlan, IndexPlan2D], ranges, *,
     rectangles, (u, v) for 2-D dominance MAX/MIN."""
     kw = dict(backend=backend, eps_rel=eps_rel, interpret=interpret, bq=bq,
               min_bucket=min_bucket)
+    if hasattr(plan, "levels"):   # LsmPlan / LsmPlan2D level ladder
+        from .lsm import execute_lsm
+        return execute_lsm(plan, None, ranges, **kw)
     if isinstance(plan, IndexPlan2D):
         if plan.agg == "count2d":
             return execute_count2d(plan, *ranges, **kw)

@@ -63,7 +63,9 @@ from .plan import IndexPlan, IndexPlan2D, big_sentinel
 
 __all__ = ["ShardedPlan", "ShardedDelta", "ShardedEngine", "shard_plan",
            "shard_buffer", "make_shard_mesh", "ShardedPlan2D",
-           "ShardedEngine2D", "shard_plan_2d"]
+           "ShardedEngine2D", "shard_plan_2d", "ShardedLsmPlan",
+           "ShardedLsmPlan2D", "shard_lsm_plan", "shard_lsm_plan_2d",
+           "execute_lsm_sharded"]
 
 _AXIS = "shards"
 
@@ -174,9 +176,13 @@ def shard_plan(plan: IndexPlan, nshards: int) -> ShardedPlan:
     key ranges (balanced by segment count), shard-local sparse tables and
     refinement slices included.  Plans with fewer segments than shards
     leave the surplus shards empty (they own the degenerate range
-    [+inf, +inf) and contribute the psum/pmax identity)."""
+    [+inf, +inf) and contribute the psum/pmax identity).  An
+    ``LsmPlan`` ladder routes to ``shard_lsm_plan`` (every level sharded
+    independently)."""
     if nshards < 1:
         raise ValueError(f"nshards must be >= 1, got {nshards}")
+    if hasattr(plan, "levels"):
+        return shard_lsm_plan(plan, nshards)
     h = plan.h
     dt = plan.dtype
     big = big_sentinel(dt)
@@ -501,6 +507,8 @@ class ShardedEngine:
     def shard(self, plan: IndexPlan) -> ShardedPlan:
         if isinstance(plan, ShardedPlan):
             return plan
+        if hasattr(plan, "levels") or isinstance(plan, ShardedLsmPlan):
+            return _lsm_cache_shard(self, plan, shard_lsm_plan)
         hit = self._plan_cache.get(id(plan))
         if hit is None or hit[0] is not plan:
             self._plan_cache = {id(plan): (plan, shard_plan(plan,
@@ -558,9 +566,18 @@ class ShardedEngine:
 
     def query(self, plan, lq, uq, eps_rel: Optional[float] = None,
               buf: Optional[DeltaBuffer] = None) -> QueryResult:
+        if hasattr(plan, "levels"):
+            return self.query_lsm(plan, lq, uq, eps_rel=eps_rel, buf=buf)
         if plan.agg in ("sum", "count"):
             return self.sum(plan, lq, uq, eps_rel, buf)
         return self.extremum(plan, lq, uq, eps_rel, buf)
+
+    def query_lsm(self, lsm, lq, uq, eps_rel: Optional[float] = None,
+                  buf: Optional[DeltaBuffer] = None) -> QueryResult:
+        slsm = _lsm_cache_shard(self, lsm, shard_lsm_plan)
+        return execute_lsm_sharded(slsm, buf, (lq, uq), mesh=self.mesh,
+                                   eps_rel=eps_rel,
+                                   min_bucket=self.min_bucket)
 
 
 # ---------------------------------------------------------------------------
@@ -628,9 +645,12 @@ def shard_plan_2d(plan: IndexPlan2D, nshards: int) -> ShardedPlan2D:
     """Partition a 2-D plan's Morton-ordered leaf table into ``nshards``
     contiguous z-ranges (balanced by leaf count).  Plans with fewer leaves
     than shards leave the surplus shards empty (they own the degenerate
-    range [sentinel, sentinel) and contribute the psum/pmax identity)."""
+    range [sentinel, sentinel) and contribute the psum/pmax identity).
+    An ``LsmPlan2D`` ladder routes to ``shard_lsm_plan_2d``."""
     if nshards < 1:
         raise ValueError(f"nshards must be >= 1, got {nshards}")
+    if hasattr(plan, "levels"):
+        return shard_lsm_plan_2d(plan, nshards)
     if plan.leaf_z is None:
         raise ValueError(
             "2-D sharding requires the Morton leaf layout (max_depth <= "
@@ -881,6 +901,8 @@ class ShardedEngine2D:
     def shard(self, plan) -> ShardedPlan2D:
         if isinstance(plan, ShardedPlan2D):
             return plan
+        if hasattr(plan, "levels") or isinstance(plan, ShardedLsmPlan2D):
+            return _lsm_cache_shard(self, plan, shard_lsm_plan_2d)
         hit = self._plan_cache.get(id(plan))
         if hit is None or hit[0] is not plan:
             self._plan_cache = {
@@ -972,9 +994,237 @@ class ShardedEngine2D:
 
     def query(self, plan, *ranges, eps_rel: Optional[float] = None,
               buf: Optional[DeltaBuffer2D] = None) -> QueryResult:
+        if hasattr(plan, "levels"):
+            return self.query_lsm(plan, *ranges, eps_rel=eps_rel, buf=buf)
         agg = plan.agg
         if agg == "count2d":
             return self.count2d(plan, *ranges, eps_rel=eps_rel, buf=buf)
         if agg == "sum2d":
             return self.sum2d(plan, *ranges, eps_rel=eps_rel, buf=buf)
         return self.extremum2d(plan, *ranges, eps_rel=eps_rel, buf=buf)
+
+    def query_lsm(self, lsm, *ranges, eps_rel: Optional[float] = None,
+                  buf: Optional[DeltaBuffer2D] = None) -> QueryResult:
+        slsm = _lsm_cache_shard(self, lsm, shard_lsm_plan_2d)
+        return execute_lsm_sharded(slsm, buf, ranges, mesh=self.mesh,
+                                   eps_rel=eps_rel,
+                                   min_bucket=self.min_bucket)
+
+
+# ---------------------------------------------------------------------------
+# LSM ladders: each immutable level's data plan sharded independently
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardedLsmPlan:
+    """A 1-D level ladder with every level's fitted ``IndexPlan`` sharded.
+
+    ``levels`` keeps the original (replicated) ``LsmLevel`` tuple: the
+    exact side arrays — tombstone prefix sums, victim keys, live sparse
+    tables, refinement keys — stay whole on every device, matching the
+    documented 2-D sharding simplification (refinement arrays do not
+    split at arbitrary cuts).  Only the per-level segment-table
+    evaluation is distributed; the exact boundary corrections and the
+    cross-level fusion run replicated, so fused answers reproduce the
+    unsharded ``execute_lsm(backend='xla')`` bits."""
+
+    agg: str
+    nshards: int
+    levels: tuple          # original LsmLevel tuple (replicated)
+    slevels: tuple         # per-level ShardedPlan, same order
+
+    @property
+    def dtype(self):
+        return self.levels[0].plan.dtype
+
+    @property
+    def deltas(self) -> Tuple[float, ...]:
+        return tuple(lvl.plan.delta for lvl in self.levels)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedLsmPlan2D:
+    """2-D counterpart of ``ShardedLsmPlan`` (z-range-sharded leaf tables
+    per level, replicated merge-sort-tree side arrays)."""
+
+    agg: str
+    nshards: int
+    levels: tuple          # original LsmLevel2D tuple (replicated)
+    slevels: tuple         # per-level ShardedPlan2D, same order
+
+    @property
+    def dtype(self):
+        return self.levels[0].plan.dtype
+
+    @property
+    def deltas(self) -> Tuple[float, ...]:
+        return tuple(lvl.plan.delta for lvl in self.levels)
+
+
+def shard_lsm_plan(lsm, nshards: int) -> ShardedLsmPlan:
+    """Shard every level of an ``LsmPlan`` (1-D) into ``nshards`` key
+    ranges.  Levels are partitioned independently — a compaction that
+    rebuilds one slot re-shards only that level's fresh plan."""
+    return ShardedLsmPlan(
+        agg=lsm.agg, nshards=nshards, levels=tuple(lsm.levels),
+        slevels=tuple(shard_plan(l.plan, nshards) for l in lsm.levels))
+
+
+def shard_lsm_plan_2d(lsm, nshards: int) -> ShardedLsmPlan2D:
+    """Shard every level of an ``LsmPlan2D`` into ``nshards`` z-ranges."""
+    return ShardedLsmPlan2D(
+        agg=lsm.agg, nshards=nshards, levels=tuple(lsm.levels),
+        slevels=tuple(shard_plan_2d(l.plan, nshards) for l in lsm.levels))
+
+
+def _lsm_cache_shard(engine, lsm, shard_fn):
+    """Single-entry per-engine ladder cache keyed on ladder identity."""
+    if isinstance(lsm, (ShardedLsmPlan, ShardedLsmPlan2D)):
+        return lsm
+    cache = getattr(engine, "_lsm_cache", None)
+    if cache is None or cache[0] is not lsm:
+        engine._lsm_cache = (lsm, shard_fn(lsm, engine.nshards))
+        cache = engine._lsm_cache
+    return cache[1]
+
+
+@partial(jax.jit, static_argnames=("mesh",))
+def _exec_shard_eval2d(sp: ShardedPlan2D, qx, qy, *, mesh: Mesh):
+    """Sharded single-corner CF evaluation (the owner-gather + deferred
+    Horner of ``_corner_eval2d_shard``, exposed standalone so the LSM
+    level cores can apply their own boundary corrections per corner)."""
+    def body(sp, qx, qy):
+        return (_corner_eval2d_shard(sp, qx, qy),)
+
+    return shard_map(body, mesh=mesh,
+                     in_specs=(_plan2d_inspec(sp), P(), P()),
+                     out_specs=(P(),))(sp, qx, qy)[0]
+
+
+def _lsm_level_sum_sharded(lvl, sp, qs, mesh):
+    """Sharded twin of ``lsm._level_sum`` — the raw range sum runs on the
+    owner shards; the m0 below-domain addend and the exact tombstone
+    subtraction are replicated (same floats as the unsharded core)."""
+    from .lsm import _tomb_sum_1d
+    lq, uq = qs
+    part = _exec_shard_sum(sp, lq, uq, mesh=mesh, eps_rel=None)[0]
+    p = lvl.plan
+    lo = p.seg_lo[0]
+    part = part + jnp.where((lq < lo) & (uq >= lo), p.ref_cf[0],
+                            jnp.zeros((), p.dtype))
+    if lvl.tomb_keys is not None:
+        part = part - _tomb_sum_1d(lvl, lq, uq)
+    return (part,)
+
+
+def _lsm_level_extremum_sharded(lvl, sp, qs, mesh):
+    """Sharded twin of ``lsm._level_extremum``: the fitted staircase max
+    reduces through per-shard sparse tables + pmax; the exact live
+    maximum and the victim threat test read the replicated level arrays."""
+    lq, uq = qs
+    p = lvl.plan
+    lo = p.seg_lo[0]
+    hi = p.seg_hi[p.h - 1]
+    lqc = jnp.clip(lq, lo, hi)
+    uqc = jnp.clip(uq, lo, hi)
+    out = _exec_shard_extremum(sp, lqc, uqc, mesh=mesh, eps_rel=None)[0]
+    raw = -out if p.agg == "min" else out   # back to MAX space
+    st = lvl.live_st if lvl.live_st is not None else p.ref_st
+    i = jnp.searchsorted(p.ref_keys, lq, side="left")
+    j = jnp.searchsorted(p.ref_keys, uq, side="right")
+    exact = sparse_table_range_max(st, i, j)
+    valid = (uq >= lo) & (lq <= hi) & (exact > -jnp.inf)
+    part = jnp.where(valid, raw, -jnp.inf)
+    if lvl.vic_keys is not None:
+        vk = lvl.vic_keys[None, :]
+        threat = jnp.any((lq[:, None] <= vk) & (vk <= uq[:, None]), axis=1)
+    else:
+        threat = jnp.zeros(lq.shape, bool)
+    return part, exact, threat
+
+
+def _lsm_level_rect_sharded(lvl, sp, qs, mesh):
+    """Sharded twin of ``lsm._level_rect``: each clamped corner is one
+    owner-gathered sharded evaluation; the below-root corner corrections
+    reuse the *same* corner values (as the flat core reuses
+    ``raw_eval2d``), and tombstones subtract replicated."""
+    from .lsm import _tomb_rect_2d
+    lx, ux, ly, uy = qs
+    p = lvl.plan
+    x0, x1, y0, y1 = p.root
+    lxc, uxc = (jnp.clip(q, x0, x1) for q in (lx, ux))
+    lyc, uyc = (jnp.clip(q, y0, y1) for q in (ly, uy))
+    ev = lambda a, b: _exec_shard_eval2d(sp, a, b, mesh=mesh)
+    v = (ev(uxc, uyc), ev(lxc, uyc), ev(uxc, lyc), ev(lxc, lyc))
+    part = v[0] - v[1] - v[2] + v[3]
+    zero = jnp.zeros((), p.dtype)
+    for a, b, e, s in ((ux, uy, v[0], 1.0), (lx, uy, v[1], -1.0),
+                       (ux, ly, v[2], -1.0), (lx, ly, v[3], 1.0)):
+        part = part + jnp.where((a < x0) | (b < y0), -s * e, zero)
+    if lvl.tomb_xs is not None:
+        part = part - _tomb_rect_2d(lvl, lx, ux, ly, uy, p.dtype)
+    return (part,)
+
+
+def _lsm_level_dommax_sharded(lvl, sp, qs, mesh):
+    """Sharded twin of ``lsm._level_dommax``."""
+    from ..core.index2d import mst_dommax
+    u, v = qs
+    p = lvl.plan
+    x0, x1, y0, y1 = p.root
+    out = _exec_shard_dommax2d(sp, u, v, mesh=mesh, eps_rel=None)[0]
+    raw = -out if p.agg == "min2d" else out   # back to MAX space
+    wp = lvl.live_wpmax if lvl.live_wpmax is not None else p.ref_wpmax
+    exact = mst_dommax(p.ref_xs, p.ref_ys_levels, wp, u, v).astype(p.dtype)
+    valid = (u >= x0) & (v >= y0) & (exact > -jnp.inf)
+    part = jnp.where(valid, raw, -jnp.inf)
+    if lvl.vic_x is not None:
+        threat = jnp.any((lvl.vic_x[None, :] <= u[:, None])
+                         & (lvl.vic_y[None, :] <= v[:, None]), axis=1)
+    else:
+        threat = jnp.zeros(u.shape, bool)
+    return part, exact, threat
+
+
+_LSM_SHARD_CORES = {
+    "sum": _lsm_level_sum_sharded, "count": _lsm_level_sum_sharded,
+    "max": _lsm_level_extremum_sharded, "min": _lsm_level_extremum_sharded,
+    "count2d": _lsm_level_rect_sharded, "sum2d": _lsm_level_rect_sharded,
+    "max2d": _lsm_level_dommax_sharded, "min2d": _lsm_level_dommax_sharded,
+}
+
+
+def execute_lsm_sharded(slsm, buf, ranges, *, mesh: Mesh, eps_rel=None,
+                        min_bucket: int = 64) -> QueryResult:
+    """Fuse a query batch across a sharded level ladder (Q_abs only).
+
+    Per-level raw evaluations run sharded; the exact corrections and the
+    cross-level combiner (``lsm.combine_levels`` with ``backend='xla'``)
+    run replicated, so answers are bit-identical to the unsharded
+    ``execute_lsm(..., backend='xla', eps_rel=None)``.  Q_rel refinement
+    would need the per-level refinement arrays partitioned (they are
+    replicated here) — query the unsharded ladder for that."""
+    if eps_rel is not None:
+        raise ValueError(
+            "sharded LSM execution is Q_abs-only (host-composed per-level "
+            "fusion over replicated exact arrays); pass eps_rel=None or "
+            "query the unsharded ladder")
+    from .engine import pad_fills
+    from .lsm import combine_levels, composed_bound
+    check_pow2("min_bucket", min_bucket)
+    agg = slsm.agg
+    dt = slsm.dtype
+    qs = [jnp.asarray(q).astype(dt) for q in ranges]
+    n = qs[0].shape[0]
+    size = _bucket_size(n, min_bucket)
+    fills = pad_fills(slsm.levels[0].plan)
+    qs = [_pad_bucket(q, size, jnp.asarray(f, dt))
+          for q, f in zip(qs, fills)]
+    core = _LSM_SHARD_CORES[agg]
+    outs = [core(lvl, sp, qs, mesh)
+            for lvl, sp in zip(slsm.levels, slsm.slevels)]
+    bound = composed_bound(agg, slsm.deltas)
+    ans, approx, refined = combine_levels(
+        agg, outs, buf, qs, backend="xla", eps_rel=None, interpret=True,
+        bq=min(64, size), bound=bound)
+    return QueryResult(ans[:n], approx[:n], refined[:n])

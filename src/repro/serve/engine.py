@@ -22,7 +22,16 @@ engine with three moving parts:
   keyed by plan identity and recompiled on plan swap — the plan-swap
   protocol is simply "readers snapshot, the cache invalidates on
   mismatch".  ``warmup`` eagerly compiles the full bucket ladder per
-  table instead of a single shape.
+  table instead of a single shape.  Two refinements on top of that
+  protocol: (a) LSM tables (``TableSpec(lsm=True)``) are served through
+  ``execute_lsm`` with one executable *per level*, keyed
+  (table, guarantee, bucket, slot) — a compaction invalidates only the
+  rebuilt slots' entries, surviving levels keep serving their compiled
+  code; (b) the engine registers a ``session.on_plan_swap`` listener per
+  dynamic table, so the merge/compaction thread AOT-lowers the incoming
+  plan (or preview ladder) for every warmed bucket *before* the atomic
+  install — post-swap dispatches promote the staged executable
+  (``aot_promotions``) instead of paying a relower.
 
 * **Async insert pipeline with a write-ahead journal.**  ``insert``/
   ``delete`` append to a host-side journal and return immediately
@@ -88,7 +97,7 @@ import numpy as np
 from ..api.spec import DEFAULT_REL, QueryBatch, QuerySpec
 from ..core.queries import QueryResult
 from ..dist.fault_tolerance import HeartbeatMonitor
-from ..engine import pad_fills
+from ..engine import execute_lsm, level_executor, pad_fills
 from ..engine.engine import _bucket_size, _pad_bucket
 
 __all__ = ["ServingEngine", "QueueFull", "Overloaded", "DeadlineExceeded",
@@ -120,9 +129,11 @@ class EngineStats:
     dispatches: int = 0       # device dispatches serving reads
     coalesced: int = 0        # requests that shared a dispatch with others
     stale_reads: int = 0      # answers served with unapplied updates pending
-    aot_compiles: int = 0     # executables lowered+compiled
+    aot_compiles: int = 0     # executables lowered+compiled on dispatch
     aot_hits: int = 0         # dispatches served from the cache
     aot_invalidations: int = 0  # cache entries dropped on plan swap
+    aot_precompiles: int = 0  # executables staged on the merge thread
+    aot_promotions: int = 0   # staged executables promoted at dispatch
     staged_records: int = 0   # update records accepted into the journal
     drains: int = 0           # updater wake-ups that applied work
     fused_applies: int = 0    # engine insert/delete calls made by drains
@@ -201,11 +212,57 @@ class _UpdateJournal:
 
 
 class _ExecEntry:
-    __slots__ = ("plan_ref", "compiled")
+    """One cached AOT executable plus its staged successor.
 
-    def __init__(self, plan_ref, compiled):
+    ``plan_ref`` keys validity by identity (plan/level meta changes on
+    every swap); ``sig`` guards the pytree *structure* of the non-plan
+    operands (a delta buffer growing a victim mask, a level growing a
+    tombstone array — an AOT executable pins those shapes).
+    ``next_*`` hold the successor staged by the merge-thread
+    pre-compilation listener; ``promote`` installs it at dispatch when
+    the incoming plan matches, so a swap costs zero relowers."""
+
+    __slots__ = ("plan_ref", "compiled", "sig", "buf_tmpl",
+                 "next_ref", "next_compiled", "next_sig")
+
+    def __init__(self, plan_ref, compiled, sig=None, buf_tmpl=None):
         self.plan_ref = plan_ref    # identity-keyed: meta changes per swap
         self.compiled = compiled
+        self.sig = sig
+        self.buf_tmpl = buf_tmpl    # ShapeDtypeStruct pytree for relowers
+        self.next_ref = None
+        self.next_compiled = None
+        self.next_sig = None
+
+    def matches(self, plan_ref, sig) -> bool:
+        return self.plan_ref is plan_ref and self.sig == sig
+
+    def stage(self, plan_ref, compiled, sig) -> None:
+        self.next_ref = plan_ref
+        self.next_compiled = compiled
+        self.next_sig = sig
+
+    def promote(self, plan_ref, sig) -> bool:
+        if self.next_ref is plan_ref and self.next_sig == sig:
+            self.plan_ref = self.next_ref
+            self.compiled = self.next_compiled
+            self.sig = self.next_sig
+            self.next_ref = self.next_compiled = self.next_sig = None
+            return True
+        return False
+
+
+def _tree_sig(x) -> Tuple:
+    """Hashable (structure, shapes, dtypes) signature of a pytree."""
+    leaves, treedef = jax.tree_util.tree_flatten(x)
+    return treedef, tuple((l.shape, str(l.dtype)) for l in leaves)
+
+
+def _tree_tmpl(x):
+    """The pytree with every array leaf abstracted to ShapeDtypeStruct
+    (``jax.jit(...).lower`` accepts these in place of concrete arrays)."""
+    return jax.tree_util.tree_map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), x)
 
 
 class ServingEngine:
@@ -270,6 +327,7 @@ class ServingEngine:
         self._workers: List[Optional[threading.Thread]] = []
         self._updater: Optional[threading.Thread] = None
         self._supervisor: Optional[threading.Thread] = None
+        self._register_swap_listeners()
         if start:
             self.start()
 
@@ -628,6 +686,19 @@ class ServingEngine:
         plan, buf = sess.snapshot(table)
         nq = sum(r.n for r in grp)
         size = _bucket_size(nq, sess.min_bucket)
+        if hasattr(plan, "levels"):
+            # LSM ladder: one AOT executable *per level*, fused exactly by
+            # execute_lsm's combiner — a compaction only invalidates the
+            # rebuilt slots' entries
+            res = execute_lsm(plan, buf, self._concat_ranges(grp),
+                              backend=sess.backend, eps_rel=rel,
+                              interpret=sess.interpret, bq=sess.bq,
+                              min_bucket=sess.min_bucket,
+                              level_runner=self._lsm_runner(
+                                  table, rel, size, plan))
+            jax.block_until_ready(res.answer)
+            self._scatter(grp, res, staleness)
+            return
         compiled = self._executable(table, rel, size, plan, buf)
         fills = pad_fills(plan)
         dt = plan.dtype
@@ -666,18 +737,23 @@ class ServingEngine:
 
     def _executable(self, table: str, rel, size: int, plan, buf):
         key = (table, rel, size)
+        sig = _tree_sig(buf)
         entry = self._cache.get(key)
-        if entry is not None and entry.plan_ref is plan:
+        if entry is not None and entry.matches(plan, sig):
             with self._stats_lock:
                 self._stats.aot_hits += 1
             return entry.compiled
         with self._compile_lock:
             entry = self._cache.get(key)
-            if entry is not None and entry.plan_ref is plan:
-                with self._stats_lock:
-                    self._stats.aot_hits += 1
-                return entry.compiled
             if entry is not None:
+                if entry.matches(plan, sig):
+                    with self._stats_lock:
+                        self._stats.aot_hits += 1
+                    return entry.compiled
+                if entry.promote(plan, sig):
+                    with self._stats_lock:
+                        self._stats.aot_promotions += 1
+                    return entry.compiled
                 with self._stats_lock:
                     self._stats.aot_invalidations += 1
             sess = self.session
@@ -685,10 +761,147 @@ class ServingEngine:
             k = sess.spec(table).n_ranges
             qs = [jax.ShapeDtypeStruct((size,), plan.dtype)] * k
             compiled = jax.jit(fn).lower(plan, buf, *qs).compile()
-            self._cache[key] = _ExecEntry(plan, compiled)
+            self._cache[key] = _ExecEntry(plan, compiled, sig=sig,
+                                          buf_tmpl=_tree_tmpl(buf))
             with self._stats_lock:
                 self._stats.aot_compiles += 1
             return compiled
+
+    # -- LSM tables: per-level executables ---------------------------------
+
+    def _lsm_statics(self, rel, size: int, lsm) -> dict:
+        """The statics ``execute_lsm`` resolves for this dispatch — the
+        per-level executable must be lowered with exactly these so the
+        cached call computes the same floats as the default jitted core."""
+        sess = self.session
+        backend = sess.backend
+        if lsm.agg in ("max", "min") \
+                and backend in ("pallas", "pallas_scan", "ref") \
+                and any(l.plan.deg > 3 for l in lsm.levels):
+            backend = "xla"   # mirrors execute_lsm's extremal downgrade
+        return dict(backend=backend, interpret=sess.interpret,
+                    bq=min(sess.bq, size), with_truth=rel is not None)
+
+    @staticmethod
+    def _lower_level(lvl, agg: str, statics: dict, size: int, k: int):
+        fn = level_executor(agg, **statics)
+        qs = [jax.ShapeDtypeStruct((size,), lvl.plan.dtype)] * k
+        return jax.jit(fn).lower(lvl, *qs).compile()
+
+    def _level_executable(self, table: str, rel, size: int, lvl, agg: str,
+                          statics: dict, k: int):
+        key = (table, rel, size, lvl.slot)
+        sig = _tree_sig(lvl)
+        entry = self._cache.get(key)
+        if entry is not None and entry.matches(lvl.plan, sig):
+            with self._stats_lock:
+                self._stats.aot_hits += 1
+            return entry.compiled
+        with self._compile_lock:
+            entry = self._cache.get(key)
+            if entry is not None:
+                if entry.matches(lvl.plan, sig):
+                    with self._stats_lock:
+                        self._stats.aot_hits += 1
+                    return entry.compiled
+                if entry.promote(lvl.plan, sig):
+                    with self._stats_lock:
+                        self._stats.aot_promotions += 1
+                    return entry.compiled
+                with self._stats_lock:
+                    self._stats.aot_invalidations += 1
+            compiled = self._lower_level(lvl, agg, statics, size, k)
+            self._cache[key] = _ExecEntry(lvl.plan, compiled, sig=sig)
+            with self._stats_lock:
+                self._stats.aot_compiles += 1
+            return compiled
+
+    def _lsm_runner(self, table: str, rel, size: int, lsm):
+        """A ``level_runner`` for ``execute_lsm`` that serves each level
+        from the AOT cache (keyed by slot, validated by level identity)."""
+        statics = self._lsm_statics(rel, size, lsm)
+        k = self.session.spec(table).n_ranges
+        agg = lsm.agg
+
+        def runner(i, lvl, *qs):
+            return self._level_executable(table, rel, size, lvl, agg,
+                                          statics, k)(lvl, *qs)
+        return runner
+
+    # -- plan-swap pre-compilation (merge-thread listener) -----------------
+
+    def _register_swap_listeners(self) -> None:
+        """Hook ``session.on_plan_swap`` for every dynamic, unsharded
+        table: the merge/compaction thread hands the incoming plan (or
+        preview ladder) to ``_precompile`` *before* the atomic install,
+        so post-swap dispatches promote staged executables instead of
+        relowering."""
+        sess = self.session
+        hook = getattr(sess, "on_plan_swap", None)
+        if hook is None:
+            return
+        for table in sess.tables:
+            if sess.spec(table).dynamic and not sess.is_sharded(table):
+                hook(table, self._precompile_listener(table))
+
+    def _precompile_listener(self, table: str):
+        def listener(incoming) -> None:
+            if self._shut_down:
+                return   # a dead engine's cache needs no staged successors
+            try:
+                self._precompile(table, incoming)
+            except Exception:
+                pass   # fall back to lazy recompile; never abort an install
+        return listener
+
+    def _precompile(self, table: str, incoming) -> None:
+        sess = self.session
+        with self._compile_lock:
+            combos = sorted({(key[1], key[2]) for key in self._cache
+                             if key[0] == table},
+                            key=lambda c: (repr(c[0]), c[1]))
+        k = sess.spec(table).n_ranges
+        if hasattr(incoming, "levels"):
+            for rel, size in combos:
+                statics = self._lsm_statics(rel, size, incoming)
+                for lvl in incoming.levels:
+                    key = (table, rel, size, lvl.slot)
+                    sig = _tree_sig(lvl)
+                    with self._compile_lock:
+                        entry = self._cache.get(key)
+                        if entry is not None and (
+                                entry.matches(lvl.plan, sig)
+                                or (entry.next_ref is lvl.plan
+                                    and entry.next_sig == sig)):
+                            continue   # surviving level: still valid
+                    compiled = self._lower_level(lvl, incoming.agg,
+                                                 statics, size, k)
+                    with self._compile_lock:
+                        entry = self._cache.get(key)
+                        if entry is None:
+                            entry = self._cache[key] = _ExecEntry(None, None)
+                        entry.stage(lvl.plan, compiled, sig)
+                    with self._stats_lock:
+                        self._stats.aot_precompiles += 1
+            return
+        for rel, size in combos:
+            key = (table, rel, size)
+            with self._compile_lock:
+                entry = self._cache.get(key)
+                if entry is None or entry.buf_tmpl is None \
+                        or entry.plan_ref is incoming \
+                        or entry.next_ref is incoming:
+                    continue
+                tmpl = entry.buf_tmpl
+            fn = sess.serving_executor(table, rel, bq=min(sess.bq, size))
+            qs = [jax.ShapeDtypeStruct((size,), incoming.dtype)] * k
+            compiled = jax.jit(fn).lower(incoming, tmpl, *qs).compile()
+            with self._compile_lock:
+                entry = self._cache.get(key)
+                if entry is not None:
+                    entry.stage(incoming, compiled, _tree_sig(tmpl))
+            with self._stats_lock:
+                self._stats.aot_precompiles += 1
 
     def warmup(self, max_bucket: int = 1024,
                tables: Optional[Sequence[str]] = None) -> int:
@@ -706,7 +919,14 @@ class ServingEngine:
             plan, buf = sess.snapshot(table)
             size = sess.min_bucket
             while size <= max_bucket:
-                self._executable(table, rel, size, plan, buf)
+                if hasattr(plan, "levels"):
+                    statics = self._lsm_statics(rel, size, plan)
+                    k = sess.spec(table).n_ranges
+                    for lvl in plan.levels:
+                        self._level_executable(table, rel, size, lvl,
+                                               plan.agg, statics, k)
+                else:
+                    self._executable(table, rel, size, plan, buf)
                 size *= 2
         return self.stats.aot_compiles - before
 

@@ -155,8 +155,7 @@ def test_flush_refits_and_preserves_bounds(indexes, data, updates, queries,
     dyn = _dyn_with_updates(indexes, "sum" if agg == "sum" else agg,
                             "xla", updates)
     before = np.asarray(dyn.query(lq, uq).answer)
-    if agg == "sum":
-        assert dyn.n_pending > 0   # max deletes merged eagerly already
+    assert dyn.n_pending > 0   # deletes ride the buffer for every agg now
     dyn.flush()
     assert dyn.n_pending == 0
     assert dyn.refit_count >= 1
@@ -221,17 +220,33 @@ def test_drift_trigger_refits_hot_segment(data):
     assert dyn.n_pending == 0
 
 
-def test_extremal_delete_merges_eagerly(data, queries):
+def test_extremal_delete_shadows_victim_without_merge(data, queries):
+    """A MAX delete never pays a merge on the write path: the victim is
+    shadowed in the buffer (``vic_keys``/``live_st``), ranges covering it
+    refine against the victim-masked exact sparse table, and the physical
+    removal rides the next ordinary merge."""
     keys, meas = data
     idx = build_index_1d(keys, meas * 100, "max", deg=3, delta=DELTA)
     dyn = DynamicEngine(idx, backend="pallas", capacity=128,
                         auto_refit=False)
     dyn.delete(keys[[10, 500, 2000]])
-    assert dyn.refit_count == 1 and dyn.n_pending == 0
+    assert dyn.refit_count == 0 and dyn.n_pending == 3   # no eager merge
+    _, buf = dyn.snapshot()
+    assert buf.vic_keys is not None and buf.live_st is not None
     lq, uq = queries
     uk, uv = _apply_updates(keys, meas * 100, np.zeros(0), np.zeros(0),
                             keys[[10, 500, 2000]])
     truth = _truth_1d("max", uk, uv, lq, uq)
+    res = dyn.query(lq, uq)
+    assert np.max(np.abs(np.asarray(res.answer) - truth)) <= DELTA + 1e-6
+    # threatened ranges (victim inside) answer exactly
+    ref = np.asarray(res.refined)
+    assert np.allclose(np.asarray(res.answer)[ref], truth[ref])
+    # the next merge applies the shadows and clears the victim mask
+    dyn.flush()
+    assert dyn.n_pending == 0 and dyn.refit_count == 1
+    _, buf = dyn.snapshot()
+    assert buf.vic_keys is None
     res = dyn.query(lq, uq)
     assert np.max(np.abs(np.asarray(res.answer) - truth)) <= DELTA + 1e-6
 
@@ -501,9 +516,10 @@ def test_2d_selective_refit_leaves_far_leaves_alone(dyn2dw_setup):
     assert n_same > 0 and n_shift > 0
 
 
-def test_2d_extremum_delete_merges_eagerly(dyn2dw_setup):
-    """A dominance-MAX delete cannot ride the buffer (the victim may be
-    the maximum): the engine merges synchronously and stays exact."""
+def test_2d_extremum_delete_shadows_victim_without_merge(dyn2dw_setup):
+    """A dominance-MAX delete never merges on the write path: the victim
+    point is shadowed (``vic_x``/``vic_y``/``live_wpmax``) and corners
+    dominating it refine against the victim-masked merge-sort tree."""
     px, py, w, _, _, _, corners, _ = dyn2dw_setup
     idx = build_index_2d(px, py, measures=w, agg="max2d", deg=2,
                          delta=4.0, max_depth=7)
@@ -511,7 +527,9 @@ def test_2d_extremum_delete_merges_eagerly(dyn2dw_setup):
                           auto_refit=False)
     victim = int(np.argmax(w))
     dyn.delete(px[victim], py[victim])
-    assert dyn.n_pending == 0 and dyn.refit_count == 1
+    assert dyn.refit_count == 0 and dyn.n_pending == 1   # no eager merge
+    _, buf = dyn.snapshot()
+    assert buf.vic_x is not None and buf.live_wpmax is not None
     u, v = corners
     res = dyn.extremum2d(u, v)
     keep = np.ones(len(px), bool)
@@ -519,6 +537,18 @@ def test_2d_extremum_delete_merges_eagerly(dyn2dw_setup):
     dom = ((px[keep][None, :] <= u[:, None])
            & (py[keep][None, :] <= v[:, None]))
     truth = np.array([w[keep][d].max() for d in dom])
+    assert np.abs(np.asarray(res.answer) - truth).max() \
+        <= dyn.index.certified_delta + 1e-6
+    # corners dominating the victim refine to the exact live answer
+    ref = np.asarray(res.refined)
+    assert ref.any()
+    assert np.allclose(np.asarray(res.answer)[ref], truth[ref])
+    # the next merge applies the shadow and clears the mask
+    dyn.flush()
+    assert dyn.n_pending == 0 and dyn.refit_count == 1
+    _, buf = dyn.snapshot()
+    assert buf.vic_x is None
+    res = dyn.extremum2d(u, v)
     assert np.abs(np.asarray(res.answer) - truth).max() \
         <= dyn.index.certified_delta + 1e-6
 

@@ -108,7 +108,10 @@ def test_aot_cache_reuse_and_warmup(session):
         eng.shutdown()
 
 
-def test_plan_swap_invalidates_executables(session):
+def test_plan_swap_precompiles_executables(session):
+    """A merge/compaction stages the incoming plan's executables on the
+    merge thread (``on_plan_swap`` listener), so the post-swap dispatch
+    promotes instead of relowering: zero new compiles after a swap."""
     eng = ServingEngine(session)
     spec = QuerySpec.range("sum", 5.0, 60.0)
     try:
@@ -118,14 +121,18 @@ def test_plan_swap_invalidates_executables(session):
         buffered = eng.query(spec, timeout=120)
         assert float(buffered.answer[0]) == pytest.approx(
             float(before.answer[0]) + 10.0)
-        inv0 = eng.stats.aot_invalidations
+        c0 = eng.stats.aot_compiles
+        promo0 = eng.stats.aot_promotions
         eng.flush("sum")                 # merge -> plan swap
+        assert eng.stats.aot_precompiles > 0   # staged pre-install
         merged = eng.query(spec, timeout=120)
         # the refit plan approximates anew: answers agree within the two
         # certified Q_abs bounds, not bitwise
         assert abs(float(merged.answer[0])
                    - float(buffered.answer[0])) <= 100.0
-        assert eng.stats.aot_invalidations > inv0
+        st = eng.stats
+        assert st.aot_compiles == c0           # zero new compiles post-swap
+        assert st.aot_promotions > promo0      # served the staged executable
         # engine answers == session answers on the swapped plan too
         _assert_identical(merged, session.query(spec))
     finally:
