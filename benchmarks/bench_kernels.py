@@ -45,6 +45,14 @@ TINY = dict(n=30_000, nq=1024, n2=10_000, nq2=256,
 # pairs only with committed shard-sweep baselines
 SHARD_SWEEP = dict(shard_h=4096, shard_nq=512, shard_s=(1, 2, 4, 8))
 
+# quantile-inversion sweep shape (the --quantile mode): real fitted COUNT
+# plans (keep_exact=True — synthetic plans carry no ref arrays and the
+# kernel's key-grid snap needs them), one plan per delta so H sweeps the
+# certificate granularity.  Meta carries n + nqh only, so the record pairs
+# exclusively with committed quantile baselines
+QUANTILE_SWEEP = dict(n=120_000, qn=512, deltas=(400.0, 100.0, 25.0))
+QUANTILE_TINY = dict(n=30_000, qn=256, deltas=(200.0, 50.0))
+
 
 def _synthetic_plan_1d(H: int, agg: str, deg: int, rng, dtype=jnp.float64):
     """Kernel-shaped IndexPlan with exactly H segments (no index build —
@@ -287,6 +295,44 @@ def run_shards(shard_h=4096, shard_nq=512, shard_s=(1, 2, 4, 8),
     return rows
 
 
+def run_quantile(n=120_000, qn=512, deltas=(400.0, 100.0, 25.0),
+                 out_path=None):
+    """Certified quantile-inversion sweep (``quantile.{backend}.H{h}``):
+    the branch-free locate->Newton executor over real fitted COUNT plans
+    on TWEET latitudes, every engine backend, one plan per delta so H
+    sweeps the segment count the inversion searches."""
+    from repro.core import build_index_1d
+    from repro.engine import BACKENDS, build_plan, execute_quantile
+
+    rows = []
+    results = []
+
+    def rec(name, t, derived=""):
+        rows.append(row(name, t / qn * 1e6, derived))
+        results.append({"name": name, "us_per_query": t / qn * 1e6,
+                        "derived": derived})
+
+    keys, _ = dataset("tweet", n)
+    rng = np.random.default_rng(0x0A7)
+    qs = jnp.asarray(rng.uniform(0.0, 1.0, qn))
+    for delta in deltas:
+        plan = build_plan(build_index_1d(keys, None, "count", deg=2,
+                                         delta=delta, keep_exact=True))
+        for b in BACKENDS:
+            f = functools.partial(execute_quantile, plan, backend=b, bq=qn)
+            t, _ = time_fn(f, qs)
+            rec(f"quantile.{b}.H{plan.h}", t,
+                f"delta={delta:g};Hpad={plan.seg_lo.shape[0]}")
+
+    _emit_engine_json(results, {
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "n": n, "nqh": qn,
+        "device": jax.devices()[0].platform,
+        "machine": platform.machine(),
+    }, out_path)
+    return rows
+
+
 def run(n=200_000, nq=4096, n2=40_000, nq2=1024, eps_rel=0.01,
         hs=(512, 2048, 8192, 32768), hs2=(1024, 4096, 16384), nqh=512,
         out_path=None):
@@ -378,6 +424,10 @@ def main():
                    help="run the sharded-plan sweep (shard.{sum,max}.S{n}) "
                         "instead of the kernel/engine sweep; forces 8 host "
                         "devices if fewer are visible")
+    p.add_argument("--quantile", action="store_true",
+                   help="run the certified quantile-inversion sweep "
+                        "(quantile.{backend}.H{h}) instead of the "
+                        "kernel/engine sweep")
     p.add_argument("--out", default=None,
                    help="write the JSON record here instead of appending "
                         "to the committed BENCH_engine.json")
@@ -391,6 +441,9 @@ def main():
             os.environ["XLA_FLAGS"] = (
                 flags + " --xla_force_host_platform_device_count=8").strip()
         run_shards(**SHARD_SWEEP, out_path=args.out)
+    elif args.quantile:
+        run_quantile(**(QUANTILE_TINY if args.tiny else QUANTILE_SWEEP),
+                     out_path=args.out)
     elif args.tiny:
         run(**TINY, out_path=args.out)
     else:

@@ -239,6 +239,75 @@ def run2d(n=40_000, nq=1024, capacity=1024,
     return rows
 
 
+def run_window(n=96_000, nq=2048, ring=8, epochs=6, capacity=16384,
+               out_path=None):
+    """Epoch-ring window sweep (``--window``): ingest throughput into the
+    open epoch, advance (seal + minimax fit) latency, and query latency
+    over the full retained window vs a single sealed epoch.  Metric names
+    carry the ``updates.window.`` prefix and the record's meta carries the
+    ring size under ``window`` so check_regression pairs it only with
+    window baselines."""
+    from repro.data import make_queries_1d
+    from repro.engine import WindowEngine
+
+    rows = []
+    results = []
+
+    def record(name, value, derived=""):
+        rows.append(row(name, value, derived))
+        results.append({"name": name, "us_per_query": value,
+                        "derived": derived})
+
+    keys, _ = dataset("tweet", n)
+    per = n // epochs
+    parts = [np.asarray(keys[i * per:(i + 1) * per]) for i in range(epochs)]
+    lq, uq = map(jnp.asarray, make_queries_1d(keys, nq))
+    assert per <= capacity, (per, capacity)
+
+    def make():
+        return WindowEngine(parts[0], agg="count", delta=50.0, ring=ring,
+                            capacity=capacity)
+
+    # warm the seal-fit + multi-level query compiles on a throwaway ring
+    warm = make()
+    warm.ingest(parts[1])
+    warm.advance()
+    jax.block_until_ready(warm.query(lq, uq, 0, warm.epoch).answer)
+
+    w = make()
+    ing_times, adv_times = [], []
+    for part in parts[1:]:
+        t0 = time.perf_counter()
+        w.ingest(part)
+        ing_times.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        w.advance()
+        adv_times.append(time.perf_counter() - t0)
+    dt = float(np.median(ing_times))
+    record("updates.window.ingest", dt / per * 1e6,
+           f"recs_per_s={per / dt:.0f}")
+    record("updates.window.advance", float(np.median(adv_times)) * 1e6,
+           f"rows={per}")
+
+    # full retained window: the fused multi-level execution over every
+    # sealed epoch the ring still holds
+    t, _ = time_fn(lambda l, u: w.query(l, u, w.oldest, w.epoch), lq, uq)
+    record("updates.window.query_full", t / nq * 1e6,
+           f"epochs={w.epoch - w.oldest + 1}")
+    # single sealed epoch: one level, the sliding-window steady state
+    t, _ = time_fn(lambda l, u: w.query(l, u, w.epoch - 1, w.epoch - 1),
+                   lq, uq)
+    record("updates.window.query_epoch", t / nq * 1e6)
+
+    _emit_json(results, {
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "n": n, "nq": nq, "capacity": capacity, "window": ring,
+        "device": jax.devices()[0].platform,
+        "machine": platform.machine(),
+    }, out_path)
+    return rows
+
+
 def run_lsm(n=100_000, nq=2048, capacity=2048, dim=1, backends=("xla",),
             out_path=None):
     """LSM ladder sweep (``--lsm``): **worst-case** (max, not median)
@@ -384,6 +453,11 @@ def main():
     p.add_argument("--dim", type=int, default=1, choices=(1, 2),
                    help="1: DynamicEngine on TWEET (default); 2: "
                         "DynamicEngine2D sum2d on OSM (selective refit)")
+    p.add_argument("--window", action="store_true",
+                   help="bench the epoch-ring window engine instead of the "
+                        "flat delta-buffered engine: ingest/advance "
+                        "latency + windowed query latency "
+                        "(updates.window.* metric families)")
     p.add_argument("--lsm", action="store_true",
                    help="bench the LSM level ladder instead of the flat "
                         "delta-buffered engine: worst-case (max) per-op "
@@ -393,7 +467,12 @@ def main():
                    help="write the JSON record here instead of the "
                         "committed BENCH_updates.json")
     args = p.parse_args()
-    if args.lsm:
+    if args.window:
+        if args.tiny:
+            run_window(n=12_000, nq=1024, capacity=2048, out_path=args.out)
+        else:
+            run_window(out_path=args.out)
+    elif args.lsm:
         if args.tiny:
             shapes = (dict(n=30_000, nq=1024, capacity=1024) if args.dim == 1
                       else dict(n=8_000, nq=512, capacity=512))

@@ -31,11 +31,12 @@ import sys
 # mode from the 1-D records; lsm/levels pair the LSM worst-case records
 # (updates*.lsm.* metrics are already max-aggregated per op, so they ride
 # the same max envelope as every other family); n1/n2/nreq/rate/backend
-# pair the bench_serve open-loop shape (records missing a key on both
-# sides still pair — .get(None) == .get(None))
+# pair the bench_serve open-loop shape; window (the ring size) pairs the
+# epoch-ring window records (records missing a key on both sides still
+# pair — .get(None) == .get(None))
 MATCH_META = ("n", "nq", "n2", "nq2", "capacity", "hs", "hs2", "nqh",
               "shard_h", "shard_nq", "shard_s", "dim", "lsm", "levels",
-              "n1", "nreq", "rate", "backend", "device")
+              "n1", "nreq", "rate", "backend", "window", "device")
 
 
 def _load_history(path: str):

@@ -6,19 +6,23 @@ One import surface for everything a caller needs:
   place the Lemma 5.1/5.3/6.3 delta derivations live.
 * ``TableSpec`` — fit-time description of a table (aggregate, budget,
   degree, dynamic buffering, sharding).
-* ``QuerySpec`` / ``QueryBatch`` — declarative, mixed-aggregate request
-  batches (registered pytrees).
+* ``QuerySpec`` / ``QueryBatch`` — declarative, kind-explicit request
+  batches (registered pytrees): ``QuerySpec.range/rect/corner`` for the
+  aggregate families, ``QuerySpec.quantile`` for certified CF inversion,
+  ``QuerySpec.window`` for epoch-windowed aggregates.
 * ``PolyFit`` — the session facade: ``PolyFit.fit(datasets, specs)`` builds
   the indexes, ``session.query(batch)`` answers mixed batches in request
-  order through grouped fused executors, ``session.insert/delete/flush``
-  delegate to the delta-buffered dynamic engines.
+  order through grouped fused executors as structured ``Answer``s
+  (value + certified bound + staleness), ``session.insert/delete/flush``
+  delegate to the delta-buffered dynamic engines and
+  ``session.ingest/advance_epoch`` to windowed tables' epoch rings.
 
 ``repro.engine`` (Engine, DynamicEngine, plans, kernels) remains available
 but is considered internal; new code should target this module.
 """
 from .budget import ErrorBudget
-from .session import PolyFit
+from .session import Answer, PolyFit
 from .spec import DEFAULT_REL, QueryBatch, QuerySpec, TableSpec
 
-__all__ = ["ErrorBudget", "PolyFit", "QueryBatch", "QuerySpec", "TableSpec",
-           "DEFAULT_REL"]
+__all__ = ["Answer", "ErrorBudget", "PolyFit", "QueryBatch", "QuerySpec",
+           "TableSpec", "DEFAULT_REL"]

@@ -29,12 +29,18 @@ __all__ = ["ErrorBudget", "DELTA_FRACTION"]
 # Lemma 6.3 factor, dominance MAX/MIN the Lemma 5.3 one, DESIGN.md §12)
 DELTA_FRACTION = {"sum": 0.5, "count": 0.5, "max": 1.0, "min": 1.0,
                   "count2d": 0.25, "sum2d": 0.25, "max2d": 1.0,
-                  "min2d": 1.0}
+                  "min2d": 1.0,
+                  # quantile inversion widens the target rank by +-delta
+                  # (plus data-dependent rank slack), so the rank-domain
+                  # budget passes through 1:1 — DESIGN.md §16.  Not a
+                  # TableSpec aggregate: quantiles read SUM/COUNT tables.
+                  "quantile": 1.0}
 
 # answer-level bound as a multiple of delta (the inverse direction: what a
 # plan built with delta certifies — Lemmas 5.1 / 5.3 / 6.3 again)
 BOUND_FACTOR = {"sum": 2.0, "count": 2.0, "max": 1.0, "min": 1.0,
-                "count2d": 4.0, "sum2d": 4.0, "max2d": 1.0, "min2d": 1.0}
+                "count2d": 4.0, "sum2d": 4.0, "max2d": 1.0, "min2d": 1.0,
+                "quantile": 1.0}
 
 
 @dataclasses.dataclass(frozen=True)

@@ -30,8 +30,10 @@ are now internal machinery behind this facade.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -39,14 +41,57 @@ from ..core import AGGS_2D, build_index_1d, build_index_2d
 from ..core.queries import QueryResult
 from ..engine import (DynamicEngine, DynamicEngine2D, LsmEngine,
                       LsmEngine2D, ShardedEngine, ShardedEngine2D,
-                      build_plan, build_plan_2d, execute, fused_executor)
+                      WindowEngine, build_plan, build_plan_2d, execute,
+                      execute_quantile, fused_executor,
+                      fused_quantile_executor)
 from ..kernels.poly_eval import DEFAULT_BQ
 from .budget import ErrorBudget
-from .spec import DEFAULT_REL, QueryBatch, QuerySpec, TableSpec
+from .spec import (DEFAULT_REL, KIND_OF_AGG, QueryBatch, QuerySpec,
+                   TableSpec)
 
-__all__ = ["PolyFit"]
+__all__ = ["PolyFit", "Answer"]
 
 Request = Union[QuerySpec, QueryBatch, Sequence[QuerySpec]]
+
+
+@dataclasses.dataclass(frozen=True)
+class Answer:
+    """One structured query answer, uniform across every query kind.
+
+    ``value`` is the (possibly refined) answer batch; ``approx``/``refined``
+    expose the raw index answers and the Q_rel refinement mask exactly as
+    :class:`~repro.core.queries.QueryResult` did.  ``bound`` is the
+    certified guarantee that travels with the answer: the scalar Q_abs
+    bound for range aggregates (composed over selected epochs for window
+    queries), or the ``(lo, hi)`` certified key interval for quantiles
+    (``value`` is clipped inside it).  ``staleness`` counts how far the
+    answer lags a fully-merged view — buffered-but-unmerged rows for
+    dynamic/LSM tables, trailing epochs (current minus ``t1``) for window
+    queries, 0 for static plans; buffered rows are still folded in
+    *exactly*, so staleness is an operational signal, not extra error.
+
+    ``.answer`` aliases ``value`` for drop-in compatibility with
+    ``QueryResult`` consumers.
+    """
+
+    value: jnp.ndarray
+    approx: jnp.ndarray
+    refined: jnp.ndarray
+    bound: object = None
+    staleness: int = 0
+
+    @property
+    def answer(self):
+        return self.value
+
+    def __iter__(self):   # (value, approx, refined) unpacking compat
+        return iter((self.value, self.approx, self.refined))
+
+
+jax.tree_util.register_pytree_node(
+    Answer,
+    lambda a: ((a.value, a.approx, a.refined, a.bound), a.staleness),
+    lambda staleness, kids: Answer(*kids, staleness=staleness))
 
 
 class _Table:
@@ -57,10 +102,18 @@ class _Table:
         self.name = name
         self.spec = spec
         self.dyn = None
+        self.win = None
         self.sharded = None
         self._static_plan = None
         agg = spec.agg
-        if agg in AGGS_2D:
+        if spec.window:
+            keys, meas = data
+            self.win = WindowEngine(
+                keys, meas, agg=agg, delta=spec.budget.delta(agg),
+                deg=spec.degree, ring=spec.window, capacity=spec.capacity,
+                backend=backend, interpret=interpret, bq=bq,
+                min_bucket=min_bucket)
+        elif agg in AGGS_2D:
             if agg == "count2d":
                 xs, ys = (np.asarray(a, np.float64) for a in data)
                 ws = None
@@ -123,6 +176,10 @@ class _Table:
 
     @property
     def plan(self):
+        if self.win is not None:
+            raise RuntimeError(
+                f"table {self.name!r} is windowed — there is no single "
+                "plan; take window_plan(t0, t1) snapshots instead")
         return self.dyn.plan if self.dyn is not None else self._static_plan
 
     def snapshot(self):
@@ -131,8 +188,27 @@ class _Table:
             return self.dyn.snapshot()
         return self._static_plan, ()
 
+    def size_bytes(self) -> int:
+        if self.win is not None:
+            return sum(lvl.plan.size_bytes()
+                       for _, lvl in self.win._ring if lvl is not None)
+        return self.plan.size_bytes()
+
     def resolve_rel(self, rel) -> Optional[float]:
         return self.spec.budget.rel if rel is DEFAULT_REL else rel
+
+    @property
+    def kind(self) -> str:
+        """The range-query kind this table's aggregate answers."""
+        return KIND_OF_AGG[self.spec.agg]
+
+    def staleness(self, kind: str, params: Tuple) -> int:
+        if kind == "window":
+            return max(0, self.win.epoch - params[1])
+        if self.dyn is not None:
+            return int(getattr(self.dyn, "n_pending",
+                               getattr(self.dyn, "_n_pending", 0)))
+        return 0
 
 
 class PolyFit:
@@ -205,7 +281,7 @@ class PolyFit:
         return self._table(table).plan
 
     def size_bytes(self) -> Dict[str, int]:
-        return {k: t.plan.size_bytes() for k, t in self._tables.items()}
+        return {k: t.size_bytes() for k, t in self._tables.items()}
 
     def _table(self, name: str) -> _Table:
         t = self._tables.get(name)
@@ -256,45 +332,85 @@ class PolyFit:
         return spec.deadline, spec.priority
 
     def serving_executor(self, table: str, eps_rel: Optional[float], *,
-                         bq: Optional[int] = None):
+                         bq: Optional[int] = None, kind: str = "range"):
         """An un-jitted ``fn(plan, buf, *padded_ranges)`` for ``table``
         with this session's backend statics closed over — the unit the
         serving engine AOT-lowers per bucket size.  ``bq`` overrides the
         session block size (callers pass ``min(session.bq, bucket)`` to
-        match the in-session executors bit for bit)."""
+        match the in-session executors bit for bit).  ``kind='quantile'``
+        returns the CF-inversion executor ``fn(plan, buf, padded_qs)``
+        instead of the range one."""
         t = self._table(table)
+        if kind == "quantile":
+            return fused_quantile_executor(t.dyn is not None,
+                                           backend=self.backend,
+                                           interpret=self.interpret,
+                                           bq=self.bq if bq is None else bq,
+                                           deg=t.spec.degree)
         return fused_executor(t.spec.agg, t.dyn is not None,
                               backend=self.backend, eps_rel=eps_rel,
                               interpret=self.interpret,
                               bq=self.bq if bq is None else bq,
                               deg=t.spec.degree)
 
+    def resolve_spec(self, spec: QuerySpec):
+        """Validated ``(kind, eps_rel, params)`` grouping coordinates for a
+        spec — the serving engine's admission-time resolution (quantiles
+        force ``eps_rel=None``; legacy kind-less specs resolve from the
+        table's aggregate)."""
+        return self._resolve(spec)
+
+    def resolve_kind(self, table: str, kind: Optional[str]) -> str:
+        """Concrete query kind for ``table``: an explicit spec kind wins,
+        a legacy ``None`` resolves from the table's aggregate."""
+        return self._table(table).kind if kind is None else kind
+
+    def is_window(self, table: str) -> bool:
+        """True when the table is an epoch-ring (``TableSpec.window``)."""
+        return self._table(table).win is not None
+
+    def window_bound(self, table: str, t0: int, t1: int) -> float:
+        """Certified Q_abs bound of a [t0, t1] window answer."""
+        return self._win(table).bound(t0, t1)
+
+    def window_snapshot(self, table: str, t0: int, t1: int):
+        """Atomic (LsmPlan-or-None, buf-or-None) snapshot of a window —
+        what external executors (serving) evaluate against."""
+        return self._win(table).window_plan(t0, t1)
+
     # -- queries ---------------------------------------------------------
 
     def query(self, request: Request):
         """Answer a request batch, preserving request order.
 
-        A single ``QuerySpec`` returns its ``QueryResult``; a
+        A single ``QuerySpec`` returns its :class:`Answer`; a
         ``QueryBatch`` (or a sequence of specs) returns a list of
-        ``QueryResult``s aligned with the specs.  Specs are grouped by
-        (table, guarantee); each group enters one fused jitted executor.
+        ``Answer``s aligned with the specs.  Specs are grouped by
+        (table, kind, guarantee, params); each group enters one fused
+        jitted executor.  Legacy kind-less specs resolve their kind from
+        the table's aggregate, so pre-redesign call sites group (and
+        answer) exactly as before.
         """
         if isinstance(request, QuerySpec):
-            return self._exec_group(request.table,
-                                    request.ranges,
-                                    self._resolve(request))
+            kind, rel, params = self._resolve(request)
+            res = self._exec_group(request.table, kind, request.ranges,
+                                   rel, params)
+            return self._wrap(request.table, kind, params, res)
         specs = list(request.specs if isinstance(request, QueryBatch)
                      else request)
         if not specs:
             return []
-        groups: Dict[Tuple[str, Optional[float]], List[int]] = {}
+        groups: Dict[Tuple, List[int]] = {}
+        resolved = []
         for i, spec in enumerate(specs):
             if not isinstance(spec, QuerySpec):
                 raise TypeError(f"expected QuerySpec, got {type(spec)}")
-            groups.setdefault((spec.table, self._resolve(spec)),
+            kind, rel, params = self._resolve(spec)
+            resolved.append((kind, rel, params))
+            groups.setdefault((spec.table, kind, rel, params),
                               []).append(i)
-        out: List[Optional[QueryResult]] = [None] * len(specs)
-        for (table, rel), idxs in groups.items():
+        out: List[Optional[Answer]] = [None] * len(specs)
+        for (table, kind, rel, params), idxs in groups.items():
             # jnp.concatenate keeps device-resident sub-batches on device
             # (and is a cheap host concat for numpy ranges)
             ranges = tuple(
@@ -302,27 +418,70 @@ class PolyFit:
                                  for i in idxs])
                 if len(idxs) > 1 else specs[idxs[0]].ranges[j]
                 for j in range(len(specs[idxs[0]].ranges)))
-            res = self._exec_group(table, ranges, rel)
+            res = self._exec_group(table, kind, ranges, rel, params)
             off = 0
             for i in idxs:
                 m = len(specs[i])
-                out[i] = QueryResult(res.answer[off:off + m],
-                                     res.approx[off:off + m],
-                                     res.refined[off:off + m])
+                part = type(res)(*(f[off:off + m] for f in res))
+                out[i] = self._wrap(table, kind, params, part)
                 off += m
         return out
 
-    def _resolve(self, spec: QuerySpec) -> Optional[float]:
+    def _resolve(self, spec: QuerySpec):
+        """Validate a spec against its table and return the concrete
+        ``(kind, eps_rel, params)`` grouping coordinates."""
         t = self._table(spec.table)
+        kind = spec.kind
+        if kind is None:
+            kind = t.kind        # legacy spec: the table names the query
+        if kind == "quantile":
+            if t.spec.agg not in ("sum", "count") or t.spec.window:
+                raise ValueError(
+                    f"table {spec.table!r} ({t.spec.agg}"
+                    f"{', windowed' if t.spec.window else ''}) cannot "
+                    "answer quantiles; they invert 1-D SUM/COUNT tables")
+            if t.spec.lsm:
+                raise ValueError(
+                    f"table {spec.table!r} is LSM-tiered; quantile "
+                    "inversion needs a single fitted CF (flush to a "
+                    "dynamic or static table)")
+            return kind, None, ()    # no refinement path: one group per q
+        if kind == "window":
+            if t.win is None:
+                raise ValueError(
+                    f"table {spec.table!r} is not windowed; fit it with "
+                    "TableSpec(window=<ring>) to take window queries")
+            return kind, t.resolve_rel(spec.rel), spec.params
+        if t.win is not None:
+            raise ValueError(
+                f"table {spec.table!r} is windowed; use "
+                "QuerySpec.window(..., t0, t1) to name the epoch range")
+        if kind != t.kind:
+            raise ValueError(
+                f"table {spec.table!r} ({t.spec.agg}) answers "
+                f"{t.kind!r} queries, spec asks for {kind!r}")
         if len(spec.ranges) != t.spec.n_ranges:
             raise ValueError(
                 f"table {spec.table!r} ({t.spec.agg}) takes "
                 f"{t.spec.n_ranges} range coordinates, spec has "
                 f"{len(spec.ranges)}")
-        return t.resolve_rel(spec.rel)
+        return kind, t.resolve_rel(spec.rel), ()
 
-    def _exec_group(self, table: str, ranges, eps_rel) -> QueryResult:
+    def _exec_group(self, table: str, kind: str, ranges, eps_rel, params):
         t = self._table(table)
+        if kind == "quantile":
+            (qs,) = ranges
+            if t.sharded is not None:
+                plan, buf = t.snapshot()
+                return t.sharded.quantile(plan, qs, buf=buf or None)
+            if t.dyn is not None:
+                return t.dyn.quantile(qs)
+            return execute_quantile(t.plan, jnp.asarray(qs),
+                                    backend=self.backend,
+                                    interpret=self.interpret, bq=self.bq,
+                                    min_bucket=self.min_bucket)
+        if kind == "window":
+            return t.win.query(*ranges, *params, eps_rel=eps_rel)
         if t.sharded is not None:
             if t.dyn is not None:
                 plan, buf = t.dyn.snapshot()
@@ -335,6 +494,18 @@ class PolyFit:
                        backend=self.backend, eps_rel=eps_rel,
                        interpret=self.interpret, bq=self.bq,
                        min_bucket=self.min_bucket)
+
+    def _wrap(self, table: str, kind: str, params, res) -> Answer:
+        t = self._table(table)
+        stale = t.staleness(kind, params)
+        if kind == "quantile":
+            return Answer(res.answer, res.answer,
+                          jnp.zeros(res.answer.shape, bool),
+                          bound=(res.lo, res.hi), staleness=stale)
+        bound = (t.win.bound(*params) if kind == "window"
+                 else t.spec.budget.bound(t.spec.agg))
+        return Answer(res.answer, res.approx, res.refined, bound=bound,
+                      staleness=stale)
 
     # -- updates (dynamic tables) ----------------------------------------
 
@@ -360,3 +531,27 @@ class PolyFit:
             k for k, t in self._tables.items() if t.dyn is not None]
         for name in names:
             self._dyn(name).flush()
+
+    # -- windowed tables --------------------------------------------------
+
+    def _win(self, table: str) -> WindowEngine:
+        t = self._table(table)
+        if t.win is None:
+            raise RuntimeError(f"table {table!r} is not windowed; fit it "
+                               "with TableSpec(window=<ring>) to stream "
+                               "epochs")
+        return t.win
+
+    def ingest(self, table: str, keys, measures=None) -> None:
+        """Append rows to a windowed table's open epoch (exact until
+        sealed by :meth:`advance_epoch`)."""
+        self._win(table).ingest(keys, measures)
+
+    def advance_epoch(self, table: str) -> int:
+        """Seal the open epoch into an immutable fitted plan on the ring;
+        returns the new open epoch id."""
+        return self._win(table).advance()
+
+    def epoch(self, table: str) -> int:
+        """The windowed table's current open epoch id."""
+        return self._win(table).epoch

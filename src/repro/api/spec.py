@@ -23,7 +23,8 @@ import numpy as np
 
 from .budget import DELTA_FRACTION, ErrorBudget
 
-__all__ = ["QuerySpec", "QueryBatch", "TableSpec", "DEFAULT_REL"]
+__all__ = ["QuerySpec", "QueryBatch", "TableSpec", "DEFAULT_REL", "KINDS",
+           "KIND_OF_AGG"]
 
 # sentinel: "use the table budget's rel" (None means "Q_abs only, no
 # refinement", so a third state is needed for per-spec overrides)
@@ -31,6 +32,17 @@ DEFAULT_REL = ...
 
 _NRANGES = {"sum": 2, "count": 2, "max": 2, "min": 2, "count2d": 4,
             "sum2d": 4, "max2d": 2, "min2d": 2}
+
+# query kinds a spec can name explicitly; range-shaped kinds accept the
+# same 2-or-4 ranges the legacy constructors did, 'quantile' takes the
+# rank fractions alone, 'window' adds an inclusive [t0, t1] epoch interval
+# as static params
+KINDS = ("count", "sum", "max", "min", "quantile", "window")
+
+# kind a legacy (kind=None) spec resolves to from its table's aggregate
+KIND_OF_AGG = {"count": "count", "sum": "sum", "max": "max", "min": "min",
+               "count2d": "count", "sum2d": "sum", "max2d": "max",
+               "min2d": "min"}
 
 
 def _norm_range(r):
@@ -60,13 +72,31 @@ class QuerySpec:
     table: str
     ranges: Tuple
     rel: object = DEFAULT_REL
+    kind: Optional[str] = None
+    params: Tuple = ()
 
     def __post_init__(self):
-        if len(self.ranges) not in (2, 4):
+        if self.kind is not None and self.kind not in KINDS:
+            raise ValueError(f"unknown query kind {self.kind!r}; expected "
+                             f"one of {KINDS}")
+        if self.kind == "quantile":
+            if len(self.ranges) != 1:
+                raise ValueError("quantile specs carry exactly the rank "
+                                 f"fractions; got {len(self.ranges)} ranges")
+        elif self.kind == "window":
+            if len(self.ranges) != 2:
+                raise ValueError("window specs carry (lq, uq); got "
+                                 f"{len(self.ranges)} ranges")
+            if len(self.params) != 2:
+                raise ValueError("window specs need params=(t0, t1); got "
+                                 f"{self.params!r}")
+        elif len(self.ranges) not in (2, 4):
             raise ValueError("QuerySpec.ranges must have 2 entries (1-D) or "
                              f"4 (2-D); got {len(self.ranges)}")
         object.__setattr__(self, "ranges",
                            tuple(_norm_range(r) for r in self.ranges))
+        object.__setattr__(self, "params",
+                           tuple(int(p) for p in self.params))
         n = {r.shape[0] for r in self.ranges}
         if len(n) != 1:
             raise ValueError(f"QuerySpec.ranges lengths differ: {sorted(n)}")
@@ -89,9 +119,25 @@ class QuerySpec:
         """2-key dominance MAX/MIN over {x <= u, y <= v}."""
         return cls(table, (u, v), rel)
 
+    @classmethod
+    def quantile(cls, table: str, q, rel=None) -> "QuerySpec":
+        """Certified q-quantile(s): the answer interval brackets the exact
+        order statistic (SUM/COUNT tables only).  ``rel`` is accepted for
+        symmetry but quantiles always answer with their certified key
+        interval — there is no refinement path."""
+        return cls(table, (q,), rel, kind="quantile")
+
+    @classmethod
+    def window(cls, table: str, lq, uq, t0, t1,
+               rel=DEFAULT_REL) -> "QuerySpec":
+        """Range aggregate restricted to epochs ``t0..t1`` inclusive of a
+        windowed table (``TableSpec.window > 0``)."""
+        return cls(table, (lq, uq), rel, kind="window",
+                   params=(int(t0), int(t1)))
+
 
 def _spec_flatten(s: QuerySpec):
-    return tuple(s.ranges), (s.table, s.rel, len(s.ranges))
+    return tuple(s.ranges), (s.table, s.rel, len(s.ranges), s.kind, s.params)
 
 
 def _spec_unflatten(meta, ranges):
@@ -99,6 +145,8 @@ def _spec_unflatten(meta, ranges):
     object.__setattr__(s, "table", meta[0])
     object.__setattr__(s, "ranges", tuple(ranges))
     object.__setattr__(s, "rel", meta[1])
+    object.__setattr__(s, "kind", meta[3])
+    object.__setattr__(s, "params", meta[4])
     return s
 
 
@@ -178,12 +226,23 @@ class TableSpec:
     shards: Optional[int] = None
     deadline: Optional[float] = None
     priority: int = 0
+    window: int = 0
 
     def __post_init__(self):
         if self.agg not in _NRANGES:
             raise ValueError(f"unknown aggregate {self.agg!r}; expected one "
                              f"of {sorted(_NRANGES)}")
         assert self.agg in DELTA_FRACTION
+        if self.window:
+            if self.window < 1:
+                raise ValueError("window must be >= 1 retained epochs "
+                                 "(or 0 for a non-windowed table)")
+            if self.agg not in ("sum", "count"):
+                raise ValueError("windowed tables support 1-D SUM/COUNT "
+                                 f"only, got {self.agg!r}")
+            if self.dynamic or self.lsm or self.shards:
+                raise ValueError("window tables manage their own epoch "
+                                 "ring; dynamic/lsm/shards do not apply")
         if self.lsm and not self.dynamic:
             raise ValueError("lsm=True tiers the *update* path into a level "
                              "ladder; it requires dynamic=True")

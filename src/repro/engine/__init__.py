@@ -31,15 +31,18 @@ should prefer; the Pallas kernels and their jnp oracles are implementation
 details below it.
 """
 from .dynamic import (DeltaBuffer, DeltaBuffer2D, DynamicEngine,
-                      DynamicEngine2D, fused_executor)
-from .engine import (BACKENDS, Engine, execute, execute_count2d,
-                     execute_extremum, execute_extremum2d, execute_sum,
-                     execute_sum2d, pad_fills)
+                      DynamicEngine2D, fused_executor,
+                      fused_quantile_executor)
+from .engine import (BACKENDS, Engine, QuantileResult, execute,
+                     execute_count2d, execute_extremum, execute_extremum2d,
+                     execute_quantile, execute_sum, execute_sum2d,
+                     pad_fills)
 from .lsm import (CompactionPolicy, LsmEngine, LsmEngine2D, LsmLevel,
                   LsmLevel2D, LsmPlan, LsmPlan2D, composed_bound,
                   execute_lsm, level_executor)
 from .plan import (IndexPlan, IndexPlan2D, big_sentinel, build_plan,
                    build_plan_2d, pad_to_multiple)
+from .window import WindowEngine
 from .sharded import (ShardedDelta, ShardedEngine, ShardedEngine2D,
                       ShardedLsmPlan, ShardedLsmPlan2D, ShardedPlan,
                       ShardedPlan2D, execute_lsm_sharded, make_shard_mesh,
@@ -49,8 +52,9 @@ from .sharded import (ShardedDelta, ShardedEngine, ShardedEngine2D,
 __all__ = ["Engine", "BACKENDS", "IndexPlan", "IndexPlan2D", "build_plan",
            "build_plan_2d", "big_sentinel", "pad_to_multiple",
            "DynamicEngine", "DynamicEngine2D", "DeltaBuffer",
-           "DeltaBuffer2D", "fused_executor", "pad_fills",
-           "execute", "execute_sum", "execute_extremum",
+           "DeltaBuffer2D", "fused_executor", "fused_quantile_executor",
+           "pad_fills", "execute", "execute_sum", "execute_extremum",
+           "execute_quantile", "QuantileResult", "WindowEngine",
            "execute_count2d", "execute_sum2d", "execute_extremum2d",
            "LsmEngine", "LsmEngine2D", "LsmPlan", "LsmPlan2D", "LsmLevel",
            "LsmLevel2D", "CompactionPolicy", "composed_bound",

@@ -68,14 +68,18 @@ from ..kernels.delta_scan import (delta_count2d_gather_pallas,
                                   delta_sum2d_gather_pallas,
                                   delta_sum2d_pallas,
                                   delta_sum_gather_pallas, delta_sum_pallas)
+from ..core.poly import horner
+from ..core.quantile import boundary_array, invert_cf, rank_slack
 from ..kernels.poly_eval import DEFAULT_BQ
-from .engine import (_bucket_size, _pad_bucket, check_pow2, raw_count2d,
-                     raw_eval2d, raw_extremum, raw_sum, truth_count2d,
-                     truth_dommax2d, truth_extremum, truth_sum, truth_sum2d)
+from .engine import (QuantileResult, _bucket_size, _pad_bucket, check_pow2,
+                     raw_count2d, raw_eval2d, raw_extremum, raw_sum,
+                     truth_count2d, truth_dommax2d, truth_extremum,
+                     truth_sum, truth_sum2d)
 from .plan import (IndexPlan, IndexPlan2D, big_sentinel, build_plan,
-                   build_plan_2d)
+                   build_plan_2d, pad_to_multiple)
 
-__all__ = ["DeltaBuffer", "DeltaBuffer2D", "DynamicEngine", "DynamicEngine2D"]
+__all__ = ["DeltaBuffer", "DeltaBuffer2D", "DynamicEngine",
+           "DynamicEngine2D", "fused_executor", "fused_quantile_executor"]
 
 
 # ---------------------------------------------------------------------------
@@ -410,6 +414,108 @@ def _exec_dyn_sum(plan: IndexPlan, buf: DeltaBuffer, lq, uq, *, backend: str,
     return jnp.where(ok, approx, truth), approx, ~ok
 
 
+@partial(jax.jit, static_argnames=("backend", "interpret", "bq"))
+def _exec_dyn_quantile(plan: IndexPlan, buf: DeltaBuffer, q, *, backend: str,
+                       interpret: bool, bq: int):
+    """Certified quantile over the *updated* CF G = F + (ins - del).
+
+    G is the CF of the live multiset (deletes remove existing rows), hence
+    monotone; only F is fitted.  The loop inverts F against the
+    delta-corrected rank target and re-certifies with the exact buffer
+    correction evaluated at the candidate key: at convergence the
+    key-certified facts about F plus the exact B(x) give
+    G(x_hi) >= rank + slack and G(x_lo) <= rank - slack (DESIGN.md §16).
+    Inversion is O(Q log H) scalar work with no kernel variant, so
+    ``backend`` is ignored and every backend shares this path
+    bit-identically.
+    """
+    del backend, interpret, bq
+    dt = plan.dtype
+    qc = jnp.clip(q.astype(dt), 0.0, 1.0)
+    err = (plan.seg_err if plan.seg_err is not None
+           else jnp.full_like(plan.seg_lo, plan.delta))
+    Bnd = boundary_array(plan.coeffs)
+    kw = dict(B=Bnd, seg_lo=plan.seg_lo, seg_hi=plan.seg_hi,
+              coeffs=plan.coeffs, h=plan.h)
+    if plan.ref_keys is not None:
+        keys = pad_to_multiple(plan.ref_keys, 128, big_sentinel(dt))
+        nk = plan.n
+    else:
+        keys, nk = None, 0
+
+    # total live mass and rank slack over the updated multiset
+    dM = buf.ins_cf[-1] - buf.del_cf[-1]
+    if plan.agg == "count":
+        M = jnp.asarray(float(plan.n), dt) + dM
+        slack = rank_slack("count", M)
+    else:
+        if plan.ref_cf is not None:
+            M0, extra = plan.ref_cf[-1], 0.0
+        else:
+            M0 = horner(plan.coeffs[plan.h - 1], jnp.asarray(1.0, dt))
+            extra = plan.delta
+        M = M0 + dM
+        slack = rank_slack("sum", M) + extra
+    r = qc * M
+    tiny = 1e-9 * (jnp.abs(r) + 1.0)
+
+    def corr(x):
+        # exact buffered mass at or below x (exclusive prefix sums; the
+        # sentinel-padded tails contribute zero)
+        return (buf.ins_cf[jnp.searchsorted(buf.ins_keys, x, side="right")]
+                - buf.del_cf[jnp.searchsorted(buf.del_keys, x, side="right")])
+
+    live = buf.ins_keys < big_sentinel(dt) / 2
+    dom_hi = plan.seg_hi[plan.h - 1]
+    dom_lo = plan.seg_lo[0]
+    # unconditional fallbacks: >=/<= every live key of the updated set
+    fb_top = jnp.maximum(dom_hi,
+                         jnp.max(jnp.where(live, buf.ins_keys, -jnp.inf)))
+    fb_lo = jnp.minimum(dom_lo,
+                        jnp.min(jnp.where(live, buf.ins_keys, jnp.inf)))
+
+    # raw fitted estimate: fixed-point on the delta-corrected rank
+    zeros = jnp.zeros_like(err)
+    xm, okm = invert_cf(r, "hi", seg_err=zeros, delta=0.0, slack=0.0,
+                        raw=True, **kw)
+    xm = jnp.where(okm, xm, dom_hi)
+    for _ in range(2):
+        xm2, okm = invert_cf(r - corr(xm), "hi", seg_err=zeros, delta=0.0,
+                             slack=0.0, raw=True, **kw)
+        xm = jnp.where(okm, xm2, dom_hi)
+
+    # upper: find x_hi with F(x_hi) >= tF and tF + B(x_hi) >= r + slack
+    r_hi = r + slack
+    tF = r_hi - corr(xm)
+    x_hi, ok_hi = xm, jnp.zeros(r.shape, bool)
+    for _ in range(4):
+        x_hi, ok_v = invert_cf(tF, "hi", seg_err=err,
+                               delta=float(plan.delta), slack=0.0,
+                               ref_keys=keys, n=nk, **kw)
+        need = r_hi - corr(x_hi)
+        ok_hi = (need <= tF + tiny) & ok_v
+        tF = jnp.maximum(tF, need)
+    x_hi = jnp.where(ok_hi, x_hi, fb_top)
+
+    # lower: every base key <= x_lo has F <= tL (the invert_cf 'lo'
+    # contract, flagged by ok_v), so F(x_lo) <= max(tL, 0) and
+    # G(x_lo) <= max(tL, 0) + B(x_lo) <= r - slack at convergence; G
+    # monotone => x_lo precedes every rank-r crossing
+    r_lo = r - slack
+    tL = r_lo - corr(xm)
+    x_lo, ok_lo = xm, jnp.zeros(r.shape, bool)
+    for _ in range(4):
+        x_lo, ok_v = invert_cf(tL, "lo", seg_err=err,
+                               delta=float(plan.delta), slack=0.0, **kw)
+        need = r_lo - corr(x_lo)
+        ok_lo = (need >= jnp.maximum(tL, 0.0) - tiny) & ok_v
+        tL = jnp.minimum(tL, need)
+    x_lo = jnp.where(ok_lo, x_lo, fb_lo)
+
+    ans = jnp.clip(xm, x_lo, x_hi)
+    return ans, x_lo, x_hi
+
+
 @partial(jax.jit, static_argnames=("backend", "eps_rel", "interpret", "bq"))
 def _exec_dyn_extremum(plan: IndexPlan, buf: DeltaBuffer, lq, uq, *,
                        backend: str, eps_rel: Optional[float],
@@ -604,6 +710,26 @@ def fused_executor(agg: str, dynamic: bool, *, backend: str,
         def fn(plan, buf, *qs):
             del buf
             return ex(plan, *qs, **statics)
+    return fn
+
+
+def fused_quantile_executor(dynamic: bool, *, backend: str, interpret: bool,
+                            bq: int, deg: int):
+    """The QUANTILE counterpart of ``fused_executor``: a plain callable
+    ``fn(plan, buf, q)`` returning the certified (answer, lo, hi) triple
+    over the padded fraction bucket.  Q_abs-only — there is no Q_rel
+    refinement path (the certificate *is* the guarantee)."""
+    del deg   # quantile inversion has no degree-gated backend downgrade
+    from .engine import _exec_quantile
+    if dynamic:
+        def fn(plan, buf, q):
+            return _exec_dyn_quantile(plan, buf, q, backend=backend,
+                                      interpret=interpret, bq=bq)
+    else:
+        def fn(plan, buf, q):
+            del buf
+            return _exec_quantile(plan, q, backend=backend,
+                                  interpret=interpret, bq=bq)
     return fn
 
 
@@ -821,11 +947,17 @@ class _DeltaBufferedEngine:
             err, self._refit_error = self._refit_error, None
             raise err
 
+    def _has_forced_work(self) -> bool:
+        """Subclass hook: True when a merge must run even with zero pending
+        buffered ops (e.g. the LSM shadow-fraction fold, which compacts
+        tombstone-heavy levels that carry no new inserts)."""
+        return False
+
     def _start_refit(self) -> Optional[threading.Thread]:
         with self._lock:
             if self._thread is not None and self._thread.is_alive():
                 return self._thread
-            if self._n_pending == 0:
+            if self._n_pending == 0 and not self._has_forced_work():
                 return None
             snap = self._snapshot()
             mark = (len(self._ins_log), len(self._del_log))
@@ -1227,6 +1359,23 @@ class DynamicEngine(_DeltaBufferedEngine):
         return QueryResult(ans[:n], approx[:n], refined[:n])
 
     count = sum
+
+    def quantile(self, q) -> QuantileResult:
+        """Certified quantile fractions against the live plan-plus-buffer
+        state: the delta buffer enters through its exact prefix-sum
+        correction, so no flush is needed (DESIGN.md §16)."""
+        assert self._agg in ("sum", "count"), self._agg
+        plan, buf = self._state
+        if plan.deg < 1:
+            raise ValueError("quantile inversion needs a plan with "
+                             "deg >= 1")
+        q = jnp.asarray(q)
+        n = q.shape[0]
+        size = _bucket_size(n, self.min_bucket)
+        ans, lo, hi = _exec_dyn_quantile(
+            plan, buf, _pad_bucket(q, size, 0.5), backend=self.backend,
+            interpret=self.interpret, bq=min(self.bq, size))
+        return QuantileResult(ans[:n], lo[:n], hi[:n])
 
     def extremum(self, lq, uq, eps_rel: Optional[float] = None) -> QueryResult:
         assert self._agg in ("max", "min"), self._agg

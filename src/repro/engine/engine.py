@@ -32,14 +32,16 @@ and the raw answer already satisfies the bound.
 from __future__ import annotations
 
 from functools import partial
-from typing import Optional, Union
+from typing import NamedTuple, Optional, Union
 
 import jax
 import jax.numpy as jnp
 
 from ..core.exact import sparse_table_range_max
 from ..core.index2d import mst_cf, mst_cf_sum, mst_dommax, quadtree_eval_cf
-from ..core.poly import eval_segments
+from ..core.poly import eval_segments, horner
+from ..core.quantile import (boundary_array, certified_quantile_shifted,
+                             rank_slack)
 from ..core.queries import QueryResult, max_eval_segments
 from ..kernels import ref as _ref
 from ..kernels.leaf_eval2d import (corner_count2d_gather_pallas,
@@ -47,15 +49,25 @@ from ..kernels.leaf_eval2d import (corner_count2d_gather_pallas,
                                    corner_eval2d_gather_pallas,
                                    corner_eval2d_pallas)
 from ..kernels.poly_eval import DEFAULT_BQ
+from ..kernels.quantile_invert import quantile_invert_pallas
 from ..kernels.range_max import range_max_gather_pallas, range_max_pallas
 from ..kernels.range_sum import range_sum_gather_pallas, range_sum_pallas
-from .plan import IndexPlan, IndexPlan2D
+from .plan import IndexPlan, IndexPlan2D, big_sentinel, pad_to_multiple
 
-__all__ = ["Engine", "BACKENDS", "raw_sum", "raw_extremum", "raw_count2d",
-           "raw_eval2d", "truth_sum", "truth_extremum", "truth_count2d",
-           "truth_sum2d", "truth_dommax2d", "check_pow2", "execute_sum",
-           "execute_extremum", "execute_count2d", "execute_sum2d",
-           "execute_extremum2d", "execute", "pad_fills"]
+__all__ = ["Engine", "BACKENDS", "QuantileResult", "raw_sum",
+           "raw_extremum", "raw_count2d", "raw_eval2d", "truth_sum",
+           "truth_extremum", "truth_count2d", "truth_sum2d",
+           "truth_dommax2d", "check_pow2", "execute_sum",
+           "execute_extremum", "execute_quantile", "execute_count2d",
+           "execute_sum2d", "execute_extremum2d", "execute", "pad_fills"]
+
+
+class QuantileResult(NamedTuple):
+    """Certified quantile triple: ``lo <= answer <= hi`` everywhere, and
+    [lo, hi] brackets the exact quantile key (DESIGN.md §16)."""
+    answer: jnp.ndarray
+    lo: jnp.ndarray
+    hi: jnp.ndarray
 
 BACKENDS = ("xla", "pallas", "pallas_scan", "ref")
 
@@ -362,6 +374,68 @@ def execute_sum(plan: IndexPlan, lq, uq, *, backend: str = "xla",
     return QueryResult(ans[:n], approx[:n], refined[:n])
 
 
+@partial(jax.jit, static_argnames=("backend", "interpret", "bq"))
+def _exec_quantile(plan: IndexPlan, q, *, backend: str, interpret: bool,
+                   bq: int):
+    dt = plan.dtype
+    qc = jnp.clip(q.astype(dt), 0.0, 1.0)
+    err = (plan.seg_err if plan.seg_err is not None
+           else jnp.full_like(plan.seg_lo, plan.delta))
+    if plan.agg == "count":
+        M = jnp.asarray(float(plan.n), dt)
+        slack = rank_slack("count", M)
+    elif plan.ref_cf is not None:
+        M = plan.ref_cf[-1]          # exact total mass
+        slack = rank_slack("sum", M)
+    else:
+        # fitted total mass is off by at most the top segment's error:
+        # widen the rank slack by delta to stay sound
+        M = horner(plan.coeffs[plan.h - 1], jnp.asarray(1.0, dt))
+        slack = rank_slack("sum", M) + plan.delta
+    t = qc * M
+    B = boundary_array(plan.coeffs)
+    if plan.ref_keys is not None:
+        keys = pad_to_multiple(plan.ref_keys, 128, big_sentinel(dt))
+        nk = plan.n
+    else:
+        keys, nk = None, 0
+    if backend in ("pallas", "pallas_scan"):
+        return quantile_invert_pallas(
+            t, t - slack, t + slack, B, plan.seg_lo, plan.seg_hi,
+            plan.coeffs, err, keys, h=plan.h, n=nk,
+            delta=float(plan.delta), bq=bq, interpret=interpret,
+            scan=(backend == "pallas_scan"))
+    return certified_quantile_shifted(
+        t, t - slack, t + slack, seg_lo=plan.seg_lo, seg_hi=plan.seg_hi,
+        coeffs=plan.coeffs, seg_err=err, h=plan.h,
+        delta=float(plan.delta), B=B, ref_keys=keys, n=nk,
+        scan=(backend == "ref"))
+
+
+def execute_quantile(plan: IndexPlan, q, *, backend: str = "xla",
+                     interpret: bool = True, bq: int = DEFAULT_BQ,
+                     min_bucket: int = 64) -> QuantileResult:
+    """Certified 1-D QUANTILE by CF inversion (DESIGN.md §16).
+
+    ``q`` holds quantile fractions in [0, 1]; works on SUM/COUNT plans
+    (COUNT inverts ranks, SUM inverts cumulative measure — the weighted
+    quantile).  Q_abs-style certificates only: the returned [lo, hi]
+    always brackets the exact quantile key, with no Q_rel refinement
+    path (the certificate *is* the guarantee).
+    """
+    assert plan.agg in ("sum", "count"), plan.agg
+    _check_backend(backend)
+    if plan.deg < 1:
+        raise ValueError("quantile inversion needs a plan with deg >= 1")
+    if backend in ("pallas", "pallas_scan") and plan.ref_keys is None:
+        backend = "xla"   # the kernel's key-grid snap needs ref_keys
+    (q,), n, size, bq = _prepare(q, min_bucket=min_bucket, bq=bq)
+    ans, lo, hi = _exec_quantile(plan, _pad_bucket(q, size, 0.5),
+                                 backend=backend, interpret=interpret,
+                                 bq=bq)
+    return QuantileResult(ans[:n], lo[:n], hi[:n])
+
+
 def execute_extremum(plan: IndexPlan, lq, uq, *, backend: str = "xla",
                      eps_rel: Optional[float] = None, interpret: bool = True,
                      bq: int = DEFAULT_BQ, min_bucket: int = 64) -> QueryResult:
@@ -500,6 +574,11 @@ class Engine:
         return execute_sum(plan, lq, uq, **self._kw(eps_rel))
 
     count = sum   # COUNT is SUM over unit measures
+
+    def quantile(self, plan: IndexPlan, q) -> QuantileResult:
+        kw = self._kw(None)
+        kw.pop("eps_rel")   # quantile certificates are Q_abs-only
+        return execute_quantile(plan, q, **kw)
 
     def extremum(self, plan: IndexPlan, lq, uq,
                  eps_rel: Optional[float] = None) -> QueryResult:

@@ -547,6 +547,7 @@ class CompactionPolicy:
     watermark: float = 0.5
     merge_us_per_row: float = 75.0
     query_overhead_us_per_row: float = 1e-3
+    shadow_fraction: float = 0.25
     source: str = "defaults"
 
     @classmethod
@@ -597,6 +598,16 @@ class CompactionPolicy:
             return True
         debt = queries_since * self.query_overhead_us_per_row * n_pending
         return debt >= self.merge_us_per_row * max(rows_to_compact, 1)
+
+    def should_fold(self, *, shadow_rows: int, live_rows: int) -> bool:
+        """Fold a level whose tombstone/victim mass dominates its live
+        mass: shadow rows are carried (and subtracted/masked) by every
+        query over the level yet answer nothing, so past the fraction
+        the one-time merge pays for itself — and without it the mass is
+        carried *forever* (deletes never merge on their own)."""
+        if shadow_rows <= 0:
+            return False
+        return shadow_rows >= self.shadow_fraction * max(live_rows, 1)
 
 
 # ---------------------------------------------------------------------------
@@ -728,7 +739,21 @@ class _LsmBase(_DeltaBufferedEngine):
                 return s
             s += 1
 
+    def _shadow_slots(self) -> set:
+        """Slots whose delete-shadow mass crossed the fold fraction."""
+        return {s for s, h in self._levels.items()
+                if self.policy.should_fold(
+                    shadow_rows=len(h.tomb) + len(h.vic),
+                    live_rows=h.live_rows())}
+
+    def _has_forced_work(self) -> bool:
+        # a shadow-heavy level must fold even with zero pending inserts
+        # (the base _start_refit guard would otherwise no-op the merge)
+        return bool(self._shadow_slots())
+
     def _should_compact(self) -> bool:
+        if self._shadow_slots():
+            return True
         s = self._pick_slot()
         rows = self._n_pending + sum(
             h.live_rows() for k, h in self._levels.items() if k <= s)
@@ -779,6 +804,9 @@ class _LsmBase(_DeltaBufferedEngine):
                 if nan_dirty:
                     buf = self._rebuild_buf()
                 self._state = (self._ladder(), buf)
+            trigger = self.auto_refit and bool(self._shadow_slots())
+        if trigger:
+            self.refit(wait=not self.background)
 
     def _delete_one(self, rec, dirty: set) -> bool:
         for slot in sorted(self._levels, reverse=True):   # oldest first
@@ -824,14 +852,25 @@ class _LsmBase(_DeltaBufferedEngine):
     def _snapshot(self):
         # under self._lock (called from _start_refit)
         s = self._pick_slot()
+        # shadow-heavy levels fold regardless of their slot; growing the
+        # target slot until the geometric budget holds everything included
+        # preserves the ladder invariant (each bump may pull in more
+        # slots <= s, so recompute until it settles)
+        forced = self._shadow_slots()
+        while True:
+            include = sorted({k for k in self._levels if k <= s} | forced)
+            rows = self._n_pending + sum(
+                self._levels[k].live_rows() for k in include)
+            if rows <= self.capacity * self.growth ** s:
+                break
+            s += 1
         ins = [tuple(np.array(a, copy=True) for a in e)
                for e in self._ins_log]
         hosts = []
-        for slot in sorted(self._levels):
-            if slot <= s:
-                h = self._levels[slot]
-                cols = tuple(np.array(c, copy=True) for c in h.cols)
-                hosts.append((slot, cols, sorted(h.shadowed())))
+        for slot in include:
+            h = self._levels[slot]
+            cols = tuple(np.array(c, copy=True) for c in h.cols)
+            hosts.append((slot, cols, sorted(h.shadowed())))
         self._merging_slots = {slot for slot, _, _ in hosts}
         self._merge_mark_ins = len(self._ins_log)
         self._residual_shadow = []

@@ -86,6 +86,8 @@ class IndexPlan:
     ref_keys: Optional[jnp.ndarray]  # (n,) sorted keys
     ref_cf: Optional[jnp.ndarray]    # (n,) inclusive prefix CF (sum/count)
     ref_st: Optional[jnp.ndarray]    # (L2, n) measure sparse table (max/min)
+    # -- per-segment certified fit error E(I) (quantile certificates) ----
+    seg_err: Optional[jnp.ndarray] = None   # (Hp,) delta-padded
 
     @property
     def dtype(self):
@@ -112,7 +114,7 @@ class IndexPlan:
 jax.tree_util.register_dataclass(
     IndexPlan,
     data_fields=["seg_lo", "seg_next", "seg_hi", "coeffs", "seg_agg", "st",
-                 "ref_keys", "ref_cf", "ref_st"],
+                 "ref_keys", "ref_cf", "ref_st", "seg_err"],
     meta_fields=["agg", "deg", "delta", "h", "n", "bh"],
 )
 
@@ -147,6 +149,8 @@ def build_plan(index: PolyFitIndex1D, dtype=jnp.float64,
         coeffs=pad_to_multiple(coeffs, bh, 0.0),
         seg_agg=pad_to_multiple(agg, bh, -jnp.inf),
         st=st, ref_keys=ref_keys, ref_cf=ref_cf, ref_st=ref_st,
+        seg_err=(None if index.seg_err is None else pad_to_multiple(
+            jnp.asarray(index.seg_err, dtype), bh, float(index.delta))),
     )
 
 

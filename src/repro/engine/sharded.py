@@ -55,6 +55,7 @@ from ..core.queries import QueryResult, poly_max_on_interval
 from ..kernels import ref as _ref
 from ..kernels.leaf_eval2d import _bivariate_horner
 from ..kernels.locate import INT_SENTINEL, bsearch_count, interleave2
+from ..kernels.poly_eval import DEFAULT_BQ
 from .dynamic import (DeltaBuffer, DeltaBuffer2D, _exec_dyn_count2d,
                       _exec_dyn_dommax2d, _exec_dyn_sum2d)
 from .engine import (_bucket_size, _exec_extremum2d, _exec_rect2d,
@@ -563,6 +564,38 @@ class ShardedEngine:
         assert plan.agg in ("max", "min"), plan.agg
         return self._run(plan, lq, uq, eps_rel, buf, _exec_shard_extremum,
                          _exec_shard_dyn_extremum, "ref_st")
+
+    def quantile(self, plan, qs, buf: Optional[DeltaBuffer] = None):
+        """Certified quantiles over an *unsharded* ``IndexPlan``.
+
+        CF inversion is O(Q log H) scalar work — a handful of binary
+        searches and closed-form root extractions per query, with no
+        per-segment reduction to distribute — so partitioning the segment
+        table buys nothing and would only add collectives.  The method
+        exists so sharded sessions keep one entry point: it routes to the
+        single-device executors (replicated on every device by XLA as
+        usual) and rejects plans that have already been partitioned.
+        """
+        if isinstance(plan, (ShardedPlan, ShardedLsmPlan)) \
+                or hasattr(plan, "levels"):
+            raise ValueError(
+                "quantile inversion runs on the unsharded IndexPlan — "
+                "pass the original plan, not a ShardedPlan/LsmPlan "
+                "(inversion is O(Q log H) scalar work; there is no "
+                "per-segment reduction to shard)")
+        from .dynamic import _exec_dyn_quantile
+        from .engine import QuantileResult, execute_quantile
+        if buf is None:
+            return execute_quantile(plan, qs, backend="xla",
+                                    min_bucket=self.min_bucket)
+        qs = jnp.asarray(qs)
+        n = qs.shape[0]
+        size = _bucket_size(n, self.min_bucket)
+        qp = _pad_bucket(qs, size, jnp.asarray(0.5, qs.dtype))
+        ans, lo, hi = _exec_dyn_quantile(plan, buf, qp, backend="xla",
+                                         interpret=True,
+                                         bq=min(DEFAULT_BQ, size))
+        return QuantileResult(ans[:n], lo[:n], hi[:n])
 
     def query(self, plan, lq, uq, eps_rel: Optional[float] = None,
               buf: Optional[DeltaBuffer] = None) -> QueryResult:

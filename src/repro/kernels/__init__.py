@@ -10,9 +10,11 @@ from .delta_scan import (delta_count2d_gather_pallas, delta_count2d_pallas,
 from .leaf_eval2d import corner_count2d_gather_pallas, corner_count2d_pallas
 from .locate import bsearch_count, locate_pallas
 from .ops import SegTable, from_index, poly_eval, range_max, range_sum
+from .quantile_invert import quantile_invert_pallas
 
 __all__ = ["SegTable", "from_index", "poly_eval", "range_max", "range_sum",
            "corner_count2d_pallas", "corner_count2d_gather_pallas",
            "delta_sum_pallas", "delta_max_pallas", "delta_count2d_pallas",
            "delta_sum_gather_pallas", "delta_max_gather_pallas",
-           "delta_count2d_gather_pallas", "bsearch_count", "locate_pallas"]
+           "delta_count2d_gather_pallas", "bsearch_count", "locate_pallas",
+           "quantile_invert_pallas"]

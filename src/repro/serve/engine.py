@@ -94,6 +94,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..api.session import Answer
 from ..api.spec import DEFAULT_REL, QueryBatch, QuerySpec
 from ..core.queries import QueryResult
 from ..dist.fault_tolerance import HeartbeatMonitor
@@ -144,15 +145,18 @@ class EngineStats:
 
 
 class _ReadRequest:
-    __slots__ = ("table", "rel", "ranges", "n", "future", "deadline",
-                 "dclass", "priority")
+    __slots__ = ("table", "kind", "rel", "ranges", "params", "n", "future",
+                 "deadline", "dclass", "priority")
 
     def __init__(self, table: str, rel, ranges: Tuple, n: int,
                  deadline: Optional[float] = None,
-                 dclass: Optional[int] = None, priority: int = 0):
+                 dclass: Optional[int] = None, priority: int = 0,
+                 kind: str = "count", params: Tuple = ()):
         self.table = table
+        self.kind = kind            # resolved query kind (never None)
         self.rel = rel
         self.ranges = ranges
+        self.params = params        # static kind params ((t0, t1) windows)
         self.n = n
         self.deadline = deadline    # absolute monotonic, or None
         self.dclass = dclass        # pow-2 bucket of the deadline duration
@@ -502,9 +506,9 @@ class ServingEngine:
     def submit(self, spec: QuerySpec, *, deadline: Optional[float] = None,
                priority: Optional[int] = None,
                timeout: Optional[float] = None) -> Future:
-        """Enqueue one read; the future resolves to its ``QueryResult``
-        (carrying ``.staleness`` — unapplied update records for the table
-        at dispatch time — as a future attribute).
+        """Enqueue one read; the future resolves to its structured
+        ``Answer`` (value + certified bound + staleness; ``.staleness`` is
+        also set on the future itself for pre-Answer consumers).
 
         ``deadline`` (seconds from now; default the table's class) bounds
         the *queue wait*: a request still queued when it expires resolves
@@ -515,7 +519,7 @@ class ServingEngine:
         """
         if self._shut_down:
             raise RuntimeError("serving engine shut down")
-        rel = self.session.resolve_rel(spec.table, spec.rel)
+        kind, rel, params = self.session.resolve_spec(spec)
         d_default, p_default = self._admission_class(spec.table)
         if deadline is None:
             deadline = d_default
@@ -532,7 +536,8 @@ class ServingEngine:
         abs_deadline = (None if deadline is None
                         else time.monotonic() + deadline)
         req = _ReadRequest(spec.table, rel, spec.ranges, len(spec),
-                           abs_deadline, dclass, priority)
+                           abs_deadline, dclass, priority, kind=kind,
+                           params=params)
         try:
             if self.admission == "reject":
                 self._queue.put_nowait(req)
@@ -554,7 +559,7 @@ class ServingEngine:
                                    Sequence[QuerySpec]],
               *, timeout: Optional[float] = None):
         """Blocking convenience mirroring ``session.query``: one spec
-        returns its ``QueryResult``, a batch returns the aligned list."""
+        returns its ``Answer``, a batch returns the aligned list."""
         if isinstance(request, QuerySpec):
             return self.submit(request).result(timeout)
         specs = list(request.specs if isinstance(request, QueryBatch)
@@ -563,7 +568,7 @@ class ServingEngine:
         return [f.result(timeout) for f in futures]
 
     def serve(self, table: str, *ranges, rel=DEFAULT_REL,
-              timeout: Optional[float] = None) -> QueryResult:
+              timeout: Optional[float] = None):
         """Blocking single-request endpoint: ``serve('count', lq, uq)``."""
         res = self.submit(QuerySpec(table, ranges, rel)).result(timeout)
         jax.block_until_ready(res.answer)
@@ -643,15 +648,18 @@ class ServingEngine:
         groups: Dict[Tuple, List[_ReadRequest]] = {}
         for r in live:
             # the deadline class keys the group: tight requests are never
-            # padded into (or billed for) a slack batch's bucket
-            groups.setdefault((r.table, r.rel, r.dclass), []).append(r)
+            # padded into (or billed for) a slack batch's bucket; kind and
+            # its static params key it too — a quantile never coalesces
+            # into a range bucket, nor one window into another's epochs
+            groups.setdefault((r.table, r.kind, r.rel, r.dclass, r.params),
+                              []).append(r)
         # earliest-deadline-first across the batch's groups
         ordered = sorted(
             groups.items(),
             key=lambda kv: min((r.deadline for r in kv[1]
                                 if r.deadline is not None),
                                default=float("inf")))
-        for (table, rel, _), grp in ordered:
+        for (table, kind, rel, _, params), grp in ordered:
             # count before resolving: a caller that saw its future
             # complete must also see it reflected in ``stats``
             with self._stats_lock:
@@ -661,31 +669,69 @@ class ServingEngine:
                     self._stats.coalesced += len(grp)
             try:
                 if self._retry is not None:
-                    self._retry.call(self._dispatch, table, rel, grp)
+                    self._retry.call(self._dispatch, table, kind, rel,
+                                     params, grp)
                 else:
-                    self._dispatch(table, rel, grp)
+                    self._dispatch(table, kind, rel, params, grp)
             except BaseException as e:   # surface on the callers
                 for r in grp:
                     if not r.future.done():
                         r.future.set_exception(e)
 
-    def _dispatch(self, table: str, rel, grp: List[_ReadRequest]) -> None:
+    def _dispatch(self, table: str, kind: str, rel, params: Tuple,
+                  grp: List[_ReadRequest]) -> None:
         self._maybe_fail("serve.dispatch")
         sess = self.session
         staleness = self.staleness(table)
         if staleness:
             with self._stats_lock:
                 self._stats.stale_reads += len(grp)
+        nq = sum(r.n for r in grp)
+        size = _bucket_size(nq, sess.min_bucket)
+        if kind == "window":
+            # epoch-ring tables: the window snapshot *is* a small LSM plan
+            # of immutable per-epoch levels — served by the same per-level
+            # AOT machinery (sealed epochs never invalidate their entries)
+            plan, buf = sess.window_snapshot(table, *params)
+            bound = sess.window_bound(table, *params)
+            if plan is None:
+                res = sess.query(QuerySpec(table, self._concat_ranges(grp),
+                                           rel, kind="window",
+                                           params=params))
+            else:
+                res = execute_lsm(plan, buf, self._concat_ranges(grp),
+                                  backend=sess.backend, eps_rel=rel,
+                                  interpret=sess.interpret, bq=sess.bq,
+                                  min_bucket=sess.min_bucket,
+                                  level_runner=self._lsm_runner(
+                                      table, rel, size, plan))
+                res = Answer(res.answer, res.approx, res.refined,
+                             bound=bound, staleness=staleness)
+            jax.block_until_ready(res.answer)
+            self._scatter(grp, res, staleness)
+            return
         if sess.is_sharded(table):
             # shard_map executors keep their own cache; no AOT ladder here
             ranges = self._concat_ranges(grp)
-            res = sess.query(QuerySpec(table, ranges, rel))
+            res = sess.query(QuerySpec(table, ranges, rel, kind=kind,
+                                       params=params))
             jax.block_until_ready(res.answer)
             self._scatter(grp, res, staleness)
             return
         plan, buf = sess.snapshot(table)
-        nq = sum(r.n for r in grp)
-        size = _bucket_size(nq, sess.min_bucket)
+        if kind == "quantile":
+            compiled = self._executable(table, rel, size, plan, buf,
+                                        kind="quantile")
+            (qs,) = self._concat_ranges(grp)
+            qp = _pad_bucket(jnp.asarray(qs, plan.dtype), size,
+                             jnp.asarray(0.5, plan.dtype))
+            ans, lo, hi = compiled(plan, buf, qp)
+            jax.block_until_ready(ans)
+            res = Answer(ans, ans, jnp.zeros(ans.shape, bool),
+                         bound=(lo, hi), staleness=staleness)
+            self._scatter(grp, res, staleness)
+            return
+        bound = sess.budget(table).bound(sess.spec(table).agg)
         if hasattr(plan, "levels"):
             # LSM ladder: one AOT executable *per level*, fused exactly by
             # execute_lsm's combiner — a compaction only invalidates the
@@ -697,7 +743,9 @@ class ServingEngine:
                               level_runner=self._lsm_runner(
                                   table, rel, size, plan))
             jax.block_until_ready(res.answer)
-            self._scatter(grp, res, staleness)
+            self._scatter(grp, Answer(res.answer, res.approx, res.refined,
+                                      bound=bound, staleness=staleness),
+                          staleness)
             return
         compiled = self._executable(table, rel, size, plan, buf)
         fills = pad_fills(plan)
@@ -708,7 +756,8 @@ class ServingEngine:
             for j, c in enumerate(self._concat_ranges(grp)))
         ans, approx, refined = compiled(plan, buf, *qs)
         jax.block_until_ready(ans)   # futures resolve device-ready
-        self._scatter(grp, QueryResult(ans, approx, refined), staleness)
+        self._scatter(grp, Answer(ans, approx, refined, bound=bound,
+                                  staleness=staleness), staleness)
 
     @staticmethod
     def _concat_ranges(grp: List[_ReadRequest]) -> Tuple:
@@ -719,8 +768,19 @@ class ServingEngine:
             for j in range(len(grp[0].ranges)))
 
     @staticmethod
-    def _scatter(grp: List[_ReadRequest], res: QueryResult,
-                 staleness: int = 0) -> None:
+    def _slice_answer(a, off: int, m: int) -> "Answer":
+        bound = a.bound
+        if isinstance(bound, tuple):     # quantile (lo, hi) certificates
+            bound = tuple(b[off:off + m] for b in bound)
+        return Answer(a.value[off:off + m], a.approx[off:off + m],
+                      a.refined[off:off + m], bound=bound,
+                      staleness=a.staleness)
+
+    @staticmethod
+    def _scatter(grp: List[_ReadRequest], res, staleness: int = 0) -> None:
+        if not isinstance(res, Answer):  # degenerate paths (QueryResult)
+            res = Answer(res.answer, res.approx, res.refined,
+                         staleness=staleness)
         off = 0
         for r in grp:
             m = r.n
@@ -728,15 +788,19 @@ class ServingEngine:
             # records were not yet applied when this answer was computed
             r.future.staleness = staleness
             if not r.future.done():
-                r.future.set_result(QueryResult(res.answer[off:off + m],
-                                                res.approx[off:off + m],
-                                                res.refined[off:off + m]))
+                r.future.set_result(
+                    ServingEngine._slice_answer(res, off, m))
             off += m
 
     # -- AOT executable cache ---------------------------------------------
 
-    def _executable(self, table: str, rel, size: int, plan, buf):
-        key = (table, rel, size)
+    def _executable(self, table: str, rel, size: int, plan, buf,
+                    kind: str = "range"):
+        # quantile executables live under their own 4-tuple keys so the
+        # range ladder and the inversion ladder never collide (LSM level
+        # entries are 4-tuples too, distinguished by an int slot)
+        key = ((table, rel, size) if kind == "range"
+               else (table, rel, size, "quantile"))
         sig = _tree_sig(buf)
         entry = self._cache.get(key)
         if entry is not None and entry.matches(plan, sig):
@@ -757,8 +821,9 @@ class ServingEngine:
                 with self._stats_lock:
                     self._stats.aot_invalidations += 1
             sess = self.session
-            fn = sess.serving_executor(table, rel, bq=min(sess.bq, size))
-            k = sess.spec(table).n_ranges
+            fn = sess.serving_executor(table, rel, bq=min(sess.bq, size),
+                                       kind=kind)
+            k = sess.spec(table).n_ranges if kind == "range" else 1
             qs = [jax.ShapeDtypeStruct((size,), plan.dtype)] * k
             compiled = jax.jit(fn).lower(plan, buf, *qs).compile()
             self._cache[key] = _ExecEntry(plan, compiled, sig=sig,
@@ -858,11 +923,18 @@ class ServingEngine:
         sess = self.session
         with self._compile_lock:
             combos = sorted({(key[1], key[2]) for key in self._cache
-                             if key[0] == table},
+                             if key[0] == table and len(key) == 3},
                             key=lambda c: (repr(c[0]), c[1]))
+            lsm_combos = sorted({(key[1], key[2]) for key in self._cache
+                                 if key[0] == table and len(key) == 4
+                                 and key[3] != "quantile"},
+                                key=lambda c: (repr(c[0]), c[1]))
+            q_sizes = sorted({key[2] for key in self._cache
+                              if key[0] == table and len(key) == 4
+                              and key[3] == "quantile"})
         k = sess.spec(table).n_ranges
         if hasattr(incoming, "levels"):
-            for rel, size in combos:
+            for rel, size in lsm_combos:
                 statics = self._lsm_statics(rel, size, incoming)
                 for lvl in incoming.levels:
                     key = (table, rel, size, lvl.slot)
@@ -902,31 +974,63 @@ class ServingEngine:
                     entry.stage(incoming, compiled, _tree_sig(tmpl))
             with self._stats_lock:
                 self._stats.aot_precompiles += 1
+        for size in q_sizes:
+            key = (table, None, size, "quantile")
+            with self._compile_lock:
+                entry = self._cache.get(key)
+                if entry is None or entry.buf_tmpl is None \
+                        or entry.plan_ref is incoming \
+                        or entry.next_ref is incoming:
+                    continue
+                tmpl = entry.buf_tmpl
+            fn = sess.serving_executor(table, None, bq=min(sess.bq, size),
+                                       kind="quantile")
+            q = jax.ShapeDtypeStruct((size,), incoming.dtype)
+            compiled = jax.jit(fn).lower(incoming, tmpl, q).compile()
+            with self._compile_lock:
+                entry = self._cache.get(key)
+                if entry is not None:
+                    entry.stage(incoming, compiled, _tree_sig(tmpl))
+            with self._stats_lock:
+                self._stats.aot_precompiles += 1
 
     def warmup(self, max_bucket: int = 1024,
-               tables: Optional[Sequence[str]] = None) -> int:
+               tables: Optional[Sequence[str]] = None,
+               kinds: Sequence[str] = ("range",)) -> int:
         """Eagerly AOT-compile the full power-of-two bucket ladder
         (``min_bucket`` .. ``max_bucket``) for every (table, default
         guarantee); returns the number of executables compiled.  After
         this, any admitted batch up to ``max_bucket`` queries serves
-        without tracing or compiling."""
+        without tracing or compiling.  ``kinds`` picks the executor
+        ladders: ``'range'`` (the aggregate family) and/or ``'quantile'``
+        (CF inversion; skipped on tables that cannot answer quantiles).
+        Windowed tables warm lazily — their per-epoch levels compile on
+        first touch and sealed epochs never invalidate."""
         sess = self.session
         before = self.stats.aot_compiles
         for table in (tables if tables is not None else sess.tables):
-            if sess.is_sharded(table):
+            if sess.is_sharded(table) or sess.is_window(table):
                 continue
+            spec = sess.spec(table)
             rel = sess.resolve_rel(table)
             plan, buf = sess.snapshot(table)
             size = sess.min_bucket
             while size <= max_bucket:
                 if hasattr(plan, "levels"):
-                    statics = self._lsm_statics(rel, size, plan)
-                    k = sess.spec(table).n_ranges
-                    for lvl in plan.levels:
-                        self._level_executable(table, rel, size, lvl,
-                                               plan.agg, statics, k)
+                    if "range" in kinds:
+                        statics = self._lsm_statics(rel, size, plan)
+                        k = spec.n_ranges
+                        for lvl in plan.levels:
+                            self._level_executable(table, rel, size, lvl,
+                                                   plan.agg, statics, k)
                 else:
-                    self._executable(table, rel, size, plan, buf)
+                    if "range" in kinds:
+                        self._executable(table, rel, size, plan, buf)
+                    if "quantile" in kinds \
+                            and spec.agg in ("sum", "count") \
+                            and not spec.lsm:
+                        self._executable(table, None, size, plan, buf,
+                                         kind="quantile")
                 size *= 2
         return self.stats.aot_compiles - before
 

@@ -333,3 +333,109 @@ def test_session_2d_measure_data_validation(data):
     with pytest.raises(ValueError, match="must be"):
         PolyFit.fit({"s": (px, py)},
                     {"s": TableSpec("sum2d", ErrorBudget(abs=100.0))})
+
+
+# ---------------------------------------------------------------------------
+# kind-explicit query surface: shim equivalence, Answer pytree, quantiles
+# ---------------------------------------------------------------------------
+
+def test_kind_shim_bit_identical_to_legacy(data, queries):
+    """Legacy kind-less constructors and explicit-kind specs resolve to
+    the same (table, kind, guarantee) group and answer bit-identically."""
+    lq, uq, qa, qb, qc, qd = queries
+    session = _session(data)
+    pairs = [
+        (QuerySpec.range("cnt", lq, uq),
+         QuerySpec("cnt", (lq, uq), DEFAULT_REL, kind="count")),
+        (QuerySpec.range("sm", lq, uq),
+         QuerySpec("sm", (lq, uq), DEFAULT_REL, kind="sum")),
+        (QuerySpec.range("mx", lq, uq),
+         QuerySpec("mx", (lq, uq), DEFAULT_REL, kind="max")),
+        (QuerySpec.rect("geo", qa, qb, qc, qd),
+         QuerySpec("geo", (qa, qb, qc, qd), DEFAULT_REL, kind="count")),
+    ]
+    for legacy, explicit in pairs:
+        a = session.query(legacy)
+        b = session.query(explicit)
+        np.testing.assert_array_equal(np.asarray(a.value),
+                                      np.asarray(b.value))
+        np.testing.assert_array_equal(np.asarray(a.approx),
+                                      np.asarray(b.approx))
+    with pytest.raises(ValueError, match="answers"):
+        session.query(QuerySpec("cnt", (lq, uq), kind="max"))
+
+
+def test_answer_structure_and_compat(data, queries):
+    from repro.api import Answer
+    lq, uq = queries[:2]
+    session = _session(data)
+    res = session.query(QuerySpec.range("cnt", lq, uq))
+    assert isinstance(res, Answer)
+    assert res.answer is res.value            # QueryResult-compat alias
+    ans, approx, refined = res                # tuple-unpack compat
+    assert ans is res.value and refined is res.refined
+    assert res.bound == session.budget("cnt").bound("count")
+    assert res.staleness == 0
+    # registered pytree: round-trips with staleness as aux metadata
+    leaves, td = jax.tree_util.tree_flatten(res)
+    back = jax.tree_util.tree_unflatten(td, leaves)
+    np.testing.assert_array_equal(np.asarray(back.value),
+                                  np.asarray(res.value))
+    assert back.staleness == res.staleness
+
+
+def test_quantile_spec_and_budget_roundtrip(data):
+    keys = data[0]
+    session = _session(data)
+    qs = np.array([0.05, 0.5, 0.95])
+    res = session.query(QuerySpec.quantile("cnt", qs))
+    lo, hi = res.bound
+    truth = np.quantile(keys, qs)
+    assert np.all(np.asarray(lo) <= truth + 1e-12)
+    assert np.all(truth <= np.asarray(hi) + 1e-12)
+    assert np.all(np.asarray(lo) <= np.asarray(res.value))
+    assert np.all(np.asarray(res.value) <= np.asarray(hi))
+    # the rank-domain budget passes through 1:1
+    b = ErrorBudget(abs=7.0)
+    assert b.delta("quantile") == pytest.approx(7.0)
+    assert b.bound("quantile") == pytest.approx(7.0)
+    # quantiles reject tables that have no monotone 1-D CF
+    with pytest.raises(ValueError, match="quantile"):
+        session.query(QuerySpec.quantile("mx", 0.5))
+    with pytest.raises(ValueError, match="quantile"):
+        TableSpec("quantile", ErrorBudget(abs=1.0))
+
+
+def test_window_table_via_session(data):
+    keys = data[0]
+    session = PolyFit.fit(
+        {"w": (keys, None), "cnt": keys},
+        {"w": TableSpec("count", ErrorBudget(abs=2 * DELTA), window=4),
+         "cnt": TableSpec("count", ErrorBudget(abs=2 * DELTA))})
+    session.ingest("w", keys[:100] + 0.25)
+    assert session.advance_epoch("w") == 2
+    res = session.query(QuerySpec.window("w", 0.0, 800.0, 0, 2))
+    exact = np.sum((keys > 0.0) & (keys <= 800.0)) \
+        + np.sum((keys[:100] + 0.25 > 0.0) & (keys[:100] + 0.25 <= 800.0))
+    assert abs(float(res.value[0]) - exact) <= res.bound + 1e-9
+    assert res.staleness == 0                  # t1 is the open epoch
+    stale = session.query(QuerySpec.window("w", 0.0, 800.0, 0, 0))
+    assert stale.staleness == 2
+    # windowed tables reject plain range reads and incompatible specs
+    with pytest.raises(ValueError, match="windowed"):
+        session.query(QuerySpec.range("w", 0.0, 1.0))
+    with pytest.raises(ValueError, match="not windowed"):
+        session.query(QuerySpec.window("cnt", 0.0, 1.0, 0, 0))
+
+
+def test_window_spec_validation():
+    with pytest.raises(ValueError, match="params"):
+        QuerySpec("w", (0.0, 1.0), kind="window")
+    with pytest.raises(ValueError, match="rank fractions"):
+        QuerySpec("w", (0.0, 1.0), kind="quantile")
+    with pytest.raises(ValueError, match="kind"):
+        QuerySpec("w", (0.0, 1.0), kind="median")
+    with pytest.raises(ValueError, match="window"):
+        TableSpec("max", ErrorBudget(abs=1.0), window=4)
+    with pytest.raises(ValueError, match="epoch ring"):
+        TableSpec("count", ErrorBudget(abs=1.0), window=4, dynamic=True)

@@ -393,3 +393,40 @@ def test_policy_from_bench_has_costs():
     assert pol.merge_us_per_row > 0
     assert pol.should_compact(n_pending=512, capacity=512,
                               queries_since=0, rows_to_compact=512)
+
+
+def test_shadow_fraction_folds_delete_only_workload(data):
+    """Worst-case regression for the shadow-mass hole: a delete-only
+    workload accumulates tombstones/victims on a level while the pending
+    *insert* count stays zero, so neither the capacity watermark nor the
+    cost model would ever fire.  The shadow-fraction trigger must fold the
+    level anyway, and post-fold answers must be exact where refinement
+    lands (COUNT integers)."""
+    keys, _ = data
+    pol = CompactionPolicy(query_overhead_us_per_row=0.0,
+                           shadow_fraction=0.25)
+    eng = LsmEngine(keys, agg="count", delta=DELTA, capacity=256,
+                    background=False, policy=pol)
+    # delete 40% of the rows in batches: well past shadow_fraction
+    rng = np.random.default_rng(31)
+    drop = rng.choice(len(keys), size=480, replace=False)
+    for lo in range(0, len(drop), 120):
+        eng.delete(keys[drop[lo:lo + 120]])
+    assert eng.compaction_count >= 1
+    assert not eng._shadow_slots()      # the fold consumed the shadow mass
+    assert eng.n_pending == 0
+    live = np.delete(keys, drop)
+    lq, uq = _ranges(np.random.default_rng(37), 0.0, 1000.0)
+    got = _np(eng.query(lq, uq, eps_rel=1e-9).answer)
+    want = np.array([np.sum((live > a) & (live <= b))
+                     for a, b in zip(lq, uq)], np.float64)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_should_fold_thresholds():
+    pol = CompactionPolicy(shadow_fraction=0.25)
+    assert not pol.should_fold(shadow_rows=0, live_rows=100)
+    assert not pol.should_fold(shadow_rows=24, live_rows=100)
+    assert pol.should_fold(shadow_rows=25, live_rows=100)
+    # fully-shadowed level (zero live rows) must fold, not divide by zero
+    assert pol.should_fold(shadow_rows=10, live_rows=0)

@@ -1,0 +1,150 @@
+"""Certified quantiles: the (lo, hi) interval must bracket the exact
+order statistic on every tested combination — rank grid x distribution x
+backend, static and post-insert/delete dynamic state — and the mid answer
+must land inside its own certificate.  COUNT certificates are checked
+against *every* numpy.quantile interpolation method (the rank slack
+absorbs the method differences); SUM certificates against the weighted
+convention x* = min{k : F(k) >= q * total}.
+"""
+import numpy as np
+import pytest
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core import build_index_1d                      # noqa: E402
+from repro.engine import (BACKENDS, build_plan,            # noqa: E402
+                          execute_quantile, DynamicEngine)
+
+QS = np.array([0.01, 0.25, 0.5, 0.75, 0.99])
+METHODS = ("linear", "lower", "higher", "nearest", "midpoint")
+
+
+def _dataset(name, n=2048, seed=5):
+    rng = np.random.default_rng(seed)
+    if name == "uniform":
+        keys = rng.uniform(-50.0, 50.0, n)
+    elif name == "skew":
+        keys = rng.lognormal(mean=1.0, sigma=1.2, size=n)
+    else:   # 'dups': heavy duplicate mass + a few unique outliers
+        keys = np.concatenate([
+            np.repeat(rng.uniform(0, 10, 8), n // 10),
+            rng.uniform(-5, 15, n - 8 * (n // 10))])
+    keys = np.sort(keys)
+    vals = np.abs(rng.normal(2.0, 1.0, n)) + 0.1
+    return keys, vals
+
+
+def _plan(keys, vals, agg, delta=24.0, deg=2):
+    idx = build_index_1d(keys, np.ones_like(keys) if agg == "count"
+                         else vals, agg=agg, delta=delta, deg=deg,
+                         keep_exact=True)
+    return build_plan(idx)
+
+
+def _check_count_brackets(keys, lo, hi):
+    for m in METHODS:
+        truth = np.quantile(keys, QS, method=m)
+        assert np.all(np.asarray(lo) <= truth + 1e-12), (m, lo, truth)
+        assert np.all(truth <= np.asarray(hi) + 1e-12), (m, truth, hi)
+
+
+def _weighted_truth(keys, w, q):
+    cf = np.cumsum(w)
+    i = np.minimum(np.searchsorted(cf, q * cf[-1], side="left"),
+                   len(keys) - 1)
+    return keys[i]
+
+
+@pytest.mark.parametrize("dist", ["uniform", "skew", "dups"])
+def test_count_certificate_brackets_every_numpy_method(dist):
+    keys, vals = _dataset(dist)
+    res = execute_quantile(_plan(keys, vals, "count"), QS)
+    _check_count_brackets(keys, res.lo, res.hi)
+    assert np.all(np.asarray(res.lo) <= np.asarray(res.answer))
+    assert np.all(np.asarray(res.answer) <= np.asarray(res.hi))
+
+
+@pytest.mark.parametrize("dist", ["uniform", "skew", "dups"])
+def test_sum_certificate_brackets_weighted_convention(dist):
+    keys, vals = _dataset(dist)
+    res = execute_quantile(_plan(keys, vals, "sum"), QS)
+    truth = _weighted_truth(keys, vals, QS)
+    assert np.all(np.asarray(res.lo) <= truth + 1e-12)
+    assert np.all(truth <= np.asarray(res.hi) + 1e-12)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_backends_bracket_and_agree(backend):
+    keys, vals = _dataset("uniform")
+    plan = _plan(keys, vals, "count")
+    res = execute_quantile(plan, QS, backend=backend)
+    _check_count_brackets(keys, res.lo, res.hi)
+    ref = execute_quantile(plan, QS, backend="xla")
+    # the locate->Newton arithmetic is identical on every backend
+    for a, b in zip(res, ref):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("deg", [1, 3, 5])
+def test_higher_degree_certificates(deg):
+    keys, vals = _dataset("skew")
+    res = execute_quantile(_plan(keys, vals, "count", deg=deg), QS)
+    _check_count_brackets(keys, res.lo, res.hi)
+
+
+@pytest.mark.parametrize("agg", ["count", "sum"])
+def test_dynamic_post_insert_delete(agg):
+    keys, vals = _dataset("uniform", seed=9)
+    idx = build_index_1d(keys, np.ones_like(keys) if agg == "count"
+                         else vals, agg=agg, delta=24.0, deg=2,
+                         keep_exact=True)
+    eng = DynamicEngine(idx, capacity=512, auto_refit=False,
+                        background=False)
+    rng = np.random.default_rng(3)
+    # inserts straddle the fitted domain on both sides (the certificate
+    # must stay sound past the base plan's key range)
+    ins_k = np.concatenate([rng.uniform(-90, -60, 40),
+                            rng.uniform(-40, 40, 120),
+                            rng.uniform(70, 120, 40)])
+    ins_v = np.abs(rng.normal(2.0, 1.0, ins_k.shape[0])) + 0.1
+    if agg == "count":
+        eng.insert(ins_k)
+    else:
+        eng.insert(ins_k, ins_v)
+    drop = rng.choice(len(keys), size=150, replace=False)
+    eng.delete(keys[drop])
+
+    res = eng.quantile(QS)
+    live_mask = np.ones(len(keys), bool)
+    live_mask[drop] = False
+    lk = np.concatenate([keys[live_mask], ins_k])
+    if agg == "count":
+        for m in METHODS:
+            truth = np.quantile(lk, QS, method=m)
+            assert np.all(np.asarray(res.lo) <= truth + 1e-12), (m,)
+            assert np.all(truth <= np.asarray(res.hi) + 1e-12), (m,)
+    else:
+        lv = np.concatenate([vals[live_mask], ins_v])
+        order = np.argsort(lk, kind="stable")
+        truth = _weighted_truth(lk[order], lv[order], QS)
+        assert np.all(np.asarray(res.lo) <= truth + 1e-12)
+        assert np.all(truth <= np.asarray(res.hi) + 1e-12)
+    assert np.all(np.asarray(res.lo) <= np.asarray(res.answer))
+    assert np.all(np.asarray(res.answer) <= np.asarray(res.hi))
+
+
+def test_extreme_ranks_clip_to_domain():
+    keys, vals = _dataset("uniform")
+    res = execute_quantile(_plan(keys, vals, "count"),
+                           np.array([0.0, 1.0]))
+    assert np.asarray(res.lo)[0] <= keys[0] <= np.asarray(res.hi)[0]
+    assert np.asarray(res.lo)[1] <= keys[-1] <= np.asarray(res.hi)[1]
+
+
+def test_rejects_extremal_and_deg0_plans():
+    keys, vals = _dataset("uniform", n=512)
+    idx = build_index_1d(keys, vals, agg="max", delta=24.0, deg=3,
+                         keep_exact=True)
+    with pytest.raises(AssertionError):
+        execute_quantile(build_plan(idx), QS)

@@ -1,0 +1,141 @@
+"""Epoch-ring windowed aggregates: window answers must be *bit-identical*
+to a flat plan fitted over the concatenated epoch data (integer measures +
+a tiny eps_rel force exact refinement on both paths, so the f64 sums are
+exact integers), bounds compose over the selected epochs only, and
+eviction below the ring raises.
+"""
+import numpy as np
+import pytest
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core import build_index_1d                      # noqa: E402
+from repro.engine import WindowEngine, build_plan, execute  # noqa: E402
+
+DELTA = 16.0
+EPS = 1e-9          # forces refinement -> exact integer answers
+
+
+def _epochs(seed=13, n_epochs=5, rows=300):
+    rng = np.random.default_rng(seed)
+    return [np.round(rng.uniform(-100, 100, rows), 3)
+            for _ in range(n_epochs)]
+
+
+def _flat_answer(data, lq, uq):
+    keys = np.sort(np.concatenate(data))
+    idx = build_index_1d(keys, np.ones_like(keys), agg="count",
+                         delta=DELTA, deg=2, keep_exact=True)
+    res = execute(build_plan(idx), (jnp_arr(lq), jnp_arr(uq)),
+                  backend="xla", eps_rel=EPS)
+    return np.asarray(res.answer)
+
+
+def jnp_arr(x):
+    import jax.numpy as jnp
+    return jnp.asarray(np.atleast_1d(np.asarray(x, np.float64)))
+
+
+@pytest.fixture(scope="module")
+def ring():
+    eps = _epochs()
+    w = WindowEngine(eps[0], agg="count", delta=DELTA, deg=2, ring=8,
+                     capacity=1024)
+    for e in eps[1:4]:
+        w.ingest(e)
+        w.advance()
+    w.ingest(eps[4])          # epoch 4 stays open
+    return w, eps
+
+
+def test_window_bit_identical_to_flat_plan(ring):
+    w, eps = ring
+    rng = np.random.default_rng(17)
+    lq = rng.uniform(-100, 80, 32)
+    uq = lq + rng.uniform(1, 40, 32)
+    for t0, t1 in [(0, 4), (0, 0), (1, 3), (2, 4), (4, 4), (3, 3)]:
+        got = np.asarray(w.query(lq, uq, t0, t1, eps_rel=EPS).answer)
+        want = _flat_answer(eps[t0:t1 + 1], lq, uq)
+        np.testing.assert_array_equal(got, want), (t0, t1)
+
+
+def test_open_epoch_only_is_exact(ring):
+    w, eps = ring
+    res = w.query(np.array([-100.0]), np.array([100.0]), 4, 4)
+    assert float(res.answer[0]) == len(eps[4])
+    assert w.bound(4, 4) == 0.0     # buffer correction is exact
+
+
+def test_bound_composes_over_selected_epochs(ring):
+    w, _ = ring
+    b1 = w.bound(0, 0)
+    b3 = w.bound(0, 2)
+    assert b1 > 0.0 and b3 == pytest.approx(3 * b1)
+    # answers honor the composed bound without refinement
+    lq, uq = np.array([-60.0]), np.array([60.0])
+    for t0, t1 in [(0, 2), (0, 4)]:
+        got = float(w.query(lq, uq, t0, t1).answer[0])
+        want = float(_flat_answer(w_eps_slice(w, t0, t1), lq, uq)[0])
+        assert abs(got - want) <= w.bound(t0, t1) + 1e-9
+
+
+def w_eps_slice(w, t0, t1):
+    # reconstruct the rows the ring holds for [t0, t1]
+    out = []
+    for eid, lvl in w._ring:
+        if t0 <= eid <= t1 and lvl is not None:
+            out.append(np.asarray(lvl.plan.ref_keys))
+    if t0 <= w.epoch <= t1 and w._n_buf:
+        out.append(np.concatenate([p[0] for p in w._pend]))
+    return out
+
+
+def test_empty_and_evicted_windows():
+    w = WindowEngine(ring=2, agg="count", delta=DELTA, capacity=64)
+    w.ingest(np.array([1.0, 2.0]))
+    w.advance()                     # seals epoch 0
+    w.advance()                     # seals an empty epoch 1 (hole)
+    w.ingest(np.array([3.0]))
+    w.advance()                     # seals epoch 2; ring keeps {1, 2}
+    assert w.oldest == 1
+    with pytest.raises(ValueError, match="evicted"):
+        w.query(np.array([0.0]), np.array([5.0]), 0, 2)
+    with pytest.raises(ValueError, match="empty window"):
+        w.query(np.array([0.0]), np.array([5.0]), 2, 1)
+    # hole-only window: zero rows, zero bound
+    res = w.query(np.array([0.0]), np.array([5.0]), 1, 1)
+    assert float(res.answer[0]) == 0.0
+    assert w.bound(1, 1) == 0.0
+    # retained epoch answers exactly
+    res = w.query(np.array([0.0]), np.array([5.0]), 2, 2)
+    assert float(res.answer[0]) == 1.0
+
+
+def test_sum_ring_matches_flat_plan():
+    rng = np.random.default_rng(23)
+    eps = [rng.uniform(0, 50, 200) for _ in range(3)]
+    vals = [np.round(rng.uniform(1, 5, 200)) for _ in range(3)]
+    w = WindowEngine(eps[0], vals[0], agg="sum", delta=DELTA, ring=4,
+                     capacity=512)
+    w.ingest(eps[1], vals[1])
+    w.advance()
+    w.ingest(eps[2], vals[2])
+    lq = np.array([5.0, 20.0])
+    uq = np.array([30.0, 45.0])
+    got = np.asarray(w.query(lq, uq, 0, 2, eps_rel=EPS).answer)
+    keys = np.concatenate(eps)
+    meas = np.concatenate(vals)
+    order = np.argsort(keys, kind="stable")
+    idx = build_index_1d(keys[order], meas[order], agg="sum", delta=DELTA,
+                         deg=2, keep_exact=True)
+    want = np.asarray(execute(build_plan(idx), (jnp_arr(lq), jnp_arr(uq)),
+                              backend="xla", eps_rel=EPS).answer)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_capacity_overflow_names_advance():
+    w = WindowEngine(ring=2, agg="count", delta=DELTA, capacity=64)
+    w.ingest(np.zeros(60))
+    with pytest.raises(ValueError, match="advance"):
+        w.ingest(np.zeros(10))
